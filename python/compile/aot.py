@@ -1,0 +1,84 @@
+"""AOT: lower every registry entry to HLO **text** + a manifest for rust.
+
+HLO text (NOT ``lowered.compile().serialize()`` / serialized HloModuleProto)
+is the interchange format: jax >= 0.5 emits protos with 64-bit instruction
+ids which xla_extension 0.5.1 (the version the published ``xla`` 0.1.6
+crate binds) rejects (``proto.id() <= INT_MAX``). The text parser reassigns
+ids, so text round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Outputs:
+  artifacts/<name>.hlo.txt   one per registry entry
+  artifacts/manifest.json    shapes/dtypes per artifact, read by rust runtime
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import artifact_registry
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _dtype_name(d) -> str:
+    return {"float32": "f32", "int32": "i32", "uint8": "u8",
+            "bool": "pred"}.get(str(d), str(d))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact names (default: all)")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+
+    selected = set(args.only.split(",")) if args.only else None
+    manifest = {}
+    for name, (fn, specs) in artifact_registry().items():
+        if selected is not None and name not in selected:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = out / f"{name}.hlo.txt"
+        path.write_text(text)
+        out_shapes = [
+            {"shape": list(s.shape), "dtype": _dtype_name(s.dtype)}
+            for s in jax.eval_shape(fn, *specs)
+        ]
+        manifest[name] = {
+            "file": path.name,
+            "inputs": [{"shape": list(s.shape), "dtype": _dtype_name(s.dtype)}
+                       for s in specs],
+            "outputs": out_shapes,
+        }
+        print(f"  {name}: {len(text)} chars, "
+              f"{len(specs)} inputs -> {len(out_shapes)} outputs")
+
+    mpath = out / "manifest.json"
+    # Merge with an existing manifest when --only was used.
+    if selected is not None and mpath.exists():
+        old = json.loads(mpath.read_text())
+        old.update(manifest)
+        manifest = old
+    mpath.write_text(json.dumps(manifest, indent=2, sort_keys=True))
+    print(f"wrote {mpath} ({len(manifest)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Layer-1 Pallas kernels: tropical-semiring (min-plus) block products.
+
+The ETSCH local-computation hot spot — distance relaxation and
+connected-components label propagation inside one edge partition — is a
+fixpoint of the tropical SpMV
+
+    out[i] = min_j ( A[i, j] + x[j] )
+
+over the partition's adjacency blocks (A[i,j] = w(i,j) for an edge, +inf
+otherwise; w = 1 gives hop distances, w = 0 gives min-label spreading).
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper runs on
+a Hadoop CPU cluster; on TPU the natural shape is dense VMEM tiles with a
+(row-block, col-block) grid and a running-min accumulator — the tropical
+analogue of a tiled matmul, executed on the VPU (the MXU has no min-plus
+mode). BlockSpec expresses the HBM<->VMEM schedule; the rust coordinator
+skips all-empty blocks (block-sparsity lives one level up).
+
+All kernels are lowered with ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and correctness is what the artifact pipeline
+validates. Real-TPU performance is *estimated* in DESIGN.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Value used as tropical "zero" (additive identity of min). Using a large
+# finite value instead of +inf keeps the kernel total for integer dtypes and
+# avoids inf-inf NaNs in padded blocks.
+INF32 = jnp.float32(3.0e38) / 2
+
+
+def _minplus_mv_kernel(a_ref, x_ref, o_ref):
+    """One (bm, bn) tile of out[i] = min_j A[i,j] + x[j].
+
+    Grid is (rows, cols); the column dimension is the reduction, so the
+    output row-block is revisited across j with a running min.
+    """
+    j = pl.program_id(1)
+    # (bm, bn) + (1, bn) -> (bm, bn); reduce the tile over its columns.
+    partial = jnp.min(a_ref[...] + x_ref[...][None, :], axis=1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(j > 0)
+    def _accum():
+        o_ref[...] = jnp.minimum(o_ref[...], partial)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def minplus_mv(a: jax.Array, x: jax.Array, *, block_m: int = 256,
+               block_n: int = 256) -> jax.Array:
+    """Tropical matrix-vector product ``out[i] = min_j A[i,j] + x[j]``.
+
+    ``a`` is (m, n), ``x`` is (n,); both dims must be multiples of the block
+    sizes (the rust coordinator pads partitions with INF rows/cols).
+    """
+    m, n = a.shape
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    assert m % block_m == 0 and n % block_n == 0, (a.shape, block_m, block_n)
+    grid = (m // block_m, n // block_n)
+    return pl.pallas_call(
+        _minplus_mv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((block_n,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_m,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), a.dtype),
+        interpret=True,
+    )(a, x)
+
+
+def _minplus_mm_kernel(a_ref, b_ref, o_ref):
+    """One (bm, bk) x (bk, bn) tile of out[i,l] = min_k A[i,k] + B[k,l]."""
+    k = pl.program_id(2)
+    # (bm, bk, 1) + (1, bk, bn) -> min over axis 1 -> (bm, bn)
+    partial = jnp.min(a_ref[...][:, :, None] + b_ref[...][None, :, :], axis=1)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = partial
+
+    @pl.when(k > 0)
+    def _accum():
+        o_ref[...] = jnp.minimum(o_ref[...], partial)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def minplus_mm(a: jax.Array, b: jax.Array, *, block_m: int = 128,
+               block_n: int = 128, block_k: int = 128) -> jax.Array:
+    """Tropical matrix-matrix product ``out = A ⊗ B`` (min-plus semiring).
+
+    Used for multi-source distance compression: columns of B are per-source
+    distance vectors, so one ⊗ advances every source one sweep.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        _minplus_mm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, l: (i, l)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), a.dtype),
+        interpret=True,
+    )(a, b)

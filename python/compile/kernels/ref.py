@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness ground truth).
+
+Everything here is deliberately the most literal possible transcription of
+the math; no tiling, no tricks. pytest/hypothesis sweep shapes and dtypes
+against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def minplus_mv_ref(a: jax.Array, x: jax.Array) -> jax.Array:
+    """out[i] = min_j A[i,j] + x[j]."""
+    return jnp.min(a + x[None, :], axis=1)
+
+
+def minplus_mm_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """out[i,l] = min_k A[i,k] + B[k,l]."""
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def relax_ref(a: jax.Array, x: jax.Array, steps: int) -> jax.Array:
+    """`steps` Bellman-Ford sweeps: x <- min(x, A ⊗ x)."""
+    for _ in range(steps):
+        x = jnp.minimum(x, minplus_mv_ref(a, x))
+    return x

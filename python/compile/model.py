@@ -1,0 +1,232 @@
+"""Layer-2 JAX compute graphs (build-time only; AOT'd to HLO by aot.py).
+
+Two families:
+
+1. **Relaxation** — the ETSCH local-computation phase as tropical-semiring
+   fixpoint sweeps over a partition's dense adjacency blocks. Calls the
+   Layer-1 Pallas kernels (kernels.minplus), so the Pallas code lowers into
+   the same HLO module the rust runtime executes.
+
+2. **Funding** — DFEP steps 1+2 (vertex funding propagation + edge auction)
+   vectorized over all K partitions on a statically-padded edge list. Step 3
+   (the coordinator's centralized funding injection) stays in rust, matching
+   the paper's structure: "step 3, while centralized, needs an amount of
+   computation that is only linear in the number of partitions".
+
+Conventions shared with the rust runtime (see rust/src/runtime/):
+  * tropical zero is ``INF32`` (a large finite f32, not +inf) so padded
+    rows/cols are inert and integer casts stay total;
+  * padded edges carry ``owner = -2`` and are never eligible;
+  * free edges carry ``owner = -1``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.minplus import minplus_mv, minplus_mm
+
+
+# --------------------------------------------------------------------------
+# Relaxation (ETSCH local computation)
+# --------------------------------------------------------------------------
+
+def relax_step(a: jax.Array, x: jax.Array) -> jax.Array:
+    """One Bellman-Ford sweep on a partition block: x <- min(x, A ⊗ x)."""
+    return jnp.minimum(x, minplus_mv(a, x))
+
+
+def relax_while(a: jax.Array, x: jax.Array, max_steps: int):
+    """Sweep to fixpoint (or ``max_steps``), returning (x, steps_used).
+
+    A ``while_loop`` rather than ``scan`` so a converged partition stops
+    paying for sweeps — partitions produced by DFEP are connected with
+    small effective diameter, so typical step counts are far below the
+    worst-case bound the caller passes.
+    """
+
+    def cond(state):
+        _, changed, t = state
+        return jnp.logical_and(changed, t < max_steps)
+
+    def body(state):
+        x, _, t = state
+        nx = relax_step(a, x)
+        return nx, jnp.any(nx < x), t + 1
+
+    x, _, steps = jax.lax.while_loop(cond, body, (x, jnp.bool_(True),
+                                                  jnp.int32(0)))
+    return x, steps
+
+
+def multi_source_step(a: jax.Array, b: jax.Array) -> jax.Array:
+    """One sweep for many sources at once: B <- min(B, A ⊗ B)."""
+    return jnp.minimum(b, minplus_mm(a, b))
+
+
+def multi_relax_while(a: jax.Array, b: jax.Array, max_steps: int):
+    """Multi-source fixpoint: every column of B is an independent source
+    vector; used by betweenness-style all-sources-at-once sweeps."""
+
+    def cond(state):
+        _, changed, t = state
+        return jnp.logical_and(changed, t < max_steps)
+
+    def body(state):
+        b, _, t = state
+        nb = multi_source_step(a, b)
+        return nb, jnp.any(nb < b), t + 1
+
+    b, _, steps = jax.lax.while_loop(cond, body, (b, jnp.bool_(True),
+                                                  jnp.int32(0)))
+    return b, steps
+
+
+# --------------------------------------------------------------------------
+# DFEP funding round (steps 1 + 2), vectorized over K partitions
+# --------------------------------------------------------------------------
+
+def _scatter_add_rows(values: jax.Array, idx: jax.Array, width: int):
+    """Per-row scatter-add: out[i, idx[e]] += values[i, e]  (K rows)."""
+
+    def one(row):
+        return jnp.zeros((width,), row.dtype).at[idx].add(row)
+
+    return jax.vmap(one)(values)
+
+
+def funding_step(src: jax.Array, dst: jax.Array, owner: jax.Array,
+                 money: jax.Array):
+    """DFEP Algorithm 4 + Algorithm 5 over the whole edge list at once.
+
+    Args:
+      src, dst: int32[E] endpoints (padded edges may point anywhere).
+      owner:    int32[E]; -1 = free, -2 = padding, else partition id.
+      money:    f32[K, V] per-partition per-vertex funding.
+
+    Returns (new_owner int32[E], new_money f32[K, V], bought f32[K]) where
+    ``bought[i]`` counts edges partition i won *this* round.
+
+    Semantics notes (matching the paper's pseudocode):
+      * Step 1: each vertex splits its funding equally among incident edges
+        that are free or already owned by that partition; a vertex with no
+        eligible incident edge *keeps* its funding (the literal pseudocode
+        would destroy it — see DESIGN.md).
+      * Step 2: a free edge is sold to the highest bidder iff the bid is
+        >= 1 unit; the winner pays 1, the remainder returns half/half to
+        the endpoints. Losing bids return to the vertices that contributed
+        them. Bids on an edge you already own also return half/half (money
+        keeps circulating inside the owned region, which is what lets a
+        partition's frontier keep expanding).
+    """
+    k, v = money.shape
+    valid = owner >= -1                              # bool[E], excludes padding
+    free = jnp.logical_and(valid, owner == -1)       # bool[E]
+    pid = jnp.arange(k, dtype=jnp.int32)[:, None]    # [K,1]
+
+    # --- Step 1: vertex -> edge propagation (frontier-first) --------------
+    # A vertex adjacent to any free edge bids only on free edges (the
+    # rust engine's `frontier_first` semantics, see partition/dfep.rs);
+    # otherwise it circulates funding across its own partition's edges.
+    free_f = free.astype(money.dtype)
+    ones = jnp.ones((k, src.shape[0]), money.dtype) * free_f[None, :]
+    deg_free = (_scatter_add_rows(ones, src, v) +
+                _scatter_add_rows(ones, dst, v))     # [K,V] (same per row)
+    own = jnp.logical_and(valid[None, :], owner[None, :] == pid)  # [K,E]
+    own_f = own.astype(money.dtype)
+    deg_own = (_scatter_add_rows(own_f, src, v) +
+               _scatter_add_rows(own_f, dst, v))     # [K,V]
+    at_frontier = deg_free > 0                       # [K,V]
+    has_own = deg_own > 0
+    share_free = jnp.where(at_frontier,
+                           money / jnp.maximum(deg_free, 1.0), 0.0)
+    share_own = jnp.where(jnp.logical_and(~at_frontier, has_own),
+                          money / jnp.maximum(deg_own, 1.0), 0.0)
+    kept = jnp.where(jnp.logical_or(at_frontier, has_own), 0.0, money)
+    # per-endpoint contributions: free edges take the frontier share,
+    # own edges take the circulation share from non-frontier endpoints
+    contrib_src = (free_f[None, :] * share_free[:, src] +
+                   own_f * share_own[:, src])        # [K,E]
+    contrib_dst = (free_f[None, :] * share_free[:, dst] +
+                   own_f * share_own[:, dst])
+    offer = contrib_src + contrib_dst                # M_i[e]
+    # eligibility mask for refunds: any edge that can carry a bid
+    elig = jnp.logical_or(free[None, :], own)
+
+    # --- Step 2: edge auction ---------------------------------------------
+    best = jnp.argmax(offer, axis=0).astype(jnp.int32)        # [E]
+    best_offer = jnp.max(offer, axis=0)                        # [E]
+    sold = jnp.logical_and(free, best_offer >= 1.0)            # [E]
+    new_owner = jnp.where(sold, best, owner)
+
+    is_winner = jnp.logical_and(sold[None, :], pid == best[None, :])  # [K,E]
+    owns_unsold = jnp.logical_and(~sold[None, :], owner[None, :] == pid)
+    # Winner: pay 1, split remainder half/half between the endpoints.
+    # Owner of a not-for-sale edge: committed funding returns half/half.
+    half_back = (jnp.where(is_winner, (offer - 1.0) * 0.5, 0.0) +
+                 jnp.where(owns_unsold, offer * 0.5, 0.0))
+    # Everyone else with a live bid gets an exact refund: each endpoint
+    # receives back exactly what it contributed.
+    refunded = jnp.logical_and(elig, ~jnp.logical_or(is_winner, owns_unsold))
+    refund_f = refunded.astype(money.dtype)
+    back_src = half_back + refund_f * contrib_src
+    back_dst = half_back + refund_f * contrib_dst
+
+    new_money = (kept +
+                 _scatter_add_rows(back_src, src, v) +
+                 _scatter_add_rows(back_dst, dst, v))
+    bought = jnp.sum(is_winner.astype(money.dtype), axis=1)    # [K]
+    return new_owner, new_money, bought
+
+
+# --------------------------------------------------------------------------
+# AOT artifact registry — every entry becomes artifacts/<name>.hlo.txt
+# --------------------------------------------------------------------------
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def artifact_registry():
+    """name -> (python callable, example arg specs).
+
+    The rust runtime composes these: ``minplus_block_256`` is the unit tile
+    the coordinator tiles arbitrary partition sizes with (block-sparse at
+    L3); ``relax_while_*`` are fused whole-partition fixpoints for padded
+    sizes; ``funding_step_*`` is a full DFEP round (steps 1+2) for the XLA
+    engine.
+    """
+    return {
+        "minplus_block_256": (
+            lambda a, x: (minplus_mv(a, x),),
+            [_spec((256, 256)), _spec((256,))],
+        ),
+        "minplus_mm_128": (
+            lambda a, b: (minplus_mm(a, b, block_m=128, block_n=128,
+                                     block_k=128),),
+            [_spec((128, 128)), _spec((128, 128))],
+        ),
+        "relax_while_256": (
+            lambda a, x: relax_while(a, x, max_steps=256),
+            [_spec((256, 256)), _spec((256,))],
+        ),
+        "relax_while_1024": (
+            lambda a, x: relax_while(a, x, max_steps=1024),
+            [_spec((1024, 1024)), _spec((1024,))],
+        ),
+        "multi_relax_256x64": (
+            lambda a, b: multi_relax_while(a, b, max_steps=256),
+            [_spec((256, 256)), _spec((256, 64))],
+        ),
+        "funding_step_8_1024_4096": (
+            funding_step,
+            [_spec((4096,), jnp.int32), _spec((4096,), jnp.int32),
+             _spec((4096,), jnp.int32), _spec((8, 1024))],
+        ),
+        "funding_step_32_4096_16384": (
+            funding_step,
+            [_spec((16384,), jnp.int32), _spec((16384,), jnp.int32),
+             _spec((16384,), jnp.int32), _spec((32, 4096))],
+        ),
+    }

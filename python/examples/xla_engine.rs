@@ -1,0 +1,2 @@
+//! placeholder — replaced by the real example.
+fn main() { println!("xla_engine: TODO"); }

@@ -1,0 +1,101 @@
+"""Python-loop oracles for L2 model tests (deliberately naive)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def funding_step_ref(src, dst, owner, money):
+    """Literal per-vertex / per-edge transcription of DFEP Alg. 4 + 5 with
+    the frontier-first rule (matching compile.model.funding_step and the
+    rust engine): a vertex adjacent to at least one free edge bids only on
+    free edges; otherwise it circulates across its own partition's edges.
+
+    Conventions: owner -1 = free, -2 = padding; stranded vertex funding is
+    kept on the vertex.
+    """
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    owner = np.asarray(owner).copy()
+    money = np.asarray(money, dtype=np.float64).copy()
+    k, v = money.shape
+    e = len(src)
+
+    deg_free = np.zeros(v)
+    for idx in range(e):
+        if owner[idx] == -1:
+            deg_free[src[idx]] += 1
+            deg_free[dst[idx]] += 1
+
+    offers = np.zeros((k, e))
+    contrib = np.zeros((k, e, 2))
+    # --- step 1 (frontier-first) -------------------------------------------
+    for i in range(k):
+        deg_own = np.zeros(v)
+        for idx in range(e):
+            if owner[idx] == i:
+                deg_own[src[idx]] += 1
+                deg_own[dst[idx]] += 1
+        share_free = np.zeros(v)
+        share_own = np.zeros(v)
+        for u in range(v):
+            if deg_free[u] > 0:
+                share_free[u] = money[i, u] / deg_free[u]
+                money[i, u] = 0.0
+            elif deg_own[u] > 0:
+                share_own[u] = money[i, u] / deg_own[u]
+                money[i, u] = 0.0
+        for idx in range(e):
+            if owner[idx] == -1:
+                contrib[i, idx, 0] = share_free[src[idx]]
+                contrib[i, idx, 1] = share_free[dst[idx]]
+            elif owner[idx] == i:
+                contrib[i, idx, 0] = share_own[src[idx]]
+                contrib[i, idx, 1] = share_own[dst[idx]]
+            offers[i, idx] = contrib[i, idx, 0] + contrib[i, idx, 1]
+    # --- step 2 -------------------------------------------------------------
+    bought = np.zeros(k)
+    new_owner = owner.copy()
+    for idx in range(e):
+        if owner[idx] < -1:
+            continue
+        best = int(np.argmax(offers[:, idx]))
+        if owner[idx] == -1 and offers[best, idx] >= 1.0:
+            new_owner[idx] = best
+            bought[best] += 1
+            rem = (offers[best, idx] - 1.0) / 2
+            money[best, src[idx]] += rem
+            money[best, dst[idx]] += rem
+            for i in range(k):
+                if i != best:
+                    money[i, src[idx]] += contrib[i, idx, 0]
+                    money[i, dst[idx]] += contrib[i, idx, 1]
+        else:
+            for i in range(k):
+                if owner[idx] == i:
+                    money[i, src[idx]] += offers[i, idx] / 2
+                    money[i, dst[idx]] += offers[i, idx] / 2
+                else:
+                    money[i, src[idx]] += contrib[i, idx, 0]
+                    money[i, dst[idx]] += contrib[i, idx, 1]
+    return new_owner, money, bought
+
+
+def sssp_ref(n: int, edges, source: int):
+    """BFS hop distances on an unweighted undirected graph."""
+    from collections import deque
+
+    adj = [[] for _ in range(n)]
+    for (u, v) in edges:
+        adj[u].append(v)
+        adj[v].append(u)
+    dist = [float("inf")] * n
+    dist[source] = 0
+    q = deque([source])
+    while q:
+        u = q.popleft()
+        for w in adj[u]:
+            if dist[w] == float("inf"):
+                dist[w] = dist[u] + 1
+                q.append(w)
+    return dist

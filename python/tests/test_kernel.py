@@ -1,0 +1,156 @@
+"""L1 correctness: Pallas min-plus kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps block-grid shapes, value ranges (including tropical-INF
+padding) and dtypes; results must match the oracle exactly (min and + are
+evaluated in an order-independent way, so no float slack is needed for
+f32 inputs drawn from a finite range).
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.minplus import INF32, minplus_mv, minplus_mm
+from compile.kernels.ref import minplus_mv_ref, minplus_mm_ref, relax_ref
+
+RNG = np.random.default_rng(42)
+
+
+def _rand(shape, inf_frac=0.0, dtype=np.float32):
+    a = RNG.uniform(0.0, 100.0, shape).astype(dtype)
+    if inf_frac > 0:
+        mask = RNG.uniform(size=shape) < inf_frac
+        a = np.where(mask, np.asarray(float(INF32), dtype), a)
+    return a
+
+
+# ---------------------------------------------------------------- mv kernel
+
+@settings(max_examples=40, deadline=None)
+@given(
+    mb=st.integers(1, 4), nb=st.integers(1, 4),
+    block=st.sampled_from([8, 16, 32]),
+    inf_frac=st.sampled_from([0.0, 0.3, 0.9]),
+)
+def test_mv_matches_ref(mb, nb, block, inf_frac):
+    a = _rand((mb * block, nb * block), inf_frac)
+    x = _rand((nb * block,), inf_frac)
+    got = minplus_mv(a, x, block_m=block, block_n=block)
+    want = minplus_mv_ref(a, x)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_mv_default_block_256():
+    a = _rand((512, 256), 0.5)
+    x = _rand((256,))
+    np.testing.assert_array_equal(
+        np.asarray(minplus_mv(a, x)), np.asarray(minplus_mv_ref(a, x)))
+
+
+def test_mv_rectangular_blocks():
+    a = _rand((64, 96), 0.2)
+    x = _rand((96,))
+    got = minplus_mv(a, x, block_m=32, block_n=16)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(minplus_mv_ref(a, x)))
+
+
+def test_mv_all_inf_column_is_inert():
+    """A padded (all-INF) column never wins the min."""
+    a = _rand((32, 32))
+    a[:, 7] = float(INF32)
+    x = _rand((32,))
+    x[7] = 0.0
+    got = np.asarray(minplus_mv(a, x, block_m=16, block_n=16))
+    a2 = np.delete(a, 7, axis=1)
+    x2 = np.delete(x, 7)
+    np.testing.assert_array_equal(got, np.asarray(minplus_mv_ref(a2, x2)))
+
+
+def test_mv_identity_of_min():
+    """A with 0 diagonal and INF off-diagonal is the tropical identity."""
+    n = 64
+    a = np.full((n, n), float(INF32), np.float32)
+    np.fill_diagonal(a, 0.0)
+    x = _rand((n,))
+    got = np.asarray(minplus_mv(a, x, block_m=32, block_n=32))
+    np.testing.assert_array_equal(got, x)
+
+
+def test_mv_bad_shape_asserts():
+    a = _rand((100, 100))
+    x = _rand((100,))
+    with pytest.raises(AssertionError):
+        minplus_mv(a, x, block_m=64, block_n=64)
+
+
+# ---------------------------------------------------------------- mm kernel
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mb=st.integers(1, 3), nb=st.integers(1, 3), kb=st.integers(1, 3),
+    block=st.sampled_from([8, 16]),
+    inf_frac=st.sampled_from([0.0, 0.4]),
+)
+def test_mm_matches_ref(mb, nb, kb, block, inf_frac):
+    a = _rand((mb * block, kb * block), inf_frac)
+    b = _rand((kb * block, nb * block), inf_frac)
+    got = minplus_mm(a, b, block_m=block, block_n=block, block_k=block)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(minplus_mm_ref(a, b)))
+
+
+def test_mm_default_block_128():
+    a = _rand((128, 256), 0.5)
+    b = _rand((256, 128), 0.5)
+    np.testing.assert_array_equal(
+        np.asarray(minplus_mm(a, b)), np.asarray(minplus_mm_ref(a, b)))
+
+
+def test_mm_associativity_with_identity():
+    """(A ⊗ I) == A in the tropical semiring."""
+    n = 32
+    a = _rand((n, n), 0.3)
+    ident = np.full((n, n), float(INF32), np.float32)
+    np.fill_diagonal(ident, 0.0)
+    got = np.asarray(minplus_mm(a, ident, block_m=16, block_n=16, block_k=16))
+    np.testing.assert_array_equal(got, a)
+
+
+def test_mm_agrees_with_mv_per_column():
+    a = _rand((64, 64), 0.2)
+    b = _rand((64, 32), 0.2)
+    mm = np.asarray(minplus_mm(a, b, block_m=32, block_n=32, block_k=32))
+    for c in range(b.shape[1]):
+        mv = np.asarray(minplus_mv(a, jnp.asarray(b[:, c]),
+                                   block_m=32, block_n=32))
+        np.testing.assert_array_equal(mm[:, c], mv)
+
+
+# ------------------------------------------------------- semiring properties
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_mv_monotone(seed):
+    """x' <= x pointwise implies A ⊗ x' <= A ⊗ x pointwise."""
+    rng = np.random.default_rng(seed)
+    a = rng.uniform(0, 50, (32, 32)).astype(np.float32)
+    x = rng.uniform(0, 50, (32,)).astype(np.float32)
+    x2 = x - rng.uniform(0, 5, (32,)).astype(np.float32)
+    y = np.asarray(minplus_mv(a, x, block_m=16, block_n=16))
+    y2 = np.asarray(minplus_mv(a, x2, block_m=16, block_n=16))
+    assert (y2 <= y + 1e-5).all()
+
+
+def test_relax_ref_converges_on_path():
+    """Sanity for the oracle itself: path graph distances."""
+    n = 16
+    a = np.full((n, n), float(INF32), np.float32)
+    for i in range(n - 1):
+        a[i, i + 1] = 1.0
+        a[i + 1, i] = 1.0
+    x = np.full((n,), float(INF32), np.float32)
+    x[0] = 0.0
+    out = np.asarray(relax_ref(a, x, n))
+    np.testing.assert_array_equal(out, np.arange(n, dtype=np.float32))

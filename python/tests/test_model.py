@@ -1,0 +1,192 @@
+"""L2 correctness: relaxation fixpoint vs BFS; funding_step vs loop oracle.
+
+The funding tests are the python half of the DFEP cross-validation — the
+rust engine re-implements the same round semantics and is checked against
+the same invariants (rust/src/partition/dfep.rs tests).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.minplus import INF32
+from compile.model import funding_step, relax_step, relax_while, \
+    multi_source_step
+from tests.oracles import funding_step_ref, sssp_ref
+
+INF = float(INF32)
+
+
+def _random_graph(rng, n, m):
+    """m distinct undirected edges over n vertices (may be disconnected)."""
+    edges = set()
+    while len(edges) < m:
+        u, v = rng.integers(0, n, 2)
+        if u != v:
+            edges.add((min(u, v), max(u, v)))
+    return sorted(edges)
+
+
+def _dense(n, edges, w=1.0):
+    a = np.full((n, n), INF, np.float32)
+    for u, v in edges:
+        a[u, v] = w
+        a[v, u] = w
+    return a
+
+
+# ----------------------------------------------------------- relaxation
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_relax_while_equals_bfs(seed):
+    rng = np.random.default_rng(seed)
+    n = 32
+    edges = _random_graph(rng, n, 48)
+    a = _dense(n, edges)
+    src = int(rng.integers(0, n))
+    x0 = np.full((n,), INF, np.float32)
+    x0[src] = 0.0
+    got, steps = relax_while(jnp.asarray(a), jnp.asarray(x0), n)
+    want = sssp_ref(n, edges, src)
+    for i in range(n):
+        if want[i] == float("inf"):
+            assert got[i] >= INF / 2
+        else:
+            assert got[i] == want[i]
+    assert 0 < int(steps) <= n
+
+
+def test_relax_step_idempotent_at_fixpoint():
+    rng = np.random.default_rng(3)
+    n = 16
+    edges = _random_graph(rng, n, 30)
+    a = jnp.asarray(_dense(n, edges))
+    x = np.full((n,), INF, np.float32)
+    x[0] = 0.0
+    x, _ = relax_while(a, jnp.asarray(x), n)
+    again = relax_step(a, x)
+    np.testing.assert_array_equal(np.asarray(again), np.asarray(x))
+
+
+def test_connected_components_via_zero_weights():
+    """w=0 adjacency turns relaxation into min-label spreading."""
+    # two components: {0,1,2}, {3,4}
+    edges = [(0, 1), (1, 2), (3, 4)]
+    a = _dense(8, edges, w=0.0)
+    labels = np.arange(8, dtype=np.float32) + 10.0
+    out, _ = relax_while(jnp.asarray(a), jnp.asarray(labels), 8)
+    out = np.asarray(out)
+    assert out[0] == out[1] == out[2] == 10.0
+    assert out[3] == out[4] == 13.0
+    assert (out[5:] == labels[5:]).all()      # isolated vertices keep labels
+
+
+def test_multi_source_step_matches_single_source():
+    rng = np.random.default_rng(7)
+    n = 32
+    edges = _random_graph(rng, n, 64)
+    a = jnp.asarray(_dense(n, edges))
+    b = np.full((n, n), INF, np.float32)
+    np.fill_diagonal(b, 0.0)
+    b = jnp.asarray(b)
+    for _ in range(3):
+        b = multi_source_step(a, b)
+    for s in [0, 5, 31]:
+        x = np.full((n,), INF, np.float32)
+        x[s] = 0.0
+        x = jnp.asarray(x)
+        for _ in range(3):
+            x = relax_step(a, x)
+        np.testing.assert_array_equal(np.asarray(b)[:, s], np.asarray(x))
+
+
+# ----------------------------------------------------------- funding round
+
+def _random_funding_instance(rng, k, n, m, owned_frac):
+    edges = _random_graph(rng, n, m)
+    e = len(edges)
+    src = np.array([u for u, _ in edges], np.int32)
+    dst = np.array([v for _, v in edges], np.int32)
+    owner = np.full((e,), -1, np.int32)
+    owned = rng.uniform(size=e) < owned_frac
+    owner[owned] = rng.integers(0, k, owned.sum())
+    # a few padding entries at the tail
+    pad = max(1, e // 8)
+    src = np.concatenate([src, np.zeros(pad, np.int32)])
+    dst = np.concatenate([dst, np.zeros(pad, np.int32)])
+    owner = np.concatenate([owner, np.full(pad, -2, np.int32)])
+    money = rng.uniform(0, 4, (k, n)).astype(np.float32)
+    return src, dst, owner, money
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       owned_frac=st.sampled_from([0.0, 0.3, 0.8]))
+def test_funding_step_matches_oracle(seed, owned_frac):
+    rng = np.random.default_rng(seed)
+    src, dst, owner, money = _random_funding_instance(rng, 4, 24, 40,
+                                                      owned_frac)
+    no, nm, b = funding_step(jnp.asarray(src), jnp.asarray(dst),
+                             jnp.asarray(owner), jnp.asarray(money))
+    ro, rm, rb = funding_step_ref(src, dst, owner, money)
+    np.testing.assert_array_equal(np.asarray(no), ro)
+    np.testing.assert_allclose(np.asarray(nm), rm, rtol=1e-3, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(b), rb)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_funding_conservation(seed):
+    """money_after + edges_bought == money_before (1 unit pays 1 edge)."""
+    rng = np.random.default_rng(seed)
+    src, dst, owner, money = _random_funding_instance(rng, 6, 32, 56, 0.2)
+    no, nm, b = funding_step(jnp.asarray(src), jnp.asarray(dst),
+                             jnp.asarray(owner), jnp.asarray(money))
+    before = float(np.asarray(money, np.float64).sum())
+    after = float(np.asarray(nm, np.float64).sum()) + float(np.asarray(b).sum())
+    np.testing.assert_allclose(after, before, rtol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_funding_owner_monotone(seed):
+    """Owned edges never change hands; padding never gets sold (plain DFEP)."""
+    rng = np.random.default_rng(seed)
+    src, dst, owner, money = _random_funding_instance(rng, 4, 24, 40, 0.5)
+    no, _, _ = funding_step(jnp.asarray(src), jnp.asarray(dst),
+                            jnp.asarray(owner), jnp.asarray(money))
+    no = np.asarray(no)
+    assigned = owner >= 0
+    np.testing.assert_array_equal(no[assigned], owner[assigned])
+    np.testing.assert_array_equal(no[owner == -2], owner[owner == -2])
+    # a sold edge goes to a real partition
+    assert ((no >= -2) & (no < 4)).all()
+
+
+def test_funding_no_money_no_sale():
+    src = np.array([0, 1], np.int32)
+    dst = np.array([1, 2], np.int32)
+    owner = np.array([-1, -1], np.int32)
+    money = np.zeros((3, 4), np.float32)
+    no, nm, b = funding_step(jnp.asarray(src), jnp.asarray(dst),
+                             jnp.asarray(owner), jnp.asarray(money))
+    assert (np.asarray(no) == -1).all()
+    assert np.asarray(nm).sum() == 0.0
+    assert np.asarray(b).sum() == 0.0
+
+
+def test_funding_single_bidder_expands_region():
+    """One partition with ample funds buys all its frontier edges."""
+    # triangle 0-1-2 plus tail 2-3; partition 0 funded at vertex 0
+    src = np.array([0, 0, 1, 2], np.int32)
+    dst = np.array([1, 2, 2, 3], np.int32)
+    owner = np.full((4,), -1, np.int32)
+    money = np.zeros((2, 4), np.float32)
+    money[0, 0] = 10.0
+    no, nm, b = funding_step(jnp.asarray(src), jnp.asarray(dst),
+                             jnp.asarray(owner), jnp.asarray(money))
+    no = np.asarray(no)
+    # vertex 0's two incident edges get 5 units each -> both sold to p0
+    np.testing.assert_array_equal(no, [0, 0, -1, -1])
+    assert float(np.asarray(b)[0]) == 2.0

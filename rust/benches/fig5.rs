@@ -1,0 +1,5 @@
+//! Regenerates the paper's fig5 series — see bench::figures::fig5.
+//! Knobs: DFEP_SAMPLES (default 5; paper 100), DFEP_SCALE (default 0.05).
+fn main() {
+    dfep::bench::figures::fig5();
+}

@@ -1,0 +1,5 @@
+//! Regenerates the paper's hotpath series — see bench::figures::hotpath.
+//! Knobs: DFEP_SAMPLES (default 5; paper 100), DFEP_SCALE (default 0.05).
+fn main() {
+    dfep::bench::figures::hotpath();
+}

@@ -1,0 +1,414 @@
+//! Shared figure-regeneration logic: every `rust/benches/figN.rs` target
+//! is a thin main() around one of these runners, so the same code also
+//! backs integration tests and the CLI.
+//!
+//! Scaling knobs (env):
+//!   DFEP_SAMPLES  — seeded repetitions per point   (default 5; paper: 100)
+//!   DFEP_SCALE    — dataset scale factor           (default 0.05; paper: 1.0)
+//! `cargo bench` completes in minutes at the defaults; the paper-fidelity
+//! run is `DFEP_SAMPLES=100 DFEP_SCALE=1.0 cargo bench`.
+
+use crate::bench::harness::{fmt_f, sample_seeds, Table};
+use crate::cluster::cost::CostModel;
+use crate::cluster::dfep_mr::{resimulate, run_cluster_dfep};
+use crate::cluster::etsch_mr::{run_baseline_sssp, run_etsch_sssp};
+use crate::etsch::gain::average_gain;
+use crate::graph::{datasets, rewire, stats, Graph};
+use crate::partition::{
+    dfep::Dfep, dfepc::Dfepc, jabeja::JaBeJa, metrics, Partitioner,
+};
+use crate::util::stats::{mean, Summary};
+
+pub fn samples() -> usize {
+    std::env::var("DFEP_SAMPLES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(5)
+}
+
+pub fn scale() -> f64 {
+    std::env::var("DFEP_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.05)
+}
+
+/// Cluster figures need enough per-round volume for the overhead/work
+/// ratio to be meaningful; they default to a larger scale than the
+/// simulation figures (DFEP_CLUSTER_SCALE overrides).
+pub fn cluster_scale() -> f64 {
+    std::env::var("DFEP_CLUSTER_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or_else(|| scale().max(0.25))
+}
+
+fn load(name: &str, scale_f: f64) -> Graph {
+    let d = datasets::by_name(name).expect("dataset");
+    if scale_f >= 1.0 {
+        d.generate(42)
+    } else {
+        d.scaled(scale_f, 42)
+    }
+}
+
+/// Averaged metrics for one (partitioner, graph, k) cell.
+pub struct Cell {
+    pub largest: Summary,
+    pub nstdev: Summary,
+    pub messages: Summary,
+    pub rounds: Summary,
+    pub gain: Summary,
+    pub disconnected: Summary,
+}
+
+pub fn measure(
+    g: &Graph,
+    p: &dyn Partitioner,
+    k: usize,
+    samples: usize,
+    gain_samples: usize,
+) -> Cell {
+    let seeds = sample_seeds(samples, 0xF16);
+    let mut largest = Vec::new();
+    let mut nstdev = Vec::new();
+    let mut messages = Vec::new();
+    let mut rounds = Vec::new();
+    let mut gains = Vec::new();
+    let mut disc = Vec::new();
+    for &s in &seeds {
+        let part = p.partition(g, k, s);
+        let r = metrics::evaluate(g, &part);
+        largest.push(r.largest);
+        nstdev.push(r.nstdev);
+        messages.push(r.messages as f64);
+        rounds.push(r.rounds as f64);
+        disc.push(r.disconnected);
+        if gain_samples > 0 {
+            gains.push(average_gain(g, &part, gain_samples, s));
+        }
+    }
+    Cell {
+        largest: Summary::of(&largest),
+        nstdev: Summary::of(&nstdev),
+        messages: Summary::of(&messages),
+        rounds: Summary::of(&rounds),
+        gain: Summary::of(&gains),
+        disconnected: Summary::of(&disc),
+    }
+}
+
+/// Fig 5: DFEP & DFEPC vs K on ASTROPH and USROADS.
+pub fn fig5() {
+    let n = samples();
+    let sc = scale();
+    println!("Fig 5 — DFEP/DFEPC vs K  (samples={n}, scale={sc})");
+    for ds in ["astroph", "usroads"] {
+        let g = load(ds, sc);
+        println!(
+            "\n[{ds}] |V|={} |E|={}",
+            g.vertex_count(),
+            g.edge_count()
+        );
+        let mut t = Table::new(&[
+            "algo", "K", "largest", "nstdev", "messages", "rounds", "gain",
+        ]);
+        for k in [2usize, 4, 8, 16, 32, 64, 128] {
+            for (name, p) in [
+                ("DFEP", &Dfep::default() as &dyn Partitioner),
+                ("DFEPC", &Dfepc::default() as &dyn Partitioner),
+            ] {
+                let c = measure(&g, p, k, n, 2);
+                t.row(&[
+                    name.into(),
+                    k.to_string(),
+                    fmt_f(c.largest.mean),
+                    fmt_f(c.nstdev.mean),
+                    fmt_f(c.messages.mean),
+                    fmt_f(c.rounds.mean),
+                    fmt_f(c.gain.mean),
+                ]);
+            }
+        }
+    }
+    println!(
+        "\nshape check (paper): nstdev & messages rise with K; rounds and \
+         gain fall with K."
+    );
+}
+
+/// Fig 6: DFEP vs diameter (rewired USROADS), K = 20.
+pub fn fig6() {
+    let n = samples();
+    let sc = scale();
+    let g0 = load("usroads", sc);
+    println!(
+        "Fig 6 — DFEP vs diameter (rewired USROADS, K=20, samples={n}, \
+         scale={sc})"
+    );
+    println!("|V|={} |E|={}", g0.vertex_count(), g0.edge_count());
+    let mut t = Table::new(&[
+        "remap%", "diam", "largest", "nstdev", "messages", "rounds",
+        "gain", "disc%",
+    ]);
+    for frac in [0.0, 0.01, 0.02, 0.05, 0.1, 0.2, 0.4] {
+        let g = rewire::rewire_fraction(&g0, frac, 7);
+        let d = stats::diameter_estimate(&g, 4, 1);
+        let c = measure(&g, &Dfep::default(), 20, n, 2);
+        t.row(&[
+            fmt_f(frac * 100.0),
+            d.to_string(),
+            fmt_f(c.largest.mean),
+            fmt_f(c.nstdev.mean),
+            fmt_f(c.messages.mean),
+            fmt_f(c.rounds.mean),
+            fmt_f(c.gain.mean),
+            fmt_f(c.disconnected.mean * 100.0),
+        ]);
+    }
+    println!(
+        "\nshape check (paper): largest/nstdev/rounds/gain rise with \
+         diameter; messages fall."
+    );
+}
+
+/// Fig 7: DFEP vs DFEPC vs JaBeJa on the four simulation datasets, K=20.
+pub fn fig7() {
+    let n = samples();
+    let sc = scale();
+    println!("Fig 7 — DFEP/DFEPC/JaBeJa, K=20 (samples={n}, scale={sc})");
+    for ds in ["astroph", "email-enron", "usroads", "wordnet"] {
+        let g = load(ds, sc);
+        println!(
+            "\n[{ds}] |V|={} |E|={}",
+            g.vertex_count(),
+            g.edge_count()
+        );
+        let mut t = Table::new(&[
+            "algo", "largest", "nstdev", "messages", "rounds", "gain",
+        ]);
+        for (name, p) in [
+            ("DFEP", &Dfep::default() as &dyn Partitioner),
+            ("DFEPC", &Dfepc::default() as &dyn Partitioner),
+            ("JaBeJa", &JaBeJa::default() as &dyn Partitioner),
+        ] {
+            let c = measure(&g, p, 20, n, 2);
+            t.row(&[
+                name.into(),
+                fmt_f(c.largest.mean),
+                fmt_f(c.nstdev.mean),
+                fmt_f(c.messages.mean),
+                fmt_f(c.rounds.mean),
+                fmt_f(c.gain.mean),
+            ]);
+        }
+    }
+    println!(
+        "\nshape check (paper): small-world -> DFEP/DFEPC more balanced at \
+         similar gain; USROADS -> JaBeJa more balanced but ~10x messages \
+         and lower gain."
+    );
+}
+
+/// Fig 8: DFEP speedup on the simulated EC2 cluster, K=20, nodes 2..16.
+pub fn fig8() {
+    let sc = cluster_scale();
+    let cost = CostModel::default();
+    println!("Fig 8 — DFEP cluster speedup, K=20 (scale={sc})");
+    let mut t = Table::new(&[
+        "dataset", "nodes", "time_s", "speedup_vs_2",
+    ]);
+    for ds in ["dblp", "youtube", "amazon"] {
+        let g = load(ds, sc);
+        let run = run_cluster_dfep(&g, 20, 2, 7, &cost, 2000);
+        let t2 = run.total_time;
+        for nodes in [2usize, 4, 8, 16] {
+            let tt = resimulate(&run, nodes, &cost);
+            t.row(&[
+                ds.into(),
+                nodes.to_string(),
+                fmt_f(tt),
+                fmt_f(t2 / tt),
+            ]);
+        }
+    }
+    println!(
+        "\nshape check (paper): speedup > 5x at 16 nodes vs 2 on the \
+         larger datasets."
+    );
+}
+
+/// Fig 9: ETSCH SSSP vs vertex-centric baseline on the cluster.
+pub fn fig9() {
+    let sc = cluster_scale();
+    let cost = CostModel::default();
+    println!("Fig 9 — SSSP: ETSCH vs vertex-centric baseline (scale={sc})");
+    let mut t = Table::new(&[
+        "dataset", "nodes", "etsch_s", "rounds", "baseline_s",
+        "supersteps", "ratio",
+    ]);
+    for ds in ["dblp", "youtube", "amazon"] {
+        let g = load(ds, sc);
+        for nodes in [2usize, 4, 8, 16] {
+            let p = Dfep::default().partition(&g, nodes, 7);
+            let e = run_etsch_sssp(&g, &p, 0, nodes, &cost);
+            let b = run_baseline_sssp(&g, 0, nodes, &cost);
+            assert_eq!(e.distances, b.distances, "correctness");
+            t.row(&[
+                ds.into(),
+                nodes.to_string(),
+                fmt_f(e.total_time),
+                e.rounds.to_string(),
+                fmt_f(b.total_time),
+                b.rounds.to_string(),
+                fmt_f(b.total_time / e.total_time),
+            ]);
+        }
+    }
+    println!(
+        "\nshape check (paper): ETSCH faster everywhere; advantage \
+         largest at few nodes and narrows as nodes grow."
+    );
+}
+
+/// Tables II & III: paper-reported vs generated dataset statistics.
+pub fn tables() {
+    let sc = scale();
+    println!("Tables II/III — dataset calibration (scale={sc})");
+    let mut t = Table::new(&[
+        "dataset", "V_paper", "V_gen", "E_paper", "E_gen", "D_paper",
+        "D_gen", "CC_paper", "CC_gen", "RCC_gen",
+    ]);
+    for d in datasets::simulation_datasets()
+        .into_iter()
+        .chain(datasets::ec2_datasets())
+    {
+        let g = if sc >= 1.0 { d.generate(42) } else { d.scaled(sc, 42) };
+        let s = stats::graph_stats(&g, 1);
+        t.row(&[
+            d.name.into(),
+            d.paper.v.to_string(),
+            s.vertices.to_string(),
+            d.paper.e.to_string(),
+            s.edges.to_string(),
+            d.paper.d.to_string(),
+            s.diameter.to_string(),
+            format!("{:.2e}", d.paper.cc),
+            format!("{:.2e}", s.clustering),
+            format!("{:.2e}", s.random_cc),
+        ]);
+    }
+    if sc < 1.0 {
+        println!(
+            "(scaled instances: V/E shrink with the factor; run with \
+             DFEP_SCALE=1.0 for the full-size calibration check)"
+        );
+    }
+}
+
+/// Ablations + hot-path micro benches (feeds EXPERIMENTS.md §Perf).
+pub fn hotpath() {
+    let n = samples().max(3);
+    println!("hot paths (samples={n})");
+    let g = datasets::astroph().scaled(0.25, 42);
+    println!("graph: |V|={} |E|={}", g.vertex_count(), g.edge_count());
+
+    // DFEP partition throughput
+    let mut t = Table::new(&["path", "mean_s", "p95_s", "Medges/s"]);
+    for (name, p) in [
+        ("DFEP k=8", Dfep::default()),
+        (
+            "DFEP k=8 literal-Alg4 (ablation)",
+            Dfep { frontier_first: false, max_rounds: 300, ..Default::default() },
+        ),
+    ] {
+        let times = crate::util::timer::time_n(1, n, || {
+            let _ = p.partition(&g, 8, 1);
+        });
+        let s = Summary::of(&times);
+        t.row(&[
+            name.into(),
+            fmt_f(s.mean),
+            fmt_f(s.p95),
+            fmt_f(g.edge_count() as f64 / s.mean / 1e6),
+        ]);
+    }
+
+    // ETSCH round loop
+    let p = Dfep::default().partition(&g, 8, 1);
+    let times = crate::util::timer::time_n(1, n, || {
+        let mut engine = crate::etsch::Etsch::new(&g, &p);
+        let _ = engine.run(&mut crate::etsch::sssp::Sssp::new(0));
+    });
+    let s = Summary::of(&times);
+    t.row(&[
+        "ETSCH sssp (build+run)".into(),
+        fmt_f(s.mean),
+        fmt_f(s.p95),
+        fmt_f(g.edge_count() as f64 / s.mean / 1e6),
+    ]);
+
+    // XLA runtime paths (L1 kernel tile + L2 fused fixpoint + funding)
+    if let Ok(rt) = crate::runtime::Runtime::open_default() {
+        use crate::runtime::{Tensor, INF32};
+        let exe = rt.load("minplus_block_256").unwrap();
+        let a = vec![INF32; 256 * 256];
+        let x = vec![INF32; 256];
+        let times = crate::util::timer::time_n(2, n.max(10), || {
+            let _ = exe
+                .run(&[Tensor::F32(a.clone()), Tensor::F32(x.clone())])
+                .unwrap();
+        });
+        let s = Summary::of(&times);
+        t.row(&[
+            "XLA minplus_block_256 (1 tile)".into(),
+            fmt_f(s.mean),
+            fmt_f(s.p95),
+            fmt_f(256.0 * 256.0 / s.mean / 1e6),
+        ]);
+        let sub = crate::etsch::build_subgraphs(&g, &p);
+        let big = sub.iter().max_by_key(|s| s.vertex_count()).unwrap();
+        let tiled =
+            crate::runtime::blocktiled::TiledSubgraph::pack(big, 1.0);
+        let mut init = vec![INF32; big.vertex_count()];
+        init[0] = 0.0;
+        let times = crate::util::timer::time_n(1, n, || {
+            let _ = crate::runtime::blocktiled::relax_to_fixpoint(
+                &rt, &tiled, &init, 4096,
+            )
+            .unwrap();
+        });
+        let s = Summary::of(&times);
+        t.row(&[
+            format!(
+                "XLA tiled local phase ({}v/{}tiles)",
+                big.vertex_count(),
+                tiled.tiles.len()
+            ),
+            fmt_f(s.mean),
+            fmt_f(s.p95),
+            fmt_f(big.edge_count as f64 / s.mean / 1e6),
+        ]);
+    } else {
+        println!("(XLA rows skipped: artifacts not built)");
+    }
+
+    // gain vs baselines snapshot
+    let dfep_gain = average_gain(&g, &p, 3, 1);
+    println!("\ngain(DFEP k=8) = {}", fmt_f(dfep_gain));
+    let lit = Dfep {
+        frontier_first: false,
+        max_rounds: 300,
+        ..Default::default()
+    }
+    .partition(&g, 8, 1);
+    println!(
+        "ablation literal-Alg4: rounds {} (capped) nstdev {} vs \
+         frontier-first rounds {} nstdev {}",
+        lit.rounds,
+        fmt_f(metrics::nstdev(&g, &lit)),
+        p.rounds,
+        fmt_f(metrics::nstdev(&g, &p)),
+    );
+    let _ = mean(&[]);
+}

@@ -1,0 +1,104 @@
+//! Text-table output + seed sweeps for the figure regenerators.
+//!
+//! Every figure bench prints the same series the paper plots: one row per
+//! x-value (K, diameter, node count, ...), averaged over `--samples`
+//! seeded runs, in aligned columns digestible by eyeball or awk.
+
+use crate::util::stats::Summary;
+
+/// Deterministic seed list for an n-sample experiment.
+pub fn sample_seeds(samples: usize, base: u64) -> Vec<u64> {
+    (0..samples as u64).map(|i| base ^ (i * 0x9E37_79B9 + 1)).collect()
+}
+
+/// Column-aligned table writer.
+pub struct Table {
+    widths: Vec<usize>,
+    header: Vec<String>,
+    printed_header: bool,
+}
+
+impl Table {
+    pub fn new(columns: &[&str]) -> Table {
+        Table {
+            widths: columns.iter().map(|c| c.len().max(10)).collect(),
+            header: columns.iter().map(|s| s.to_string()).collect(),
+            printed_header: false,
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        if !self.printed_header {
+            self.print_header_line();
+            self.printed_header = true;
+        }
+        let line: Vec<String> = cells
+            .iter()
+            .zip(self.widths.iter())
+            .map(|(c, &w)| format!("{c:>w$}"))
+            .collect();
+        println!("{}", line.join("  "));
+    }
+
+    fn print_header_line(&self) {
+        let line: Vec<String> = self
+            .header
+            .iter()
+            .zip(self.widths.iter())
+            .map(|(c, &w)| format!("{c:>w$}"))
+            .collect();
+        let joined = line.join("  ");
+        println!("{joined}");
+        println!("{}", "-".repeat(joined.len()));
+    }
+}
+
+/// Format helpers used across benches.
+pub fn fmt_f(x: f64) -> String {
+    if x == 0.0 {
+        "0".into()
+    } else if x.abs() >= 1000.0 {
+        format!("{x:.0}")
+    } else if x.abs() >= 1.0 {
+        format!("{x:.3}")
+    } else {
+        format!("{x:.4}")
+    }
+}
+
+pub fn fmt_summary(s: &Summary) -> String {
+    format!("{}±{}", fmt_f(s.mean), fmt_f(s.stdev))
+}
+
+/// Print a figure banner.
+pub fn print_header(fig: &str, what: &str) {
+    println!();
+    println!("=== {fig}: {what} ===");
+}
+
+/// Print one labeled value row.
+pub fn print_row(label: &str, value: &str) {
+    println!("{label:<28} {value}");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seeds_distinct_and_deterministic() {
+        let a = sample_seeds(10, 5);
+        let b = sample_seeds(10, 5);
+        assert_eq!(a, b);
+        let set: std::collections::HashSet<_> = a.iter().collect();
+        assert_eq!(set.len(), 10);
+    }
+
+    #[test]
+    fn fmt_bands() {
+        assert_eq!(fmt_f(0.0), "0");
+        assert_eq!(fmt_f(0.1234567), "0.1235");
+        assert_eq!(fmt_f(12.3), "12.300");
+        assert_eq!(fmt_f(4321.9), "4322");
+    }
+}

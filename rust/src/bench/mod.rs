@@ -1,0 +1,10 @@
+//! Bench harness substrate (no `criterion` in the vendored set): sample
+//! aggregation over seeds and paper-style table printing shared by the
+//! `rust/benches/*` targets.
+
+pub mod figures;
+pub mod harness;
+
+pub use harness::{
+    fmt_f, fmt_summary, print_header, print_row, sample_seeds, Table,
+};

@@ -1,0 +1,147 @@
+//! Cost model of the simulated Hadoop cluster (the EC2 substitute).
+//!
+//! The paper's §V-D runs Hadoop 1.2.1 on EC2 *m1.medium* instances (1
+//! vCPU, ~4 GB, moderate network). We cannot measure 16 machines inside
+//! this environment, so Figs 8-9 are regenerated on a per-round cost
+//! model whose constants are calibrated to that era:
+//!
+//!   round_time(nodes) = overhead
+//!                     + map_records   / (map_rate    * nodes)
+//!                     + shuffle_bytes / (shuffle_bw  * nodes) * sort_f
+//!                     + reduce_records/ (reduce_rate * nodes)
+//!
+//! The *relative* shapes the paper reports (speedup curve, ETSCH vs
+//! baseline crossover behavior) depend on the computation/communication/
+//! overhead ratio, which this preserves; absolute seconds are indicative
+//! only. All real algorithmic quantities (records, messages, rounds) come
+//! from actually running DFEP/ETSCH — only the clock is modeled.
+
+/// Per-node, per-phase rates (see module docs).
+#[derive(Clone, Debug)]
+pub struct CostModel {
+    /// Fixed per-MapReduce-round cost: JVM spawn, scheduling, HDFS
+    /// round-trip (Hadoop 1.x jobs pay this every iteration).
+    pub round_overhead_s: f64,
+    /// Map-side record processing rate per node (records/s).
+    pub map_rate: f64,
+    /// Reduce-side record processing rate per node (records/s).
+    pub reduce_rate: f64,
+    /// Shuffle bandwidth per node (bytes/s).
+    pub shuffle_bw: f64,
+    /// Sort/merge multiplier on shuffle volume.
+    pub sort_factor: f64,
+    /// Straggler inflation: the slowest of `n` tasks runs this much
+    /// slower than average per doubling of n (Hadoop-era tail behavior).
+    pub straggler_per_doubling: f64,
+    /// In-memory graph traversal rate per node (edge ops/s) for work done
+    /// inside a single task without touching the record machinery.
+    pub in_memory_rate: f64,
+}
+
+impl Default for CostModel {
+    /// Hadoop 1.2.1 on m1.medium calibration. Hadoop 1.x pays heavy
+    /// per-record overhead (java serialization, spill/merge, HDFS
+    /// round-trips): effective map throughput was single-digit
+    /// thousands of records/s per m1.medium core, job startup 10-15 s.
+    /// These constants put the computation/overhead ratio where the
+    /// paper's Fig 8 speedup curve (>5x from 2 to 16 nodes on the Table
+    /// III datasets) lives.
+    fn default() -> Self {
+        CostModel {
+            round_overhead_s: 12.0,
+            map_rate: 8_000.0,
+            reduce_rate: 6_000.0,
+            shuffle_bw: 10e6,
+            sort_factor: 1.3,
+            straggler_per_doubling: 0.06,
+            in_memory_rate: 1.0e6,
+        }
+    }
+}
+
+/// Work volume of one MapReduce round.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RoundWork {
+    pub map_records: f64,
+    pub shuffle_bytes: f64,
+    pub reduce_records: f64,
+    /// Raw in-memory edge operations executed *inside* a task (e.g.
+    /// ETSCH's local Dijkstra) — these bypass the MapReduce record
+    /// machinery and run at memory speed, not at `map_rate`.
+    pub cpu_edge_ops: f64,
+}
+
+impl CostModel {
+    /// Simulated wall-clock of one round on `nodes` workers.
+    pub fn round_time(&self, nodes: usize, w: RoundWork) -> f64 {
+        assert!(nodes >= 1);
+        let n = nodes as f64;
+        let parallel = w.map_records / (self.map_rate * n)
+            + w.shuffle_bytes * self.sort_factor / (self.shuffle_bw * n)
+            + w.reduce_records / (self.reduce_rate * n)
+            + w.cpu_edge_ops / (self.in_memory_rate * n);
+        let straggle =
+            1.0 + self.straggler_per_doubling * (n.log2().max(0.0));
+        self.round_overhead_s + parallel * straggle
+    }
+
+    /// Sum over a job's rounds.
+    pub fn job_time(&self, nodes: usize, rounds: &[RoundWork]) -> f64 {
+        rounds.iter().map(|&w| self.round_time(nodes, w)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn more_nodes_is_faster_until_overhead() {
+        let m = CostModel::default();
+        let w = RoundWork {
+            map_records: 3e6,
+            shuffle_bytes: 50e6,
+            reduce_records: 3e6,
+            cpu_edge_ops: 0.0,
+        };
+        let t2 = m.round_time(2, w);
+        let t8 = m.round_time(8, w);
+        let t16 = m.round_time(16, w);
+        assert!(t2 > t8 && t8 > t16, "{t2} {t8} {t16}");
+        // overhead floors the curve
+        assert!(t16 > m.round_overhead_s);
+    }
+
+    #[test]
+    fn speedup_shape_matches_fig8_band() {
+        // DBLP-scale work volume must yield >4x speedup from 2 to 16 nodes
+        let m = CostModel::default();
+        let w = RoundWork {
+            map_records: 3.2e5,            // |V| records
+            shuffle_bytes: 2.1e6 * 16.0,   // funding messages
+            reduce_records: 1.4e6,         // |V| + messages,
+            cpu_edge_ops: 0.0,
+        };
+        let rounds = vec![w; 15];
+        let speedup = m.job_time(2, &rounds) / m.job_time(16, &rounds);
+        assert!(
+            (4.0..8.0).contains(&speedup),
+            "speedup {speedup} out of the paper's band"
+        );
+    }
+
+    #[test]
+    fn tiny_jobs_do_not_scale() {
+        // overhead-dominated jobs stay flat — the Fig 9 small-dataset story
+        let m = CostModel::default();
+        let w = RoundWork {
+            map_records: 1e4,
+            shuffle_bytes: 1e5,
+            reduce_records: 1e4,
+            cpu_edge_ops: 0.0,
+        };
+        let r = vec![w; 5];
+        let speedup = m.job_time(2, &r) / m.job_time(16, &r);
+        assert!(speedup < 1.5, "speedup {speedup}");
+    }
+}

@@ -1,0 +1,205 @@
+//! ETSCH and the vertex-centric baseline as cluster jobs (Fig 9).
+//!
+//! The ETSCH job runs the real engine with `k = nodes` partitions (the
+//! paper: "setting the number of desired partitions equal to the number
+//! of available nodes") and measures per-round work volumes; the baseline
+//! is the Pregel-style SSSP executed as an *actual* [`VertexJob`] on the
+//! threaded MapReduce engine, one superstep per MapReduce round — exactly
+//! the structure the paper's "standard baseline" has in Hadoop.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+
+use super::cost::{CostModel, RoundWork};
+use super::mapreduce::{run_round, VertexJob};
+use crate::etsch::{sssp::Sssp, Etsch};
+use crate::graph::Graph;
+use crate::partition::EdgePartition;
+
+const MSG_BYTES: f64 = 12.0;
+/// Hadoop passes the graph structure through every iteration (the §VI
+/// critique of MapReduce for graphs) — account a per-round re-emission.
+const GRAPH_PASS_BYTES: f64 = 16.0;
+
+/// Simulated-time result of a cluster SSSP run.
+#[derive(Clone, Debug)]
+pub struct ClusterSsspRun {
+    pub rounds: usize,
+    pub total_time: f64,
+    pub round_times: Vec<f64>,
+    pub messages: usize,
+    pub distances: Vec<u32>,
+}
+
+/// ETSCH SSSP on `nodes` workers with a given (DFEP) partitioning.
+pub fn run_etsch_sssp(
+    g: &Graph,
+    p: &EdgePartition,
+    source: u32,
+    nodes: usize,
+    cost: &CostModel,
+) -> ClusterSsspRun {
+    let mut engine = Etsch::new(g, p);
+    let dist = engine.run(&mut Sssp::new(source));
+    let stats = engine.stats();
+    // per-round volumes: the local phase reads every replica vertex as a
+    // record but walks the partition's edges *in memory* inside one map
+    // task (the whole point of ETSCH's local computation); aggregation
+    // shuffles frontier states.
+    let replica_vertices: f64 = engine
+        .subgraphs()
+        .iter()
+        .map(|s| s.vertex_count() as f64)
+        .sum();
+    let part_edges: f64 =
+        engine.subgraphs().iter().map(|s| s.edge_count as f64).sum();
+    let frontier = (stats.messages_ceiling as f64
+        / stats.rounds.max(1) as f64)
+        .max(1.0);
+    let per_round = RoundWork {
+        map_records: replica_vertices,
+        shuffle_bytes: frontier * MSG_BYTES
+            + replica_vertices * GRAPH_PASS_BYTES,
+        reduce_records: replica_vertices,
+        cpu_edge_ops: part_edges * 2.0, // Dijkstra visits each edge twice
+    };
+    let round_times: Vec<f64> = (0..stats.rounds)
+        .map(|_| cost.round_time(nodes, per_round))
+        .collect();
+    ClusterSsspRun {
+        rounds: stats.rounds,
+        total_time: round_times.iter().sum(),
+        round_times,
+        messages: stats.messages_exchanged,
+        distances: dist,
+    }
+}
+
+/// The baseline vertex-centric SSSP as a real MapReduce job.
+struct BspSsspJob<'g> {
+    g: &'g Graph,
+    dist: Vec<AtomicU32>,
+}
+
+impl VertexJob for BspSsspJob<'_> {
+    type Msg = u32;
+
+    fn map(&self, v: u32, emit: &mut dyn FnMut(u32, u32)) {
+        let d = self.dist[v as usize].load(Ordering::Relaxed);
+        if d == u32::MAX {
+            return;
+        }
+        for &(w, _) in self.g.neighbors(v) {
+            emit(w, d + 1);
+        }
+    }
+
+    fn reduce(&self, v: u32, msgs: &[u32]) -> bool {
+        let best = *msgs.iter().min().unwrap();
+        let cur = self.dist[v as usize].load(Ordering::Relaxed);
+        if best < cur {
+            self.dist[v as usize].store(best, Ordering::Relaxed);
+            true
+        } else {
+            false
+        }
+    }
+}
+
+/// Run the baseline on the threaded engine; simulated time from measured
+/// per-superstep volumes.
+pub fn run_baseline_sssp(
+    g: &Graph,
+    source: u32,
+    nodes: usize,
+    cost: &CostModel,
+) -> ClusterSsspRun {
+    let n = g.vertex_count();
+    let job = BspSsspJob {
+        g,
+        dist: (0..n)
+            .map(|v| {
+                AtomicU32::new(if v as u32 == source { 0 } else { u32::MAX })
+            })
+            .collect(),
+    };
+    let mut round_times = Vec::new();
+    let mut messages = 0usize;
+    loop {
+        let out = run_round(&job, n, nodes.min(8), MSG_BYTES);
+        messages += out.messages;
+        let mut w = out.work;
+        // Hadoop re-reads and re-writes the whole graph every superstep
+        w.shuffle_bytes += (n + 2 * g.edge_count()) as f64 * GRAPH_PASS_BYTES;
+        round_times.push(cost.round_time(nodes, w));
+        if out.changed == 0 {
+            break;
+        }
+    }
+    ClusterSsspRun {
+        rounds: round_times.len(),
+        total_time: round_times.iter().sum(),
+        round_times,
+        messages,
+        distances: job
+            .dist
+            .into_iter()
+            .map(|a| a.into_inner())
+            .collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::GraphKind;
+    use crate::graph::stats::bfs_distances;
+    use crate::partition::{dfep::Dfep, Partitioner};
+
+    fn setup() -> (Graph, EdgePartition) {
+        let g = GraphKind::RoadNetwork {
+            rows: 12, cols: 12, drop: 0.15, subdiv: 2, shortcuts: 0,
+        }
+        .generate(1);
+        let p = Dfep::default().partition(&g, 4, 1);
+        (g, p)
+    }
+
+    #[test]
+    fn both_engines_compute_correct_distances() {
+        let (g, p) = setup();
+        let cost = CostModel::default();
+        let want = bfs_distances(&g, 0);
+        let etsch = run_etsch_sssp(&g, &p, 0, 4, &cost);
+        let base = run_baseline_sssp(&g, 0, 4, &cost);
+        assert_eq!(etsch.distances, want);
+        assert_eq!(base.distances, want);
+    }
+
+    #[test]
+    fn etsch_needs_fewer_rounds_than_baseline() {
+        let (g, p) = setup();
+        let cost = CostModel::default();
+        let etsch = run_etsch_sssp(&g, &p, 0, 4, &cost);
+        let base = run_baseline_sssp(&g, 0, 4, &cost);
+        assert!(
+            etsch.rounds < base.rounds,
+            "etsch {} !< baseline {}",
+            etsch.rounds,
+            base.rounds
+        );
+    }
+
+    #[test]
+    fn etsch_faster_on_few_nodes_fig9_shape() {
+        let (g, p) = setup();
+        let cost = CostModel::default();
+        let e = run_etsch_sssp(&g, &p, 0, 2, &cost);
+        let b = run_baseline_sssp(&g, 0, 2, &cost);
+        assert!(
+            e.total_time < b.total_time,
+            "etsch {} !< baseline {}",
+            e.total_time,
+            b.total_time
+        );
+    }
+}

@@ -1,0 +1,153 @@
+//! Failure & straggler injection for the simulated cluster.
+//!
+//! Hadoop's fault model re-executes failed tasks: a node failure during a
+//! round costs a redo of that node's share (plus detection latency), and a
+//! straggler stretches the round by the slowest task. This module wraps
+//! [`CostModel`] with a seeded failure process so the Figs 8-9 pipelines
+//! can be re-simulated under faults — the robustness argument the paper
+//! makes for distribution ("more robust to hardware failures") becomes a
+//! measurable ablation.
+
+use super::cost::{CostModel, RoundWork};
+use crate::util::rng::Rng;
+
+/// Fault process parameters.
+#[derive(Clone, Debug)]
+pub struct FaultModel {
+    /// Probability that any given node fails during a round.
+    pub node_failure_per_round: f64,
+    /// Detection + reschedule latency added when a failure happens (s).
+    pub detection_latency_s: f64,
+    /// Probability a round contains a severe straggler.
+    pub straggler_per_round: f64,
+    /// Multiplier a severe straggler applies to the round's parallel part.
+    pub straggler_factor: f64,
+}
+
+impl Default for FaultModel {
+    fn default() -> Self {
+        FaultModel {
+            node_failure_per_round: 0.002, // ~1 failure / 500 node-rounds
+            detection_latency_s: 30.0,     // Hadoop 1.x task-timeout scale
+            straggler_per_round: 0.05,
+            straggler_factor: 1.8,
+        }
+    }
+}
+
+/// Outcome of simulating one job under faults.
+#[derive(Clone, Debug, Default)]
+pub struct FaultyRun {
+    pub total_time: f64,
+    pub failures: usize,
+    pub straggled_rounds: usize,
+}
+
+/// Simulate a job's rounds on `nodes` workers under the fault process.
+/// A failed round pays the failure latency plus a re-execution of the
+/// failed node's share (1/nodes of the parallel work).
+pub fn simulate_with_faults(
+    cost: &CostModel,
+    faults: &FaultModel,
+    nodes: usize,
+    rounds: &[RoundWork],
+    seed: u64,
+) -> FaultyRun {
+    let mut rng = Rng::new(seed);
+    let mut out = FaultyRun::default();
+    for &w in rounds {
+        let base = cost.round_time(nodes, w);
+        let parallel = base - cost.round_overhead_s;
+        let mut t = base;
+        // node failures are independent per node
+        let mut failed = 0usize;
+        for _ in 0..nodes {
+            if rng.chance(faults.node_failure_per_round) {
+                failed += 1;
+            }
+        }
+        if failed > 0 {
+            out.failures += failed;
+            t += faults.detection_latency_s
+                + parallel * failed as f64 / nodes as f64;
+        }
+        if rng.chance(faults.straggler_per_round) {
+            out.straggled_rounds += 1;
+            t += parallel * (faults.straggler_factor - 1.0);
+        }
+        out.total_time += t;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn work() -> Vec<RoundWork> {
+        vec![
+            RoundWork {
+                map_records: 5e5,
+                shuffle_bytes: 1e7,
+                reduce_records: 5e5,
+                cpu_edge_ops: 0.0,
+            };
+            40
+        ]
+    }
+
+    #[test]
+    fn faults_only_add_time() {
+        let cost = CostModel::default();
+        let clean: f64 = work()
+            .iter()
+            .map(|&w| cost.round_time(8, w))
+            .sum();
+        let faulty = simulate_with_faults(
+            &cost,
+            &FaultModel::default(),
+            8,
+            &work(),
+            1,
+        );
+        assert!(faulty.total_time >= clean);
+    }
+
+    #[test]
+    fn zero_fault_model_is_exact() {
+        let cost = CostModel::default();
+        let clean: f64 =
+            work().iter().map(|&w| cost.round_time(8, w)).sum();
+        let none = FaultModel {
+            node_failure_per_round: 0.0,
+            straggler_per_round: 0.0,
+            ..Default::default()
+        };
+        let run = simulate_with_faults(&cost, &none, 8, &work(), 2);
+        assert!((run.total_time - clean).abs() < 1e-9);
+        assert_eq!(run.failures, 0);
+        assert_eq!(run.straggled_rounds, 0);
+    }
+
+    #[test]
+    fn more_nodes_more_failures_but_cheaper_each() {
+        let cost = CostModel::default();
+        let heavy = FaultModel {
+            node_failure_per_round: 0.05,
+            ..Default::default()
+        };
+        let f4 = simulate_with_faults(&cost, &heavy, 4, &work(), 3);
+        let f32 = simulate_with_faults(&cost, &heavy, 32, &work(), 3);
+        assert!(f32.failures > f4.failures, "{} {}", f32.failures, f4.failures);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let cost = CostModel::default();
+        let fm = FaultModel::default();
+        let a = simulate_with_faults(&cost, &fm, 8, &work(), 9);
+        let b = simulate_with_faults(&cost, &fm, 8, &work(), 9);
+        assert_eq!(a.total_time, b.total_time);
+        assert_eq!(a.failures, b.failures);
+    }
+}

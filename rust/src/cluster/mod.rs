@@ -1,0 +1,7 @@
+//! Simulated Hadoop/EC2 cluster — the Section V-D substitute.
+
+pub mod cost;
+pub mod dfep_mr;
+pub mod etsch_mr;
+pub mod failures;
+pub mod mapreduce;

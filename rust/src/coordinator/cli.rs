@@ -1,0 +1,124 @@
+//! Tiny CLI argument parser (the vendored crate set has no `clap`).
+//!
+//! Grammar: `repro <command> [--key value]... [--flag]...`
+//! Unknown keys are errors; every command documents its keys in `repro
+//! help`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of arguments (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(args: I) -> Result<Args> {
+        let mut it = args.into_iter().peekable();
+        let command = it.next().unwrap_or_else(|| "help".to_string());
+        let mut out = Args { command, ..Default::default() };
+        while let Some(a) = it.next() {
+            let Some(key) = a.strip_prefix("--") else {
+                bail!("unexpected positional argument '{a}'");
+            };
+            // --key=value or --key value or --flag
+            if let Some((k, v)) = key.split_once('=') {
+                out.opts.insert(k.to_string(), v.to_string());
+            } else if it
+                .peek()
+                .map(|n| !n.starts_with("--"))
+                .unwrap_or(false)
+            {
+                out.opts.insert(key.to_string(), it.next().unwrap());
+            } else {
+                out.flags.push(key.to_string());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--{key}: bad integer '{v}'")),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| anyhow!("--{key}: bad integer '{v}'"))
+            }
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                v.parse().map_err(|_| anyhow!("--{key}: bad float '{v}'"))
+            }
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Result<Args> {
+        Args::parse(s.split_whitespace().map(str::to_string))
+    }
+
+    #[test]
+    fn commands_opts_flags() {
+        let a = parse("partition --graph astroph --k 20 --verbose").unwrap();
+        assert_eq!(a.command, "partition");
+        assert_eq!(a.get("graph"), Some("astroph"));
+        assert_eq!(a.get_usize("k", 0).unwrap(), 20);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse("run --k=7 --frac=0.5").unwrap();
+        assert_eq!(a.get_usize("k", 0).unwrap(), 7);
+        assert_eq!(a.get_f64("frac", 0.0).unwrap(), 0.5);
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("run").unwrap();
+        assert_eq!(a.get_usize("k", 42).unwrap(), 42);
+        let a = parse("run --k abc").unwrap();
+        assert!(a.get_usize("k", 0).is_err());
+        assert!(parse("run positional").is_err());
+    }
+
+    #[test]
+    fn empty_is_help() {
+        let a = Args::parse(Vec::<String>::new()).unwrap();
+        assert_eq!(a.command, "help");
+    }
+}

@@ -1,0 +1,7 @@
+//! Leader/coordinator: run configuration, orchestration of partition +
+//! process phases, and the CLI surface of the `repro` binary.
+
+pub mod cli;
+pub mod runs;
+
+pub use runs::{PartitionerKind, RunConfig, RunResult};

@@ -1,0 +1,218 @@
+//! End-to-end run orchestration: dataset -> partitioner -> metrics ->
+//! optional ETSCH workload — the single entry point the CLI, examples and
+//! benches all share.
+
+use anyhow::{anyhow, Result};
+
+use crate::etsch::{gain, sssp::Sssp, Etsch};
+use crate::graph::{datasets, generators::GraphKind, Graph};
+use crate::partition::{
+    baselines::{GreedyBfs, HashEdge, RandomEdge},
+    dfep::Dfep,
+    dfepc::Dfepc,
+    fennel::StreamingGreedy,
+    jabeja::JaBeJa,
+    metrics::{self, Report},
+    multilevel::Multilevel,
+    EdgePartition, Partitioner,
+};
+
+/// Which partitioner to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionerKind {
+    Dfep,
+    Dfepc,
+    JaBeJa,
+    Random,
+    Hash,
+    GreedyBfs,
+    Streaming,
+    Multilevel,
+}
+
+impl PartitionerKind {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s.to_lowercase().as_str() {
+            "dfep" => Self::Dfep,
+            "dfepc" => Self::Dfepc,
+            "jabeja" | "ja-be-ja" => Self::JaBeJa,
+            "random" => Self::Random,
+            "hash" => Self::Hash,
+            "greedy" | "greedybfs" => Self::GreedyBfs,
+            "streaming" | "fennel" => Self::Streaming,
+            "multilevel" | "metis" => Self::Multilevel,
+            other => return Err(anyhow!("unknown partitioner '{other}'")),
+        })
+    }
+
+    pub fn build(&self) -> Box<dyn Partitioner> {
+        match self {
+            Self::Dfep => Box::new(Dfep::default()),
+            Self::Dfepc => Box::new(Dfepc::default()),
+            Self::JaBeJa => Box::new(JaBeJa::default()),
+            Self::Random => Box::new(RandomEdge),
+            Self::Hash => Box::new(HashEdge),
+            Self::GreedyBfs => Box::new(GreedyBfs),
+            Self::Streaming => Box::new(StreamingGreedy::default()),
+            Self::Multilevel => Box::new(Multilevel::default()),
+        }
+    }
+
+    pub fn all() -> &'static [PartitionerKind] {
+        &[
+            Self::Dfep,
+            Self::Dfepc,
+            Self::JaBeJa,
+            Self::Random,
+            Self::Hash,
+            Self::GreedyBfs,
+            Self::Streaming,
+            Self::Multilevel,
+        ]
+    }
+}
+
+/// A single experiment configuration.
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub partitioner: PartitionerKind,
+    pub k: usize,
+    pub seed: u64,
+    /// sources for the gain estimate (0 = skip gain)
+    pub gain_samples: usize,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            partitioner: PartitionerKind::Dfep,
+            k: 20,
+            seed: 1,
+            gain_samples: 0,
+        }
+    }
+}
+
+/// Metrics of one run (the paper's per-plot quantities).
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub report: Report,
+    pub gain: Option<f64>,
+    pub partition: EdgePartition,
+    pub partition_secs: f64,
+}
+
+/// Resolve a graph source: a named dataset ("astroph", optionally scaled
+/// like "astroph@0.1") or a generator spec ("er:n=1000,m=3000").
+pub fn resolve_graph(spec: &str, seed: u64) -> Result<Graph> {
+    if let Some((name, frac)) = spec.split_once('@') {
+        let d = datasets::by_name(name)
+            .ok_or_else(|| anyhow!("unknown dataset '{name}'"))?;
+        let frac: f64 = frac.parse()?;
+        return Ok(d.scaled(frac, seed));
+    }
+    if let Some(d) = datasets::by_name(spec) {
+        return Ok(d.generate(seed));
+    }
+    if let Some((kind, args)) = spec.split_once(':') {
+        let mut n = 1000usize;
+        let mut m = 3000usize;
+        let mut p = 0.3f64;
+        for kv in args.split(',') {
+            let (key, val) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow!("bad generator arg '{kv}'"))?;
+            match key {
+                "n" => n = val.parse()?,
+                "m" => m = val.parse()?,
+                "p" => p = val.parse()?,
+                _ => return Err(anyhow!("unknown generator key '{key}'")),
+            }
+        }
+        let g = match kind {
+            "er" => GraphKind::ErdosRenyi { n, m },
+            "ba" => GraphKind::BarabasiAlbert { n, m: m.min(12) },
+            "plc" => GraphKind::PowerlawCluster { n, m: m.min(12), p },
+            "road" => {
+                let side = (n as f64).sqrt() as usize;
+                GraphKind::RoadNetwork {
+                    rows: side.max(4),
+                    cols: side.max(4),
+                    drop: 0.2,
+                    subdiv: 3,
+                    shortcuts: 0,
+                }
+            }
+            other => return Err(anyhow!("unknown generator '{other}'")),
+        };
+        return Ok(g.generate(seed));
+    }
+    Err(anyhow!(
+        "cannot resolve graph '{spec}' (try astroph, usroads, \
+         astroph@0.1, er:n=1000,m=3000)"
+    ))
+}
+
+/// Run one experiment.
+pub fn run(g: &Graph, cfg: &RunConfig) -> RunResult {
+    let partitioner = cfg.partitioner.build();
+    let (partition, partition_secs) = crate::util::timer::time(|| {
+        partitioner.partition(g, cfg.k, cfg.seed)
+    });
+    let report = metrics::evaluate(g, &partition);
+    let gain = if cfg.gain_samples > 0 {
+        Some(gain::average_gain(g, &partition, cfg.gain_samples, cfg.seed))
+    } else {
+        None
+    };
+    RunResult { report, gain, partition, partition_secs }
+}
+
+/// Convenience: run ETSCH SSSP on a partition and report rounds/messages.
+pub fn run_sssp(
+    g: &Graph,
+    p: &EdgePartition,
+    source: u32,
+) -> (Vec<u32>, usize, usize) {
+    let mut engine = Etsch::new(g, p);
+    let dist = engine.run(&mut Sssp::new(source));
+    let stats = engine.stats();
+    (dist, stats.rounds, stats.messages_exchanged)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resolve_named_and_scaled() {
+        assert!(resolve_graph("astroph@0.02", 1).is_ok());
+        assert!(resolve_graph("er:n=200,m=500", 1).is_ok());
+        assert!(resolve_graph("bogus", 1).is_err());
+        assert!(resolve_graph("er:n=abc", 1).is_err());
+    }
+
+    #[test]
+    fn run_produces_metrics() {
+        let g = resolve_graph("er:n=300,m=900", 2).unwrap();
+        let cfg = RunConfig {
+            partitioner: PartitionerKind::Dfep,
+            k: 4,
+            seed: 3,
+            gain_samples: 2,
+        };
+        let res = run(&g, &cfg);
+        res.partition.validate(&g).unwrap();
+        assert!(res.gain.unwrap() >= 0.0);
+        assert!(res.report.rounds > 0);
+    }
+
+    #[test]
+    fn parse_all_partitioners() {
+        for s in ["dfep", "DFEPC", "jabeja", "random", "hash", "greedy",
+                  "fennel", "multilevel"] {
+            assert!(PartitionerKind::parse(s).is_ok(), "{s}");
+        }
+        assert!(PartitionerKind::parse("x").is_err());
+    }
+}

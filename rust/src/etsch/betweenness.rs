@@ -1,0 +1,308 @@
+//! Betweenness centrality on ETSCH — the paper's §III motivation for the
+//! distance building block ("the problem of distance computation is
+//! needed to compute properties like betweenness centrality [3]").
+//!
+//! Brandes' algorithm per source s decomposes into three fixpoints, each
+//! of which is ETSCH-shaped (partial sums over partition-local edges,
+//! summed in aggregation):
+//!
+//!   1. dist[v]  — ETSCH SSSP (Algorithm 1);
+//!   2. sigma[v] — #shortest s-paths: sigma[v] = Σ sigma[u] over
+//!      predecessors u (dist[u] = dist[v] - 1);
+//!   3. delta[v] — dependency: delta[u] = Σ sigma[u]/sigma[v} (1+delta[v])
+//!      over successors v.
+//!
+//! Exact betweenness sums over all sources; [`etsch_betweenness`] samples
+//! sources (the standard approximation) and is validated against the
+//! sequential Brandes oracle.
+
+use super::{sssp::Sssp, sssp::UNREACHED, Algorithm, Etsch, Subgraph};
+use crate::graph::Graph;
+use crate::partition::EdgePartition;
+use crate::util::rng::Rng;
+
+/// Forward phase state: fixed dist + accumulating sigma (+ round partial).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SigmaState {
+    pub dist: u32,
+    pub sigma: f64,
+    pub partial: f64,
+}
+
+/// Computes sigma given per-vertex distances (shared immutable).
+pub struct SigmaPhase {
+    pub source: u32,
+    pub dist: std::sync::Arc<Vec<u32>>,
+}
+
+impl Algorithm for SigmaPhase {
+    type State = SigmaState;
+
+    fn init(&self, v: u32, _g: &Graph) -> SigmaState {
+        SigmaState {
+            dist: self.dist[v as usize],
+            sigma: if v == self.source { 1.0 } else { 0.0 },
+            partial: 0.0,
+        }
+    }
+
+    fn local(&self, sub: &Subgraph, states: &mut [SigmaState]) {
+        for s in states.iter_mut() {
+            s.partial = 0.0;
+        }
+        // partial sigma inflow along local edges from predecessors
+        for u in 0..states.len() as u32 {
+            let su = states[u as usize];
+            if su.sigma == 0.0 || su.dist == UNREACHED {
+                continue;
+            }
+            for &(w, _) in sub.neighbors(u) {
+                if states[w as usize].dist == su.dist + 1 {
+                    states[w as usize].partial += su.sigma;
+                }
+            }
+        }
+    }
+
+    fn aggregate(&self, replicas: &[SigmaState]) -> SigmaState {
+        let mut s = replicas[0];
+        let inflow: f64 = replicas.iter().map(|r| r.partial).sum();
+        if s.dist != UNREACHED && s.dist > 0 {
+            // fixpoint: sigma is fully determined by predecessors
+            s.sigma = inflow;
+        }
+        s.partial = 0.0;
+        s
+    }
+
+    fn max_rounds(&self) -> usize {
+        100_000
+    }
+}
+
+/// Backward phase state: fixed dist/sigma + accumulating delta.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeltaState {
+    pub dist: u32,
+    pub sigma: f64,
+    pub delta: f64,
+    pub partial: f64,
+}
+
+pub struct DeltaPhase {
+    pub dist: std::sync::Arc<Vec<u32>>,
+    pub sigma: std::sync::Arc<Vec<f64>>,
+}
+
+impl Algorithm for DeltaPhase {
+    type State = DeltaState;
+
+    fn init(&self, v: u32, _g: &Graph) -> DeltaState {
+        DeltaState {
+            dist: self.dist[v as usize],
+            sigma: self.sigma[v as usize],
+            delta: 0.0,
+            partial: 0.0,
+        }
+    }
+
+    fn local(&self, sub: &Subgraph, states: &mut [DeltaState]) {
+        for s in states.iter_mut() {
+            s.partial = 0.0;
+        }
+        // dependency flows from successors (dist + 1) back to predecessors
+        for v in 0..states.len() as u32 {
+            let sv = states[v as usize];
+            if sv.dist == UNREACHED || sv.sigma == 0.0 {
+                continue;
+            }
+            for &(u, _) in sub.neighbors(v) {
+                let su = states[u as usize];
+                if su.dist != UNREACHED
+                    && su.dist + 1 == sv.dist
+                    && su.sigma > 0.0
+                {
+                    states[u as usize].partial +=
+                        su.sigma / sv.sigma * (1.0 + sv.delta);
+                }
+            }
+        }
+    }
+
+    fn aggregate(&self, replicas: &[DeltaState]) -> DeltaState {
+        let mut s = replicas[0];
+        let inflow: f64 = replicas.iter().map(|r| r.partial).sum();
+        s.delta = inflow;
+        s.partial = 0.0;
+        s
+    }
+
+    fn max_rounds(&self) -> usize {
+        100_000
+    }
+}
+
+/// Source-sampled betweenness via three ETSCH phases per source.
+/// `samples = 0` uses every vertex (exact, small graphs only).
+pub fn etsch_betweenness(
+    g: &Graph,
+    p: &EdgePartition,
+    samples: usize,
+    seed: u64,
+) -> Vec<f64> {
+    let n = g.vertex_count();
+    let sources: Vec<u32> = if samples == 0 || samples >= n {
+        (0..n as u32).collect()
+    } else {
+        Rng::new(seed)
+            .sample_indices(n, samples)
+            .into_iter()
+            .map(|v| v as u32)
+            .collect()
+    };
+    let scale = if sources.len() < n {
+        n as f64 / sources.len() as f64
+    } else {
+        1.0
+    };
+    let mut bc = vec![0.0f64; n];
+    let mut engine = Etsch::new(g, p);
+    for &s in &sources {
+        let dist = std::sync::Arc::new(engine.run(&mut Sssp::new(s)));
+        let sigma_states = engine.run(&mut SigmaPhase {
+            source: s,
+            dist: dist.clone(),
+        });
+        let sigma = std::sync::Arc::new(
+            sigma_states.iter().map(|x| x.sigma).collect::<Vec<_>>(),
+        );
+        let delta_states =
+            engine.run(&mut DeltaPhase { dist, sigma });
+        for v in 0..n {
+            if v as u32 != s {
+                bc[v] += scale * delta_states[v].delta;
+            }
+        }
+    }
+    // undirected graphs count each pair twice
+    for x in bc.iter_mut() {
+        *x /= 2.0;
+    }
+    bc
+}
+
+/// Sequential Brandes oracle (exact betweenness, unweighted undirected).
+pub fn brandes_ref(g: &Graph) -> Vec<f64> {
+    let n = g.vertex_count();
+    let mut bc = vec![0.0f64; n];
+    for s in 0..n as u32 {
+        let mut stack: Vec<u32> = Vec::new();
+        let mut pred: Vec<Vec<u32>> = vec![Vec::new(); n];
+        let mut sigma = vec![0.0f64; n];
+        let mut dist = vec![i64::MAX; n];
+        sigma[s as usize] = 1.0;
+        dist[s as usize] = 0;
+        let mut queue = std::collections::VecDeque::from([s]);
+        while let Some(v) = queue.pop_front() {
+            stack.push(v);
+            for &(w, _) in g.neighbors(v) {
+                if dist[w as usize] == i64::MAX {
+                    dist[w as usize] = dist[v as usize] + 1;
+                    queue.push_back(w);
+                }
+                if dist[w as usize] == dist[v as usize] + 1 {
+                    sigma[w as usize] += sigma[v as usize];
+                    pred[w as usize].push(v);
+                }
+            }
+        }
+        let mut delta = vec![0.0f64; n];
+        while let Some(w) = stack.pop() {
+            for &v in &pred[w as usize] {
+                delta[v as usize] += sigma[v as usize]
+                    / sigma[w as usize]
+                    * (1.0 + delta[w as usize]);
+            }
+            if w != s {
+                bc[w as usize] += delta[w as usize];
+            }
+        }
+    }
+    for x in bc.iter_mut() {
+        *x /= 2.0;
+    }
+    bc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::GraphKind;
+    use crate::graph::GraphBuilder;
+    use crate::partition::{baselines::RandomEdge, dfep::Dfep, Partitioner};
+
+    #[test]
+    fn brandes_on_path() {
+        // path 0-1-2-3: bc(1) = bc(2) = 2 (pairs (0,2),(0,3) resp ...)
+        let g = GraphBuilder::new()
+            .add_edge(0, 1)
+            .add_edge(1, 2)
+            .add_edge(2, 3)
+            .build();
+        let bc = brandes_ref(&g);
+        assert_eq!(bc, vec![0.0, 2.0, 2.0, 0.0]);
+    }
+
+    #[test]
+    fn etsch_exact_matches_brandes() {
+        let g = GraphKind::ErdosRenyi { n: 60, m: 150 }.generate(2);
+        let p = RandomEdge.partition(&g, 4, 1);
+        let got = etsch_betweenness(&g, &p, 0, 0);
+        let want = brandes_ref(&g);
+        for v in 0..g.vertex_count() {
+            assert!(
+                (got[v] - want[v]).abs() < 1e-6 * (1.0 + want[v]),
+                "vertex {v}: {} vs {}",
+                got[v],
+                want[v]
+            );
+        }
+    }
+
+    #[test]
+    fn etsch_exact_matches_brandes_on_dfep_partitions() {
+        let g = GraphKind::PowerlawCluster { n: 80, m: 3, p: 0.4 }
+            .generate(4);
+        let p = Dfep::default().partition(&g, 3, 1);
+        let got = etsch_betweenness(&g, &p, 0, 0);
+        let want = brandes_ref(&g);
+        for v in 0..g.vertex_count() {
+            assert!(
+                (got[v] - want[v]).abs() < 1e-6 * (1.0 + want[v]),
+                "vertex {v}: {} vs {}",
+                got[v],
+                want[v]
+            );
+        }
+    }
+
+    #[test]
+    fn sampled_estimate_correlates() {
+        let g = GraphKind::PowerlawCluster { n: 120, m: 3, p: 0.3 }
+            .generate(5);
+        let p = RandomEdge.partition(&g, 4, 2);
+        let est = etsch_betweenness(&g, &p, 40, 7);
+        let exact = brandes_ref(&g);
+        // the hub with max exact centrality should rank near the top of
+        // the estimate
+        let hub = exact
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        let better: usize =
+            est.iter().filter(|&&x| x > est[hub]).count();
+        assert!(better <= 5, "hub rank {better} too low");
+    }
+}

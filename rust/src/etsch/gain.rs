@@ -1,0 +1,79 @@
+//! Path-compression *gain* (paper §V-A): "the fraction of total
+//! iterations avoided by the shortest path algorithm implemented in
+//! ETSCH" relative to the vertex-centric baseline.
+//!
+//! The baseline needs one superstep per hop (`ecc(source)` iterations);
+//! ETSCH's local Dijkstra crosses a whole partition per round, so a
+//! partitioning that compresses paths needs far fewer rounds.
+
+use super::{sssp::Sssp, vertex_baseline::bsp_sssp, Etsch};
+use crate::graph::Graph;
+use crate::partition::EdgePartition;
+use crate::util::rng::Rng;
+
+/// Gain for one source vertex: `1 - etsch_rounds / baseline_supersteps`
+/// (clamped at 0; both engines count their trailing quiescence check).
+pub fn gain_for_source(g: &Graph, p: &EdgePartition, source: u32) -> f64 {
+    let baseline = bsp_sssp(g, source).supersteps.max(1);
+    let mut engine = Etsch::new(g, p);
+    engine.run(&mut Sssp::new(source));
+    let etsch = engine.rounds_executed();
+    (1.0 - etsch as f64 / baseline as f64).max(0.0)
+}
+
+/// Average gain over `samples` random sources (the paper plots a mean
+/// over 100 partition samples; sources add a second averaging dimension).
+pub fn average_gain(
+    g: &Graph,
+    p: &EdgePartition,
+    samples: usize,
+    seed: u64,
+) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut total = 0.0;
+    for _ in 0..samples {
+        let s = rng.below(g.vertex_count()) as u32;
+        total += gain_for_source(g, p, s);
+    }
+    total / samples as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::GraphKind;
+    use crate::partition::{baselines::HashEdge, dfep::Dfep, Partitioner};
+
+    #[test]
+    fn gain_in_unit_interval() {
+        let g = GraphKind::ErdosRenyi { n: 200, m: 500 }.generate(1);
+        let p = Dfep::default().partition(&g, 4, 1);
+        let gain = average_gain(&g, &p, 3, 7);
+        assert!((0.0..=1.0).contains(&gain), "gain {gain}");
+    }
+
+    #[test]
+    fn dfep_gains_more_than_hash_on_high_diameter() {
+        let g = GraphKind::RoadNetwork {
+            rows: 12, cols: 12, drop: 0.15, subdiv: 2, shortcuts: 0,
+        }
+        .generate(2);
+        let pd = Dfep::default().partition(&g, 4, 3);
+        let ph = HashEdge.partition(&g, 4, 3);
+        let gd = average_gain(&g, &pd, 3, 5);
+        let gh = average_gain(&g, &ph, 3, 5);
+        assert!(gd > gh, "DFEP gain {gd} should beat hash gain {gh}");
+    }
+
+    #[test]
+    fn single_partition_has_maximal_gain() {
+        let g = GraphKind::RoadNetwork {
+            rows: 10, cols: 10, drop: 0.1, subdiv: 2, shortcuts: 0,
+        }
+        .generate(3);
+        let p = Dfep::default().partition(&g, 1, 1);
+        // k=1: local Dijkstra solves everything in 1 round (+1 quiescence)
+        let gain = gain_for_source(&g, &p, 0);
+        assert!(gain > 0.8, "gain {gain}");
+    }
+}

@@ -1,0 +1,135 @@
+//! Community detection by synchronous label propagation in ETSCH.
+//!
+//! Each vertex adopts the most frequent label among its neighbors (ties
+//! to the smallest label). Neighbor frequencies are *summable* across
+//! partitions — each edge contributes from exactly one partition — so the
+//! local phase emits partial (label, count) votes and the aggregation
+//! merges them; another demonstration that ETSCH handles non-idempotent
+//! reconciliation (the paper's §VII "how flexible is the model" question).
+
+use super::{Algorithm, Subgraph};
+use crate::graph::Graph;
+
+/// Vertex state: current label + this-round partial votes from the
+/// partition's local edges (kept sorted by label).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LpaState {
+    pub label: u32,
+    pub votes: Vec<(u32, u32)>,
+}
+
+#[derive(Clone, Debug)]
+pub struct LabelPropagation {
+    pub max_rounds: usize,
+}
+
+impl Default for LabelPropagation {
+    fn default() -> Self {
+        LabelPropagation { max_rounds: 30 }
+    }
+}
+
+impl Algorithm for LabelPropagation {
+    type State = LpaState;
+
+    fn init(&self, v: u32, _g: &Graph) -> LpaState {
+        LpaState { label: v, votes: Vec::new() }
+    }
+
+    fn local(&self, sub: &Subgraph, states: &mut [LpaState]) {
+        // gather neighbor labels per vertex over the partition's edges
+        let labels: Vec<u32> = states.iter().map(|s| s.label).collect();
+        for u in 0..states.len() {
+            let mut votes: Vec<(u32, u32)> = Vec::new();
+            for &(w, _) in sub.neighbors(u as u32) {
+                let l = labels[w as usize];
+                match votes.binary_search_by_key(&l, |&(x, _)| x) {
+                    Ok(i) => votes[i].1 += 1,
+                    Err(i) => votes.insert(i, (l, 1)),
+                }
+            }
+            states[u].votes = votes;
+        }
+    }
+
+    fn aggregate(&self, replicas: &[LpaState]) -> LpaState {
+        // merge partial votes from all replicas
+        let mut merged: Vec<(u32, u32)> = Vec::new();
+        for r in replicas {
+            for &(l, c) in &r.votes {
+                match merged.binary_search_by_key(&l, |&(x, _)| x) {
+                    Ok(i) => merged[i].1 += c,
+                    Err(i) => merged.insert(i, (l, c)),
+                }
+            }
+        }
+        // most frequent, smallest label on ties; keep own label if isolated
+        let label = merged
+            .iter()
+            .max_by(|a, b| a.1.cmp(&b.1).then(b.0.cmp(&a.0)))
+            .map(|&(l, _)| l)
+            .unwrap_or(replicas[0].label);
+        LpaState { label, votes: Vec::new() }
+    }
+
+    fn max_rounds(&self) -> usize {
+        self.max_rounds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::etsch::Etsch;
+    use crate::graph::GraphBuilder;
+    use crate::partition::{baselines::RandomEdge, Partitioner};
+
+    fn two_cliques() -> Graph {
+        // two K5s joined by a single bridge edge
+        let mut b = GraphBuilder::new();
+        for u in 0..5u32 {
+            for v in (u + 1)..5 {
+                b.push_edge(u, v);
+                b.push_edge(u + 5, v + 5);
+            }
+        }
+        b.push_edge(4, 5);
+        b.build()
+    }
+
+    #[test]
+    fn separates_two_cliques() {
+        let g = two_cliques();
+        let p = RandomEdge.partition(&g, 3, 1);
+        let mut engine = Etsch::new(&g, &p);
+        let states = engine.run(&mut LabelPropagation::default());
+        let a = states[0].label;
+        let b = states[9].label;
+        for v in 0..5 {
+            assert_eq!(states[v].label, a, "vertex {v}");
+        }
+        for v in 5..10 {
+            assert_eq!(states[v].label, b, "vertex {v}");
+        }
+        assert_ne!(a, b, "cliques should keep distinct communities");
+    }
+
+    #[test]
+    fn partitioning_does_not_change_labels() {
+        let g = two_cliques();
+        let l1 = {
+            let p = RandomEdge.partition(&g, 1, 7);
+            let mut e = Etsch::new(&g, &p);
+            e.run(&mut LabelPropagation::default())
+        };
+        let l4 = {
+            let p = RandomEdge.partition(&g, 4, 7);
+            let mut e = Etsch::new(&g, &p);
+            e.run(&mut LabelPropagation::default())
+        };
+        let labels = |ls: &[LpaState]| -> Vec<u32> {
+            ls.iter().map(|s| s.label).collect()
+        };
+        assert_eq!(labels(&l1), labels(&l4));
+    }
+}

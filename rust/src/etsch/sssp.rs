@@ -1,0 +1,111 @@
+//! Single-source shortest paths in ETSCH (paper Algorithm 1).
+//!
+//! State = hop distance. Local phase runs Dijkstra (unit weights, so a
+//! BFS-flavored priority queue) over the partition subgraph; aggregation
+//! takes the min across replicas.
+
+use super::{Algorithm, Subgraph};
+use crate::graph::Graph;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Sentinel for "not reached" (the paper's +inf).
+pub const UNREACHED: u32 = u32::MAX;
+
+/// Algorithm-1 instance.
+#[derive(Clone, Debug)]
+pub struct Sssp {
+    pub source: u32,
+}
+
+impl Sssp {
+    pub fn new(source: u32) -> Self {
+        Sssp { source }
+    }
+}
+
+impl Algorithm for Sssp {
+    type State = u32;
+
+    fn init(&self, v: u32, _g: &Graph) -> u32 {
+        if v == self.source {
+            0
+        } else {
+            UNREACHED
+        }
+    }
+
+    fn local(&self, sub: &Subgraph, states: &mut [u32]) {
+        // Dijkstra over the local subgraph, seeded with current states
+        let mut heap: BinaryHeap<Reverse<(u32, u32)>> = states
+            .iter()
+            .enumerate()
+            .filter(|&(_, &d)| d != UNREACHED)
+            .map(|(l, &d)| Reverse((d, l as u32)))
+            .collect();
+        while let Some(Reverse((d, u))) = heap.pop() {
+            if d > states[u as usize] {
+                continue; // stale entry
+            }
+            for &(w, _) in sub.neighbors(u) {
+                let nd = d + 1;
+                if nd < states[w as usize] {
+                    states[w as usize] = nd;
+                    heap.push(Reverse((nd, w)));
+                }
+            }
+        }
+    }
+
+    fn aggregate(&self, replicas: &[u32]) -> u32 {
+        *replicas.iter().min().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::etsch::Etsch;
+    use crate::graph::generators::GraphKind;
+    use crate::graph::stats::bfs_distances;
+    use crate::graph::{Graph, GraphBuilder};
+    use crate::partition::{baselines::RandomEdge, Partitioner};
+
+    fn check(g: &Graph, k: usize, source: u32) {
+        let p = RandomEdge.partition(g, k, 7);
+        let mut engine = Etsch::new(g, &p);
+        let got = engine.run(&mut Sssp::new(source));
+        let want = bfs_distances(g, source);
+        for v in 0..g.vertex_count() {
+            let w = if want[v] == u32::MAX { UNREACHED } else { want[v] };
+            assert_eq!(got[v], w, "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn correct_on_random_partitions() {
+        let g = GraphKind::ErdosRenyi { n: 200, m: 500 }.generate(3);
+        check(&g, 6, 0);
+        check(&g, 2, 10);
+    }
+
+    #[test]
+    fn unreachable_stays_inf() {
+        let g = GraphBuilder::new()
+            .add_edge(0, 1)
+            .add_edge(2, 3)
+            .build();
+        check(&g, 2, 0);
+    }
+
+    #[test]
+    fn single_partition_one_round() {
+        // with k=1 everything is local: Dijkstra finishes in round 1 and
+        // round 2 detects quiescence
+        let g = GraphKind::ErdosRenyi { n: 100, m: 300 }.generate(4);
+        let p = RandomEdge.partition(&g, 1, 0);
+        let mut engine = Etsch::new(&g, &p);
+        engine.run(&mut Sssp::new(0));
+        assert!(engine.rounds_executed() <= 2);
+    }
+}

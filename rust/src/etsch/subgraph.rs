@@ -1,0 +1,163 @@
+//! Per-partition local subgraph: the unit of work an ETSCH worker gets.
+//!
+//! Each partition's edges, their endpoint vertices re-indexed to a dense
+//! local id space, plus the frontier flags. Memory is O(|E_i|) per the
+//! paper's size argument (§II: |V_i| = O(|E_i|)).
+
+use crate::graph::Graph;
+use crate::partition::EdgePartition;
+
+/// A partition's induced subgraph with local vertex ids.
+#[derive(Clone, Debug)]
+pub struct Subgraph {
+    /// Which partition this is.
+    pub part: usize,
+    /// Global vertex id of each local vertex.
+    pub global: Vec<u32>,
+    /// Local CSR offsets (length = local vertex count + 1).
+    pub offsets: Vec<u32>,
+    /// Local adjacency: (local neighbor, global edge id).
+    pub adj: Vec<(u32, u32)>,
+    /// Frontier flag per local vertex (replicated in >= 2 partitions).
+    pub frontier: Vec<bool>,
+    /// Number of edges in this partition.
+    pub edge_count: usize,
+}
+
+impl Subgraph {
+    #[inline]
+    pub fn vertex_count(&self) -> usize {
+        self.global.len()
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v_local: u32) -> &[(u32, u32)] {
+        &self.adj[self.offsets[v_local as usize] as usize
+            ..self.offsets[v_local as usize + 1] as usize]
+    }
+
+    #[inline]
+    pub fn degree(&self, v_local: u32) -> usize {
+        (self.offsets[v_local as usize + 1] - self.offsets[v_local as usize])
+            as usize
+    }
+}
+
+/// Build all K subgraphs for a partitioning.
+pub fn build_subgraphs(g: &Graph, p: &EdgePartition) -> Vec<Subgraph> {
+    let mult = p.vertex_multiplicity(g);
+    let edge_sets = p.edge_sets();
+    let mut out = Vec::with_capacity(p.k);
+    let mut local_of = vec![u32::MAX; g.vertex_count()];
+    for (part, edges) in edge_sets.iter().enumerate() {
+        // collect local vertices in order of first appearance
+        let mut global: Vec<u32> = Vec::new();
+        for &e in edges {
+            let (u, v) = g.endpoints(e);
+            for w in [u, v] {
+                if local_of[w as usize] == u32::MAX {
+                    local_of[w as usize] = global.len() as u32;
+                    global.push(w);
+                }
+            }
+        }
+        let nv = global.len();
+        // local degree count
+        let mut deg = vec![0u32; nv + 1];
+        for &e in edges {
+            let (u, v) = g.endpoints(e);
+            deg[local_of[u as usize] as usize + 1] += 1;
+            deg[local_of[v as usize] as usize + 1] += 1;
+        }
+        let mut offsets = deg;
+        for i in 1..offsets.len() {
+            offsets[i] += offsets[i - 1];
+        }
+        let mut adj = vec![(0u32, 0u32); offsets[nv] as usize];
+        let mut cursor = offsets.clone();
+        for &e in edges {
+            let (u, v) = g.endpoints(e);
+            let (lu, lv) =
+                (local_of[u as usize], local_of[v as usize]);
+            adj[cursor[lu as usize] as usize] = (lv, e);
+            cursor[lu as usize] += 1;
+            adj[cursor[lv as usize] as usize] = (lu, e);
+            cursor[lv as usize] += 1;
+        }
+        let frontier =
+            global.iter().map(|&w| mult[w as usize] >= 2).collect();
+        // reset the scratch map for the next partition
+        for &w in &global {
+            local_of[w as usize] = u32::MAX;
+        }
+        out.push(Subgraph {
+            part,
+            global,
+            offsets,
+            adj,
+            frontier,
+            edge_count: edges.len(),
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn square_partition() -> (Graph, EdgePartition) {
+        let g = GraphBuilder::new()
+            .add_edge(0, 1)
+            .add_edge(1, 2)
+            .add_edge(2, 3)
+            .add_edge(3, 0)
+            .build();
+        let p = EdgePartition { k: 2, owner: vec![0, 0, 1, 1], rounds: 1 };
+        (g, p)
+    }
+
+    #[test]
+    fn local_structure() {
+        let (g, p) = square_partition();
+        // canonical edge order: (0,1),(0,3),(1,2),(2,3)
+        let subs = build_subgraphs(&g, &p);
+        assert_eq!(subs.len(), 2);
+        assert_eq!(subs[0].vertex_count(), 3); // part 0: {0,1,3}
+        assert_eq!(subs[0].edge_count, 2);
+        // frontier: 1 and 3 live in both partitions
+        for s in &subs {
+            for (l, &gv) in s.global.iter().enumerate() {
+                let expect = gv == 1 || gv == 3;
+                assert_eq!(s.frontier[l], expect, "vertex {gv}");
+            }
+        }
+    }
+
+    #[test]
+    fn degrees_consistent_with_edges() {
+        let (g, p) = square_partition();
+        for s in build_subgraphs(&g, &p) {
+            let total: usize =
+                (0..s.vertex_count() as u32).map(|v| s.degree(v)).sum();
+            assert_eq!(total, 2 * s.edge_count);
+            // adjacency edge ids belong to this part
+            for v in 0..s.vertex_count() as u32 {
+                for &(w, e) in s.neighbors(v) {
+                    assert_eq!(p.owner[e as usize] as usize, s.part);
+                    assert!((w as usize) < s.vertex_count());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_partition_gives_empty_subgraph() {
+        let (g, _) = square_partition();
+        let p = EdgePartition { k: 3, owner: vec![0, 0, 1, 1], rounds: 1 };
+        let subs = build_subgraphs(&g, &p);
+        assert_eq!(subs[2].vertex_count(), 0);
+        assert_eq!(subs[2].edge_count, 0);
+    }
+}

@@ -1,0 +1,113 @@
+//! Vertex-centric (Pregel-style) baseline — the comparator of Fig 9.
+//!
+//! A BSP engine where each vertex is a process that exchanges messages
+//! with neighbors under a global synchronization barrier. One superstep =
+//! one message hop, so SSSP needs `ecc(source)` supersteps — this is the
+//! "standard baseline algorithm" ETSCH's path compression beats.
+
+use crate::graph::Graph;
+
+/// Result of a vertex-centric run.
+#[derive(Clone, Debug)]
+pub struct BspRun<T> {
+    pub values: Vec<T>,
+    pub supersteps: usize,
+    /// Total messages sent across the run.
+    pub messages: usize,
+}
+
+/// BSP SSSP: relax one hop per superstep until quiescent.
+pub fn bsp_sssp(g: &Graph, source: u32) -> BspRun<u32> {
+    let n = g.vertex_count();
+    let mut dist = vec![u32::MAX; n];
+    dist[source as usize] = 0;
+    let mut active: Vec<u32> = vec![source];
+    let mut supersteps = 0;
+    let mut messages = 0;
+    while !active.is_empty() {
+        supersteps += 1;
+        let mut next_active = Vec::new();
+        // message phase: every active vertex sends dist+1 to neighbors
+        for &u in &active {
+            let du = dist[u as usize];
+            for &(w, _) in g.neighbors(u) {
+                messages += 1;
+                if du + 1 < dist[w as usize] {
+                    dist[w as usize] = du + 1;
+                    next_active.push(w);
+                }
+            }
+        }
+        next_active.sort_unstable();
+        next_active.dedup();
+        active = next_active;
+    }
+    BspRun { values: dist, supersteps, messages }
+}
+
+/// BSP connected components: spread min label one hop per superstep.
+pub fn bsp_cc(g: &Graph, seed: u64) -> BspRun<u64> {
+    let n = g.vertex_count();
+    let hash = |v: u32| -> u64 {
+        let mut z = seed
+            .wrapping_add(0x9E3779B97F4A7C15u64.wrapping_mul(v as u64 + 1));
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    };
+    let mut label: Vec<u64> = (0..n as u32).map(hash).collect();
+    let mut active: Vec<u32> = (0..n as u32).collect();
+    let mut supersteps = 0;
+    let mut messages = 0;
+    while !active.is_empty() {
+        supersteps += 1;
+        let mut next = Vec::new();
+        for &u in &active {
+            let lu = label[u as usize];
+            for &(w, _) in g.neighbors(u) {
+                messages += 1;
+                if lu < label[w as usize] {
+                    label[w as usize] = lu;
+                    next.push(w);
+                }
+            }
+        }
+        next.sort_unstable();
+        next.dedup();
+        active = next;
+    }
+    BspRun { values: label, supersteps, messages }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::GraphKind;
+    use crate::graph::stats::{bfs_distances, components, eccentricity};
+
+    #[test]
+    fn bsp_sssp_matches_bfs() {
+        let g = GraphKind::ErdosRenyi { n: 150, m: 400 }.generate(2);
+        let run = bsp_sssp(&g, 3);
+        assert_eq!(run.values, bfs_distances(&g, 3));
+        // supersteps = eccentricity + 1 (final empty wave)
+        let ecc = eccentricity(&g, 3) as usize;
+        assert!(run.supersteps >= ecc && run.supersteps <= ecc + 1,
+                "supersteps {} vs ecc {}", run.supersteps, ecc);
+    }
+
+    #[test]
+    fn bsp_cc_labels_components() {
+        let g = GraphKind::ErdosRenyi { n: 150, m: 200 }.generate(5);
+        let run = bsp_cc(&g, 7);
+        let (want, _) = components(&g);
+        for u in 0..g.vertex_count() {
+            for v in 0..g.vertex_count() {
+                assert_eq!(
+                    run.values[u] == run.values[v],
+                    want[u] == want[v]
+                );
+            }
+        }
+    }
+}

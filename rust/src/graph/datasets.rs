@@ -1,0 +1,213 @@
+//! Named synthetic analogues of the paper's datasets (Tables II and III).
+//!
+//! No network in this environment, so each SNAP dataset is replaced by a
+//! generator calibrated to its published statistics — the properties DFEP
+//! is sensitive to (size, diameter, clustering, degree distribution). The
+//! `tables` bench prints paper-vs-generated side by side.
+//!
+//! Sizes are matched at full scale for the simulation-engine datasets
+//! (Table II) and for the EC2 datasets (Table III); `scaled(frac)` gives
+//! proportionally smaller instances for quick tests and examples.
+
+use super::generators::GraphKind;
+use super::Graph;
+
+/// Paper-reported reference row (for the tables bench).
+#[derive(Clone, Copy, Debug)]
+pub struct PaperRow {
+    pub v: usize,
+    pub e: usize,
+    pub d: u32,
+    pub cc: f64,
+    pub rcc: f64,
+}
+
+/// One named dataset: its paper stats and the calibrated generator.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub name: &'static str,
+    pub paper: PaperRow,
+    pub kind: GraphKind,
+    /// true = Table II (simulation engine), false = Table III (EC2)
+    pub simulation: bool,
+}
+
+impl Dataset {
+    pub fn generate(&self, seed: u64) -> Graph {
+        self.kind.generate(seed)
+    }
+
+    /// A proportionally scaled-down instance (for tests/examples); `frac`
+    /// in (0, 1].
+    pub fn scaled(&self, frac: f64, seed: u64) -> Graph {
+        assert!(frac > 0.0 && frac <= 1.0);
+        let s = |x: usize| ((x as f64 * frac).round() as usize).max(8);
+        let kind = match self.kind {
+            GraphKind::ErdosRenyi { n, m } => {
+                GraphKind::ErdosRenyi { n: s(n), m: s(m) }
+            }
+            GraphKind::BarabasiAlbert { n, m } => {
+                GraphKind::BarabasiAlbert { n: s(n), m }
+            }
+            GraphKind::PowerlawCluster { n, m, p } => {
+                GraphKind::PowerlawCluster { n: s(n), m, p }
+            }
+            GraphKind::WattsStrogatz { n, k, beta } => {
+                GraphKind::WattsStrogatz { n: s(n), k, beta }
+            }
+            GraphKind::RoadNetwork { rows, cols, drop, subdiv, shortcuts } => {
+                let f = frac.sqrt();
+                GraphKind::RoadNetwork {
+                    rows: ((rows as f64 * f).round() as usize).max(4),
+                    cols: ((cols as f64 * f).round() as usize).max(4),
+                    drop,
+                    subdiv,
+                    shortcuts: (shortcuts as f64 * frac).round() as usize,
+                }
+            }
+        };
+        kind.generate(seed)
+    }
+}
+
+/// ASTROPH: astrophysics collaboration net — small world, high clustering.
+pub fn astroph() -> Dataset {
+    Dataset {
+        name: "ASTROPH",
+        paper: PaperRow { v: 17903, e: 196972, d: 14, cc: 1.34e-1, rcc: 1.23e-3 },
+        kind: GraphKind::PowerlawCluster { n: 17903, m: 11, p: 0.64 },
+        simulation: true,
+    }
+}
+
+/// EMAIL-ENRON: email communication network — small world, lower clustering.
+pub fn email_enron() -> Dataset {
+    Dataset {
+        name: "EMAIL-ENRON",
+        paper: PaperRow { v: 33696, e: 180811, d: 13, cc: 3.01e-2, rcc: 3.19e-4 },
+        kind: GraphKind::PowerlawCluster { n: 33696, m: 5, p: 0.18 },
+        simulation: true,
+    }
+}
+
+/// USROADS: US road network — huge diameter, near-zero clustering.
+pub fn usroads() -> Dataset {
+    Dataset {
+        name: "USROADS",
+        paper: PaperRow { v: 126146, e: 161950, d: 617, cc: 1.45e-2, rcc: 2.03e-5 },
+        // 165x165 grid, 20% edges dropped, each segment subdivided in 3:
+        // V ≈ 27k + 43k*2 ≈ 114k, E ≈ 130k, diameter ~ 600-900
+        kind: GraphKind::RoadNetwork {
+            rows: 165,
+            cols: 165,
+            drop: 0.20,
+            subdiv: 3,
+            shortcuts: 40,
+        },
+        simulation: true,
+    }
+}
+
+/// WORDNET: synonym network — small diameter, very high clustering.
+pub fn wordnet() -> Dataset {
+    Dataset {
+        name: "WORDNET",
+        paper: PaperRow { v: 75606, e: 231622, d: 14, cc: 7.12e-2, rcc: 8.10e-5 },
+        kind: GraphKind::PowerlawCluster { n: 75606, m: 3, p: 0.55 },
+        simulation: true,
+    }
+}
+
+/// DBLP: co-authorship network (Table III).
+pub fn dblp() -> Dataset {
+    Dataset {
+        name: "DBLP",
+        paper: PaperRow { v: 317080, e: 1049866, d: 21, cc: 1.28e-1, rcc: 2.09e-5 },
+        kind: GraphKind::PowerlawCluster { n: 317080, m: 3, p: 0.62 },
+        simulation: false,
+    }
+}
+
+/// YOUTUBE: friendship graph (Table III) — power-law, low clustering.
+pub fn youtube() -> Dataset {
+    Dataset {
+        name: "YOUTUBE",
+        paper: PaperRow { v: 1134890, e: 2987624, d: 20, cc: 2.08e-3, rcc: 4.64e-6 },
+        kind: GraphKind::BarabasiAlbert { n: 1134890, m: 3 },
+        simulation: false,
+    }
+}
+
+/// AMAZON: co-purchasing network (Table III).
+pub fn amazon() -> Dataset {
+    Dataset {
+        name: "AMAZON",
+        paper: PaperRow { v: 400727, e: 2349869, d: 18, cc: 5.99e-2, rcc: 2.93e-5 },
+        kind: GraphKind::PowerlawCluster { n: 400727, m: 6, p: 0.35 },
+        simulation: false,
+    }
+}
+
+/// The four Table II datasets (simulation engine experiments).
+pub fn simulation_datasets() -> Vec<Dataset> {
+    vec![astroph(), email_enron(), usroads(), wordnet()]
+}
+
+/// The three Table III datasets (EC2/Hadoop experiments).
+pub fn ec2_datasets() -> Vec<Dataset> {
+    vec![dblp(), youtube(), amazon()]
+}
+
+/// Look a dataset up by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<Dataset> {
+    let up = name.to_uppercase();
+    simulation_datasets()
+        .into_iter()
+        .chain(ec2_datasets())
+        .find(|d| d.name == up)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::stats;
+
+    #[test]
+    fn lookup_by_name() {
+        assert!(by_name("astroph").is_some());
+        assert!(by_name("AstroPh").is_some());
+        assert!(by_name("nope").is_none());
+        assert_eq!(simulation_datasets().len(), 4);
+        assert_eq!(ec2_datasets().len(), 3);
+    }
+
+    #[test]
+    fn scaled_astroph_matches_character() {
+        // 10% scale: still small-world with real clustering
+        let g = astroph().scaled(0.10, 1);
+        let s = stats::graph_stats(&g, 1);
+        assert!(s.vertices > 1000, "{s:?}");
+        assert!(s.clustering > 0.05, "{s:?}");
+        assert!(s.diameter <= 14, "{s:?}");
+        assert_eq!(s.components, 1);
+    }
+
+    #[test]
+    fn scaled_usroads_has_large_diameter() {
+        let g = usroads().scaled(0.05, 2);
+        let s = stats::graph_stats(&g, 2);
+        // at 5% scale of a ~617-diameter graph, expect > 100
+        assert!(s.diameter > 100, "{s:?}");
+        assert!(s.clustering < 0.05, "{s:?}");
+    }
+
+    #[test]
+    fn full_scale_astroph_close_to_paper() {
+        let d = astroph();
+        let g = d.generate(7);
+        let v_err = (g.vertex_count() as f64 / d.paper.v as f64 - 1.0).abs();
+        let e_err = (g.edge_count() as f64 / d.paper.e as f64 - 1.0).abs();
+        assert!(v_err < 0.05, "V off by {v_err}");
+        assert!(e_err < 0.15, "E off by {e_err}");
+    }
+}

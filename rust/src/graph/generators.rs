@@ -1,0 +1,332 @@
+//! Synthetic graph generators.
+//!
+//! These stand in for the SNAP datasets (no network in this environment —
+//! see DESIGN.md "Substitutions"): each model is chosen so the properties
+//! DFEP is sensitive to (degree distribution, clustering, diameter) can be
+//! matched to the paper's Tables II/III.
+
+use super::{Graph, GraphBuilder};
+use crate::util::rng::Rng;
+
+/// A parameterized generator; `generate(seed)` is deterministic.
+#[derive(Clone, Debug, PartialEq)]
+pub enum GraphKind {
+    /// G(n, m): `m` uniform random edges. Low clustering, low diameter.
+    ErdosRenyi { n: usize, m: usize },
+    /// Barabási–Albert preferential attachment, `m` edges per new vertex.
+    /// Power-law degrees, low clustering (YOUTUBE-like).
+    BarabasiAlbert { n: usize, m: usize },
+    /// Holme–Kim power-law cluster model: BA plus triad formation with
+    /// probability `p` per edge. Power-law + high clustering
+    /// (ASTROPH / DBLP / WORDNET-like).
+    PowerlawCluster { n: usize, m: usize, p: f64 },
+    /// Watts–Strogatz ring (k nearest neighbors, rewire prob `beta`).
+    WattsStrogatz { n: usize, k: usize, beta: f64 },
+    /// Road-network model: a `rows x cols` grid with `drop` fraction of
+    /// grid edges removed (keeping it connected), every surviving edge
+    /// subdivided into `subdiv` segments, plus `shortcuts` long-range
+    /// chords. Very large diameter, near-zero clustering (USROADS-like).
+    RoadNetwork {
+        rows: usize,
+        cols: usize,
+        drop: f64,
+        subdiv: usize,
+        shortcuts: usize,
+    },
+}
+
+impl GraphKind {
+    /// Generate the graph (always connected: falls back to the largest
+    /// component for models that may fragment).
+    pub fn generate(&self, seed: u64) -> Graph {
+        let mut rng = Rng::new(seed);
+        match *self {
+            GraphKind::ErdosRenyi { n, m } => erdos_renyi(n, m, &mut rng),
+            GraphKind::BarabasiAlbert { n, m } => {
+                powerlaw_cluster(n, m, 0.0, &mut rng)
+            }
+            GraphKind::PowerlawCluster { n, m, p } => {
+                powerlaw_cluster(n, m, p, &mut rng)
+            }
+            GraphKind::WattsStrogatz { n, k, beta } => {
+                watts_strogatz(n, k, beta, &mut rng)
+            }
+            GraphKind::RoadNetwork { rows, cols, drop, subdiv, shortcuts } => {
+                road_network(rows, cols, drop, subdiv, shortcuts, &mut rng)
+            }
+        }
+    }
+}
+
+fn erdos_renyi(n: usize, m: usize, rng: &mut Rng) -> Graph {
+    assert!(n >= 2);
+    let mut seen = std::collections::HashSet::with_capacity(m * 2);
+    let mut b = GraphBuilder::new();
+    b.touch_vertex(n as u32 - 1);
+    while seen.len() < m {
+        let u = rng.below(n) as u32;
+        let v = rng.below(n) as u32;
+        if u == v {
+            continue;
+        }
+        if seen.insert((u.min(v), u.max(v))) {
+            b.push_edge(u, v);
+        }
+    }
+    b.build_largest_component()
+}
+
+/// Holme–Kim: preferential attachment with triad steps. `p = 0` is plain BA.
+fn powerlaw_cluster(n: usize, m: usize, p: f64, rng: &mut Rng) -> Graph {
+    assert!(n > m && m >= 1);
+    // repeated-endpoint list gives preferential attachment in O(1);
+    // a live adjacency list makes the triad step exact (attach to a
+    // uniform neighbor of the previous target, closing a triangle)
+    let mut targets: Vec<u32> = Vec::with_capacity(2 * n * m);
+    let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+    let mut b = GraphBuilder::new();
+    let connect = |b: &mut GraphBuilder,
+                       adj: &mut Vec<Vec<u32>>,
+                       targets: &mut Vec<u32>,
+                       u: u32,
+                       v: u32| {
+        b.push_edge(u, v);
+        adj[u as usize].push(v);
+        adj[v as usize].push(u);
+        targets.push(u);
+        targets.push(v);
+    };
+    // seed clique over m+1 vertices
+    for u in 0..=(m as u32) {
+        for v in (u + 1)..=(m as u32) {
+            connect(&mut b, &mut adj, &mut targets, u, v);
+        }
+    }
+    for v in (m as u32 + 1)..(n as u32) {
+        let mut attached: Vec<u32> = Vec::with_capacity(m);
+        let mut last: Option<u32> = None;
+        let mut tries = 0usize;
+        while attached.len() < m {
+            tries += 1;
+            let w = if let (Some(anchor), true, true) =
+                (last, rng.chance(p), tries < 64)
+            {
+                // triad step: uniform neighbor of the previous target
+                let nbrs = &adj[anchor as usize];
+                nbrs[rng.below(nbrs.len())]
+            } else {
+                targets[rng.below(targets.len())]
+            };
+            if w != v && !attached.contains(&w) {
+                attached.push(w);
+                last = Some(w);
+            }
+        }
+        for &w in &attached {
+            connect(&mut b, &mut adj, &mut targets, v, w);
+        }
+    }
+    b.build_largest_component()
+}
+
+fn watts_strogatz(n: usize, k: usize, beta: f64, rng: &mut Rng) -> Graph {
+    assert!(k % 2 == 0 && k < n);
+    let mut edges = std::collections::HashSet::new();
+    for u in 0..n {
+        for j in 1..=(k / 2) {
+            let v = (u + j) % n;
+            edges.insert((u.min(v) as u32, u.max(v) as u32));
+        }
+    }
+    // rewire
+    let orig: Vec<(u32, u32)> = edges.iter().cloned().collect();
+    for (u, v) in orig {
+        if rng.chance(beta) {
+            edges.remove(&(u, v));
+            let mut tries = 0;
+            loop {
+                let w = rng.below(n) as u32;
+                let cand = (u.min(w), u.max(w));
+                if w != u && !edges.contains(&cand) {
+                    edges.insert(cand);
+                    break;
+                }
+                tries += 1;
+                if tries > 64 {
+                    edges.insert((u, v)); // give up, restore
+                    break;
+                }
+            }
+        }
+    }
+    let mut b = GraphBuilder::new();
+    b.touch_vertex(n as u32 - 1);
+    for (u, v) in edges {
+        b.push_edge(u, v);
+    }
+    b.build_largest_component()
+}
+
+fn road_network(
+    rows: usize,
+    cols: usize,
+    drop: f64,
+    subdiv: usize,
+    shortcuts: usize,
+    rng: &mut Rng,
+) -> Graph {
+    assert!(rows >= 2 && cols >= 2 && subdiv >= 1);
+    let id = |r: usize, c: usize| (r * cols + c) as u32;
+    // all grid edges
+    let mut grid_edges: Vec<(u32, u32)> = Vec::new();
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                grid_edges.push((id(r, c), id(r, c + 1)));
+            }
+            if r + 1 < rows {
+                grid_edges.push((id(r, c), id(r + 1, c)));
+            }
+        }
+    }
+    // drop a fraction, then keep the largest component at the end
+    rng.shuffle(&mut grid_edges);
+    let keep = ((1.0 - drop) * grid_edges.len() as f64).round() as usize;
+    grid_edges.truncate(keep.max(rows * cols - 1));
+
+    // subdivide: each kept edge becomes a path of `subdiv` segments
+    let mut next_vertex = (rows * cols) as u32;
+    let mut b = GraphBuilder::new();
+    for &(u, v) in &grid_edges {
+        let mut prev = u;
+        for _ in 1..subdiv {
+            b.push_edge(prev, next_vertex);
+            prev = next_vertex;
+            next_vertex += 1;
+        }
+        b.push_edge(prev, v);
+    }
+    // a few long-range chords (highways) to trim the worst-case diameter
+    for _ in 0..shortcuts {
+        let u = rng.below(rows * cols) as u32;
+        let v = rng.below(rows * cols) as u32;
+        if u != v {
+            b.push_edge(u, v);
+        }
+    }
+    b.build_largest_component()
+}
+
+/// Convenience: a connected ER graph of given average degree.
+pub fn random_connected(n: usize, avg_degree: f64, seed: u64) -> Graph {
+    let m = ((n as f64) * avg_degree / 2.0).round() as usize;
+    GraphKind::ErdosRenyi { n, m }.generate(seed)
+}
+
+/// Dense CSR -> padded tropical adjacency for the XLA runtime path.
+/// Returns row-major `size x size` with `inf` off-edges, `w` on edges and
+/// 0 diagonal (so relaxation keeps current labels).
+pub fn dense_tropical(g: &Graph, size: usize, w: f32, inf: f32) -> Vec<f32> {
+    assert!(g.vertex_count() <= size);
+    let mut a = vec![inf; size * size];
+    for i in 0..size {
+        a[i * size + i] = 0.0;
+    }
+    for (_, u, v) in g.edge_iter() {
+        a[u as usize * size + v as usize] = w;
+        a[v as usize * size + u as usize] = w;
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::stats;
+
+    #[test]
+    fn erdos_renyi_counts() {
+        let g = GraphKind::ErdosRenyi { n: 500, m: 1500 }.generate(1);
+        assert!(g.vertex_count() <= 500);
+        assert!(g.edge_count() <= 1500);
+        assert!(g.edge_count() > 1300); // largest component keeps most
+        assert_eq!(stats::component_count(&g), 1);
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let k = GraphKind::PowerlawCluster { n: 300, m: 3, p: 0.4 };
+        let a = k.generate(9);
+        let b = k.generate(9);
+        assert_eq!(a.edges(), b.edges());
+        let c = k.generate(10);
+        assert_ne!(a.edges(), c.edges());
+    }
+
+    #[test]
+    fn powerlaw_cluster_has_clustering() {
+        let flat = GraphKind::BarabasiAlbert { n: 2000, m: 4 }.generate(2);
+        let clustered =
+            GraphKind::PowerlawCluster { n: 2000, m: 4, p: 0.8 }.generate(2);
+        let cc_flat = stats::global_clustering(&flat);
+        let cc_clus = stats::global_clustering(&clustered);
+        assert!(cc_clus > cc_flat * 1.5, "{cc_clus} vs {cc_flat}");
+    }
+
+    #[test]
+    fn powerlaw_has_heavy_tail() {
+        let g = GraphKind::BarabasiAlbert { n: 3000, m: 3 }.generate(3);
+        let dmax = (0..g.vertex_count() as u32)
+            .map(|v| g.degree(v))
+            .max()
+            .unwrap();
+        // ER with same density would have max degree ~ 6 + small; BA grows
+        // like sqrt(n)
+        assert!(dmax > 40, "max degree {dmax}");
+    }
+
+    #[test]
+    fn road_network_has_large_diameter() {
+        let road = GraphKind::RoadNetwork {
+            rows: 12,
+            cols: 12,
+            drop: 0.25,
+            subdiv: 3,
+            shortcuts: 0,
+        }
+        .generate(4);
+        let small = GraphKind::ErdosRenyi {
+            n: road.vertex_count(),
+            m: road.edge_count(),
+        }
+        .generate(4);
+        let d_road = stats::diameter_estimate(&road, 4, 4);
+        let d_small = stats::diameter_estimate(&small, 4, 4);
+        assert!(
+            d_road > 3 * d_small,
+            "road {d_road} vs er {d_small}"
+        );
+        assert_eq!(stats::component_count(&road), 1);
+    }
+
+    #[test]
+    fn watts_strogatz_ring_structure() {
+        let g = GraphKind::WattsStrogatz { n: 200, k: 4, beta: 0.05 }
+            .generate(5);
+        assert!(g.edge_count() >= 395 && g.edge_count() <= 400);
+        let avg_deg = 2.0 * g.edge_count() as f64 / g.vertex_count() as f64;
+        assert!((3.5..=4.2).contains(&avg_deg));
+    }
+
+    #[test]
+    fn dense_tropical_layout() {
+        let g = GraphBuilder::new().add_edge(0, 1).add_edge(1, 2).build();
+        let inf = f32::MAX / 4.0;
+        let a = dense_tropical(&g, 4, 1.0, inf);
+        assert_eq!(a[0 * 4 + 1], 1.0);
+        assert_eq!(a[1 * 4 + 0], 1.0);
+        assert_eq!(a[0 * 4 + 2], inf);
+        assert_eq!(a[2 * 4 + 2], 0.0);
+        assert_eq!(a[3 * 4 + 3], 0.0);
+    }
+}

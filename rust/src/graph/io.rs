@@ -1,0 +1,104 @@
+//! SNAP-style edge-list IO (`# comment` lines, whitespace-separated pairs).
+//!
+//! The paper's datasets come from the SNAP library in this format; this
+//! module reads/writes it so real SNAP files drop in unchanged when
+//! available (this environment has no network, so `graph::datasets`
+//! generates calibrated synthetic analogues instead).
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::{Graph, GraphBuilder};
+
+/// Read a SNAP edge list. Applies the paper's cleaning: undirect, dedup,
+/// drop self-loops; `largest_component` additionally removes disconnected
+/// components and compacts ids.
+pub fn read_edge_list(path: &Path, largest_component: bool) -> Result<Graph> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let reader = std::io::BufReader::new(file);
+    let mut b = GraphBuilder::new();
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let u: u32 = it
+            .next()
+            .and_then(|s| s.parse().ok())
+            .with_context(|| format!("{}:{}: bad source", path.display(), lineno + 1))?;
+        let v: u32 = it
+            .next()
+            .and_then(|s| s.parse().ok())
+            .with_context(|| format!("{}:{}: bad target", path.display(), lineno + 1))?;
+        b.push_edge(u, v);
+    }
+    Ok(if largest_component { b.build_largest_component() } else { b.build() })
+}
+
+/// Write a graph as a SNAP edge list (canonical orientation).
+pub fn write_edge_list(g: &Graph, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    writeln!(w, "# Undirected graph: {} vertices, {} edges", g.vertex_count(), g.edge_count())?;
+    for (_, u, v) in g.edge_iter() {
+        writeln!(w, "{u}\t{v}")?;
+    }
+    Ok(())
+}
+
+/// Write an edge partitioning next to the graph: `edge_id \t partition`.
+pub fn write_partition(owner: &[u32], path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    for (e, &p) in owner.iter().enumerate() {
+        writeln!(w, "{e}\t{p}")?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let g = GraphBuilder::new()
+            .add_edge(0, 1)
+            .add_edge(1, 2)
+            .add_edge(2, 0)
+            .build();
+        let dir = std::env::temp_dir().join("dfep_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("g.txt");
+        write_edge_list(&g, &path).unwrap();
+        let g2 = read_edge_list(&path, false).unwrap();
+        assert_eq!(g2.vertex_count(), 3);
+        assert_eq!(g2.edges(), g.edges());
+    }
+
+    #[test]
+    fn skips_comments_and_directed_duplicates() {
+        let dir = std::env::temp_dir().join("dfep_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("snap.txt");
+        std::fs::write(&path, "# SNAP header\n0 1\n1 0\n% other\n1 2\n").unwrap();
+        let g = read_edge_list(&path, false).unwrap();
+        assert_eq!(g.edge_count(), 2);
+    }
+
+    #[test]
+    fn bad_line_errors() {
+        let dir = std::env::temp_dir().join("dfep_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.txt");
+        std::fs::write(&path, "0 x\n").unwrap();
+        assert!(read_edge_list(&path, false).is_err());
+    }
+}

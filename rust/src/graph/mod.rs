@@ -1,0 +1,141 @@
+//! Graph substrate: CSR storage, builders, IO, generators, statistics and
+//! the Fig-6 rewiring protocol.
+//!
+//! Graphs are simple undirected graphs with contiguous `u32` vertex ids and
+//! explicit edge ids (`0..m`) — DFEP partitions *edges*, so edge identity
+//! is first-class throughout the crate.
+
+pub mod builder;
+pub mod datasets;
+pub mod generators;
+pub mod io;
+pub mod rewire;
+pub mod stats;
+
+pub use builder::GraphBuilder;
+
+/// Immutable simple undirected graph in CSR form with edge ids.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    n: usize,
+    /// Canonical edge list; `edges[e] = (u, v)` with `u < v`.
+    edges: Vec<(u32, u32)>,
+    /// CSR offsets, length `n + 1`.
+    offsets: Vec<u32>,
+    /// Flattened adjacency: `(neighbor, edge_id)` pairs.
+    adj: Vec<(u32, u32)>,
+}
+
+impl Graph {
+    /// Number of vertices.
+    #[inline]
+    pub fn vertex_count(&self) -> usize {
+        self.n
+    }
+
+    /// Number of (undirected) edges.
+    #[inline]
+    pub fn edge_count(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Endpoints of edge `e`, canonical order (`u < v`).
+    #[inline]
+    pub fn endpoints(&self, e: u32) -> (u32, u32) {
+        self.edges[e as usize]
+    }
+
+    /// Degree of vertex `v`.
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    /// `(neighbor, edge_id)` pairs incident on `v`, sorted by neighbor id.
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[(u32, u32)] {
+        &self.adj
+            [self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize]
+    }
+
+    /// Iterator over `(edge_id, u, v)`.
+    pub fn edge_iter(&self) -> impl Iterator<Item = (u32, u32, u32)> + '_ {
+        self.edges
+            .iter()
+            .enumerate()
+            .map(|(e, &(u, v))| (e as u32, u, v))
+    }
+
+    /// The canonical edge slice.
+    #[inline]
+    pub fn edges(&self) -> &[(u32, u32)] {
+        &self.edges
+    }
+
+    /// Given one endpoint of edge `e`, return the other.
+    #[inline]
+    pub fn other_endpoint(&self, e: u32, v: u32) -> u32 {
+        let (a, b) = self.edges[e as usize];
+        if a == v {
+            b
+        } else {
+            debug_assert_eq!(b, v);
+            a
+        }
+    }
+
+    /// Construct from parts — used by [`GraphBuilder`]; keeps invariants
+    /// (canonical edges, sorted adjacency) by construction.
+    pub(crate) fn from_parts(
+        n: usize,
+        edges: Vec<(u32, u32)>,
+        offsets: Vec<u32>,
+        adj: Vec<(u32, u32)>,
+    ) -> Self {
+        Graph { n, edges, offsets, adj }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn triangle_plus_tail() -> Graph {
+        // 0-1, 1-2, 0-2, 2-3
+        GraphBuilder::new()
+            .add_edge(0, 1)
+            .add_edge(1, 2)
+            .add_edge(0, 2)
+            .add_edge(2, 3)
+            .build()
+    }
+
+    #[test]
+    fn counts() {
+        let g = triangle_plus_tail();
+        assert_eq!(g.vertex_count(), 4);
+        assert_eq!(g.edge_count(), 4);
+        assert_eq!(g.degree(2), 3);
+        assert_eq!(g.degree(3), 1);
+    }
+
+    #[test]
+    fn neighbors_sorted_with_edge_ids() {
+        let g = triangle_plus_tail();
+        let nbrs: Vec<u32> = g.neighbors(2).iter().map(|&(w, _)| w).collect();
+        assert_eq!(nbrs, vec![0, 1, 3]);
+        for &(w, e) in g.neighbors(2) {
+            let (a, b) = g.endpoints(e);
+            assert!(a == 2 || b == 2);
+            assert_eq!(g.other_endpoint(e, 2), w);
+        }
+    }
+
+    #[test]
+    fn edge_iter_is_canonical() {
+        let g = triangle_plus_tail();
+        for (_, u, v) in g.edge_iter() {
+            assert!(u < v);
+        }
+    }
+}

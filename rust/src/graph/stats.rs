@@ -1,0 +1,261 @@
+//! Graph statistics: components, BFS, diameter estimation, clustering
+//! coefficients — everything Tables II/III report.
+
+use super::Graph;
+use crate::util::rng::Rng;
+
+/// Hop distances from `source` (`u32::MAX` = unreachable).
+pub fn bfs_distances(g: &Graph, source: u32) -> Vec<u32> {
+    let mut dist = vec![u32::MAX; g.vertex_count()];
+    let mut queue = std::collections::VecDeque::new();
+    dist[source as usize] = 0;
+    queue.push_back(source);
+    while let Some(u) = queue.pop_front() {
+        let du = dist[u as usize];
+        for &(w, _) in g.neighbors(u) {
+            if dist[w as usize] == u32::MAX {
+                dist[w as usize] = du + 1;
+                queue.push_back(w);
+            }
+        }
+    }
+    dist
+}
+
+/// Eccentricity of `v` within its component (max finite BFS distance).
+pub fn eccentricity(g: &Graph, v: u32) -> u32 {
+    bfs_distances(g, v)
+        .into_iter()
+        .filter(|&d| d != u32::MAX)
+        .max()
+        .unwrap_or(0)
+}
+
+/// Number of connected components.
+pub fn component_count(g: &Graph) -> usize {
+    components(g).1
+}
+
+/// Per-vertex component labels and the component count.
+pub fn components(g: &Graph) -> (Vec<u32>, usize) {
+    let n = g.vertex_count();
+    let mut comp = vec![u32::MAX; n];
+    let mut next = 0u32;
+    let mut stack = Vec::new();
+    for s in 0..n as u32 {
+        if comp[s as usize] != u32::MAX {
+            continue;
+        }
+        comp[s as usize] = next;
+        stack.push(s);
+        while let Some(u) = stack.pop() {
+            for &(w, _) in g.neighbors(u) {
+                if comp[w as usize] == u32::MAX {
+                    comp[w as usize] = next;
+                    stack.push(w);
+                }
+            }
+        }
+        next += 1;
+    }
+    (comp, next as usize)
+}
+
+/// Diameter lower-bound estimate by repeated double sweeps: from each of
+/// `starts` random vertices, BFS to the farthest vertex, BFS again from it.
+/// Exact on trees; within a small factor on real graphs — this is the
+/// standard estimator for graphs too large for all-pairs BFS.
+pub fn diameter_estimate(g: &Graph, starts: usize, seed: u64) -> u32 {
+    if g.vertex_count() == 0 {
+        return 0;
+    }
+    let mut rng = Rng::new(seed);
+    let mut best = 0;
+    for _ in 0..starts {
+        let s = rng.below(g.vertex_count()) as u32;
+        let d1 = bfs_distances(g, s);
+        let (far, _) = d1
+            .iter()
+            .enumerate()
+            .filter(|&(_, &d)| d != u32::MAX)
+            .max_by_key(|&(_, &d)| d)
+            .unwrap();
+        let d2 = bfs_distances(g, far as u32);
+        let ecc = d2.into_iter().filter(|&d| d != u32::MAX).max().unwrap_or(0);
+        best = best.max(ecc);
+    }
+    best
+}
+
+/// Exact diameter (all-pairs BFS) — only for small graphs/tests.
+pub fn diameter_exact(g: &Graph) -> u32 {
+    (0..g.vertex_count() as u32)
+        .map(|v| eccentricity(g, v))
+        .max()
+        .unwrap_or(0)
+}
+
+/// Count of triangles incident on each vertex plus total wedges; uses
+/// sorted-adjacency intersection, O(sum_deg^2 / n) in practice.
+fn triangles_and_wedges(g: &Graph) -> (u64, u64, Vec<u64>) {
+    let n = g.vertex_count();
+    let mut tri_per_vertex = vec![0u64; n];
+    let mut triangles = 0u64;
+    let mut wedges = 0u64;
+    for v in 0..n as u32 {
+        let d = g.degree(v) as u64;
+        wedges += d * (d.saturating_sub(1)) / 2;
+    }
+    for (_, u, v) in g.edge_iter() {
+        // count common neighbors of u, v via sorted merge
+        let (mut i, mut j) = (0usize, 0usize);
+        let nu = g.neighbors(u);
+        let nv = g.neighbors(v);
+        while i < nu.len() && j < nv.len() {
+            use std::cmp::Ordering::*;
+            match nu[i].0.cmp(&nv[j].0) {
+                Less => i += 1,
+                Greater => j += 1,
+                Equal => {
+                    let w = nu[i].0;
+                    // each triangle (u,v,w) is counted once per edge, i.e.
+                    // 3 times in total across the edge loop
+                    triangles += 1;
+                    tri_per_vertex[w as usize] += 1;
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+    }
+    // `triangles` now holds 3 * #triangles (once per edge of the triangle)
+    (triangles / 3, wedges, tri_per_vertex)
+}
+
+/// Global clustering coefficient (transitivity): 3·triangles / wedges.
+pub fn global_clustering(g: &Graph) -> f64 {
+    let (tri, wedges, _) = triangles_and_wedges(g);
+    if wedges == 0 {
+        0.0
+    } else {
+        3.0 * tri as f64 / wedges as f64
+    }
+}
+
+/// Total triangle count.
+pub fn triangle_count(g: &Graph) -> u64 {
+    triangles_and_wedges(g).0
+}
+
+/// Expected clustering coefficient of a G(n,m) random graph of the same
+/// size — the paper's "RCC" column: for ER, CC ≈ p = 2m / (n(n-1)).
+pub fn random_graph_cc(g: &Graph) -> f64 {
+    let n = g.vertex_count() as f64;
+    let m = g.edge_count() as f64;
+    if n < 2.0 {
+        0.0
+    } else {
+        2.0 * m / (n * (n - 1.0))
+    }
+}
+
+/// The stats row the paper tabulates per dataset.
+#[derive(Clone, Debug)]
+pub struct GraphStats {
+    pub vertices: usize,
+    pub edges: usize,
+    pub diameter: u32,
+    pub clustering: f64,
+    pub random_cc: f64,
+    pub avg_degree: f64,
+    pub max_degree: usize,
+    pub components: usize,
+}
+
+/// Compute the Table II/III row (diameter via double-sweep estimate).
+pub fn graph_stats(g: &Graph, seed: u64) -> GraphStats {
+    let max_degree =
+        (0..g.vertex_count() as u32).map(|v| g.degree(v)).max().unwrap_or(0);
+    GraphStats {
+        vertices: g.vertex_count(),
+        edges: g.edge_count(),
+        diameter: diameter_estimate(g, 8, seed),
+        clustering: global_clustering(g),
+        random_cc: random_graph_cc(g),
+        avg_degree: 2.0 * g.edge_count() as f64 / g.vertex_count().max(1) as f64,
+        max_degree,
+        components: component_count(g),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn path(n: u32) -> Graph {
+        let mut b = GraphBuilder::new();
+        for i in 0..n - 1 {
+            b.push_edge(i, i + 1);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn bfs_on_path() {
+        let g = path(5);
+        assert_eq!(bfs_distances(&g, 0), vec![0, 1, 2, 3, 4]);
+        assert_eq!(bfs_distances(&g, 2), vec![2, 1, 0, 1, 2]);
+    }
+
+    #[test]
+    fn diameter_path_exact_and_estimate() {
+        let g = path(10);
+        assert_eq!(diameter_exact(&g), 9);
+        // double sweep is exact on trees
+        assert_eq!(diameter_estimate(&g, 1, 0), 9);
+    }
+
+    #[test]
+    fn clustering_triangle_vs_star() {
+        let tri = GraphBuilder::new()
+            .add_edge(0, 1)
+            .add_edge(1, 2)
+            .add_edge(0, 2)
+            .build();
+        assert!((global_clustering(&tri) - 1.0).abs() < 1e-12);
+        assert_eq!(triangle_count(&tri), 1);
+        let star = GraphBuilder::new()
+            .add_edge(0, 1)
+            .add_edge(0, 2)
+            .add_edge(0, 3)
+            .build();
+        assert_eq!(global_clustering(&star), 0.0);
+        assert_eq!(triangle_count(&star), 0);
+    }
+
+    #[test]
+    fn components_counted() {
+        let g = GraphBuilder::new()
+            .add_edge(0, 1)
+            .add_edge(2, 3)
+            .add_edge(3, 4)
+            .build();
+        let (labels, count) = components(&g);
+        assert_eq!(count, 2);
+        assert_eq!(labels[0], labels[1]);
+        assert_eq!(labels[2], labels[3]);
+        assert_ne!(labels[0], labels[2]);
+    }
+
+    #[test]
+    fn stats_row_consistent() {
+        let g = path(6);
+        let s = graph_stats(&g, 0);
+        assert_eq!(s.vertices, 6);
+        assert_eq!(s.edges, 5);
+        assert_eq!(s.diameter, 5);
+        assert_eq!(s.components, 1);
+        assert_eq!(s.max_degree, 2);
+    }
+}

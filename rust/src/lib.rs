@@ -1,0 +1,42 @@
+//! # DFEP + ETSCH — distributed edge partitioning for graph processing
+//!
+//! Production-quality reproduction of *"Distributed Edge Partitioning for
+//! Graph Processing"* (Guerrieri & Montresor, 2014): the **DFEP**
+//! funding-based edge partitioner (plus its **DFEPC** variant), the
+//! **ETSCH** edge-partition-centric processing framework, the paper's
+//! baselines (JaBeJa, random/hash partitioners, a Pregel-style
+//! vertex-centric engine), the simulation harness of Section V-C and a
+//! simulated Hadoop/EC2 cluster standing in for Section V-D.
+//!
+//! Architecture (see `DESIGN.md`): this crate is **Layer 3** — the rust
+//! coordinator that owns the event loop, the partitioning rounds and the
+//! metrics. The numeric hot path of ETSCH's local-computation phase
+//! (tropical-semiring relaxation) and the vectorized DFEP funding round are
+//! **Layer 2/1** JAX + Pallas programs, AOT-lowered to HLO text at build
+//! time (`make artifacts`) and executed via PJRT from [`runtime`]. Python
+//! never runs on the request path.
+//!
+//! Quick tour:
+//!
+//! ```no_run
+//! use dfep::graph::generators::GraphKind;
+//! use dfep::partition::{dfep::Dfep, Partitioner};
+//! use dfep::etsch::{Etsch, sssp::Sssp};
+//!
+//! let g = GraphKind::PowerlawCluster { n: 2000, m: 8, p: 0.3 }
+//!     .generate(42);
+//! let part = Dfep::default().partition(&g, 8, 42);
+//! let mut engine = Etsch::new(&g, &part);
+//! let dist = engine.run(&mut Sssp::new(0));
+//! println!("rounds = {}", engine.rounds_executed());
+//! ```
+
+pub mod bench;
+pub mod cluster;
+pub mod coordinator;
+pub mod etsch;
+pub mod graph;
+pub mod partition;
+pub mod runtime;
+pub mod testing;
+pub mod util;

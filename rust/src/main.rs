@@ -1,0 +1,361 @@
+//! `repro` — the leader binary: partition graphs, run ETSCH workloads,
+//! simulate the EC2 cluster experiments, print dataset stats.
+//!
+//! Examples:
+//!   repro partition --graph astroph --algo dfep --k 20 --seed 1
+//!   repro sssp --graph usroads@0.05 --k 8 --source 0
+//!   repro cluster --graph dblp@0.1 --nodes 2,4,8,16
+//!   repro stats --graph wordnet@0.1
+//!   repro xla-info
+//!   repro xla-partition --graph er:n=500,m=1500 --k 8
+
+use anyhow::{anyhow, Result};
+
+use dfep::cluster::cost::CostModel;
+use dfep::cluster::dfep_mr::{resimulate, run_cluster_dfep};
+use dfep::cluster::etsch_mr::{run_baseline_sssp, run_etsch_sssp};
+use dfep::coordinator::cli::Args;
+use dfep::coordinator::runs::{
+    resolve_graph, run, run_sssp, PartitionerKind, RunConfig,
+};
+use dfep::graph::{io, stats};
+use dfep::partition::{dfep::Dfep, Partitioner};
+use dfep::runtime::Runtime;
+
+const HELP: &str = "\
+repro — DFEP + ETSCH reproduction (Guerrieri & Montresor, 2014)
+
+USAGE: repro <command> [--key value]...
+
+COMMANDS
+  partition   partition a graph and print the paper's metrics
+              --graph SPEC --algo dfep|dfepc|jabeja|random|hash|greedy|fennel|multilevel
+              --k N --seed S [--gain-samples N] [--out FILE]
+  sssp        run ETSCH single-source shortest paths on DFEP partitions
+              --graph SPEC --k N --source V --seed S
+  etsch       run any ETSCH algorithm on DFEP partitions
+              --graph SPEC --alg sssp|cc|mis|pagerank|kcore|labelprop|betweenness
+              --k N [--core-k N] [--samples N] --seed S
+  faults      re-simulate the Fig-8 DFEP job under failure injection
+              --graph SPEC --k N --nodes N --fail-rate P --seed S
+  cluster     simulate the Hadoop/EC2 experiments (Figs 8-9)
+              --graph SPEC --k N --nodes 2,4,8,16 --seed S
+  stats       print the Table II/III row for a graph
+              --graph SPEC [--seed S]
+  xla-info    show the PJRT platform and the AOT artifact manifest
+  xla-partition  run DFEP with XLA-offloaded funding rounds
+              --graph SPEC --k N --seed S [--artifacts DIR]
+  help        this text
+
+GRAPH SPECS
+  astroph | email-enron | usroads | wordnet | dblp | youtube | amazon
+  name@FRAC     scaled instance, e.g. usroads@0.05
+  er:n=..,m=..  plc:n=..,m=..,p=..  ba:n=..,m=..  road:n=..
+";
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: Vec<String>) -> Result<()> {
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "partition" => cmd_partition(&args),
+        "sssp" => cmd_sssp(&args),
+        "etsch" => cmd_etsch(&args),
+        "faults" => cmd_faults(&args),
+        "cluster" => cmd_cluster(&args),
+        "stats" => cmd_stats(&args),
+        "xla-info" => cmd_xla_info(&args),
+        "xla-partition" => cmd_xla_partition(&args),
+        "help" | "-h" | "--help" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command '{other}' (try `repro help`)")),
+    }
+}
+
+fn graph_arg(args: &Args) -> Result<dfep::graph::Graph> {
+    let spec = args
+        .get("graph")
+        .ok_or_else(|| anyhow!("--graph is required"))?;
+    resolve_graph(spec, args.get_u64("graph-seed", 42)?)
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let g = graph_arg(args)?;
+    let cfg = RunConfig {
+        partitioner: PartitionerKind::parse(args.get_or("algo", "dfep"))?,
+        k: args.get_usize("k", 20)?,
+        seed: args.get_u64("seed", 1)?,
+        gain_samples: args.get_usize("gain-samples", 0)?,
+    };
+    println!(
+        "graph: |V|={} |E|={}",
+        g.vertex_count(),
+        g.edge_count()
+    );
+    let res = run(&g, &cfg);
+    let r = &res.report;
+    println!("partitioner: {:?}  k={}  seed={}", cfg.partitioner, cfg.k, cfg.seed);
+    println!("  time        {:.3}s", res.partition_secs);
+    println!("  rounds      {}", r.rounds);
+    println!("  largest     {:.4} (normalized)", r.largest);
+    println!("  nstdev      {:.4}", r.nstdev);
+    println!("  messages    {}", r.messages);
+    println!("  disconnected {:.2}%", r.disconnected * 100.0);
+    if let Some(gain) = res.gain {
+        println!("  gain        {gain:.4}");
+    }
+    if let Some(out) = args.get("out") {
+        io::write_partition(&res.partition.owner, std::path::Path::new(out))?;
+        println!("  wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_sssp(args: &Args) -> Result<()> {
+    let g = graph_arg(args)?;
+    let k = args.get_usize("k", 8)?;
+    let seed = args.get_u64("seed", 1)?;
+    let source = args.get_usize("source", 0)? as u32;
+    let p = Dfep::default().partition(&g, k, seed);
+    let (dist, rounds, messages) = run_sssp(&g, &p, source);
+    let reached =
+        dist.iter().filter(|&&d| d != u32::MAX).count();
+    let base = dfep::etsch::vertex_baseline::bsp_sssp(&g, source);
+    println!("graph: |V|={} |E|={}", g.vertex_count(), g.edge_count());
+    println!("ETSCH sssp: rounds={rounds} messages={messages} reached={reached}");
+    println!(
+        "baseline:   supersteps={} messages={}",
+        base.supersteps, base.messages
+    );
+    println!(
+        "gain: {:.4}",
+        (1.0 - rounds as f64 / base.supersteps.max(1) as f64).max(0.0)
+    );
+    Ok(())
+}
+
+fn cmd_etsch(args: &Args) -> Result<()> {
+    use dfep::etsch::{
+        betweenness, cc::ConnectedComponents, kcore::KCore,
+        labelprop::LabelPropagation, mis, pagerank::PageRank, sssp::Sssp,
+    };
+    let g = graph_arg(args)?;
+    let k = args.get_usize("k", 8)?;
+    let seed = args.get_u64("seed", 1)?;
+    let p = Dfep::default().partition(&g, k, seed);
+    let mut engine = dfep::etsch::Etsch::new(&g, &p);
+    let alg = args.get_or("alg", "sssp");
+    println!(
+        "graph |V|={} |E|={}  DFEP k={k} ({} rounds)",
+        g.vertex_count(),
+        g.edge_count(),
+        p.rounds
+    );
+    match alg {
+        "sssp" => {
+            let source = args.get_usize("source", 0)? as u32;
+            let d = engine.run(&mut Sssp::new(source));
+            let reached = d.iter().filter(|&&x| x != u32::MAX).count();
+            println!(
+                "sssp: {} rounds, {reached} reached",
+                engine.rounds_executed()
+            );
+        }
+        "cc" => {
+            let labels = engine.run(&mut ConnectedComponents::new(seed));
+            let n = labels
+                .iter()
+                .collect::<std::collections::HashSet<_>>()
+                .len();
+            println!(
+                "cc: {} rounds, {n} component(s)",
+                engine.rounds_executed()
+            );
+        }
+        "mis" => {
+            let st = engine.run(&mut mis::LubyMis::new(seed));
+            let in_set: Vec<bool> = st
+                .iter()
+                .map(|s| s.status == mis::Status::InSet)
+                .collect();
+            mis::validate_mis(&g, &in_set)
+                .map_err(|e| anyhow!(e))?;
+            println!(
+                "mis: {} rounds, |S| = {} (validated)",
+                engine.rounds_executed(),
+                in_set.iter().filter(|&&b| b).count()
+            );
+        }
+        "pagerank" => {
+            let iters = args.get_usize("iters", 20)?;
+            let pr = engine.run(&mut PageRank::new(&g, iters));
+            let top = pr
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.rank.partial_cmp(&b.1.rank).unwrap())
+                .unwrap();
+            println!(
+                "pagerank: {iters} rounds, top vertex {} rank {:.6}",
+                top.0, top.1.rank
+            );
+        }
+        "kcore" => {
+            let ck = args.get_usize("core-k", 3)? as u32;
+            let st = engine.run(&mut KCore::new(ck));
+            println!(
+                "{ck}-core: {} rounds, {} vertices",
+                engine.rounds_executed(),
+                st.iter().filter(|s| s.alive).count()
+            );
+        }
+        "labelprop" => {
+            let st = engine.run(&mut LabelPropagation::default());
+            let n = st
+                .iter()
+                .map(|s| s.label)
+                .collect::<std::collections::HashSet<_>>()
+                .len();
+            println!(
+                "labelprop: {} rounds, {n} communities",
+                engine.rounds_executed()
+            );
+        }
+        "betweenness" => {
+            let samples = args.get_usize("samples", 32)?;
+            let bc = betweenness::etsch_betweenness(&g, &p, samples, seed);
+            let mut top: Vec<(usize, f64)> =
+                bc.iter().cloned().enumerate().collect();
+            top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            println!("betweenness ({samples} sources), top 5:");
+            for (v, c) in top.iter().take(5) {
+                println!("  vertex {v:>8}  {c:.1}");
+            }
+        }
+        other => return Err(anyhow!("unknown algorithm '{other}'")),
+    }
+    Ok(())
+}
+
+fn cmd_faults(args: &Args) -> Result<()> {
+    use dfep::cluster::failures::{simulate_with_faults, FaultModel};
+    let g = graph_arg(args)?;
+    let k = args.get_usize("k", 20)?;
+    let nodes = args.get_usize("nodes", 8)?;
+    let seed = args.get_u64("seed", 1)?;
+    let rate = args.get_f64("fail-rate", 0.005)?;
+    let cost = CostModel::default();
+    let run = run_cluster_dfep(&g, k, nodes, seed, &cost, 2000);
+    let clean: f64 =
+        run.work.iter().map(|&w| cost.round_time(nodes, w)).sum();
+    let fm = FaultModel {
+        node_failure_per_round: rate,
+        ..Default::default()
+    };
+    let f = simulate_with_faults(&cost, &fm, nodes, &run.work, seed);
+    println!(
+        "DFEP job: {} rounds on {nodes} nodes (fail-rate {rate}/node-round)",
+        run.work.len()
+    );
+    println!("  clean   {clean:.1}s");
+    println!(
+        "  faulty  {:.1}s  (+{:.1}%, {} failures, {} straggled rounds)",
+        f.total_time,
+        (f.total_time / clean - 1.0) * 100.0,
+        f.failures,
+        f.straggled_rounds
+    );
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let g = graph_arg(args)?;
+    let k = args.get_usize("k", 20)?;
+    let seed = args.get_u64("seed", 1)?;
+    let nodes: Vec<usize> = args
+        .get_or("nodes", "2,4,8,16")
+        .split(',')
+        .map(|s| s.parse().map_err(|_| anyhow!("bad node count '{s}'")))
+        .collect::<Result<_>>()?;
+    let cost = CostModel::default();
+    println!("graph: |V|={} |E|={}", g.vertex_count(), g.edge_count());
+    println!("-- DFEP partitioning job (Fig 8) --");
+    let base_run = run_cluster_dfep(&g, k, nodes[0], seed, &cost, 2000);
+    let t0 = base_run.total_time;
+    for &n in &nodes {
+        let t = resimulate(&base_run, n, &cost);
+        println!(
+            "  nodes={n:<3} time={t:>8.1}s  speedup vs {} nodes: {:.2}x",
+            nodes[0],
+            t0 / t
+        );
+    }
+    println!("-- SSSP: ETSCH vs vertex-centric baseline (Fig 9) --");
+    for &n in &nodes {
+        let p = Dfep::default().partition(&g, n, seed);
+        let e = run_etsch_sssp(&g, &p, 0, n, &cost);
+        let b = run_baseline_sssp(&g, 0, n, &cost);
+        println!(
+            "  nodes={n:<3} etsch={:>8.1}s ({} rounds)   baseline={:>8.1}s ({} supersteps)",
+            e.total_time, e.rounds, b.total_time, b.rounds
+        );
+    }
+    Ok(())
+}
+
+fn cmd_stats(args: &Args) -> Result<()> {
+    let g = graph_arg(args)?;
+    let s = stats::graph_stats(&g, args.get_u64("seed", 1)?);
+    println!("V           {}", s.vertices);
+    println!("E           {}", s.edges);
+    println!("D (est)     {}", s.diameter);
+    println!("CC          {:.4e}", s.clustering);
+    println!("RCC         {:.4e}", s.random_cc);
+    println!("avg degree  {:.2}", s.avg_degree);
+    println!("max degree  {}", s.max_degree);
+    println!("components  {}", s.components);
+    Ok(())
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.get("artifacts")
+        .map(str::to_string)
+        .or_else(|| std::env::var("DFEP_ARTIFACTS").ok())
+        .unwrap_or_else(|| "artifacts".to_string())
+}
+
+fn cmd_xla_info(args: &Args) -> Result<()> {
+    let rt = Runtime::open(std::path::Path::new(&artifacts_dir(args)))?;
+    println!("platform: {}", rt.platform());
+    for (name, spec) in &rt.manifest().artifacts {
+        let ins: Vec<String> = spec
+            .inputs
+            .iter()
+            .map(|t| format!("{:?}{:?}", t.dtype, t.shape))
+            .collect();
+        println!("  {name}: {} -> {} outputs", ins.join(", "), spec.outputs.len());
+    }
+    Ok(())
+}
+
+fn cmd_xla_partition(args: &Args) -> Result<()> {
+    let g = graph_arg(args)?;
+    let k = args.get_usize("k", 8)?;
+    let seed = args.get_u64("seed", 1)?;
+    let rt = Runtime::open(std::path::Path::new(&artifacts_dir(args)))?;
+    let engine = dfep::runtime::xla_engine::XlaDfep::default();
+    let (p, secs) =
+        dfep::util::timer::time(|| engine.partition(&rt, &g, k, seed));
+    let p = p?;
+    let r = dfep::partition::metrics::evaluate(&g, &p);
+    println!("XLA DFEP on {} ({} edges): {:.3}s", rt.platform(), g.edge_count(), secs);
+    println!("  rounds={} nstdev={:.4} messages={}", r.rounds, r.nstdev, r.messages);
+    Ok(())
+}

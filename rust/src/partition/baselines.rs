@@ -1,0 +1,183 @@
+//! Trivial edge partitioners: lower/upper reference points for the benches
+//! ("it would be simple to just split the edges in K sets of size |E|/K,
+//! but this could have severe implications on communication efficiency,
+//! connectedness and path compression" — §IV).
+
+use super::{EdgePartition, Partitioner};
+use crate::graph::Graph;
+use crate::util::rng::Rng;
+
+/// Uniform random edge assignment — perfectly balanced in expectation,
+/// terrible communication cost and path compression.
+#[derive(Clone, Debug, Default)]
+pub struct RandomEdge;
+
+impl Partitioner for RandomEdge {
+    fn partition(&self, g: &Graph, k: usize, seed: u64) -> EdgePartition {
+        let mut rng = Rng::new(seed);
+        let owner =
+            (0..g.edge_count()).map(|_| rng.below(k) as u32).collect();
+        EdgePartition { k, owner, rounds: 1 }
+    }
+
+    fn name(&self) -> &'static str {
+        "Random"
+    }
+}
+
+/// Round-robin over canonically sorted edges — exactly balanced (±1),
+/// deterministic, no locality whatsoever.
+#[derive(Clone, Debug, Default)]
+pub struct HashEdge;
+
+impl Partitioner for HashEdge {
+    fn partition(&self, g: &Graph, k: usize, _seed: u64) -> EdgePartition {
+        let owner = (0..g.edge_count()).map(|e| (e % k) as u32).collect();
+        EdgePartition { k, owner, rounds: 1 }
+    }
+
+    fn name(&self) -> &'static str {
+        "Hash"
+    }
+}
+
+/// Greedy BFS growth: K random seed edges expand in lockstep, each taking
+/// the lowest-id free neighboring edge first — the "simple solution" the
+/// paper sketches (and rejects) at the start of §IV. Kept as an ablation:
+/// it shows why funding (not just growth) is needed for balance.
+#[derive(Clone, Debug, Default)]
+pub struct GreedyBfs;
+
+impl Partitioner for GreedyBfs {
+    fn partition(&self, g: &Graph, k: usize, seed: u64) -> EdgePartition {
+        let m = g.edge_count();
+        let mut rng = Rng::new(seed);
+        let mut owner = vec![u32::MAX; m];
+        let mut frontier: Vec<std::collections::VecDeque<u32>> =
+            vec![Default::default(); k];
+        for (i, e) in rng.sample_indices(m, k.min(m)).into_iter().enumerate()
+        {
+            owner[e] = i as u32;
+            frontier[i].push_back(e as u32);
+        }
+        let mut remaining = m - k.min(m);
+        let mut rounds = 0usize;
+        while remaining > 0 {
+            rounds += 1;
+            let mut progressed = false;
+            for i in 0..k {
+                // take one new edge per partition per round (lockstep)
+                let mut taken = false;
+                while let Some(&e) = frontier[i].front() {
+                    let (u, v) = g.endpoints(e);
+                    let mut advanced = false;
+                    for w in [u, v] {
+                        for &(_, e2) in g.neighbors(w) {
+                            if owner[e2 as usize] == u32::MAX {
+                                owner[e2 as usize] = i as u32;
+                                frontier[i].push_back(e2);
+                                remaining -= 1;
+                                taken = true;
+                                advanced = true;
+                                progressed = true;
+                                break;
+                            }
+                        }
+                        if advanced {
+                            break;
+                        }
+                    }
+                    if taken {
+                        break;
+                    }
+                    frontier[i].pop_front(); // exhausted edge
+                }
+                if taken {
+                    continue;
+                }
+            }
+            if !progressed {
+                // free edges unreachable from any frontier (other
+                // component): seed the smallest partition there
+                if let Some(e) =
+                    (0..m).find(|&e| owner[e] == u32::MAX)
+                {
+                    let mut sizes = vec![0usize; k];
+                    for &o in &owner {
+                        if o != u32::MAX {
+                            sizes[o as usize] += 1;
+                        }
+                    }
+                    let i = (0..k).min_by_key(|&i| sizes[i]).unwrap();
+                    owner[e] = i as u32;
+                    frontier[i].push_back(e as u32);
+                    remaining -= 1;
+                }
+            }
+        }
+        EdgePartition { k, owner, rounds }
+    }
+
+    fn name(&self) -> &'static str {
+        "GreedyBFS"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::GraphKind;
+    use crate::partition::metrics;
+
+    fn g() -> Graph {
+        GraphKind::ErdosRenyi { n: 200, m: 600 }.generate(7)
+    }
+
+    #[test]
+    fn all_baselines_complete() {
+        let g = g();
+        for p in [
+            RandomEdge.partition(&g, 5, 1),
+            HashEdge.partition(&g, 5, 1),
+            GreedyBfs.partition(&g, 5, 1),
+        ] {
+            p.validate(&g).unwrap();
+        }
+    }
+
+    #[test]
+    fn hash_is_perfectly_balanced() {
+        let g = g();
+        let p = HashEdge.partition(&g, 7, 0);
+        let sizes = p.sizes();
+        let (mn, mx) =
+            (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+        assert!(mx - mn <= 1);
+    }
+
+    #[test]
+    fn random_has_high_messages_vs_greedy() {
+        let g = g();
+        let mr = metrics::messages(&g, &RandomEdge.partition(&g, 8, 1));
+        let mg = metrics::messages(&g, &GreedyBfs.partition(&g, 8, 1));
+        assert!(
+            mr > mg,
+            "random messages {mr} should exceed greedy {mg}"
+        );
+    }
+
+    #[test]
+    fn greedy_covers_disconnected_graphs() {
+        use crate::graph::GraphBuilder;
+        let mut b = GraphBuilder::new();
+        for i in 0..10u32 {
+            b.push_edge(i, i + 1);
+        }
+        for i in 20..30u32 {
+            b.push_edge(i, i + 1);
+        }
+        let g = b.build();
+        let p = GreedyBfs.partition(&g, 3, 2);
+        p.validate(&g).unwrap();
+    }
+}

@@ -1,0 +1,182 @@
+//! Partition quality metrics (paper §V-A): balance (largest normalized
+//! size, NSTDEV), communication cost (MESSAGES = Σ|F_i|), connectedness,
+//! and path-compression *gain* (computed by the ETSCH engine, re-exported
+//! here for the report struct).
+
+use super::EdgePartition;
+use crate::graph::Graph;
+
+/// One row of the paper's simulation plots.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub k: usize,
+    /// Size of the largest partition, normalized so 1.0 == |E|/K.
+    pub largest: f64,
+    /// NSTDEV as defined in §V-A.
+    pub nstdev: f64,
+    /// MESSAGES = Σ_i |F_i| (frontier vertices, counted with multiplicity
+    /// of partitions they appear in).
+    pub messages: usize,
+    /// Rounds the partitioner needed.
+    pub rounds: usize,
+    /// Fraction of partitions whose induced subgraph is disconnected.
+    pub disconnected: f64,
+}
+
+/// Normalized sizes: `|E_i| / (|E|/K)`.
+pub fn normalized_sizes(g: &Graph, p: &EdgePartition) -> Vec<f64> {
+    let ideal = g.edge_count() as f64 / p.k as f64;
+    p.sizes().iter().map(|&s| s as f64 / ideal).collect()
+}
+
+/// NSTDEV = sqrt( Σ (|E_i|/(E/K) - 1)^2 / K ).
+pub fn nstdev(g: &Graph, p: &EdgePartition) -> f64 {
+    let norm = normalized_sizes(g, p);
+    (norm.iter().map(|&x| (x - 1.0) * (x - 1.0)).sum::<f64>()
+        / p.k as f64)
+        .sqrt()
+}
+
+/// Largest normalized partition size.
+pub fn largest(g: &Graph, p: &EdgePartition) -> f64 {
+    normalized_sizes(g, p)
+        .into_iter()
+        .fold(0.0f64, f64::max)
+}
+
+/// MESSAGES = Σ_i |F_i|: every replica of a frontier vertex must exchange
+/// its state each aggregation, so a vertex appearing in `r >= 2` partitions
+/// contributes `r` (a vertex in one partition contributes 0).
+pub fn messages(g: &Graph, p: &EdgePartition) -> usize {
+    p.vertex_multiplicity(g)
+        .into_iter()
+        .filter(|&r| r >= 2)
+        .map(|r| r as usize)
+        .sum()
+}
+
+/// Fraction of partitions whose induced subgraph is disconnected
+/// (Fig 6e). Plain DFEP is always 0; DFEPC and JaBeJa-derived partitions
+/// may not be.
+pub fn disconnected_fraction(g: &Graph, p: &EdgePartition) -> f64 {
+    let sets = p.edge_sets();
+    let mut disconnected = 0usize;
+    let mut nonempty = 0usize;
+    // reusable scratch keyed by vertex
+    let mut mark = vec![u32::MAX; g.vertex_count()];
+    let mut edge_of: std::collections::HashMap<u32, Vec<(u32, u32)>> =
+        std::collections::HashMap::new();
+    for (i, edges) in sets.iter().enumerate() {
+        if edges.is_empty() {
+            continue;
+        }
+        nonempty += 1;
+        // local adjacency over this part's edges
+        edge_of.clear();
+        for &e in edges {
+            let (u, v) = g.endpoints(e);
+            edge_of.entry(u).or_default().push((v, e));
+            edge_of.entry(v).or_default().push((u, e));
+        }
+        // BFS from the first edge's endpoint, over this part only
+        let stamp = i as u32;
+        let (start, _) = g.endpoints(edges[0]);
+        let mut stack = vec![start];
+        mark[start as usize] = stamp;
+        let mut seen_vertices = 1usize;
+        while let Some(u) = stack.pop() {
+            if let Some(nbrs) = edge_of.get(&u) {
+                for &(w, _) in nbrs {
+                    if mark[w as usize] != stamp {
+                        mark[w as usize] = stamp;
+                        seen_vertices += 1;
+                        stack.push(w);
+                    }
+                }
+            }
+        }
+        if seen_vertices != edge_of.len() {
+            disconnected += 1;
+        }
+    }
+    if nonempty == 0 {
+        0.0
+    } else {
+        disconnected as f64 / nonempty as f64
+    }
+}
+
+/// Evaluate everything but gain (gain needs an ETSCH run; see
+/// [`crate::etsch::gain`]).
+pub fn evaluate(g: &Graph, p: &EdgePartition) -> Report {
+    Report {
+        k: p.k,
+        largest: largest(g, p),
+        nstdev: nstdev(g, p),
+        messages: messages(g, p),
+        rounds: p.rounds,
+        disconnected: disconnected_fraction(g, p),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn path4() -> Graph {
+        // 0-1-2-3-4 (4 edges)
+        GraphBuilder::new()
+            .add_edge(0, 1)
+            .add_edge(1, 2)
+            .add_edge(2, 3)
+            .add_edge(3, 4)
+            .build()
+    }
+
+    #[test]
+    fn perfect_balance() {
+        let g = path4();
+        let p = EdgePartition { k: 2, owner: vec![0, 0, 1, 1], rounds: 1 };
+        assert_eq!(nstdev(&g, &p), 0.0);
+        assert_eq!(largest(&g, &p), 1.0);
+    }
+
+    #[test]
+    fn imbalance_measured() {
+        let g = path4();
+        let p = EdgePartition { k: 2, owner: vec![0, 0, 0, 1], rounds: 1 };
+        // sizes 3,1; ideal 2 -> normalized 1.5, 0.5 -> nstdev = 0.5
+        assert!((nstdev(&g, &p) - 0.5).abs() < 1e-12);
+        assert!((largest(&g, &p) - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn messages_counts_frontier_multiplicity() {
+        let g = path4();
+        // alternate ownership: every interior vertex is frontier
+        let p = EdgePartition { k: 2, owner: vec![0, 1, 0, 1], rounds: 1 };
+        // vertices 1,2,3 appear in both parts -> 3 * 2 = 6
+        assert_eq!(messages(&g, &p), 6);
+        // contiguous split: only vertex 2 is frontier -> 2
+        let p2 = EdgePartition { k: 2, owner: vec![0, 0, 1, 1], rounds: 1 };
+        assert_eq!(messages(&g, &p2), 2);
+    }
+
+    #[test]
+    fn disconnection_detected() {
+        let g = path4();
+        // part 0 owns edges 0 and 3 (disconnected), part 1 owns 1,2
+        let p = EdgePartition { k: 2, owner: vec![0, 1, 1, 0], rounds: 1 };
+        assert!((disconnected_fraction(&g, &p) - 0.5).abs() < 1e-12);
+        let p2 = EdgePartition { k: 2, owner: vec![0, 0, 1, 1], rounds: 1 };
+        assert_eq!(disconnected_fraction(&g, &p2), 0.0);
+    }
+
+    #[test]
+    fn empty_partitions_ignored_in_disconnection() {
+        let g = path4();
+        let p = EdgePartition { k: 3, owner: vec![0, 0, 1, 1], rounds: 1 };
+        assert_eq!(disconnected_fraction(&g, &p), 0.0);
+    }
+}

@@ -1,0 +1,155 @@
+//! Edge partitioning: the paper's core abstraction plus all partitioners.
+//!
+//! An [`EdgePartition`] assigns every edge to exactly one of `k` parts;
+//! vertex sets `V_i` (and the frontier `F_i`) are derived. Partitioners:
+//! [`dfep::Dfep`] (the paper's contribution), [`dfepc::Dfepc`] (the
+//! variant of §IV-A), [`jabeja::JaBeJa`] (the comparison baseline) and the
+//! trivial [`baselines`].
+
+pub mod baselines;
+pub mod dfep;
+pub mod dfepc;
+pub mod fennel;
+pub mod jabeja;
+pub mod multilevel;
+pub mod metrics;
+
+use crate::graph::Graph;
+
+/// A complete edge partitioning of a graph into `k` parts.
+#[derive(Clone, Debug)]
+pub struct EdgePartition {
+    pub k: usize,
+    /// `owner[e]` = partition of edge `e` (always in `0..k` once complete).
+    pub owner: Vec<u32>,
+    /// Rounds the partitioner took (paper metric).
+    pub rounds: usize,
+}
+
+impl EdgePartition {
+    /// Edge ids of each part.
+    pub fn edge_sets(&self) -> Vec<Vec<u32>> {
+        let mut sets = vec![Vec::new(); self.k];
+        for (e, &p) in self.owner.iter().enumerate() {
+            sets[p as usize].push(e as u32);
+        }
+        sets
+    }
+
+    /// `|E_i|` for each part.
+    pub fn sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.k];
+        for &p in &self.owner {
+            sizes[p as usize] += 1;
+        }
+        sizes
+    }
+
+    /// Vertex sets `V_i` (endpoints of each part's edges), de-duplicated.
+    pub fn vertex_sets(&self, g: &Graph) -> Vec<Vec<u32>> {
+        // iterate one part at a time so a single stamp array stays correct
+        // (stamp[w] == p  <=>  w already recorded for the current part)
+        let mut sets = vec![Vec::new(); self.k];
+        let mut stamp = vec![u32::MAX; g.vertex_count()];
+        for (p, edges) in self.edge_sets().into_iter().enumerate() {
+            for e in edges {
+                let (u, v) = g.endpoints(e);
+                for w in [u, v] {
+                    if stamp[w as usize] != p as u32 {
+                        stamp[w as usize] = p as u32;
+                        sets[p].push(w);
+                    }
+                }
+            }
+        }
+        sets
+    }
+
+    /// For every vertex, the number of distinct partitions it appears in.
+    /// (Frontier vertices are those with multiplicity >= 2.)
+    pub fn vertex_multiplicity(&self, g: &Graph) -> Vec<u32> {
+        let mut mult = vec![0u32; g.vertex_count()];
+        for vs in self.vertex_sets(g) {
+            for w in vs {
+                mult[w as usize] += 1;
+            }
+        }
+        mult
+    }
+
+    /// Check this is a valid complete partitioning of `g`'s edges.
+    pub fn validate(&self, g: &Graph) -> Result<(), String> {
+        if self.owner.len() != g.edge_count() {
+            return Err(format!(
+                "owner len {} != edge count {}",
+                self.owner.len(),
+                g.edge_count()
+            ));
+        }
+        if let Some((e, &p)) =
+            self.owner.iter().enumerate().find(|&(_, &p)| p as usize >= self.k)
+        {
+            return Err(format!("edge {e} has invalid owner {p}"));
+        }
+        Ok(())
+    }
+}
+
+/// Common interface for all edge partitioners.
+pub trait Partitioner {
+    /// Partition `g` into `k` parts; `seed` controls all randomness.
+    fn partition(&self, g: &Graph, k: usize, seed: u64) -> EdgePartition;
+    /// Short display name for benches/tables.
+    fn name(&self) -> &'static str;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn square() -> Graph {
+        GraphBuilder::new()
+            .add_edge(0, 1)
+            .add_edge(1, 2)
+            .add_edge(2, 3)
+            .add_edge(3, 0)
+            .build()
+    }
+
+    #[test]
+    fn sizes_and_sets() {
+        let g = square();
+        let p = EdgePartition { k: 2, owner: vec![0, 0, 1, 1], rounds: 1 };
+        p.validate(&g).unwrap();
+        assert_eq!(p.sizes(), vec![2, 2]);
+        let es = p.edge_sets();
+        assert_eq!(es[0], vec![0, 1]);
+        assert_eq!(es[1], vec![2, 3]);
+    }
+
+    #[test]
+    fn vertex_sets_and_frontier() {
+        let g = square();
+        // canonical edge order after build: (0,1),(0,3),(1,2),(2,3)
+        assert_eq!(g.edges(), &[(0, 1), (0, 3), (1, 2), (2, 3)]);
+        let p = EdgePartition { k: 2, owner: vec![0, 0, 1, 1], rounds: 1 };
+        let vs = p.vertex_sets(&g);
+        // part 0 owns edges (0,1),(0,3) -> vertices {0,1,3}
+        let mut v0 = vs[0].clone();
+        v0.sort_unstable();
+        assert_eq!(v0, vec![0, 1, 3]);
+        let mult = p.vertex_multiplicity(&g);
+        // vertices 1 and 3 are frontier (in both parts)
+        assert_eq!(mult, vec![1, 2, 1, 2]);
+    }
+
+    #[test]
+    fn validate_catches_bad_owner() {
+        let g = square();
+        let p = EdgePartition { k: 2, owner: vec![0, 0, 5, 1], rounds: 0 };
+        assert!(p.validate(&g).is_err());
+        let p2 = EdgePartition { k: 2, owner: vec![0, 0], rounds: 0 };
+        assert!(p2.validate(&g).is_err());
+    }
+}

@@ -1,0 +1,178 @@
+//! `artifacts/manifest.json` — shapes/dtypes of every AOT artifact, as
+//! written by `python/compile/aot.py`. The runtime validates inputs
+//! against this before feeding PJRT (shape bugs surface as rust errors,
+//! not XLA aborts).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::{self, Json};
+
+/// Element type of a tensor (the subset our kernels use).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// Shape + dtype of one tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One artifact's interface.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// The whole manifest.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn tensor_spec(v: &Json) -> Result<TensorSpec> {
+    let shape = v
+        .get("shape")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing shape"))?
+        .iter()
+        .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = Dtype::parse(
+        v.get("dtype")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("missing dtype"))?,
+    )?;
+    Ok(TensorSpec { shape, dtype })
+}
+
+impl Manifest {
+    /// Load `dir/manifest.json`; artifact files resolve relative to `dir`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
+        let doc = json::parse(text).context("parse manifest.json")?;
+        let obj = doc.as_obj().ok_or_else(|| anyhow!("manifest not an object"))?;
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in obj {
+            let file = entry
+                .get("file")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("{name}: missing file"))?;
+            let parse_list = |key: &str| -> Result<Vec<TensorSpec>> {
+                entry
+                    .get(key)
+                    .and_then(Json::as_arr)
+                    .ok_or_else(|| anyhow!("{name}: missing {key}"))?
+                    .iter()
+                    .map(tensor_spec)
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    name: name.clone(),
+                    file: dir.join(file),
+                    inputs: parse_list("inputs")?,
+                    outputs: parse_list("outputs")?,
+                },
+            );
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const DOC: &str = r#"{
+      "minplus_block_256": {
+        "file": "minplus_block_256.hlo.txt",
+        "inputs": [
+          {"shape": [256, 256], "dtype": "f32"},
+          {"shape": [256], "dtype": "f32"}
+        ],
+        "outputs": [{"shape": [256], "dtype": "f32"}]
+      },
+      "funding_step_8_1024_4096": {
+        "file": "funding_step_8_1024_4096.hlo.txt",
+        "inputs": [
+          {"shape": [4096], "dtype": "i32"},
+          {"shape": [4096], "dtype": "i32"},
+          {"shape": [4096], "dtype": "i32"},
+          {"shape": [8, 1024], "dtype": "f32"}
+        ],
+        "outputs": [
+          {"shape": [4096], "dtype": "i32"},
+          {"shape": [8, 1024], "dtype": "f32"},
+          {"shape": [8], "dtype": "f32"}
+        ]
+      }
+    }"#;
+
+    #[test]
+    fn parses_specs() {
+        let m = Manifest::parse(DOC, Path::new("/tmp/a")).unwrap();
+        let a = m.get("minplus_block_256").unwrap();
+        assert_eq!(a.inputs[0].shape, vec![256, 256]);
+        assert_eq!(a.inputs[0].dtype, Dtype::F32);
+        assert_eq!(a.inputs[0].element_count(), 65536);
+        assert_eq!(a.file, Path::new("/tmp/a/minplus_block_256.hlo.txt"));
+        let f = m.get("funding_step_8_1024_4096").unwrap();
+        assert_eq!(f.inputs[2].dtype, Dtype::I32);
+        assert_eq!(f.outputs.len(), 3);
+    }
+
+    #[test]
+    fn missing_artifact_is_error() {
+        let m = Manifest::parse(DOC, Path::new("/tmp")).unwrap();
+        assert!(m.get("nope").is_err());
+    }
+
+    #[test]
+    fn malformed_manifest_is_error() {
+        assert!(Manifest::parse("[1,2]", Path::new("/tmp")).is_err());
+        assert!(Manifest::parse("{\"x\": {}}", Path::new("/tmp")).is_err());
+    }
+}

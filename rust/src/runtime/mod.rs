@@ -1,0 +1,302 @@
+//! PJRT runtime: load `artifacts/*.hlo.txt` (AOT-lowered JAX/Pallas
+//! programs) and execute them from rust. Python never runs here.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 emits HloModuleProtos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and python/compile/aot.py).
+
+pub mod blocktiled;
+pub mod manifest;
+pub mod xla_engine;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+pub use manifest::{ArtifactSpec, Dtype, Manifest, TensorSpec};
+
+/// A tensor crossing the rust <-> XLA boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32(v) => v.len(),
+            Tensor::I32(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> Dtype {
+        match self {
+            Tensor::F32(_) => Dtype::F32,
+            Tensor::I32(_) => Dtype::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    fn to_literal(&self, spec: &TensorSpec) -> Result<xla::Literal> {
+        let dims: Vec<i64> =
+            spec.shape.iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Tensor::F32(v) => xla::Literal::vec1(v),
+            Tensor::I32(v) => xla::Literal::vec1(v),
+        };
+        if spec.shape.len() == 1 {
+            Ok(lit)
+        } else {
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<Tensor> {
+        Ok(match spec.dtype {
+            Dtype::F32 => Tensor::F32(lit.to_vec::<f32>()?),
+            Dtype::I32 => Tensor::I32(lit.to_vec::<i32>()?),
+        })
+    }
+}
+
+/// One compiled artifact, ready to execute.
+pub struct Executable {
+    spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+    /// executions performed (perf accounting)
+    calls: Mutex<u64>,
+}
+
+impl Executable {
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    pub fn calls(&self) -> u64 {
+        *self.calls.lock().unwrap()
+    }
+
+    /// Execute with shape/dtype validation; returns one tensor per output.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.name,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (t, s) in inputs.iter().zip(self.spec.inputs.iter()) {
+            if t.len() != s.element_count() {
+                bail!(
+                    "{}: input size {} != spec {} ({:?})",
+                    self.spec.name,
+                    t.len(),
+                    s.element_count(),
+                    s.shape
+                );
+            }
+            if t.dtype() != s.dtype {
+                bail!("{}: input dtype mismatch", self.spec.name);
+            }
+            lits.push(t.to_literal(s)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0]
+            .to_literal_sync()?;
+        *self.calls.lock().unwrap() += 1;
+        // aot.py lowers with return_tuple=True: always a tuple, even 1-ary
+        let parts = result.to_tuple()?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.spec.name,
+                parts.len(),
+                self.spec.outputs.len()
+            );
+        }
+        parts
+            .iter()
+            .zip(self.spec.outputs.iter())
+            .map(|(l, s)| Tensor::from_literal(l, s))
+            .collect()
+    }
+}
+
+/// The runtime: a PJRT CPU client plus lazily compiled artifacts.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Open the artifacts directory (default `artifacts/`).
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client =
+            xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            dir: dir.to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Default artifacts location: `$DFEP_ARTIFACTS` or `./artifacts`.
+    pub fn open_default() -> Result<Runtime> {
+        let dir = std::env::var("DFEP_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Self::open(Path::new(&dir))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Directory the artifacts were loaded from.
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Compile (or fetch cached) an artifact by name.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file
+                .to_str()
+                .with_context(|| format!("non-utf8 path {:?}", spec.file))?,
+        )
+        .with_context(|| format!("parse HLO text {}", spec.file.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {name}"))?;
+        let exe = std::sync::Arc::new(Executable {
+            spec,
+            exe,
+            calls: Mutex::new(0),
+        });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+}
+
+/// Tropical "infinity" shared with the python side (kernels/minplus.py):
+/// a large finite f32 so padded entries stay inert under +.
+pub const INF32: f32 = 1.5e38;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        // integration tests need `make artifacts` to have run
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts");
+        Runtime::open(&dir).ok()
+    }
+
+    #[test]
+    fn minplus_block_roundtrip() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let exe = rt.load("minplus_block_256").unwrap();
+        // A = path graph adjacency (0-1-2), rest INF; x = [0, INF, ...]
+        let n = 256;
+        let mut a = vec![INF32; n * n];
+        a[0 * n + 1] = 1.0;
+        a[1 * n + 0] = 1.0;
+        a[1 * n + 2] = 1.0;
+        a[2 * n + 1] = 1.0;
+        for i in 0..n {
+            a[i * n + i] = 0.0;
+        }
+        let mut x = vec![INF32; n];
+        x[0] = 0.0;
+        let out = exe
+            .run(&[Tensor::F32(a), Tensor::F32(x)])
+            .unwrap();
+        let y = out[0].as_f32().unwrap();
+        assert_eq!(y[0], 0.0);
+        assert_eq!(y[1], 1.0);
+        assert!(y[2] >= INF32 / 2.0); // two hops needs two applications
+        assert_eq!(exe.calls(), 1);
+    }
+
+    #[test]
+    fn relax_while_reaches_fixpoint() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let exe = rt.load("relax_while_256").unwrap();
+        let n = 256;
+        // path graph over first 10 vertices
+        let mut a = vec![INF32; n * n];
+        for i in 0..9 {
+            a[i * n + i + 1] = 1.0;
+            a[(i + 1) * n + i] = 1.0;
+        }
+        let mut x = vec![INF32; n];
+        x[0] = 0.0;
+        let out = exe.run(&[Tensor::F32(a), Tensor::F32(x)]).unwrap();
+        let y = out[0].as_f32().unwrap();
+        for i in 0..10 {
+            assert_eq!(y[i], i as f32, "vertex {i}");
+        }
+        let steps = out[1].as_i32().unwrap()[0];
+        assert!((1..=11).contains(&steps), "steps {steps}");
+    }
+
+    #[test]
+    fn shape_validation_rejects_bad_inputs() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: artifacts/ not built");
+            return;
+        };
+        let exe = rt.load("minplus_block_256").unwrap();
+        let err = exe.run(&[
+            Tensor::F32(vec![0.0; 16]),
+            Tensor::F32(vec![0.0; 256]),
+        ]);
+        assert!(err.is_err());
+        let err2 = exe.run(&[Tensor::F32(vec![0.0; 256 * 256])]);
+        assert!(err2.is_err());
+    }
+}

@@ -1,0 +1,4 @@
+//! Test substrate: a small property-based testing harness (the vendored
+//! crate set has no `proptest`).
+
+pub mod prop;

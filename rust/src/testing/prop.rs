@@ -1,0 +1,132 @@
+//! Mini property-based testing harness.
+//!
+//! `forall(cases, f)` runs `f` against `cases` deterministic seeds; on
+//! failure it reports the seed so the case replays exactly. `Gen` wraps
+//! the crate PRNG with the generators our invariants need (random graphs,
+//! partitions, k values). No shrinking — cases are small enough to debug
+//! at face value, and the seed pins them.
+
+use crate::graph::{Graph, GraphBuilder};
+use crate::util::rng::Rng;
+
+/// Generator context for one property case.
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    /// Uniform usize in [lo, hi] (inclusive).
+    pub fn int(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.range(lo, hi + 1)
+    }
+
+    /// Uniform f64 in [lo, hi).
+    pub fn float(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + self.rng.f64() * (hi - lo)
+    }
+
+    /// A connected random graph with `n in [n_lo, n_hi]` vertices and
+    /// average degree in [2, 6].
+    pub fn graph(&mut self, n_lo: usize, n_hi: usize) -> Graph {
+        let n = self.int(n_lo.max(4), n_hi);
+        let avg = self.float(2.0, 6.0);
+        let m = ((n as f64 * avg / 2.0) as usize).max(n - 1);
+        let seed = self.rng.next_u64();
+        crate::graph::generators::GraphKind::ErdosRenyi { n, m }
+            .generate(seed)
+    }
+
+    /// An arbitrary (possibly disconnected, clustered) graph.
+    pub fn any_graph(&mut self, n_lo: usize, n_hi: usize) -> Graph {
+        use crate::graph::generators::GraphKind;
+        let n = self.int(n_lo.max(6), n_hi);
+        let seed = self.rng.next_u64();
+        match self.int(0, 3) {
+            0 => GraphKind::ErdosRenyi { n, m: n * 2 }.generate(seed),
+            1 => {
+                GraphKind::PowerlawCluster { n, m: 3, p: 0.4 }.generate(seed)
+            }
+            2 => GraphKind::WattsStrogatz {
+                n,
+                k: 4,
+                beta: 0.1,
+            }
+            .generate(seed),
+            _ => {
+                // union of two ER components (disconnected)
+                let half = n / 2;
+                let a = GraphKind::ErdosRenyi { n: half, m: half * 2 }
+                    .generate(seed);
+                let b = GraphKind::ErdosRenyi {
+                    n: n - half,
+                    m: (n - half) * 2,
+                }
+                .generate(seed ^ 1);
+                let mut builder = GraphBuilder::new();
+                for (_, u, v) in a.edge_iter() {
+                    builder.push_edge(u, v);
+                }
+                let off = a.vertex_count() as u32;
+                for (_, u, v) in b.edge_iter() {
+                    builder.push_edge(u + off, v + off);
+                }
+                builder.build()
+            }
+        }
+    }
+}
+
+/// Run a property over `cases` deterministic cases. Panics with the seed
+/// on the first failure.
+pub fn forall(cases: usize, mut prop: impl FnMut(&mut Gen)) {
+    for case in 0..cases {
+        let seed = 0xD1CE_0000u64 + case as u64;
+        let mut gen = Gen { rng: Rng::new(seed), seed };
+        let result = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| prop(&mut gen)),
+        );
+        if let Err(err) = result {
+            let msg = err
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| err.downcast_ref::<&str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!("property failed on case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut count = 0;
+        forall(25, |_| count += 1);
+        assert_eq!(count, 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed on case 3")]
+    fn forall_reports_seed() {
+        let mut i = 0;
+        forall(10, |_| {
+            assert!(i < 3, "boom");
+            i += 1;
+        });
+    }
+
+    #[test]
+    fn generated_graphs_are_valid() {
+        forall(10, |g| {
+            let graph = g.any_graph(10, 60);
+            assert!(graph.edge_count() > 0);
+            for (_, u, v) in graph.edge_iter() {
+                assert!(u < v);
+                assert!((v as usize) < graph.vertex_count());
+            }
+        });
+    }
+}

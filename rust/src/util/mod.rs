@@ -1,0 +1,8 @@
+//! Small self-contained substrates (the vendored crate set has no `rand`,
+//! `serde_json` or `criterion`, so we ship our own deterministic PRNG,
+//! JSON parser and stats helpers).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod timer;

@@ -1,0 +1,45 @@
+//! Wall-clock timing helpers for the bench harness.
+
+use std::time::Instant;
+
+/// Time a closure, returning (result, seconds).
+pub fn time<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Run `f` repeatedly: `warmup` unmeasured runs then `iters` measured ones;
+/// returns per-iteration seconds.
+pub fn time_n(warmup: usize, iters: usize, mut f: impl FnMut()) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    (0..iters)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64()
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_returns_result() {
+        let (v, secs) = time(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(secs >= 0.0);
+    }
+
+    #[test]
+    fn time_n_counts() {
+        let mut calls = 0;
+        let t = time_n(2, 5, || calls += 1);
+        assert_eq!(t.len(), 5);
+        assert_eq!(calls, 7);
+    }
+}

@@ -1,0 +1,178 @@
+//! Integration tests: the full pipeline across modules, including the
+//! PJRT runtime path (skipped gracefully when `make artifacts` has not
+//! run — CI always builds artifacts first via the Makefile).
+
+use std::path::Path;
+
+use dfep::cluster::cost::CostModel;
+use dfep::cluster::dfep_mr::run_cluster_dfep;
+use dfep::cluster::etsch_mr::{run_baseline_sssp, run_etsch_sssp};
+use dfep::coordinator::runs::{resolve_graph, run, PartitionerKind, RunConfig};
+use dfep::etsch::build_subgraphs;
+use dfep::graph::{datasets, io, stats};
+use dfep::partition::{dfep::Dfep, metrics, Partitioner};
+use dfep::runtime::blocktiled::{relax_to_fixpoint, TiledSubgraph};
+use dfep::runtime::{Runtime, INF32};
+
+fn runtime() -> Option<Runtime> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    Runtime::open(&dir).ok()
+}
+
+#[test]
+fn pipeline_dataset_to_metrics() {
+    let g = resolve_graph("astroph@0.03", 1).unwrap();
+    for kind in [
+        PartitionerKind::Dfep,
+        PartitionerKind::Dfepc,
+        PartitionerKind::Random,
+    ] {
+        let res = run(
+            &g,
+            &RunConfig { partitioner: kind, k: 10, seed: 2, gain_samples: 2 },
+        );
+        res.partition.validate(&g).unwrap();
+        assert!(res.report.largest >= 1.0);
+        assert!(res.gain.unwrap() >= 0.0);
+    }
+}
+
+#[test]
+fn dfep_beats_random_on_communication() {
+    let g = resolve_graph("wordnet@0.03", 3).unwrap();
+    let d = run(
+        &g,
+        &RunConfig {
+            partitioner: PartitionerKind::Dfep,
+            k: 12,
+            seed: 1,
+            gain_samples: 0,
+        },
+    );
+    let r = run(
+        &g,
+        &RunConfig {
+            partitioner: PartitionerKind::Random,
+            k: 12,
+            seed: 1,
+            gain_samples: 0,
+        },
+    );
+    assert!(
+        (d.report.messages as f64) < 0.8 * r.report.messages as f64,
+        "DFEP messages {} should be well below random {}",
+        d.report.messages,
+        r.report.messages
+    );
+}
+
+#[test]
+fn partition_file_roundtrip() {
+    let g = resolve_graph("er:n=200,m=500", 1).unwrap();
+    let p = Dfep::default().partition(&g, 4, 1);
+    let dir = std::env::temp_dir().join("dfep_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("partition.tsv");
+    io::write_partition(&p.owner, &path).unwrap();
+    let text = std::fs::read_to_string(&path).unwrap();
+    assert_eq!(text.lines().count(), g.edge_count());
+}
+
+#[test]
+fn cluster_jobs_agree_with_in_memory_engines() {
+    let g = datasets::amazon().scaled(0.01, 5);
+    let cost = CostModel::default();
+    let run8 = run_cluster_dfep(&g, 8, 4, 9, &cost, 2000);
+    run8.partition.validate(&g).unwrap();
+    let nst = metrics::nstdev(&g, &run8.partition);
+    assert!(nst < 0.8, "cluster DFEP nstdev {nst}");
+
+    // path compression needs diameter to compress: use the road analogue
+    let road = datasets::usroads().scaled(0.02, 5);
+    let p = Dfep::default().partition(&road, 4, 9);
+    let e = run_etsch_sssp(&road, &p, 0, 4, &cost);
+    let b = run_baseline_sssp(&road, 0, 4, &cost);
+    assert_eq!(e.distances, b.distances);
+    assert!(
+        e.rounds < b.rounds,
+        "etsch {} !< baseline {}",
+        e.rounds,
+        b.rounds
+    );
+}
+
+#[test]
+fn xla_local_phase_agrees_with_subgraph_bfs() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    let g = resolve_graph("email-enron@0.02", 4).unwrap();
+    let p = Dfep::default().partition(&g, 3, 2);
+    let subs = build_subgraphs(&g, &p);
+    for sub in subs.iter().filter(|s| s.vertex_count() > 0) {
+        let t = TiledSubgraph::pack(sub, 1.0);
+        let mut init = vec![INF32; sub.vertex_count()];
+        init[0] = 0.0;
+        let (labels, _) = relax_to_fixpoint(&rt, &t, &init, 4096).unwrap();
+        // BFS within the subgraph
+        let mut dist = vec![u32::MAX; sub.vertex_count()];
+        dist[0] = 0;
+        let mut q = std::collections::VecDeque::from([0u32]);
+        while let Some(u) = q.pop_front() {
+            for &(w, _) in sub.neighbors(u) {
+                if dist[w as usize] == u32::MAX {
+                    dist[w as usize] = dist[u as usize] + 1;
+                    q.push_back(w);
+                }
+            }
+        }
+        for l in 0..sub.vertex_count() {
+            if dist[l] == u32::MAX {
+                assert!(labels[l] >= INF32 / 2.0);
+            } else {
+                assert_eq!(labels[l], dist[l] as f32, "part {}", sub.part);
+            }
+        }
+    }
+}
+
+#[test]
+fn xla_dfep_engine_matches_rust_engine_exactly() {
+    let Some(rt) = runtime() else {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    };
+    // same seeds, same semantics -> identical metrics (float order can in
+    // principle differ, so compare the structural results)
+    let g = resolve_graph("er:n=400,m=1200", 6).unwrap();
+    let px = dfep::runtime::xla_engine::XlaDfep::default()
+        .partition(&rt, &g, 6, 11)
+        .unwrap();
+    let pr = Dfep::default().partition(&g, 6, 11);
+    px.validate(&g).unwrap();
+    assert_eq!(px.rounds, pr.rounds, "round counts diverged");
+    assert_eq!(
+        metrics::messages(&g, &px),
+        metrics::messages(&g, &pr),
+        "frontier structure diverged"
+    );
+    assert_eq!(px.owner, pr.owner, "ownership diverged");
+}
+
+#[test]
+fn dataset_stats_match_paper_character_at_small_scale() {
+    // small-world datasets keep small diameter + real clustering even at
+    // 3% scale; the road network keeps its huge diameter
+    for (name, max_d, min_cc) in
+        [("astroph", 14, 0.05), ("wordnet", 16, 0.03)]
+    {
+        let g = datasets::by_name(name).unwrap().scaled(0.03, 7);
+        let s = stats::graph_stats(&g, 1);
+        assert!(s.diameter <= max_d, "{name}: D {}", s.diameter);
+        assert!(s.clustering >= min_cc, "{name}: CC {}", s.clustering);
+    }
+    let road = datasets::usroads().scaled(0.03, 7);
+    let s = stats::graph_stats(&road, 1);
+    assert!(s.diameter > 60, "usroads: D {}", s.diameter);
+}

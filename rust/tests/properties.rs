@@ -1,0 +1,252 @@
+//! Property-based invariants over the public API (see DESIGN.md
+//! "Invariants"), driven by the crate's own mini prop-test harness —
+//! every failure message carries the deterministic case seed.
+
+use dfep::etsch::{
+    cc::ConnectedComponents, mis, mis::LubyMis, sssp, sssp::Sssp, Etsch,
+};
+use dfep::graph::stats;
+use dfep::partition::{
+    baselines::{GreedyBfs, HashEdge, RandomEdge},
+    dfep::Dfep,
+    dfepc::Dfepc,
+    fennel::StreamingGreedy,
+    jabeja::JaBeJa,
+    metrics,
+    multilevel::Multilevel,
+    Partitioner,
+};
+use dfep::testing::prop::{forall, Gen};
+
+fn partitioners() -> Vec<Box<dyn Partitioner>> {
+    vec![
+        Box::new(Dfep::default()),
+        Box::new(Dfepc::default()),
+        Box::new(JaBeJa { rounds: 15, ..Default::default() }),
+        Box::new(RandomEdge),
+        Box::new(HashEdge),
+        Box::new(GreedyBfs),
+        Box::new(StreamingGreedy::default()),
+        Box::new(Multilevel::default()),
+    ]
+}
+
+#[test]
+fn every_partitioner_yields_a_disjoint_cover() {
+    forall(12, |g: &mut Gen| {
+        let graph = g.any_graph(12, 120);
+        let k = g.int(1, 9);
+        let seed = g.rng.next_u64();
+        for p in partitioners() {
+            let part = p.partition(&graph, k, seed);
+            // complete cover with valid owners is exactly validate()
+            part.validate(&graph).unwrap_or_else(|e| {
+                panic!("{}: {e}", p.name());
+            });
+            // sizes sum to |E|
+            assert_eq!(
+                part.sizes().iter().sum::<usize>(),
+                graph.edge_count(),
+                "{} loses edges",
+                p.name()
+            );
+        }
+    });
+}
+
+#[test]
+fn vertex_sets_are_exactly_edge_endpoints() {
+    forall(10, |g: &mut Gen| {
+        let graph = g.any_graph(12, 100);
+        let k = g.int(2, 6);
+        let part = Dfep::default().partition(&graph, k, g.rng.next_u64());
+        let vsets = part.vertex_sets(&graph);
+        let esets = part.edge_sets();
+        for (vs, es) in vsets.iter().zip(esets.iter()) {
+            let mut expect: Vec<u32> = es
+                .iter()
+                .flat_map(|&e| {
+                    let (u, v) = graph.endpoints(e);
+                    [u, v]
+                })
+                .collect();
+            expect.sort_unstable();
+            expect.dedup();
+            let mut got = vs.clone();
+            got.sort_unstable();
+            assert_eq!(got, expect);
+        }
+    });
+}
+
+#[test]
+fn dfep_partitions_connected_on_connected_graphs() {
+    forall(10, |g: &mut Gen| {
+        let graph = g.graph(20, 150); // connected by construction
+        let k = g.int(2, 8);
+        let part = Dfep::default().partition(&graph, k, g.rng.next_u64());
+        let disc = metrics::disconnected_fraction(&graph, &part);
+        assert_eq!(
+            disc, 0.0,
+            "DFEP produced disconnected partitions (k={k})"
+        );
+    });
+}
+
+#[test]
+fn messages_metric_counts_replicas() {
+    forall(10, |g: &mut Gen| {
+        let graph = g.any_graph(12, 80);
+        let k = g.int(2, 5);
+        let part = RandomEdge.partition(&graph, k, g.rng.next_u64());
+        // independent recomputation from vertex_sets
+        let vsets = part.vertex_sets(&graph);
+        let mut count = vec![0usize; graph.vertex_count()];
+        for vs in &vsets {
+            for &v in vs {
+                count[v as usize] += 1;
+            }
+        }
+        let expect: usize =
+            count.iter().filter(|&&c| c >= 2).sum();
+        assert_eq!(metrics::messages(&graph, &part), expect);
+    });
+}
+
+#[test]
+fn etsch_sssp_equals_bfs_under_any_partitioning() {
+    forall(10, |g: &mut Gen| {
+        let graph = g.any_graph(12, 100);
+        let k = g.int(1, 6);
+        let seed = g.rng.next_u64();
+        let source = g.int(0, graph.vertex_count() - 1) as u32;
+        for p in partitioners() {
+            let part = p.partition(&graph, k, seed);
+            let mut engine = Etsch::new(&graph, &part);
+            let got = engine.run(&mut Sssp::new(source));
+            let want = stats::bfs_distances(&graph, source);
+            for v in 0..graph.vertex_count() {
+                let w = if want[v] == u32::MAX {
+                    sssp::UNREACHED
+                } else {
+                    want[v]
+                };
+                assert_eq!(
+                    got[v], w,
+                    "{}: vertex {v} (source {source})",
+                    p.name()
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn etsch_cc_equals_union_find_components() {
+    forall(10, |g: &mut Gen| {
+        let graph = g.any_graph(12, 100);
+        let k = g.int(1, 6);
+        let part =
+            RandomEdge.partition(&graph, k, g.rng.next_u64());
+        let mut engine = Etsch::new(&graph, &part);
+        let labels =
+            engine.run(&mut ConnectedComponents::new(g.rng.next_u64()));
+        let (want, _) = stats::components(&graph);
+        for u in 0..graph.vertex_count() {
+            for v in (u + 1)..graph.vertex_count() {
+                if graph.degree(u as u32) == 0 || graph.degree(v as u32) == 0
+                {
+                    continue;
+                }
+                assert_eq!(
+                    labels[u] == labels[v],
+                    want[u] == want[v],
+                    "vertices {u},{v}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn luby_mis_always_valid() {
+    forall(8, |g: &mut Gen| {
+        let graph = g.graph(15, 90);
+        let k = g.int(1, 5);
+        let part = Dfep::default().partition(&graph, k, g.rng.next_u64());
+        let mut engine = Etsch::new(&graph, &part);
+        let states = engine.run(&mut LubyMis::new(g.rng.next_u64()));
+        let in_set: Vec<bool> = states
+            .iter()
+            .map(|s| s.status == mis::Status::InSet)
+            .collect();
+        mis::validate_mis(&graph, &in_set).unwrap();
+    });
+}
+
+#[test]
+fn rounds_and_gain_are_sane() {
+    forall(8, |g: &mut Gen| {
+        let graph = g.graph(20, 120);
+        let k = g.int(2, 6);
+        let part = Dfep::default().partition(&graph, k, g.rng.next_u64());
+        assert!(part.rounds > 0);
+        let gain = dfep::etsch::gain::average_gain(
+            &graph,
+            &part,
+            2,
+            g.rng.next_u64(),
+        );
+        assert!((0.0..=1.0).contains(&gain), "gain {gain}");
+    });
+}
+
+#[test]
+fn rewiring_preserves_vertexish_size_and_lowers_diameter_in_trend() {
+    forall(6, |g: &mut Gen| {
+        use dfep::graph::generators::GraphKind;
+        use dfep::graph::rewire;
+        let side = g.int(8, 13);
+        let graph = GraphKind::RoadNetwork {
+            rows: side,
+            cols: side,
+            drop: 0.15,
+            subdiv: 3,
+            shortcuts: 0,
+        }
+        .generate(g.rng.next_u64());
+        let rewired =
+            rewire::rewire_fraction(&graph, 0.3, g.rng.next_u64());
+        assert!(
+            rewired.edge_count() as f64
+                >= 0.85 * graph.edge_count() as f64
+        );
+        let d0 = stats::diameter_estimate(&graph, 3, 1);
+        let d1 = stats::diameter_estimate(&rewired, 3, 1);
+        assert!(d1 <= d0, "rewiring increased diameter {d0} -> {d1}");
+    });
+}
+
+#[test]
+fn cluster_cost_monotone_in_nodes() {
+    use dfep::cluster::cost::{CostModel, RoundWork};
+    forall(10, |g: &mut Gen| {
+        let m = CostModel::default();
+        let w = RoundWork {
+            map_records: g.float(1e3, 1e7),
+            shuffle_bytes: g.float(1e3, 1e8),
+            reduce_records: g.float(1e3, 1e7),
+            cpu_edge_ops: 0.0,
+        };
+        let mut prev = f64::INFINITY;
+        for nodes in [1usize, 2, 4, 8, 16, 32] {
+            let t = m.round_time(nodes, w);
+            assert!(t > 0.0);
+            assert!(
+                t <= prev * 1.001,
+                "cost not monotone at {nodes} nodes"
+            );
+            prev = t;
+        }
+    });
+}
