@@ -1,5 +1,12 @@
-//! Regenerates the paper's hotpath series — see bench::figures::hotpath.
-//! Knobs: DFEP_SAMPLES (default 5; paper 100), DFEP_SCALE (default 0.05).
+//! Regenerates the hotpath series — see bench::figures::hotpath_with.
+//! Knobs: DFEP_SAMPLES (default 5; paper 100), DFEP_SCALE (default 0.05),
+//! DFEP_BENCH_OUT (default BENCH_hotpath.json).
+//!
+//! `--quick` (or DFEP_QUICK=1) is the CI smoke mode: small graph, one
+//! repetition, still emitting the JSON artifact. Other flags (cargo
+//! bench passes `--bench`) are ignored.
 fn main() {
-    dfep::bench::figures::hotpath();
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("DFEP_QUICK").map(|v| v == "1").unwrap_or(false);
+    dfep::bench::figures::hotpath_with(quick);
 }

@@ -308,21 +308,107 @@ pub fn tables() {
 
 /// Ablations + hot-path micro benches (feeds EXPERIMENTS.md §Perf).
 pub fn hotpath() {
-    let n = samples().max(3);
-    println!("hot paths (samples={n})");
-    let g = datasets::astroph().scaled(0.25, 42);
+    hotpath_with(false);
+}
+
+/// Hot-path bench. `quick` is the CI smoke mode: a small graph and a
+/// single repetition, just enough for the JSON artifact to accumulate a
+/// perf trajectory on every push.
+pub fn hotpath_with(quick: bool) {
+    let n = if quick { 1 } else { samples().max(3) };
+    let mut sink = crate::bench::harness::JsonSink::new();
+    sink.text("bench", "hotpath");
+    sink.num("quick", if quick { 1.0 } else { 0.0 });
+
+    // ---- pool thread-scaling on the DFEP round loop ----
+    // acceptance target: >= 2x speedup with 8 pool threads vs 1 on a
+    // >= 100k-edge power-law graph, with bit-identical partitions and
+    // round counts across thread counts
+    {
+        use crate::graph::generators::GraphKind;
+        use crate::util::pool;
+        let scale_kind = if quick {
+            GraphKind::PowerlawCluster { n: 2_000, m: 6, p: 0.3 }
+        } else {
+            GraphKind::PowerlawCluster { n: 20_000, m: 6, p: 0.3 }
+        };
+        let gs = scale_kind.generate(42);
+        println!(
+            "pool scaling graph: |V|={} |E|={}",
+            gs.vertex_count(),
+            gs.edge_count()
+        );
+        sink.num("scaling_vertices", gs.vertex_count() as f64);
+        sink.num("scaling_edges", gs.edge_count() as f64);
+        let mut t = Table::new(&["threads", "mean_s", "Medges/s", "speedup"]);
+        let mut base_owner: Vec<u32> = Vec::new();
+        let mut base_rounds = 0usize;
+        let mut base_mean = 0.0f64;
+        let mut identical = true;
+        for threads in [1usize, 2, 4, 8] {
+            let (part, times) = pool::with_threads(threads, || {
+                let part = Dfep::default().partition(&gs, 8, 1);
+                let times = crate::util::timer::time_n(
+                    if quick { 0 } else { 1 },
+                    n,
+                    || {
+                        let _ = Dfep::default().partition(&gs, 8, 1);
+                    },
+                );
+                (part, times)
+            });
+            let s = Summary::of(&times);
+            if threads == 1 {
+                base_owner = part.owner.clone();
+                base_rounds = part.rounds;
+                base_mean = s.mean;
+            } else if part.owner != base_owner || part.rounds != base_rounds
+            {
+                identical = false;
+            }
+            t.row(&[
+                threads.to_string(),
+                fmt_f(s.mean),
+                fmt_f(gs.edge_count() as f64 / s.mean / 1e6),
+                fmt_f(base_mean / s.mean),
+            ]);
+            sink.num(&format!("dfep_k8_{threads}t_mean_s"), s.mean);
+            if threads == 8 {
+                sink.num("dfep_k8_speedup_8t", base_mean / s.mean);
+            }
+        }
+        println!(
+            "partitions bit-identical across 1/2/4/8 threads: {identical}"
+        );
+        sink.num("identical_across_threads", if identical { 1.0 } else { 0.0 });
+        assert!(
+            identical,
+            "thread count changed the partition trajectory"
+        );
+    }
+
+    println!("\nhot paths (samples={n})");
+    let g = if quick {
+        datasets::astroph().scaled(0.05, 42)
+    } else {
+        datasets::astroph().scaled(0.25, 42)
+    };
     println!("graph: |V|={} |E|={}", g.vertex_count(), g.edge_count());
+    sink.num("hotpath_vertices", g.vertex_count() as f64);
+    sink.num("hotpath_edges", g.edge_count() as f64);
 
     // DFEP partition throughput
+    let warmup = if quick { 0 } else { 1 };
     let mut t = Table::new(&["path", "mean_s", "p95_s", "Medges/s"]);
-    for (name, p) in [
-        ("DFEP k=8", Dfep::default()),
+    for (name, key, p) in [
+        ("DFEP k=8", "dfep_default_mean_s", Dfep::default()),
         (
             "DFEP k=8 literal-Alg4 (ablation)",
+            "dfep_literal_alg4_mean_s",
             Dfep { frontier_first: false, max_rounds: 300, ..Default::default() },
         ),
     ] {
-        let times = crate::util::timer::time_n(1, n, || {
+        let times = crate::util::timer::time_n(warmup, n, || {
             let _ = p.partition(&g, 8, 1);
         });
         let s = Summary::of(&times);
@@ -332,11 +418,12 @@ pub fn hotpath() {
             fmt_f(s.p95),
             fmt_f(g.edge_count() as f64 / s.mean / 1e6),
         ]);
+        sink.num(key, s.mean);
     }
 
     // ETSCH round loop
     let p = Dfep::default().partition(&g, 8, 1);
-    let times = crate::util::timer::time_n(1, n, || {
+    let times = crate::util::timer::time_n(warmup, n, || {
         let mut engine = crate::etsch::Etsch::new(&g, &p);
         let _ = engine.run(&mut crate::etsch::sssp::Sssp::new(0));
     });
@@ -347,6 +434,7 @@ pub fn hotpath() {
         fmt_f(s.p95),
         fmt_f(g.edge_count() as f64 / s.mean / 1e6),
     ]);
+    sink.num("etsch_sssp_mean_s", s.mean);
 
     // XLA runtime paths (L1 kernel tile + L2 fused fixpoint + funding)
     if let Ok(rt) = crate::runtime::Runtime::open_default() {
@@ -410,5 +498,15 @@ pub fn hotpath() {
         p.rounds,
         fmt_f(metrics::nstdev(&g, &p)),
     );
+    sink.num("dfep_gain_k8", dfep_gain);
     let _ = mean(&[]);
+
+    // persist the JSON artifact so CI can upload the perf trajectory
+    let out = std::env::var("DFEP_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    let out_path = std::path::Path::new(&out);
+    match sink.write(out_path) {
+        Ok(()) => println!("\nwrote {}", out_path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", out_path.display()),
+    }
 }

@@ -81,6 +81,52 @@ pub fn print_row(label: &str, value: &str) {
     println!("{label:<28} {value}");
 }
 
+/// Minimal flat-JSON artifact writer for bench outputs (CI uploads these
+/// so the perf trajectory accumulates run over run). Keys keep insertion
+/// order; values are numbers or strings.
+#[derive(Default)]
+pub struct JsonSink {
+    entries: Vec<(String, String)>,
+}
+
+impl JsonSink {
+    pub fn new() -> JsonSink {
+        JsonSink::default()
+    }
+
+    /// Record a numeric field (non-finite values become null).
+    pub fn num(&mut self, key: &str, value: f64) {
+        let v = if value.is_finite() {
+            format!("{value}")
+        } else {
+            "null".to_string()
+        };
+        self.entries.push((key.to_string(), v));
+    }
+
+    /// Record a string field (callers pass identifier-like values; quotes
+    /// and backslashes are escaped).
+    pub fn text(&mut self, key: &str, value: &str) {
+        let escaped = value.replace('\\', "\\\\").replace('"', "\\\"");
+        self.entries.push((key.to_string(), format!("\"{escaped}\"")));
+    }
+
+    /// Serialize as a single JSON object.
+    pub fn render(&self) -> String {
+        let body: Vec<String> = self
+            .entries
+            .iter()
+            .map(|(k, v)| format!("  \"{k}\": {v}"))
+            .collect();
+        format!("{{\n{}\n}}\n", body.join(",\n"))
+    }
+
+    /// Write to `path`.
+    pub fn write(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.render())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,5 +146,20 @@ mod tests {
         assert_eq!(fmt_f(0.1234567), "0.1235");
         assert_eq!(fmt_f(12.3), "12.300");
         assert_eq!(fmt_f(4321.9), "4322");
+    }
+
+    #[test]
+    fn json_sink_renders_parseable_object() {
+        let mut s = JsonSink::new();
+        s.text("bench", "hotpath");
+        s.num("edges", 123456.0);
+        s.num("speedup", 2.5);
+        s.num("bad", f64::NAN);
+        let doc = s.render();
+        let parsed = crate::util::json::parse(&doc).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str().unwrap(), "hotpath");
+        assert_eq!(parsed.get("edges").unwrap().as_usize().unwrap(), 123456);
+        assert!((parsed.get("speedup").unwrap().as_f64().unwrap() - 2.5).abs() < 1e-12);
+        assert_eq!(*parsed.get("bad").unwrap(), crate::util::json::Json::Null);
     }
 }

@@ -6,5 +6,6 @@ pub mod figures;
 pub mod harness;
 
 pub use harness::{
-    fmt_f, fmt_summary, print_header, print_row, sample_seeds, Table,
+    fmt_f, fmt_summary, print_header, print_row, sample_seeds, JsonSink,
+    Table,
 };

@@ -1,22 +1,26 @@
 //! A small executable MapReduce engine (vertex-keyed, iterative) running
-//! on std threads — the structural substrate under the Hadoop-shaped DFEP
-//! and ETSCH jobs.
+//! on the shared [`crate::util::pool`] — the structural substrate under
+//! the Hadoop-shaped DFEP and ETSCH jobs.
 //!
-//! This is a *real* parallel engine: mappers run partition-parallel over
-//! input shards, emit keyed messages, a shuffle groups them by key, and
-//! reducers run key-parallel. Wall-clock on this box is meaningless for a
-//! 16-node cluster, so jobs ALSO report their [`RoundWork`] volumes and
-//! the [`CostModel`] turns those into simulated cluster time (Figs 8-9).
+//! This is a *real* parallel engine: mappers run shard-parallel over
+//! fixed-size vertex ranges, emit keyed messages, a shuffle groups them
+//! by key, and reducers run key-parallel. Shard boundaries are constants
+//! (not a function of the worker count), and the shuffle walks shards in
+//! index order into a `BTreeMap`, so the message order every reducer sees
+//! is identical for any thread count. Wall-clock on this box is
+//! meaningless for a 16-node cluster, so jobs ALSO report their
+//! [`RoundWork`] volumes and the [`CostModel`] turns those into simulated
+//! cluster time (Figs 8-9).
 
-use std::collections::HashMap;
-use std::sync::Mutex;
+use std::collections::BTreeMap;
 
 use super::cost::RoundWork;
+use crate::util::pool;
 
 /// One round of a vertex-keyed MapReduce job.
 ///
 /// `V` = per-vertex record, `M` = message. The engine calls `map` on every
-/// vertex record (sharded across `workers` threads), shuffles messages by
+/// vertex record (sharded over the shared pool), shuffles messages by
 /// destination vertex, then calls `reduce` per vertex with its messages.
 pub trait VertexJob: Sync {
     type Msg: Send;
@@ -37,66 +41,65 @@ pub struct RoundOutcome {
     pub work: RoundWork,
 }
 
+/// Vertices per map shard (constant, so sharding — and therefore the
+/// shuffle's message order — is independent of the pool's thread count).
+const MAP_SHARD: usize = 4096;
+/// Keys per reduce shard.
+const REDUCE_SHARD: usize = 2048;
+
 /// Run one synchronized MapReduce round over vertices `0..n`.
 ///
-/// `msg_bytes` sizes the shuffle volume for the cost model.
+/// `msg_bytes` sizes the shuffle volume for the cost model. The `workers`
+/// argument is the *simulated* cluster width used by callers for their
+/// cost accounting; actual parallelism comes from the shared pool.
 pub fn run_round<J: VertexJob>(
     job: &J,
     n: usize,
-    workers: usize,
+    _workers: usize,
     msg_bytes: f64,
 ) -> RoundOutcome
 where
     J::Msg: Send + Sync + 'static,
 {
-    let workers = workers.max(1);
-    // ---- map phase (sharded) ----
-    let shards: Vec<Mutex<Vec<(u32, J::Msg)>>> =
-        (0..workers).map(|_| Mutex::new(Vec::new())).collect();
-    let chunk = n.div_ceil(workers);
-    std::thread::scope(|scope| {
-        for (w, shard) in shards.iter().enumerate() {
-            let lo = w * chunk;
-            let hi = ((w + 1) * chunk).min(n);
-            scope.spawn(move || {
-                let mut local = Vec::new();
-                for v in lo..hi {
-                    job.map(v as u32, &mut |dst, msg| {
-                        local.push((dst, msg));
-                    });
-                }
-                shard.lock().unwrap().extend(local);
+    // ---- map phase (pool-sharded over fixed vertex ranges) ----
+    let n_shards = n.div_ceil(MAP_SHARD);
+    let mut shard_out: Vec<Vec<(u32, J::Msg)>> = Vec::new();
+    shard_out.resize_with(n_shards, Vec::new);
+    pool::run_mut(&mut shard_out, &|s, local: &mut Vec<(u32, J::Msg)>| {
+        let lo = s * MAP_SHARD;
+        let hi = ((s + 1) * MAP_SHARD).min(n);
+        for v in lo..hi {
+            job.map(v as u32, &mut |dst, msg| {
+                local.push((dst, msg));
             });
         }
     });
-    // ---- shuffle ----
-    let mut grouped: HashMap<u32, Vec<J::Msg>> = HashMap::new();
+    // ---- shuffle (serial, shard order => deterministic) ----
+    let mut grouped: BTreeMap<u32, Vec<J::Msg>> = BTreeMap::new();
     let mut messages = 0usize;
-    for shard in shards {
-        for (dst, msg) in shard.into_inner().unwrap() {
+    for shard in shard_out {
+        for (dst, msg) in shard {
             messages += 1;
             grouped.entry(dst).or_default().push(msg);
         }
     }
-    // ---- reduce phase (key-parallel) ----
+    // ---- reduce phase (pool-sharded over fixed key ranges) ----
     let entries: Vec<(u32, Vec<J::Msg>)> = grouped.into_iter().collect();
-    let changed_total = Mutex::new(0usize);
-    let rchunk = entries.len().div_ceil(workers);
-    std::thread::scope(|scope| {
-        for slice in entries.chunks(rchunk.max(1)) {
-            let changed_total = &changed_total;
-            scope.spawn(move || {
-                let mut changed = 0usize;
-                for (v, msgs) in slice {
-                    if job.reduce(*v, msgs) {
-                        changed += 1;
-                    }
+    let n_rshards = entries.len().div_ceil(REDUCE_SHARD);
+    let mut changed_per: Vec<usize> = vec![0; n_rshards];
+    {
+        let entries = &entries;
+        pool::run_mut(&mut changed_per, &|s, changed: &mut usize| {
+            let lo = s * REDUCE_SHARD;
+            let hi = ((s + 1) * REDUCE_SHARD).min(entries.len());
+            for (v, msgs) in &entries[lo..hi] {
+                if job.reduce(*v, msgs) {
+                    *changed += 1;
                 }
-                *changed_total.lock().unwrap() += changed;
-            });
-        }
-    });
-    let changed = changed_total.into_inner().unwrap();
+            }
+        });
+    }
+    let changed: usize = changed_per.iter().sum();
     RoundOutcome {
         messages,
         changed,

@@ -6,7 +6,8 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{anyhow, bail, Result};
+use crate::util::error::Result;
+use crate::{anyhow, bail};
 
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]

@@ -2,7 +2,8 @@
 //! optional ETSCH workload — the single entry point the CLI, examples and
 //! benches all share.
 
-use anyhow::{anyhow, Result};
+use crate::anyhow;
+use crate::util::error::Result;
 
 use crate::etsch::{gain, sssp::Sssp, Etsch};
 use crate::graph::{datasets, generators::GraphKind, Graph};

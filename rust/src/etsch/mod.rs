@@ -125,22 +125,21 @@ impl<'g> Etsch<'g> {
             }
             alg.begin_round(self.stats.rounds);
             // ---- local computation phase (parallel over partitions) ----
+            // one pool shard per partition worker; the pool's reusable
+            // threads replace the former per-round std::thread::spawn
             {
-                let subs = &self.subs;
                 let alg_ref: &A = alg;
-                std::thread::scope(|scope| {
-                    let mut handles = Vec::new();
-                    for (s, states) in
-                        subs.iter().zip(local_states.iter_mut())
-                    {
-                        handles.push(scope.spawn(move || {
-                            alg_ref.local(s, states);
-                        }));
-                    }
-                    for h in handles {
-                        h.join().expect("worker panicked");
-                    }
-                });
+                let mut tasks: Vec<(&Subgraph, &mut Vec<A::State>)> = self
+                    .subs
+                    .iter()
+                    .zip(local_states.iter_mut())
+                    .collect();
+                crate::util::pool::run_mut(
+                    &mut tasks,
+                    &|_, task: &mut (&Subgraph, &mut Vec<A::State>)| {
+                        alg_ref.local(task.0, &mut *task.1);
+                    },
+                );
             }
             // ---- aggregation phase ----
             let mut changed = false;

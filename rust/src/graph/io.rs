@@ -8,7 +8,7 @@
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 
-use anyhow::{Context, Result};
+use crate::util::error::{Context, Result};
 
 use super::{Graph, GraphBuilder};
 

@@ -13,8 +13,15 @@
 //! metrics. The numeric hot path of ETSCH's local-computation phase
 //! (tropical-semiring relaxation) and the vectorized DFEP funding round are
 //! **Layer 2/1** JAX + Pallas programs, AOT-lowered to HLO text at build
-//! time (`make artifacts`) and executed via PJRT from [`runtime`]. Python
-//! never runs on the request path.
+//! time (`make artifacts`) and executed via PJRT from [`runtime`] (in the
+//! vendored-crate-free build, a std-only reference interpreter stands in
+//! for the PJRT client — see `runtime::xla`). Python never runs on the
+//! request path.
+//!
+//! Shared-memory parallelism comes from [`util::pool`]: DFEP's funding
+//! rounds, ETSCH's local-computation phase and the MapReduce engine all
+//! shard over the same reusable worker pool, with fixed-order reductions
+//! so results are bit-identical for every thread count.
 //!
 //! Quick tour:
 //!
@@ -30,6 +37,19 @@
 //! let dist = engine.run(&mut Sssp::new(0));
 //! println!("rounds = {}", engine.rounds_executed());
 //! ```
+
+// Style lints the codebase predates; correctness lints stay on.
+#![allow(
+    clippy::needless_range_loop,
+    clippy::too_many_arguments,
+    clippy::type_complexity,
+    clippy::manual_div_ceil,
+    clippy::new_without_default,
+    clippy::comparison_chain,
+    clippy::collapsible_else_if,
+    clippy::collapsible_if,
+    clippy::uninlined_format_args
+)]
 
 pub mod bench;
 pub mod cluster;

@@ -9,7 +9,8 @@
 //!   repro xla-info
 //!   repro xla-partition --graph er:n=500,m=1500 --k 8
 
-use anyhow::{anyhow, Result};
+use dfep::anyhow;
+use dfep::util::error::Result;
 
 use dfep::cluster::cost::CostModel;
 use dfep::cluster::dfep_mr::{resimulate, run_cluster_dfep};

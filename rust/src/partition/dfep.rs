@@ -88,10 +88,8 @@ pub(crate) struct DfepState {
     /// Number of incident FREE edges per vertex, maintained incrementally
     /// on every purchase (avoids an O(m) scan per round).
     pub free_deg: Vec<u32>,
-    /// Vertices with `free_deg > 0` (swap-removed as they dry up).
+    /// Vertices with `free_deg > 0` (pruned as they dry up).
     live_vertices: Vec<u32>,
-    /// (vertex, partition) visit stamps for the frontier scan.
-    stamp: Vec<u64>,
 }
 
 pub(crate) const FREE: u32 = u32::MAX;
@@ -129,13 +127,20 @@ impl DfepState {
             holders,
             free_deg,
             live_vertices,
-            stamp: vec![u64::MAX; n],
         }
     }
 
-    /// Steps 1 + 2 for one round. `poor_can_raid` enables the DFEPC
+    /// Steps 1 + 2 for one round. `poor`/`rich` enable the DFEPC
     /// dynamic: partitions listed in `poor` may also bid on edges owned by
     /// partitions listed in `rich`, stealing them on a strictly higher bid.
+    ///
+    /// Both steps run data-parallel on the shared [`crate::util::pool`]:
+    /// step 1 over fixed-size holder chunks per partition, step 2 over
+    /// fixed-size runs of bid-receiving edges. Every shard computes a pure
+    /// function of its input slice; mutations (money zeroing, ownership,
+    /// refunds) are applied serially in fixed shard order afterwards, so
+    /// the round trajectory — including every `f64` accumulation order —
+    /// is bit-identical to the sequential execution for any thread count.
     pub fn funding_round(
         &mut self,
         g: &Graph,
@@ -148,137 +153,245 @@ impl DfepState {
         // O(active frontier), not O(k * m).
         //
         // bid = (edge, partition, offer, contribution-from-lower-endpoint)
-        let mut bids: Vec<(u32, u32, f64, f64)> = Vec::new();
-        let mut eligible: Vec<u32> = Vec::with_capacity(64);
+        let mut holder_lists: Vec<Vec<u32>> = Vec::with_capacity(self.k);
         for i in 0..self.k {
-            let money_i = &mut self.money[i];
-            let poor_i = poor.map(|p| p[i]).unwrap_or(false);
             let mut hs = std::mem::take(&mut self.holders[i]);
             hs.sort_unstable();
             hs.dedup();
-            for &v in &hs {
-                let cash = money_i[v as usize];
-                if cash <= 0.0 {
-                    continue; // stale/duplicate holder entry
-                }
-                eligible.clear();
-                let mut has_buyable = false;
-                for &(_, e) in g.neighbors(v) {
-                    let o = self.owner[e as usize];
-                    let buyable = o == FREE
-                        || (poor_i
-                            && o != i as u32
-                            && rich.map(|r| r[o as usize]).unwrap_or(false));
-                    if buyable && !has_buyable && self.frontier_first {
-                        // first buyable edge seen: drop own edges collected
-                        // so far, fund the frontier only
-                        has_buyable = true;
-                        eligible.clear();
-                    }
-                    let can = buyable
-                        || (o == i as u32
-                            && !(self.frontier_first && has_buyable));
-                    if can {
-                        eligible.push(e);
-                    }
-                }
-                if eligible.is_empty() {
-                    // stranded funding stays on the vertex
-                    self.holders[i].push(v);
-                    continue;
-                }
-                let share = cash / eligible.len() as f64;
-                for &e in &eligible {
-                    let (u, _) = g.endpoints(e);
-                    let lo = if u == v { share } else { 0.0 };
-                    bids.push((e, i as u32, share, lo));
-                }
-                money_i[v as usize] = 0.0;
+            holder_lists.push(hs);
+        }
+        // shard = one holder chunk of one partition, in (partition,
+        // holder-order) order; chunk size is a constant so the shard list
+        // does not depend on the thread count
+        const HOLDER_CHUNK: usize = 512;
+        let mut shards: Vec<(usize, usize, usize)> = Vec::new();
+        for (i, hs) in holder_lists.iter().enumerate() {
+            let mut lo = 0;
+            while lo < hs.len() {
+                let hi = (lo + HOLDER_CHUNK).min(hs.len());
+                shards.push((i, lo, hi));
+                lo = hi;
             }
+        }
+        #[derive(Default)]
+        struct Shard1Out {
+            bids: Vec<(u32, u32, f64, f64)>,
+            /// holders with cash but no eligible edge (stay funded)
+            stranded: Vec<u32>,
+            /// holders whose cash became bids (zeroed in apply)
+            spent: Vec<u32>,
+        }
+        let mut outs: Vec<Shard1Out> = Vec::new();
+        outs.resize_with(shards.len(), Shard1Out::default);
+        {
+            let money = &self.money;
+            let owner = &self.owner;
+            let frontier_first = self.frontier_first;
+            let shards = &shards;
+            let holder_lists = &holder_lists;
+            crate::util::pool::run_mut(&mut outs, &|s, out: &mut Shard1Out| {
+                let (i, lo, hi) = shards[s];
+                let money_i = &money[i];
+                let poor_i = poor.map(|p| p[i]).unwrap_or(false);
+                let mut eligible: Vec<u32> = Vec::with_capacity(64);
+                for &v in &holder_lists[i][lo..hi] {
+                    let cash = money_i[v as usize];
+                    if cash <= 0.0 {
+                        continue; // stale/duplicate holder entry
+                    }
+                    eligible.clear();
+                    let mut has_buyable = false;
+                    for &(_, e) in g.neighbors(v) {
+                        let o = owner[e as usize];
+                        let buyable = o == FREE
+                            || (poor_i
+                                && o != i as u32
+                                && rich
+                                    .map(|r| r[o as usize])
+                                    .unwrap_or(false));
+                        if buyable && !has_buyable && frontier_first {
+                            // first buyable edge seen: drop own edges
+                            // collected so far, fund the frontier only
+                            has_buyable = true;
+                            eligible.clear();
+                        }
+                        let can = buyable
+                            || (o == i as u32
+                                && !(frontier_first && has_buyable));
+                        if can {
+                            eligible.push(e);
+                        }
+                    }
+                    if eligible.is_empty() {
+                        // stranded funding stays on the vertex
+                        out.stranded.push(v);
+                        continue;
+                    }
+                    let share = cash / eligible.len() as f64;
+                    for &e in &eligible {
+                        let (u, _) = g.endpoints(e);
+                        let from_lo = if u == v { share } else { 0.0 };
+                        out.bids.push((e, i as u32, share, from_lo));
+                    }
+                    out.spent.push(v);
+                }
+            });
+        }
+        // apply step-1 effects and concatenate bids in shard order (equal
+        // to the sequential per-partition, per-holder order)
+        let mut bids: Vec<(u32, u32, f64, f64)> =
+            Vec::with_capacity(outs.iter().map(|o| o.bids.len()).sum());
+        for (s, out) in outs.iter_mut().enumerate() {
+            let i = shards[s].0;
+            for &v in &out.stranded {
+                self.holders[i].push(v);
+            }
+            for &v in &out.spent {
+                self.money[i][v as usize] = 0.0;
+            }
+            bids.append(&mut out.bids);
         }
 
         // Step 2: auction — only over edges that received bids. Merge the
-        // per-(edge, partition) contributions by sorting.
+        // per-(edge, partition) contributions by sorting, then compute
+        // every edge's outcome in parallel (outcomes only read the
+        // pre-auction state: each edge is decided by its own bids) and
+        // apply ownership changes + refunds serially in edge order.
         bids.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
-        let mut idx = 0usize;
-        let mut merged: Vec<(u32, f64, f64)> = Vec::with_capacity(8);
-        while idx < bids.len() {
-            let e = bids[idx].0;
-            merged.clear();
-            while idx < bids.len() && bids[idx].0 == e {
-                let (_, i, offer, lo) = bids[idx];
-                if let Some(last) = merged.last_mut() {
-                    if last.0 == i {
-                        last.1 += offer;
-                        last.2 += lo;
-                        idx += 1;
-                        continue;
+        let mut groups: Vec<(usize, usize)> = Vec::new();
+        {
+            let mut idx = 0usize;
+            while idx < bids.len() {
+                let e = bids[idx].0;
+                let start = idx;
+                while idx < bids.len() && bids[idx].0 == e {
+                    idx += 1;
+                }
+                groups.push((start, idx));
+            }
+        }
+        const GROUP_CHUNK: usize = 256;
+        #[derive(Default)]
+        struct Shard2Out {
+            /// (edge, winner-or-FREE, number of credit entries)
+            sales: Vec<(u32, u32, u32)>,
+            /// (partition, vertex, amount) in sequential credit order
+            credits: Vec<(u32, u32, f64)>,
+        }
+        let mut outs2: Vec<Shard2Out> = Vec::new();
+        outs2.resize_with(
+            groups.len().div_ceil(GROUP_CHUNK),
+            Shard2Out::default,
+        );
+        {
+            let owner = &self.owner;
+            let bids = &bids;
+            let groups = &groups;
+            crate::util::pool::run_mut(&mut outs2, &|c, out: &mut Shard2Out| {
+                let lo = c * GROUP_CHUNK;
+                let hi = ((c + 1) * GROUP_CHUNK).min(groups.len());
+                let mut merged: Vec<(u32, f64, f64)> = Vec::with_capacity(8);
+                for &(start, end) in &groups[lo..hi] {
+                    let e = bids[start].0;
+                    merged.clear();
+                    for &(_, i, offer, from_lo) in &bids[start..end] {
+                        if let Some(last) = merged.last_mut() {
+                            if last.0 == i {
+                                last.1 += offer;
+                                last.2 += from_lo;
+                                continue;
+                            }
+                        }
+                        merged.push((i, offer, from_lo));
                     }
+                    let (u, v) = g.endpoints(e);
+                    // find best bidder (lowest partition id wins ties, as
+                    // the dense argmax did)
+                    let mut best = u32::MAX;
+                    let mut best_offer = 0.0f64;
+                    for &(i, offer, _) in &merged {
+                        if offer > best_offer {
+                            best_offer = offer;
+                            best = i;
+                        }
+                    }
+                    let cur = owner[e as usize];
+                    let cur_offer = merged
+                        .iter()
+                        .find(|&&(i, _, _)| i == cur)
+                        .map(|&(_, o, _)| o)
+                        .unwrap_or(0.0);
+                    let sold = if cur == FREE {
+                        best != u32::MAX && best_offer >= 1.0
+                    } else {
+                        // DFEPC raid: a poor bidder can buy an owned
+                        // (rich) edge by strictly outbidding the owner's
+                        // committed funding.
+                        best != u32::MAX
+                            && best != cur
+                            && best_offer >= 1.0
+                            && poor
+                                .map(|p| p[best as usize])
+                                .unwrap_or(false)
+                            && rich.map(|r| r[cur as usize]).unwrap_or(false)
+                            && best_offer > cur_offer
+                    };
+                    let new_owner = if sold { best } else { cur };
+                    let before = out.credits.len();
+                    for &(i, offer, from_lo) in &merged {
+                        if offer <= 0.0 {
+                            continue;
+                        }
+                        if sold && i == best {
+                            // winner pays 1, remainder split half/half
+                            let rem = (offer - 1.0) * 0.5;
+                            out.credits.push((i, u, rem));
+                            out.credits.push((i, v, rem));
+                        } else if !sold && i == new_owner {
+                            // own-edge circulation: half/half
+                            out.credits.push((i, u, offer * 0.5));
+                            out.credits.push((i, v, offer * 0.5));
+                        } else {
+                            // exact refund to contributors
+                            out.credits.push((i, u, from_lo));
+                            out.credits.push((i, v, offer - from_lo));
+                        }
+                    }
+                    let n_credits = (out.credits.len() - before) as u32;
+                    out.sales.push((
+                        e,
+                        if sold { best } else { FREE },
+                        n_credits,
+                    ));
                 }
-                merged.push((i, offer, lo));
-                idx += 1;
-            }
-            let (u, v) = g.endpoints(e);
-            let (u, v) = (u as usize, v as usize);
-            // find best bidder (lowest partition id wins ties, as the
-            // dense argmax did)
-            let mut best = u32::MAX;
-            let mut best_offer = 0.0f64;
-            for &(i, offer, _) in &merged {
-                if offer > best_offer {
-                    best_offer = offer;
-                    best = i;
+            });
+        }
+        // serial apply in edge order: ownership first, then that edge's
+        // credits — exactly the sequential interleaving
+        for out in &outs2 {
+            let mut credit_idx = 0usize;
+            for &(e, winner, n_credits) in &out.sales {
+                if winner != FREE {
+                    let (u, v) = g.endpoints(e);
+                    let (u, v) = (u as usize, v as usize);
+                    let cur = self.owner[e as usize];
+                    if cur != FREE {
+                        self.sizes[cur as usize] -= 1;
+                    } else {
+                        self.free_edges -= 1;
+                        self.free_deg[u] -= 1;
+                        self.free_deg[v] -= 1;
+                    }
+                    self.owner[e as usize] = winner;
+                    self.sizes[winner as usize] += 1;
+                    self.anchor[winner as usize] = u;
                 }
-            }
-            let cur = self.owner[e as usize];
-            let cur_offer = merged
-                .iter()
-                .find(|&&(i, _, _)| i == cur)
-                .map(|&(_, o, _)| o)
-                .unwrap_or(0.0);
-            let sold = if cur == FREE {
-                best != u32::MAX && best_offer >= 1.0
-            } else {
-                // DFEPC raid: a poor bidder can buy an owned (rich) edge
-                // by strictly outbidding the owner's committed funding.
-                best != u32::MAX
-                    && best != cur
-                    && best_offer >= 1.0
-                    && poor.map(|p| p[best as usize]).unwrap_or(false)
-                    && rich.map(|r| r[cur as usize]).unwrap_or(false)
-                    && best_offer > cur_offer
-            };
-            if sold {
-                if cur != FREE {
-                    self.sizes[cur as usize] -= 1;
-                } else {
-                    self.free_edges -= 1;
-                    self.free_deg[u] -= 1;
-                    self.free_deg[v] -= 1;
+                for &(i, w, amount) in
+                    &out.credits[credit_idx..credit_idx + n_credits as usize]
+                {
+                    self.credit(i as usize, w as usize, amount);
                 }
-                self.owner[e as usize] = best;
-                self.sizes[best as usize] += 1;
-                self.anchor[best as usize] = u;
-            }
-            let new_owner = self.owner[e as usize];
-            for &(i, offer, lo) in &merged {
-                if offer <= 0.0 {
-                    continue;
-                }
-                if sold && i == best {
-                    // winner pays 1, remainder split half/half
-                    let rem = (offer - 1.0) * 0.5;
-                    self.credit(i as usize, u, rem);
-                    self.credit(i as usize, v, rem);
-                } else if !sold && i == new_owner {
-                    // own-edge circulation: half/half
-                    self.credit(i as usize, u, offer * 0.5);
-                    self.credit(i as usize, v, offer * 0.5);
-                } else {
-                    // exact refund to contributors
-                    self.credit(i as usize, u, lo);
-                    self.credit(i as usize, v, offer - lo);
-                }
+                credit_idx += n_credits as usize;
             }
         }
         if self.frontier_first {
@@ -318,89 +431,124 @@ impl DfepState {
         // region — the worker owns the whole ledger locally, so this costs
         // no communication. Driven by the incrementally-maintained live
         // vertex list, so the scan is O(live frontier * deg), shrinking
-        // as coverage grows.
+        // as coverage grows. The scan runs in parallel chunks; duplicate
+        // (vertex, partition) discoveries are canonicalized by the
+        // sort+dedup below, so no shared visit-stamp state is needed and
+        // the outcome is independent of chunking and thread count.
         let free_deg = &self.free_deg;
+        self.live_vertices.retain(|&w| free_deg[w as usize] > 0);
+        const LIVE_CHUNK: usize = 2048;
+        let mut found: Vec<Vec<(u32, u32)>> = Vec::new();
+        found.resize_with(
+            self.live_vertices.len().div_ceil(LIVE_CHUNK),
+            Vec::new,
+        );
+        {
+            let live = &self.live_vertices;
+            let owner = &self.owner;
+            crate::util::pool::run_mut(
+                &mut found,
+                &|c, out: &mut Vec<(u32, u32)>| {
+                    let lo = c * LIVE_CHUNK;
+                    let hi = ((c + 1) * LIVE_CHUNK).min(live.len());
+                    for &w in &live[lo..hi] {
+                        // cheap adjacent-duplicate filter; exact dedup
+                        // happens in the per-partition sort below
+                        let mut last = FREE;
+                        for &(_, e2) in g.neighbors(w) {
+                            let p = owner[e2 as usize];
+                            if p != FREE && p != last {
+                                last = p;
+                                out.push((p, w));
+                            }
+                        }
+                    }
+                },
+            );
+        }
         let mut frontier_of: Vec<Vec<usize>> = vec![Vec::new(); self.k];
-        let round_tag = (self.rounds as u64 + 1) * self.k as u64;
-        let mut idx = 0usize;
-        while idx < self.live_vertices.len() {
-            let w = self.live_vertices[idx] as usize;
-            if free_deg[w] == 0 {
-                self.live_vertices.swap_remove(idx);
-                continue;
-            }
-            idx += 1;
-            for &(_, e2) in g.neighbors(w as u32) {
-                let p = self.owner[e2 as usize];
-                if p != FREE && self.stamp[w] != round_tag + p as u64 {
-                    self.stamp[w] = round_tag + p as u64;
-                    frontier_of[p as usize].push(w);
-                }
+        for chunk in &found {
+            for &(p, w) in chunk {
+                frontier_of[p as usize].push(w as usize);
             }
         }
-        for i in 0..self.k {
-            // collect the partition's entire liquid cash (region locality:
-            // money of partition i only ever sits on V_i)
-            let money_i = &mut self.money[i];
-            let mut pool = 0.0f64;
-            let mut first_holder: Option<usize> = None;
-            let mut hs = std::mem::take(&mut self.holders[i]);
-            hs.sort_unstable();
-            hs.dedup();
-            for &hv in &hs {
-                let v = hv as usize;
-                let c = money_i[v];
-                if c <= 0.0 {
-                    continue;
+        // per-partition distribution: each task owns its partition's
+        // ledger (money + holders are disjoint across partitions)
+        let mut tasks: Vec<(&mut Money, &mut Vec<u32>, Vec<usize>)> = self
+            .money
+            .iter_mut()
+            .zip(self.holders.iter_mut())
+            .zip(frontier_of)
+            .map(|((m, h), f)| (m, h, f))
+            .collect();
+        crate::util::pool::run_mut(
+            &mut tasks,
+            &|_, task: &mut (&mut Money, &mut Vec<u32>, Vec<usize>)| {
+                let money_i: &mut Vec<f64> = &mut *task.0;
+                let holders_i: &mut Vec<u32> = &mut *task.1;
+                let frontier: &mut Vec<usize> = &mut task.2;
+                // collect the partition's entire liquid cash (region
+                // locality: money of partition i only ever sits on V_i)
+                let mut pool = 0.0f64;
+                let mut first_holder: Option<usize> = None;
+                let mut hs = std::mem::take(holders_i);
+                hs.sort_unstable();
+                hs.dedup();
+                for &hv in &hs {
+                    let v = hv as usize;
+                    let c = money_i[v];
+                    if c <= 0.0 {
+                        continue;
+                    }
+                    first_holder = first_holder.or(Some(v));
+                    pool += c;
+                    money_i[v] = 0.0;
                 }
-                first_holder = first_holder.or(Some(v));
-                pool += c;
-                money_i[v] = 0.0;
-            }
-            let frontier = &mut frontier_of[i];
-            if pool <= 0.0 {
-                continue;
-            }
-            if frontier.is_empty() {
-                // boxed in: re-deposit on the first holder — stays inside
-                // the region; the DFEPC raid dynamic is what unboxes it
-                let fh = first_holder.unwrap();
-                money_i[fh] += pool;
-                self.holders[i].push(fh as u32);
-                continue;
-            }
-            // greedy concentration: fund vertices with the cheapest
-            // frontier first — each gets exactly enough to bid 1 unit per
-            // free incident edge; leftovers spread equally as headroom
-            // the stamp is a single slot per vertex, so interleaved owners
-            // can push a vertex twice — dedup before the greedy fill
-            frontier.sort_unstable();
-            frontier.dedup();
-            frontier.sort_unstable_by_key(|&v| free_deg[v]);
-            let mut remaining = pool;
-            let mut funded = 0usize;
-            for &v in frontier.iter() {
-                let need = free_deg[v] as f64 * 1.0001;
-                if remaining < need {
-                    break;
+                if pool <= 0.0 {
+                    return;
                 }
-                money_i[v] += need;
-                self.holders[i].push(v as u32);
-                remaining -= need;
-                funded += 1;
-            }
-            if funded == 0 {
-                // cannot cover even the cheapest vertex: concentrate all
-                // on it so accumulation crosses the threshold eventually
-                money_i[frontier[0]] += remaining;
-                self.holders[i].push(frontier[0] as u32);
-            } else {
-                let per = remaining / funded as f64;
-                for &v in &frontier[..funded] {
-                    money_i[v] += per;
+                if frontier.is_empty() {
+                    // boxed in: re-deposit on the first holder — stays
+                    // inside the region; the DFEPC raid dynamic is what
+                    // unboxes it
+                    let fh = first_holder.unwrap();
+                    money_i[fh] += pool;
+                    holders_i.push(fh as u32);
+                    return;
                 }
-            }
-        }
+                // greedy concentration: fund vertices with the cheapest
+                // frontier first — each gets exactly enough to bid 1 unit
+                // per free incident edge; leftovers spread equally as
+                // headroom. Interleaved owners can record a vertex twice —
+                // dedup before the greedy fill.
+                frontier.sort_unstable();
+                frontier.dedup();
+                frontier.sort_unstable_by_key(|&v| free_deg[v]);
+                let mut remaining = pool;
+                let mut funded = 0usize;
+                for &v in frontier.iter() {
+                    let need = free_deg[v] as f64 * 1.0001;
+                    if remaining < need {
+                        break;
+                    }
+                    money_i[v] += need;
+                    holders_i.push(v as u32);
+                    remaining -= need;
+                    funded += 1;
+                }
+                if funded == 0 {
+                    // cannot cover even the cheapest vertex: concentrate
+                    // all on it so accumulation crosses the threshold
+                    money_i[frontier[0]] += remaining;
+                    holders_i.push(frontier[0] as u32);
+                } else {
+                    let per = remaining / funded as f64;
+                    for &v in &frontier[..funded] {
+                        money_i[v] += per;
+                    }
+                }
+            },
+        );
     }
 
     /// Step 3 (Alg. 6): the coordinator injects funding inversely

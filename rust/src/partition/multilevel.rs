@@ -165,26 +165,30 @@ fn refine(
         }
         d
     };
+    let mut cands: Vec<u32> = Vec::with_capacity(8);
     for _ in 0..passes {
         let mut moved = 0usize;
         for (e, u, v) in g.edge_iter() {
             let from = owner[e as usize];
-            // candidate targets: partitions already present on u or v
-            let mut best: Option<(u32, i64)> = None;
+            // candidate targets: partitions already present on u or v —
+            // collected into a sorted list so the scan order (and the
+            // tie-break on equal deltas) never depends on HashMap
+            // iteration order
+            cands.clear();
             for vert in [u as usize, v as usize] {
-                for (&cand, _) in incident[vert].iter() {
-                    if cand == from
-                        || sizes[cand as usize] + 1 > max_size
-                    {
-                        continue;
-                    }
-                    let d = replica_delta(&incident, u as usize, from, cand)
-                        + replica_delta(&incident, v as usize, from, cand);
-                    if d < 0
-                        && best.map(|(_, bd)| d < bd).unwrap_or(true)
-                    {
-                        best = Some((cand, d));
-                    }
+                cands.extend(incident[vert].keys().copied());
+            }
+            cands.sort_unstable();
+            cands.dedup();
+            let mut best: Option<(u32, i64)> = None;
+            for &cand in &cands {
+                if cand == from || sizes[cand as usize] + 1 > max_size {
+                    continue;
+                }
+                let d = replica_delta(&incident, u as usize, from, cand)
+                    + replica_delta(&incident, v as usize, from, cand);
+                if d < 0 && best.map(|(_, bd)| d < bd).unwrap_or(true) {
+                    best = Some((cand, d));
                 }
             }
             if let Some((to, _)) = best {

@@ -14,7 +14,7 @@
 //! exists to run the paper's local phase on the AOT-compiled L1 kernel
 //! and is cross-checked against it in tests.
 
-use anyhow::Result;
+use crate::util::error::Result;
 
 use super::{Executable, Runtime, Tensor, INF32};
 use crate::etsch::Subgraph;

@@ -6,7 +6,8 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{anyhow, bail};
 
 use crate::util::json::{self, Json};
 

@@ -3,17 +3,23 @@
 //!
 //! Interchange is HLO *text*: jax >= 0.5 emits HloModuleProtos with 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md and python/compile/aot.py).
+//! reassigns ids (see python/compile/aot.py). In this vendored-crate-free
+//! build the PJRT client is the std-only reference interpreter in
+//! [`xla`] (`platform_name() == "cpu-sim"`); the module keeps the real
+//! binding's API surface so a hardware PJRT client swaps back in without
+//! touching the callers.
 
 pub mod blocktiled;
 pub mod manifest;
+pub mod xla;
 pub mod xla_engine;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::Mutex;
 
-use anyhow::{bail, Context, Result};
+use crate::bail;
+use crate::util::error::{Context, Result};
 
 pub use manifest::{ArtifactSpec, Dtype, Manifest, TensorSpec};
 

@@ -1,0 +1,644 @@
+//! Std-only stand-in for the PJRT/XLA binding.
+//!
+//! The container this crate builds in has no `xla` crate (and no network
+//! to fetch one), so the PJRT surface the runtime uses is provided here
+//! as a *reference interpreter*: artifacts are identified by their HLO
+//! module name (the text emitted by `python/compile/aot.py` always starts
+//! with `HloModule <name>`), and `execute` runs the kernel's reference
+//! semantics in pure rust. Shapes and dtypes still flow through
+//! `manifest.json` and are validated by [`super::Executable::run`], so
+//! swapping a real PJRT client back in is a drop-in change to this module
+//! only. `platform_name()` reports `"cpu-sim"` to make the substitution
+//! visible in `repro xla-info`.
+
+use std::fmt;
+
+/// Backend error (implements `std::error::Error`, so `?` converts it into
+/// the crate error type).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla-sim: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(Error(msg.into()))
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Tensor payload.
+#[derive(Clone, Debug)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// A host-side literal crossing the runtime boundary.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Data,
+    #[allow(dead_code)] // carried for API fidelity; kernels use lengths
+    shape: Vec<i64>,
+}
+
+/// Element types the simulated backend moves across the boundary.
+pub trait NativeType: Copy {
+    fn wrap(v: Vec<Self>) -> Data;
+    fn unwrap(d: &Data) -> Option<&[Self]>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<f32>) -> Data {
+        Data::F32(v)
+    }
+    fn unwrap(d: &Data) -> Option<&[f32]> {
+        match d {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<i32>) -> Data {
+        Data::I32(v)
+    }
+    fn unwrap(d: &Data) -> Option<&[i32]> {
+        match d {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { shape: vec![v.len() as i64], data: T::wrap(v.to_vec()) }
+    }
+
+    fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal { shape: Vec::new(), data: Data::Tuple(parts) }
+    }
+
+    fn len(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(p) => p.len(),
+        }
+    }
+
+    /// Reinterpret with a new shape (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let count: i64 = dims.iter().product();
+        if count as usize != self.len() {
+            return err(format!(
+                "reshape {:?} onto {} elements",
+                dims,
+                self.len()
+            ));
+        }
+        Ok(Literal { shape: dims.to_vec(), data: self.data.clone() })
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error("dtype mismatch in to_vec".into()))
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(p) => Ok(p),
+            _ => err("literal is not a tuple"),
+        }
+    }
+
+    fn as_f32(&self) -> Result<&[f32]> {
+        f32::unwrap(&self.data).ok_or_else(|| Error("expected f32".into()))
+    }
+
+    fn as_i32(&self) -> Result<&[i32]> {
+        i32::unwrap(&self.data).ok_or_else(|| Error("expected i32".into()))
+    }
+}
+
+/// Parsed HLO module: only the module name drives the interpreter.
+pub struct HloModuleProto {
+    name: String,
+}
+
+impl HloModuleProto {
+    /// Read an `.hlo.txt` artifact and extract its module name.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("read {path}: {e}")))?;
+        for line in text.lines() {
+            let t = line.trim();
+            if let Some(rest) = t.strip_prefix("HloModule") {
+                let name = rest
+                    .trim()
+                    .split(|c: char| c.is_whitespace() || c == ',')
+                    .next()
+                    .unwrap_or("")
+                    .trim_matches(|c| c == '"' || c == '\'')
+                    .to_string();
+                if name.is_empty() {
+                    return err(format!("{path}: empty HloModule name"));
+                }
+                return Ok(HloModuleProto { name });
+            }
+        }
+        err(format!("{path}: no HloModule header"))
+    }
+}
+
+/// Compilation input: the interpreter dispatches on the module name.
+pub struct XlaComputation {
+    name: String,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { name: proto.name.clone() }
+    }
+}
+
+/// The kernel set `python/compile/model.py` registers.
+enum Kernel {
+    /// `minplus_block_N`: y[i] = min_j (A[i][j] + x[j]).
+    MinplusBlock { n: usize },
+    /// `relax_while_N`: iterate x = min(x, A (+) x) to fixpoint;
+    /// outputs (x, steps).
+    RelaxWhile { n: usize },
+    /// `multi_relax_NxC`: per-column fixpoint over C packed sources.
+    MultiRelax { n: usize, cols: usize },
+    /// `funding_step_K_V_E`: one DFEP funding round (steps 1+2),
+    /// vectorized over all K partitions.
+    FundingStep { k: usize, v: usize, e: usize },
+}
+
+fn parse_kernel(name: &str) -> Result<Kernel> {
+    let uint = |s: &str| -> Result<usize> {
+        s.parse::<usize>()
+            .map_err(|_| Error(format!("bad size '{s}' in kernel '{name}'")))
+    };
+    if let Some(rest) = name.strip_prefix("minplus_block_") {
+        return Ok(Kernel::MinplusBlock { n: uint(rest)? });
+    }
+    if let Some(rest) = name.strip_prefix("relax_while_") {
+        return Ok(Kernel::RelaxWhile { n: uint(rest)? });
+    }
+    if let Some(rest) = name.strip_prefix("multi_relax_") {
+        let (n, c) = rest
+            .split_once('x')
+            .ok_or_else(|| Error(format!("bad multi_relax name '{name}'")))?;
+        return Ok(Kernel::MultiRelax { n: uint(n)?, cols: uint(c)? });
+    }
+    if let Some(rest) = name.strip_prefix("funding_step_") {
+        let parts: Vec<&str> = rest.split('_').collect();
+        if parts.len() == 3 {
+            return Ok(Kernel::FundingStep {
+                k: uint(parts[0])?,
+                v: uint(parts[1])?,
+                e: uint(parts[2])?,
+            });
+        }
+    }
+    err(format!("unknown kernel '{name}' (sim backend)"))
+}
+
+/// One tropical mat-vec: out[i] = min_j (a[i*n + j] + x[j]).
+fn minplus(a: &[f32], x: &[f32], n: usize, out: &mut [f32]) {
+    for i in 0..n {
+        let row = &a[i * n..(i + 1) * n];
+        let mut best = f32::INFINITY;
+        for (aj, xj) in row.iter().zip(x.iter()) {
+            let cand = aj + xj;
+            if cand < best {
+                best = cand;
+            }
+        }
+        out[i] = best;
+    }
+}
+
+impl Kernel {
+    fn run(&self, inputs: &[&Literal]) -> Result<Literal> {
+        let arg = |i: usize| -> Result<&Literal> {
+            inputs
+                .get(i)
+                .copied()
+                .ok_or_else(|| Error(format!("missing input {i}")))
+        };
+        match *self {
+            Kernel::MinplusBlock { n } => {
+                let a = arg(0)?.as_f32()?;
+                let x = arg(1)?.as_f32()?;
+                if a.len() != n * n || x.len() != n {
+                    return err("minplus_block input sizes");
+                }
+                let mut y = vec![0f32; n];
+                minplus(a, x, n, &mut y);
+                Ok(Literal::tuple(vec![Literal::vec1(&y)]))
+            }
+            Kernel::RelaxWhile { n } => {
+                let a = arg(0)?.as_f32()?;
+                let mut x = arg(1)?.as_f32()?.to_vec();
+                if a.len() != n * n || x.len() != n {
+                    return err("relax_while input sizes");
+                }
+                let mut y = vec![0f32; n];
+                let mut steps = 0i32;
+                // fixpoint is reached within n sweeps on any input
+                for _ in 0..=n {
+                    minplus(a, &x, n, &mut y);
+                    let mut changed = false;
+                    for (xi, &yi) in x.iter_mut().zip(y.iter()) {
+                        if yi < *xi {
+                            *xi = yi;
+                            changed = true;
+                        }
+                    }
+                    steps += 1;
+                    if !changed {
+                        break;
+                    }
+                }
+                Ok(Literal::tuple(vec![
+                    Literal::vec1(&x),
+                    Literal::vec1(&[steps]),
+                ]))
+            }
+            Kernel::MultiRelax { n, cols } => {
+                let a = arg(0)?.as_f32()?;
+                let mut b = arg(1)?.as_f32()?.to_vec();
+                if a.len() != n * n || b.len() != n * cols {
+                    return err("multi_relax input sizes");
+                }
+                // per-column fixpoint; b is packed b[v * cols + s]
+                let mut x = vec![0f32; n];
+                let mut y = vec![0f32; n];
+                for s in 0..cols {
+                    for v in 0..n {
+                        x[v] = b[v * cols + s];
+                    }
+                    for _ in 0..=n {
+                        minplus(a, &x, n, &mut y);
+                        let mut changed = false;
+                        for (xi, &yi) in x.iter_mut().zip(y.iter()) {
+                            if yi < *xi {
+                                *xi = yi;
+                                changed = true;
+                            }
+                        }
+                        if !changed {
+                            break;
+                        }
+                    }
+                    for v in 0..n {
+                        b[v * cols + s] = x[v];
+                    }
+                }
+                Ok(Literal::tuple(vec![Literal::vec1(&b)]))
+            }
+            Kernel::FundingStep { k, v, e } => {
+                let src = arg(0)?.as_i32()?;
+                let dst = arg(1)?.as_i32()?;
+                let owner = arg(2)?.as_i32()?;
+                let money = arg(3)?.as_f32()?;
+                if src.len() != e
+                    || dst.len() != e
+                    || owner.len() != e
+                    || money.len() != k * v
+                {
+                    return err("funding_step input sizes");
+                }
+                funding_step(k, v, src, dst, owner, money)
+            }
+        }
+    }
+}
+
+/// Reference semantics of one DFEP funding round over padded flat state:
+/// step 1 splits each holder's cash over eligible incident edges
+/// (frontier-first), step 2 auctions every bid-receiving free edge
+/// (lowest partition id wins ties; winner pays 1, remainder returns
+/// half/half; losers get exact refunds; own-edge bids circulate
+/// half/half). Padding edges carry owner -2 and are never touched.
+fn funding_step(
+    k: usize,
+    nv: usize,
+    src: &[i32],
+    dst: &[i32],
+    owner: &[i32],
+    money: &[f32],
+) -> Result<Literal> {
+    // incidence over real edges (owner != -2)
+    let mut deg = vec![0u32; nv];
+    for (e, (&s, &d)) in src.iter().zip(dst.iter()).enumerate() {
+        if owner[e] == -2 {
+            continue;
+        }
+        if (s as usize) >= nv || (d as usize) >= nv {
+            return err("funding_step: endpoint out of range");
+        }
+        deg[s as usize] += 1;
+        deg[d as usize] += 1;
+    }
+    let mut offsets = vec![0usize; nv + 1];
+    for i in 0..nv {
+        offsets[i + 1] = offsets[i] + deg[i] as usize;
+    }
+    let mut incident = vec![0u32; offsets[nv]];
+    let mut cursor = offsets.clone();
+    for (e, (&s, &d)) in src.iter().zip(dst.iter()).enumerate() {
+        if owner[e] == -2 {
+            continue;
+        }
+        incident[cursor[s as usize]] = e as u32;
+        cursor[s as usize] += 1;
+        incident[cursor[d as usize]] = e as u32;
+        cursor[d as usize] += 1;
+    }
+
+    let mut new_money = money.to_vec();
+    // bids: (edge, partition, offer, contribution-from-src-endpoint)
+    let mut bids: Vec<(u32, u32, f64, f64)> = Vec::new();
+    let mut eligible: Vec<u32> = Vec::with_capacity(32);
+    for i in 0..k {
+        for vtx in 0..nv {
+            let cash = new_money[i * nv + vtx] as f64;
+            if cash <= 0.0 {
+                continue;
+            }
+            eligible.clear();
+            let mut has_buyable = false;
+            for &eid in &incident[offsets[vtx]..offsets[vtx + 1]] {
+                let o = owner[eid as usize];
+                let buyable = o == -1;
+                if buyable && !has_buyable {
+                    has_buyable = true;
+                    eligible.clear();
+                }
+                if buyable || (o == i as i32 && !has_buyable) {
+                    eligible.push(eid);
+                }
+            }
+            if eligible.is_empty() {
+                continue; // stranded cash stays put
+            }
+            let share = cash / eligible.len() as f64;
+            for &eid in &eligible {
+                let from_src = if src[eid as usize] as usize == vtx {
+                    share
+                } else {
+                    0.0
+                };
+                bids.push((eid, i as u32, share, from_src));
+            }
+            new_money[i * nv + vtx] = 0.0;
+        }
+    }
+
+    bids.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
+    let mut new_owner = owner.to_vec();
+    let mut bought = vec![0f32; k];
+    let mut credit = |part: usize, vtx: usize, amount: f64| {
+        if amount > 0.0 {
+            new_money[part * nv + vtx] += amount as f32;
+        }
+    };
+    let mut idx = 0usize;
+    let mut merged: Vec<(u32, f64, f64)> = Vec::with_capacity(8);
+    while idx < bids.len() {
+        let eid = bids[idx].0;
+        merged.clear();
+        while idx < bids.len() && bids[idx].0 == eid {
+            let (_, i, offer, lo) = bids[idx];
+            if let Some(last) = merged.last_mut() {
+                if last.0 == i {
+                    last.1 += offer;
+                    last.2 += lo;
+                    idx += 1;
+                    continue;
+                }
+            }
+            merged.push((i, offer, lo));
+            idx += 1;
+        }
+        let (u, w) = (src[eid as usize] as usize, dst[eid as usize] as usize);
+        let mut best = u32::MAX;
+        let mut best_offer = 0.0f64;
+        for &(i, offer, _) in &merged {
+            if offer > best_offer {
+                best_offer = offer;
+                best = i;
+            }
+        }
+        let sold =
+            owner[eid as usize] == -1 && best != u32::MAX && best_offer >= 1.0;
+        if sold {
+            new_owner[eid as usize] = best as i32;
+            bought[best as usize] += 1.0;
+        }
+        let cur = new_owner[eid as usize];
+        for &(i, offer, lo) in &merged {
+            if offer <= 0.0 {
+                continue;
+            }
+            if sold && i == best {
+                let rem = (offer - 1.0) * 0.5;
+                credit(i as usize, u, rem);
+                credit(i as usize, w, rem);
+            } else if !sold && cur >= 0 && i == cur as u32 {
+                credit(i as usize, u, offer * 0.5);
+                credit(i as usize, w, offer * 0.5);
+            } else {
+                credit(i as usize, u, lo);
+                credit(i as usize, w, offer - lo);
+            }
+        }
+    }
+    Ok(Literal::tuple(vec![
+        Literal::vec1(&new_owner),
+        Literal::vec1(&new_money),
+        Literal::vec1(&bought),
+    ]))
+}
+
+/// Device-side handle of one execution output.
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+/// A "compiled" artifact: the dispatched reference kernel.
+pub struct PjRtLoadedExecutable {
+    kernel: Kernel,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute; mirrors PJRT's per-device nesting (`[device][output]`).
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let lits: Vec<&Literal> = args.iter().map(|l| l.borrow()).collect();
+        let out = self.kernel.run(&lits)?;
+        Ok(vec![vec![PjRtBuffer { lit: out }]])
+    }
+}
+
+/// The simulated PJRT client.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient { _priv: () })
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-sim".to_string()
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable { kernel: parse_kernel(&comp.name)? })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn compile(name: &str) -> PjRtLoadedExecutable {
+        let client = PjRtClient::cpu().unwrap();
+        client
+            .compile(&XlaComputation { name: name.to_string() })
+            .unwrap()
+    }
+
+    #[test]
+    fn minplus_block_semantics() {
+        let exe = compile("minplus_block_4");
+        let inf = 1.5e38f32;
+        let mut a = vec![inf; 16];
+        for i in 0..4 {
+            a[i * 4 + i] = 0.0;
+        }
+        a[4 + 0] = 1.0; // edge 1 <- 0
+        let mut x = vec![inf; 4];
+        x[0] = 0.0;
+        let lits = [Literal::vec1(&a), Literal::vec1(&x)];
+        let out = exe.execute(&lits).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap()
+            .to_tuple()
+            .unwrap();
+        let y = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(y[0], 0.0);
+        assert_eq!(y[1], 1.0);
+        assert!(y[2] >= inf / 2.0);
+    }
+
+    #[test]
+    fn relax_while_reaches_fixpoint() {
+        let exe = compile("relax_while_8");
+        let inf = 1.5e38f32;
+        let n = 8;
+        let mut a = vec![inf; n * n];
+        for i in 0..n {
+            a[i * n + i] = 0.0;
+        }
+        for i in 0..n - 1 {
+            a[i * n + i + 1] = 1.0;
+            a[(i + 1) * n + i] = 1.0;
+        }
+        let mut x = vec![inf; n];
+        x[0] = 0.0;
+        let lits = [Literal::vec1(&a), Literal::vec1(&x)];
+        let out = exe.execute(&lits).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap()
+            .to_tuple()
+            .unwrap();
+        let y = out[0].to_vec::<f32>().unwrap();
+        for (i, &yi) in y.iter().enumerate() {
+            assert_eq!(yi, i as f32);
+        }
+        let steps = out[1].to_vec::<i32>().unwrap()[0];
+        assert!((1..=n as i32 + 1).contains(&steps), "steps {steps}");
+    }
+
+    #[test]
+    fn unknown_kernel_fails_to_compile() {
+        let client = PjRtClient::cpu().unwrap();
+        assert!(client
+            .compile(&XlaComputation { name: "mystery_kernel".into() })
+            .is_err());
+    }
+
+    #[test]
+    fn funding_step_sells_to_best_bidder_and_conserves_money() {
+        // path graph 0-1-2, 2 partitions, vertex 0 funded for part 0 and
+        // vertex 2 funded for part 1
+        let exe = compile("funding_step_2_4_4");
+        let src = vec![0i32, 1, 0, 0]; // last edge is padding
+        let dst = vec![1i32, 2, 0, 0];
+        let owner = vec![-1i32, -1, -2, -2];
+        let mut money = vec![0f32; 2 * 4];
+        money[0] = 4.0; // part 0, vertex 0
+        money[4 + 2] = 2.0; // part 1, vertex 2
+        let lits = [
+            Literal::vec1(&src),
+            Literal::vec1(&dst),
+            Literal::vec1(&owner),
+            Literal::vec1(&money),
+        ];
+        let out = exe.execute(&lits).unwrap()[0][0]
+            .to_literal_sync()
+            .unwrap()
+            .to_tuple()
+            .unwrap();
+        let new_owner = out[0].to_vec::<i32>().unwrap();
+        let new_money = out[1].to_vec::<f32>().unwrap();
+        let bought = out[2].to_vec::<f32>().unwrap();
+        assert_eq!(new_owner, vec![0, 1, -2, -2]);
+        assert_eq!(bought, vec![1.0, 1.0]);
+        // money conservation: initial - edges bought
+        let total: f32 = new_money.iter().sum();
+        assert!((total - (6.0 - 2.0)).abs() < 1e-5, "total {total}");
+    }
+
+    #[test]
+    fn hlo_header_parsing() {
+        let dir = std::env::temp_dir().join("dfep_xla_sim_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("k.hlo.txt");
+        std::fs::write(&path, "HloModule minplus_block_256, entry...\n")
+            .unwrap();
+        let proto =
+            HloModuleProto::from_text_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(proto.name, "minplus_block_256");
+        let bad = dir.join("bad.hlo.txt");
+        std::fs::write(&bad, "no header here\n").unwrap();
+        assert!(HloModuleProto::from_text_file(bad.to_str().unwrap()).is_err());
+    }
+}

@@ -9,7 +9,8 @@
 //! tests cross-check the two produce equally good partitions under the
 //! same semantics.
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::util::error::Result;
 
 use super::{Runtime, Tensor};
 use crate::graph::Graph;

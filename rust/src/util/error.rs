@@ -1,0 +1,148 @@
+//! Minimal error type + context helpers.
+//!
+//! The vendored crate set has no `anyhow`; this module provides the same
+//! ergonomics for the subset the crate actually uses: a string-backed
+//! [`Error`], a defaulted [`Result`] alias, the [`anyhow!`](crate::anyhow)
+//! and [`bail!`](crate::bail) macros, and a [`Context`] extension trait
+//! for `Result` and `Option`.
+
+use std::fmt;
+
+/// A string-backed error. Context wraps are flattened into the message at
+/// attachment time (`"<context>: <cause>"`), which is all the callers in
+/// this crate need.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from any message.
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+/// `Result` defaulted to [`Error`], like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+// NOTE: `Error` deliberately does NOT implement `std::error::Error`, so
+// this blanket conversion cannot overlap the identity `From<Error> for
+// Error` that the `?` operator needs.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+/// Attach human-readable context to an error (or a missing value).
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string or any displayable expression.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::util::error::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::util::error::Error::msg($err.to_string())
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// `return Err(anyhow!(...))`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        Err(crate::anyhow!("boom {}", 42))
+    }
+
+    #[test]
+    fn format_and_expr_forms() {
+        assert_eq!(fails().unwrap_err().to_string(), "boom 42");
+        let x = 7;
+        assert_eq!(crate::anyhow!("x = {x}").to_string(), "x = 7");
+        let s = String::from("owned");
+        assert_eq!(crate::anyhow!(s).to_string(), "owned");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(flag: bool) -> Result<u32> {
+            if flag {
+                crate::bail!("flagged {}", 1);
+            }
+            Ok(5)
+        }
+        assert_eq!(f(false).unwrap(), 5);
+        assert_eq!(f(true).unwrap_err().to_string(), "flagged 1");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<u32> {
+            Ok(s.parse::<u32>()?)
+        }
+        assert_eq!(parse("12").unwrap(), 12);
+        assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<u32, std::num::ParseIntError> =
+            "x".parse::<u32>();
+        let e = r.context("reading count").unwrap_err().to_string();
+        assert!(e.starts_with("reading count: "), "{e}");
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "k")).unwrap_err();
+        assert_eq!(e.to_string(), "missing k");
+        assert_eq!(Some(3).context("fine").unwrap(), 3);
+    }
+}

@@ -1,8 +1,11 @@
 //! Small self-contained substrates (the vendored crate set has no `rand`,
-//! `serde_json` or `criterion`, so we ship our own deterministic PRNG,
-//! JSON parser and stats helpers).
+//! `serde_json`, `anyhow`, `rayon` or `criterion`, so we ship our own
+//! deterministic PRNG, JSON parser, error type, scoped thread pool and
+//! stats helpers).
 
+pub mod error;
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod stats;
 pub mod timer;

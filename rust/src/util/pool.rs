@@ -1,0 +1,340 @@
+//! Shared scoped thread pool (std-only, reusable workers, deterministic
+//! shard -> thread assignment).
+//!
+//! The DFEP funding rounds, ETSCH's local-computation phase and the
+//! MapReduce engine all fan work out through this pool instead of
+//! spawning ad-hoc threads per round. Design constraints:
+//!
+//! - **Reusable workers.** Workers are spawned once and parked on a
+//!   channel; a round costs two channel hops per shard, not a
+//!   thread spawn + join per shard.
+//! - **Deterministic assignment.** Shard `i` always runs on worker
+//!   `i % threads`. More importantly, callers are written so results are
+//!   a pure function of the shard *index*, and shard outputs are merged
+//!   in fixed shard order — results are bit-identical for every thread
+//!   count (see the pool invariants test and DESIGN.md "Determinism").
+//! - **Scoped borrows.** Tasks may borrow the caller's stack. Safety
+//!   comes from [`ThreadPool::run`] blocking on a completion latch before
+//!   returning, so no task can outlive the borrowed data.
+//!
+//! Sizing: the global pool uses `DFEP_POOL_THREADS` if set, else
+//! `std::thread::available_parallelism()`. Tests pin exact thread counts
+//! with [`with_threads`]. Nesting `run` calls on the same pool is not
+//! supported (workers would block on workers); none of the crate's
+//! callers nest.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, OnceLock};
+
+/// Completion latch: counts outstanding tasks of one `run` call.
+struct Latch {
+    remaining: Mutex<usize>,
+    cv: Condvar,
+    panicked: AtomicBool,
+}
+
+impl Latch {
+    fn new(count: usize) -> Latch {
+        Latch {
+            remaining: Mutex::new(count),
+            cv: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        }
+    }
+
+    fn count_down(&self) {
+        let mut left = self.remaining.lock().unwrap();
+        *left -= 1;
+        if *left == 0 {
+            self.cv.notify_all();
+        }
+    }
+
+    fn wait(&self) {
+        let mut left = self.remaining.lock().unwrap();
+        while *left > 0 {
+            left = self.cv.wait(left).unwrap();
+        }
+    }
+}
+
+/// A type-erased borrowed task. `call` is a monomorphized trampoline that
+/// casts `ctx` back to the caller's closure; the latch pointer is valid
+/// because `run` blocks on it before returning.
+struct Task {
+    call: unsafe fn(*const (), usize),
+    ctx: *const (),
+    shard: usize,
+    latch: *const Latch,
+}
+
+// SAFETY: the pointers reference stack data of the thread blocked inside
+// `ThreadPool::run`; they are dereferenced only while that call is blocked
+// on the latch, and the closure behind `ctx` is required to be `Sync`.
+unsafe impl Send for Task {}
+
+/// Fixed set of parked workers, one injection channel per worker.
+pub struct ThreadPool {
+    senders: Vec<mpsc::Sender<Task>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    threads: usize,
+}
+
+impl ThreadPool {
+    /// Spawn a pool of `threads` workers (min 1).
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let mut senders = Vec::with_capacity(threads);
+        let mut handles = Vec::with_capacity(threads);
+        for w in 0..threads {
+            let (tx, rx) = mpsc::channel::<Task>();
+            let handle = std::thread::Builder::new()
+                .name(format!("dfep-pool-{w}"))
+                .spawn(move || {
+                    while let Ok(task) = rx.recv() {
+                        let result = catch_unwind(AssertUnwindSafe(|| unsafe {
+                            (task.call)(task.ctx, task.shard)
+                        }));
+                        // SAFETY: the submitting thread is blocked on this
+                        // latch until every task counted down.
+                        let latch = unsafe { &*task.latch };
+                        if result.is_err() {
+                            latch.panicked.store(true, Ordering::SeqCst);
+                        }
+                        latch.count_down();
+                    }
+                })
+                .expect("spawn pool worker");
+            senders.push(tx);
+            handles.push(handle);
+        }
+        ThreadPool { senders, handles, threads }
+    }
+
+    /// Number of workers.
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Run `f(0), f(1), ..., f(shards - 1)`, shard `i` on worker
+    /// `i % threads`; blocks until all shards complete. With one worker
+    /// (or one shard) the shards run inline on the caller in index order.
+    pub fn run<F: Fn(usize) + Sync>(&self, shards: usize, f: &F) {
+        if shards == 0 {
+            return;
+        }
+        if self.threads == 1 || shards == 1 {
+            for i in 0..shards {
+                f(i);
+            }
+            return;
+        }
+        unsafe fn trampoline<F: Fn(usize) + Sync>(ctx: *const (), shard: usize) {
+            let f = unsafe { &*(ctx as *const F) };
+            f(shard);
+        }
+        let latch = Latch::new(shards);
+        for i in 0..shards {
+            let task = Task {
+                call: trampoline::<F>,
+                ctx: f as *const F as *const (),
+                shard: i,
+                latch: &latch,
+            };
+            self.senders[i % self.threads]
+                .send(task)
+                .expect("pool worker exited");
+        }
+        latch.wait();
+        if latch.panicked.load(Ordering::SeqCst) {
+            panic!("pool task panicked");
+        }
+    }
+
+    /// Run `f(i, &mut items[i])` for every item, one shard per item.
+    /// Items are mutated in place through disjoint `&mut` borrows.
+    pub fn run_mut<T: Send, F: Fn(usize, &mut T) + Sync>(
+        &self,
+        items: &mut [T],
+        f: &F,
+    ) {
+        struct SharedPtr<T>(*mut T);
+        // SAFETY: each shard index dereferences a distinct element, so the
+        // `&mut` borrows handed to `f` are disjoint.
+        unsafe impl<T: Send> Sync for SharedPtr<T> {}
+        let base = SharedPtr(items.as_mut_ptr());
+        let len = items.len();
+        self.run(len, &|i| {
+            debug_assert!(i < len);
+            let item = unsafe { &mut *base.0.add(i) };
+            f(i, item);
+        });
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        // closing the channels lets workers drain and exit
+        self.senders.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn default_threads() -> usize {
+    std::env::var("DFEP_POOL_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+        })
+}
+
+static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+
+std::thread_local! {
+    static OVERRIDE: std::cell::RefCell<Vec<Arc<ThreadPool>>> =
+        const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// The process-wide pool (created on first use).
+pub fn global() -> &'static ThreadPool {
+    GLOBAL.get_or_init(|| ThreadPool::new(default_threads()))
+}
+
+/// Thread count of the pool [`run`]/[`run_mut`] would use right now.
+pub fn current_threads() -> usize {
+    OVERRIDE.with(|o| o.borrow().last().map(|p| p.threads()))
+        .unwrap_or_else(|| global().threads())
+}
+
+/// Run `f` with a temporary pool of exactly `threads` workers installed
+/// for the current thread (used by tests and the hotpath bench to pin
+/// 1/2/8-thread configurations).
+pub fn with_threads<R>(threads: usize, f: impl FnOnce() -> R) -> R {
+    struct PopGuard;
+    impl Drop for PopGuard {
+        fn drop(&mut self) {
+            OVERRIDE.with(|o| {
+                o.borrow_mut().pop();
+            });
+        }
+    }
+    let pool = Arc::new(ThreadPool::new(threads));
+    OVERRIDE.with(|o| o.borrow_mut().push(pool));
+    let _guard = PopGuard;
+    f()
+}
+
+fn current_pool() -> Option<Arc<ThreadPool>> {
+    OVERRIDE.with(|o| o.borrow().last().cloned())
+}
+
+/// [`ThreadPool::run`] on the current pool (TLS override or global).
+pub fn run<F: Fn(usize) + Sync>(shards: usize, f: &F) {
+    match current_pool() {
+        Some(p) => p.run(shards, f),
+        None => global().run(shards, f),
+    }
+}
+
+/// [`ThreadPool::run_mut`] on the current pool (TLS override or global).
+pub fn run_mut<T: Send, F: Fn(usize, &mut T) + Sync>(items: &mut [T], f: &F) {
+    match current_pool() {
+        Some(p) => p.run_mut(items, f),
+        None => global().run_mut(items, f),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn runs_every_shard_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> =
+            (0..100).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(100, &|i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn run_mut_gives_disjoint_mut_access() {
+        let pool = ThreadPool::new(3);
+        let mut items: Vec<usize> = vec![0; 57];
+        pool.run_mut(&mut items, &|i, x| *x = i * 2);
+        for (i, &x) in items.iter().enumerate() {
+            assert_eq!(x, i * 2);
+        }
+    }
+
+    #[test]
+    fn results_identical_across_thread_counts() {
+        let compute = |threads: usize| -> Vec<u64> {
+            let pool = ThreadPool::new(threads);
+            let mut out = vec![0u64; 64];
+            pool.run_mut(&mut out, &|i, x| {
+                // per-shard pure function of the index
+                let mut v = i as u64 + 1;
+                for _ in 0..1000 {
+                    v = v.wrapping_mul(6364136223846793005).wrapping_add(1);
+                }
+                *x = v;
+            });
+            out
+        };
+        let base = compute(1);
+        for t in [2, 3, 8] {
+            assert_eq!(compute(t), base, "{t} threads");
+        }
+    }
+
+    #[test]
+    fn with_threads_overrides_current_pool() {
+        with_threads(3, || {
+            assert_eq!(current_threads(), 3);
+            with_threads(1, || assert_eq!(current_threads(), 1));
+            assert_eq!(current_threads(), 3);
+        });
+    }
+
+    #[test]
+    fn pool_is_reusable_across_many_rounds() {
+        let pool = ThreadPool::new(2);
+        let counter = AtomicUsize::new(0);
+        for _ in 0..200 {
+            pool.run(5, &|_| {
+                counter.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), 1000);
+    }
+
+    #[test]
+    fn task_panic_propagates_without_deadlock() {
+        let pool = ThreadPool::new(2);
+        let res = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, &|i| {
+                if i == 5 {
+                    panic!("shard 5 exploded");
+                }
+            });
+        }));
+        assert!(res.is_err());
+        // pool still usable afterwards
+        let n = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            n.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 4);
+    }
+}

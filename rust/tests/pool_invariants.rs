@@ -1,0 +1,126 @@
+//! PR-1 coverage: graph IO round-trip fidelity and partition invariants
+//! under the shared thread pool — every edge owned exactly once, and
+//! balance / communication metrics (in fact the whole ownership vector)
+//! bit-stable across 1, 2 and 8 pool threads.
+
+use dfep::etsch::{sssp::Sssp, Etsch};
+use dfep::graph::{generators::GraphKind, io};
+use dfep::partition::{dfep::Dfep, dfepc::Dfepc, metrics, Partitioner};
+use dfep::util::pool;
+
+#[test]
+fn graph_io_roundtrip_reproduces_identical_csr() {
+    let g = GraphKind::PowerlawCluster { n: 600, m: 4, p: 0.3 }.generate(11);
+    let dir = std::env::temp_dir().join("dfep_pool_invariants");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("roundtrip.txt");
+    io::write_edge_list(&g, &path).unwrap();
+    let g2 = io::read_edge_list(&path, false).unwrap();
+    assert_eq!(g.vertex_count(), g2.vertex_count());
+    assert_eq!(g.edge_count(), g2.edge_count());
+    // identical canonical edge list => identical edge ids
+    assert_eq!(g.edges(), g2.edges());
+    // identical CSR adjacency (neighbors + edge ids, in order)
+    for v in 0..g.vertex_count() as u32 {
+        assert_eq!(g.neighbors(v), g2.neighbors(v), "vertex {v}");
+    }
+}
+
+#[test]
+fn every_edge_owned_exactly_once() {
+    let g = GraphKind::PowerlawCluster { n: 800, m: 5, p: 0.3 }.generate(5);
+    for (name, p) in [
+        ("DFEP", Dfep::default().partition(&g, 8, 2)),
+        ("DFEPC", Dfepc::default().partition(&g, 8, 2)),
+    ] {
+        p.validate(&g).unwrap();
+        // one owner entry per edge, each a valid partition id, and the
+        // per-part edge sets tile the edge id space exactly
+        assert_eq!(p.owner.len(), g.edge_count(), "{name}");
+        let mut seen = vec![0u32; g.edge_count()];
+        for set in p.edge_sets() {
+            for e in set {
+                seen[e as usize] += 1;
+            }
+        }
+        assert!(
+            seen.iter().all(|&c| c == 1),
+            "{name}: some edge owned != once"
+        );
+        assert_eq!(
+            p.sizes().iter().sum::<usize>(),
+            g.edge_count(),
+            "{name}"
+        );
+    }
+}
+
+#[test]
+fn dfep_partition_bit_identical_across_1_2_8_threads() {
+    let g = GraphKind::PowerlawCluster { n: 3_000, m: 5, p: 0.3 }.generate(7);
+    let base = pool::with_threads(1, || Dfep::default().partition(&g, 8, 3));
+    let r_base = metrics::evaluate(&g, &base);
+    for threads in [2usize, 8] {
+        let p =
+            pool::with_threads(threads, || Dfep::default().partition(&g, 8, 3));
+        assert_eq!(p.owner, base.owner, "{threads} threads: owners differ");
+        assert_eq!(
+            p.rounds, base.rounds,
+            "{threads} threads: round counts differ"
+        );
+        let r = metrics::evaluate(&g, &p);
+        assert_eq!(r.nstdev.to_bits(), r_base.nstdev.to_bits());
+        assert_eq!(r.largest.to_bits(), r_base.largest.to_bits());
+        assert_eq!(r.messages, r_base.messages);
+        assert_eq!(r.disconnected.to_bits(), r_base.disconnected.to_bits());
+    }
+}
+
+#[test]
+fn dfepc_partition_bit_identical_across_1_2_8_threads() {
+    // DFEPC exercises the poor/rich raid path through the same parallel
+    // round; a high-diameter graph makes raids actually happen
+    let g = GraphKind::RoadNetwork {
+        rows: 16,
+        cols: 16,
+        drop: 0.2,
+        subdiv: 2,
+        shortcuts: 0,
+    }
+    .generate(4);
+    let base = pool::with_threads(1, || Dfepc::default().partition(&g, 6, 9));
+    for threads in [2usize, 8] {
+        let p = pool::with_threads(threads, || {
+            Dfepc::default().partition(&g, 6, 9)
+        });
+        assert_eq!(p.owner, base.owner, "{threads} threads");
+        assert_eq!(p.rounds, base.rounds, "{threads} threads");
+    }
+}
+
+#[test]
+fn etsch_results_and_rounds_stable_across_thread_counts() {
+    let g = GraphKind::PowerlawCluster { n: 1_000, m: 4, p: 0.3 }.generate(6);
+    let p = Dfep::default().partition(&g, 6, 1);
+    let run = |threads: usize| {
+        pool::with_threads(threads, || {
+            let mut engine = Etsch::new(&g, &p);
+            let dist = engine.run(&mut Sssp::new(0));
+            (dist, engine.rounds_executed(), engine.stats().clone())
+        })
+    };
+    let (d1, rounds1, stats1) = run(1);
+    for threads in [2usize, 8] {
+        let (d, rounds, stats) = run(threads);
+        assert_eq!(d, d1, "{threads} threads: distances differ");
+        assert_eq!(rounds, rounds1, "{threads} threads: rounds differ");
+        assert_eq!(
+            stats.messages_exchanged, stats1.messages_exchanged,
+            "{threads} threads"
+        );
+        assert_eq!(
+            stats.messages_ceiling, stats1.messages_ceiling,
+            "{threads} threads"
+        );
+    }
+}

@@ -31,14 +31,20 @@ fn partitioners() -> Vec<Box<dyn Partitioner>> {
     ]
 }
 
+// Every test below threads *explicit* `u64` seeds: each case draws its
+// named seeds up front (graph construction happens inside `Gen`, which is
+// itself a deterministic function of the case seed), so no assertion
+// depends on ambient draw order or on container iteration order. The
+// `every_partitioner_is_deterministic_per_seed` property pins this.
+
 #[test]
 fn every_partitioner_yields_a_disjoint_cover() {
     forall(12, |g: &mut Gen| {
         let graph = g.any_graph(12, 120);
         let k = g.int(1, 9);
-        let seed = g.rng.next_u64();
+        let part_seed: u64 = g.rng.next_u64();
         for p in partitioners() {
-            let part = p.partition(&graph, k, seed);
+            let part = p.partition(&graph, k, part_seed);
             // complete cover with valid owners is exactly validate()
             part.validate(&graph).unwrap_or_else(|e| {
                 panic!("{}: {e}", p.name());
@@ -55,11 +61,30 @@ fn every_partitioner_yields_a_disjoint_cover() {
 }
 
 #[test]
+fn every_partitioner_is_deterministic_per_seed() {
+    // same explicit seed => identical ownership, twice over — guards
+    // against implicit randomness (thread scheduling, hash-map iteration
+    // order) leaking into any partitioner
+    forall(6, |g: &mut Gen| {
+        let graph = g.any_graph(12, 100);
+        let k = g.int(2, 6);
+        let part_seed: u64 = g.rng.next_u64();
+        for p in partitioners() {
+            let a = p.partition(&graph, k, part_seed);
+            let b = p.partition(&graph, k, part_seed);
+            assert_eq!(a.owner, b.owner, "{} not deterministic", p.name());
+            assert_eq!(a.rounds, b.rounds, "{} rounds differ", p.name());
+        }
+    });
+}
+
+#[test]
 fn vertex_sets_are_exactly_edge_endpoints() {
     forall(10, |g: &mut Gen| {
         let graph = g.any_graph(12, 100);
         let k = g.int(2, 6);
-        let part = Dfep::default().partition(&graph, k, g.rng.next_u64());
+        let part_seed: u64 = g.rng.next_u64();
+        let part = Dfep::default().partition(&graph, k, part_seed);
         let vsets = part.vertex_sets(&graph);
         let esets = part.edge_sets();
         for (vs, es) in vsets.iter().zip(esets.iter()) {
@@ -84,7 +109,8 @@ fn dfep_partitions_connected_on_connected_graphs() {
     forall(10, |g: &mut Gen| {
         let graph = g.graph(20, 150); // connected by construction
         let k = g.int(2, 8);
-        let part = Dfep::default().partition(&graph, k, g.rng.next_u64());
+        let part_seed: u64 = g.rng.next_u64();
+        let part = Dfep::default().partition(&graph, k, part_seed);
         let disc = metrics::disconnected_fraction(&graph, &part);
         assert_eq!(
             disc, 0.0,
@@ -98,7 +124,8 @@ fn messages_metric_counts_replicas() {
     forall(10, |g: &mut Gen| {
         let graph = g.any_graph(12, 80);
         let k = g.int(2, 5);
-        let part = RandomEdge.partition(&graph, k, g.rng.next_u64());
+        let part_seed: u64 = g.rng.next_u64();
+        let part = RandomEdge.partition(&graph, k, part_seed);
         // independent recomputation from vertex_sets
         let vsets = part.vertex_sets(&graph);
         let mut count = vec![0usize; graph.vertex_count()];
@@ -118,10 +145,10 @@ fn etsch_sssp_equals_bfs_under_any_partitioning() {
     forall(10, |g: &mut Gen| {
         let graph = g.any_graph(12, 100);
         let k = g.int(1, 6);
-        let seed = g.rng.next_u64();
+        let part_seed: u64 = g.rng.next_u64();
         let source = g.int(0, graph.vertex_count() - 1) as u32;
         for p in partitioners() {
-            let part = p.partition(&graph, k, seed);
+            let part = p.partition(&graph, k, part_seed);
             let mut engine = Etsch::new(&graph, &part);
             let got = engine.run(&mut Sssp::new(source));
             let want = stats::bfs_distances(&graph, source);
@@ -146,11 +173,12 @@ fn etsch_cc_equals_union_find_components() {
     forall(10, |g: &mut Gen| {
         let graph = g.any_graph(12, 100);
         let k = g.int(1, 6);
-        let part =
-            RandomEdge.partition(&graph, k, g.rng.next_u64());
+        let part_seed: u64 = g.rng.next_u64();
+        let label_seed: u64 = g.rng.next_u64();
+        let part = RandomEdge.partition(&graph, k, part_seed);
         let mut engine = Etsch::new(&graph, &part);
         let labels =
-            engine.run(&mut ConnectedComponents::new(g.rng.next_u64()));
+            engine.run(&mut ConnectedComponents::new(label_seed));
         let (want, _) = stats::components(&graph);
         for u in 0..graph.vertex_count() {
             for v in (u + 1)..graph.vertex_count() {
@@ -173,9 +201,11 @@ fn luby_mis_always_valid() {
     forall(8, |g: &mut Gen| {
         let graph = g.graph(15, 90);
         let k = g.int(1, 5);
-        let part = Dfep::default().partition(&graph, k, g.rng.next_u64());
+        let part_seed: u64 = g.rng.next_u64();
+        let luby_seed: u64 = g.rng.next_u64();
+        let part = Dfep::default().partition(&graph, k, part_seed);
         let mut engine = Etsch::new(&graph, &part);
-        let states = engine.run(&mut LubyMis::new(g.rng.next_u64()));
+        let states = engine.run(&mut LubyMis::new(luby_seed));
         let in_set: Vec<bool> = states
             .iter()
             .map(|s| s.status == mis::Status::InSet)
@@ -189,13 +219,15 @@ fn rounds_and_gain_are_sane() {
     forall(8, |g: &mut Gen| {
         let graph = g.graph(20, 120);
         let k = g.int(2, 6);
-        let part = Dfep::default().partition(&graph, k, g.rng.next_u64());
+        let part_seed: u64 = g.rng.next_u64();
+        let gain_seed: u64 = g.rng.next_u64();
+        let part = Dfep::default().partition(&graph, k, part_seed);
         assert!(part.rounds > 0);
         let gain = dfep::etsch::gain::average_gain(
             &graph,
             &part,
             2,
-            g.rng.next_u64(),
+            gain_seed,
         );
         assert!((0.0..=1.0).contains(&gain), "gain {gain}");
     });
@@ -207,6 +239,8 @@ fn rewiring_preserves_vertexish_size_and_lowers_diameter_in_trend() {
         use dfep::graph::generators::GraphKind;
         use dfep::graph::rewire;
         let side = g.int(8, 13);
+        let road_seed: u64 = g.rng.next_u64();
+        let rewire_seed: u64 = g.rng.next_u64();
         let graph = GraphKind::RoadNetwork {
             rows: side,
             cols: side,
@@ -214,9 +248,9 @@ fn rewiring_preserves_vertexish_size_and_lowers_diameter_in_trend() {
             subdiv: 3,
             shortcuts: 0,
         }
-        .generate(g.rng.next_u64());
+        .generate(road_seed);
         let rewired =
-            rewire::rewire_fraction(&graph, 0.3, g.rng.next_u64());
+            rewire::rewire_fraction(&graph, 0.3, rewire_seed);
         assert!(
             rewired.edge_count() as f64
                 >= 0.85 * graph.edge_count() as f64
