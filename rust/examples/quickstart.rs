@@ -5,6 +5,7 @@
 
 use dfep::etsch::{cc::ConnectedComponents, sssp::Sssp, Etsch};
 use dfep::graph::generators::GraphKind;
+use dfep::partition::view::PartitionView;
 use dfep::partition::{dfep::Dfep, metrics, Partitioner};
 
 fn main() {
@@ -21,7 +22,10 @@ fn main() {
     let k = 8;
     let (part, secs) =
         dfep::util::timer::time(|| Dfep::default().partition(&g, k, 1));
-    let report = metrics::evaluate(&g, &part);
+    // derive the partition's shared state (edge CSRs, replica table,
+    // frontier flags) once; metrics and ETSCH both read from it
+    let view = PartitionView::build(&g, &part);
+    let report = metrics::evaluate_with(&g, &part, &view);
     println!("\nDFEP (k = {k}) in {secs:.3}s:");
     println!("  rounds        {}", report.rounds);
     println!("  largest part  {:.3} (1.0 = perfectly balanced)", report.largest);
@@ -30,7 +34,8 @@ fn main() {
     println!("  disconnected  {:.1}%", report.disconnected * 100.0);
 
     // 3. ETSCH: single-source shortest paths over the edge partitions
-    let mut engine = Etsch::new(&g, &part);
+    // (sharing the view built above — no re-derivation)
+    let mut engine = Etsch::from_view(&g, &view);
     let dist = engine.run(&mut Sssp::new(0));
     let reached = dist.iter().filter(|&&d| d != u32::MAX).count();
     println!(

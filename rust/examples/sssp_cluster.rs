@@ -16,14 +16,15 @@
 use dfep::cluster::cost::CostModel;
 use dfep::cluster::dfep_mr::{resimulate, run_cluster_dfep};
 use dfep::cluster::etsch_mr::{run_baseline_sssp, run_etsch_sssp};
-use dfep::etsch::build_subgraphs;
 use dfep::graph::{datasets, stats};
+use dfep::partition::view::PartitionView;
 use dfep::partition::Partitioner;
 use dfep::runtime::blocktiled::{relax_to_fixpoint, TiledSubgraph};
 use dfep::runtime::{Runtime, INF32};
+use dfep::util::error::Result;
 use dfep::util::timer::time;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     // ---- 1. workload -----------------------------------------------------
     let dataset = datasets::dblp();
     let (g, gen_secs) = time(|| dataset.scaled(0.10, 42));
@@ -55,15 +56,21 @@ fn main() -> anyhow::Result<()> {
             run8.total_time / t
         );
     }
-    let report =
-        dfep::partition::metrics::evaluate(&g, &run8.partition);
+    // one shared derived-state build: quality metrics + the subgraphs the
+    // XLA local phase consumes below
+    let view = PartitionView::build(&g, &run8.partition);
+    let report = dfep::partition::metrics::evaluate_with(
+        &g,
+        &run8.partition,
+        &view,
+    );
     println!(
         "  partition quality: largest={:.3} nstdev={:.4} messages={}",
         report.largest, report.nstdev, report.messages
     );
 
     // ---- 3. ETSCH local phase on the AOT Pallas kernel via PJRT ----------
-    let subs = build_subgraphs(&g, &run8.partition);
+    let subs = view.subgraphs();
     match Runtime::open_default() {
         Ok(rt) => {
             println!("\nXLA local phase ({} platform):", rt.platform());

@@ -5,15 +5,16 @@
 //!
 //!     make artifacts && cargo run --release --example xla_engine
 
-use dfep::etsch::build_subgraphs;
 use dfep::graph::generators::GraphKind;
+use dfep::partition::view::PartitionView;
 use dfep::partition::{dfep::Dfep, metrics, Partitioner};
 use dfep::runtime::blocktiled::{relax_to_fixpoint, TiledSubgraph};
 use dfep::runtime::xla_engine::XlaDfep;
 use dfep::runtime::{Runtime, INF32};
+use dfep::util::error::Result;
 use dfep::util::timer::time;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let rt = Runtime::open_default()?;
     println!("PJRT platform: {}", rt.platform());
     println!("artifacts:");
@@ -35,7 +36,9 @@ fn main() -> anyhow::Result<()> {
     let (px, tx) =
         time(|| XlaDfep::default().partition(&rt, &g, k, 3).unwrap());
     let (pr, tr) = time(|| Dfep::default().partition(&g, k, 3));
-    let rx = metrics::evaluate(&g, &px);
+    // one shared derivation per partition: metrics here, subgraphs below
+    let view = PartitionView::build(&g, &px);
+    let rx = metrics::evaluate_with(&g, &px, &view);
     let rr = metrics::evaluate(&g, &pr);
     println!("\nDFEP engines (k={k}):");
     println!(
@@ -48,8 +51,11 @@ fn main() -> anyhow::Result<()> {
     );
 
     // --- ETSCH local phase on the Pallas kernel --------------------------
-    let subs = build_subgraphs(&g, &px);
-    let sub = subs.iter().max_by_key(|s| s.vertex_count()).unwrap();
+    let sub = view
+        .subgraphs()
+        .iter()
+        .max_by_key(|s| s.vertex_count())
+        .unwrap();
     let tiled = TiledSubgraph::pack(sub, 1.0);
     let mut init = vec![INF32; sub.vertex_count()];
     init[0] = 0.0;

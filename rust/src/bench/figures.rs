@@ -12,8 +12,10 @@ use crate::bench::harness::{fmt_f, sample_seeds, Table};
 use crate::cluster::cost::CostModel;
 use crate::cluster::dfep_mr::{resimulate, run_cluster_dfep};
 use crate::cluster::etsch_mr::{run_baseline_sssp, run_etsch_sssp};
-use crate::etsch::gain::average_gain;
+use crate::etsch::gain::{average_gain, average_gain_with};
+use crate::etsch::Etsch;
 use crate::graph::{datasets, rewire, stats, Graph};
+use crate::partition::view::PartitionView;
 use crate::partition::{
     dfep::Dfep, dfepc::Dfepc, jabeja::JaBeJa, metrics, Partitioner,
 };
@@ -78,14 +80,17 @@ pub fn measure(
     let mut disc = Vec::new();
     for &s in &seeds {
         let part = p.partition(g, k, s);
-        let r = metrics::evaluate(g, &part);
+        // one shared derivation per sample: metrics + every gain run
+        let view = PartitionView::build(g, &part);
+        let r = metrics::evaluate_with(g, &part, &view);
         largest.push(r.largest);
         nstdev.push(r.nstdev);
         messages.push(r.messages as f64);
         rounds.push(r.rounds as f64);
         disc.push(r.disconnected);
         if gain_samples > 0 {
-            gains.push(average_gain(g, &part, gain_samples, s));
+            let mut engine = Etsch::from_view(g, &view);
+            gains.push(average_gain_with(g, &mut engine, gain_samples, s));
         }
     }
     Cell {
@@ -436,6 +441,44 @@ pub fn hotpath_with(quick: bool) {
     ]);
     sink.num("etsch_sssp_mean_s", s.mean);
 
+    // partition_view series: the shared derived-state layer — one view
+    // build, the full metric evaluation on top of it, and engine
+    // construction (which is exactly one view build since PR 2)
+    let view = PartitionView::build(&g, &p);
+    {
+        let mut series = |name: &str, key: &str, times: Vec<f64>| {
+            let s = Summary::of(&times);
+            t.row(&[
+                name.into(),
+                fmt_f(s.mean),
+                fmt_f(s.p95),
+                fmt_f(g.edge_count() as f64 / s.mean / 1e6),
+            ]);
+            sink.num(key, s.mean);
+        };
+        series(
+            "PartitionView build",
+            "partition_view_build_mean_s",
+            crate::util::timer::time_n(warmup, n, || {
+                let _ = PartitionView::build(&g, &p);
+            }),
+        );
+        series(
+            "metrics::evaluate_with (prebuilt view)",
+            "metrics_evaluate_mean_s",
+            crate::util::timer::time_n(warmup, n, || {
+                let _ = metrics::evaluate_with(&g, &p, &view);
+            }),
+        );
+        series(
+            "Etsch::new (view build)",
+            "etsch_new_mean_s",
+            crate::util::timer::time_n(warmup, n, || {
+                let _ = crate::etsch::Etsch::new(&g, &p);
+            }),
+        );
+    }
+
     // XLA runtime paths (L1 kernel tile + L2 fused fixpoint + funding)
     if let Ok(rt) = crate::runtime::Runtime::open_default() {
         use crate::runtime::{Tensor, INF32};
@@ -454,8 +497,11 @@ pub fn hotpath_with(quick: bool) {
             fmt_f(s.p95),
             fmt_f(256.0 * 256.0 / s.mean / 1e6),
         ]);
-        let sub = crate::etsch::build_subgraphs(&g, &p);
-        let big = sub.iter().max_by_key(|s| s.vertex_count()).unwrap();
+        let big = view
+            .subgraphs()
+            .iter()
+            .max_by_key(|s| s.vertex_count())
+            .unwrap();
         let tiled =
             crate::runtime::blocktiled::TiledSubgraph::pack(big, 1.0);
         let mut init = vec![INF32; big.vertex_count()];

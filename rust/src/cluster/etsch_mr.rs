@@ -13,6 +13,7 @@ use super::cost::{CostModel, RoundWork};
 use super::mapreduce::{run_round, VertexJob};
 use crate::etsch::{sssp::Sssp, Etsch};
 use crate::graph::Graph;
+use crate::partition::view::PartitionView;
 use crate::partition::EdgePartition;
 
 const MSG_BYTES: f64 = 12.0;
@@ -38,20 +39,23 @@ pub fn run_etsch_sssp(
     nodes: usize,
     cost: &CostModel,
 ) -> ClusterSsspRun {
-    let mut engine = Etsch::new(g, p);
+    // one shared derived-state build serves the engine and the per-round
+    // work-volume measurements below
+    let view = PartitionView::build(g, p);
+    let mut engine = Etsch::from_view(g, &view);
     let dist = engine.run(&mut Sssp::new(source));
     let stats = engine.stats();
     // per-round volumes: the local phase reads every replica vertex as a
     // record but walks the partition's edges *in memory* inside one map
     // task (the whole point of ETSCH's local computation); aggregation
     // shuffles frontier states.
-    let replica_vertices: f64 = engine
+    let replica_vertices: f64 = view
         .subgraphs()
         .iter()
         .map(|s| s.vertex_count() as f64)
         .sum();
     let part_edges: f64 =
-        engine.subgraphs().iter().map(|s| s.edge_count as f64).sum();
+        view.subgraphs().iter().map(|s| s.edge_count as f64).sum();
     let frontier = (stats.messages_ceiling as f64
         / stats.rounds.max(1) as f64)
         .max(1.0);

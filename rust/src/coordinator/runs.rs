@@ -15,6 +15,7 @@ use crate::partition::{
     jabeja::JaBeJa,
     metrics::{self, Report},
     multilevel::Multilevel,
+    view::PartitionView,
     EdgePartition, Partitioner,
 };
 
@@ -160,9 +161,18 @@ pub fn run(g: &Graph, cfg: &RunConfig) -> RunResult {
     let (partition, partition_secs) = crate::util::timer::time(|| {
         partitioner.partition(g, cfg.k, cfg.seed)
     });
-    let report = metrics::evaluate(g, &partition);
+    // one shared derived-state build serves the metrics and (when gain is
+    // requested) every ETSCH run
+    let view = PartitionView::build(g, &partition);
+    let report = metrics::evaluate_with(g, &partition, &view);
     let gain = if cfg.gain_samples > 0 {
-        Some(gain::average_gain(g, &partition, cfg.gain_samples, cfg.seed))
+        let mut engine = Etsch::from_view(g, &view);
+        Some(gain::average_gain_with(
+            g,
+            &mut engine,
+            cfg.gain_samples,
+            cfg.seed,
+        ))
     } else {
         None
     };

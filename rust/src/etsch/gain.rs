@@ -14,8 +14,19 @@ use crate::util::rng::Rng;
 /// Gain for one source vertex: `1 - etsch_rounds / baseline_supersteps`
 /// (clamped at 0; both engines count their trailing quiescence check).
 pub fn gain_for_source(g: &Graph, p: &EdgePartition, source: u32) -> f64 {
-    let baseline = bsp_sssp(g, source).supersteps.max(1);
     let mut engine = Etsch::new(g, p);
+    gain_for_source_with(g, &mut engine, source)
+}
+
+/// [`gain_for_source`] on an engine the caller already built — each run
+/// resets the engine's stats, so one engine (one `PartitionView` build)
+/// serves any number of sources.
+pub fn gain_for_source_with(
+    g: &Graph,
+    engine: &mut Etsch,
+    source: u32,
+) -> f64 {
+    let baseline = bsp_sssp(g, source).supersteps.max(1);
     engine.run(&mut Sssp::new(source));
     let etsch = engine.rounds_executed();
     (1.0 - etsch as f64 / baseline as f64).max(0.0)
@@ -23,9 +34,21 @@ pub fn gain_for_source(g: &Graph, p: &EdgePartition, source: u32) -> f64 {
 
 /// Average gain over `samples` random sources (the paper plots a mean
 /// over 100 partition samples; sources add a second averaging dimension).
+/// Derives the partition state once for all sources.
 pub fn average_gain(
     g: &Graph,
     p: &EdgePartition,
+    samples: usize,
+    seed: u64,
+) -> f64 {
+    let mut engine = Etsch::new(g, p);
+    average_gain_with(g, &mut engine, samples, seed)
+}
+
+/// [`average_gain`] on a caller-built engine (shared view).
+pub fn average_gain_with(
+    g: &Graph,
+    engine: &mut Etsch,
     samples: usize,
     seed: u64,
 ) -> f64 {
@@ -33,7 +56,7 @@ pub fn average_gain(
     let mut total = 0.0;
     for _ in 0..samples {
         let s = rng.below(g.vertex_count()) as u32;
-        total += gain_for_source(g, p, s);
+        total += gain_for_source_with(g, engine, s);
     }
     total / samples as f64
 }

@@ -17,6 +17,15 @@ pub struct KCoreState {
     pub partial_deg: u32,
 }
 
+/// Post-aggregation `partial_deg` marker on surviving vertices. The peel
+/// rule must be *re-applied* every round while a vertex is alive — even
+/// when its recomputed alive-degree lands on the same number (e.g. drops
+/// to 0 because the last neighbor died), which a plain reset-to-0 would
+/// make invisible to the engine's change-driven aggregation. `local`
+/// always overwrites `partial_deg`, so the marker never reaches
+/// [`KCore::aggregate`]'s sum.
+const REEVAL: u32 = u32::MAX;
+
 #[derive(Clone, Debug)]
 pub struct KCore {
     pub k: u32,
@@ -54,9 +63,13 @@ impl Algorithm for KCore {
     }
 
     fn aggregate(&self, replicas: &[KCoreState]) -> KCoreState {
-        let alive = replicas[0].alive; // alive flag is replicated equally
+        let was_alive = replicas[0].alive; // alive flag replicated equally
         let total: u32 = replicas.iter().map(|r| r.partial_deg).sum();
-        KCoreState { alive: alive && total >= self.k, partial_deg: 0 }
+        let alive = was_alive && total >= self.k;
+        KCoreState {
+            alive,
+            partial_deg: if alive { REEVAL } else { 0 },
+        }
     }
 }
 
@@ -115,6 +128,21 @@ mod tests {
         let got = run_etsch(&g, 2, 2, 1);
         assert_eq!(got, vec![true, true, true, false]);
         assert_eq!(got, kcore_ref(&g, 2));
+    }
+
+    #[test]
+    fn peel_cascade_reaches_vertices_whose_alive_degree_drops_to_zero() {
+        // path 0-1-2, k=2: the endpoints die in round 1 and vertex 1's
+        // alive-degree then recomputes to 0 — the same value aggregation
+        // reset it to. The REEVAL marker keeps vertex 1 dirty so the peel
+        // rule is re-applied and it dies too (regression test for the
+        // change-driven aggregation).
+        let g = GraphBuilder::new().add_edge(0, 1).add_edge(1, 2).build();
+        for part_k in [1usize, 2] {
+            let got = run_etsch(&g, part_k, 2, 3);
+            assert_eq!(got, vec![false, false, false], "part_k={part_k}");
+            assert_eq!(got, kcore_ref(&g, 2), "part_k={part_k}");
+        }
     }
 
     #[test]

@@ -10,9 +10,18 @@
 //!
 //! Steps 2 and 3 repeat until no state changes (or the algorithm's round
 //! bound). The engine counts rounds and frontier messages — the paper's
-//! §V-A metrics — and runs workers on std threads (one per partition;
-//! tokio is not in the vendored crate set, and the local phase is pure
-//! CPU anyway).
+//! §V-A metrics — and runs workers on the shared [`crate::util::pool`]
+//! (one shard per partition; tokio is not in the vendored crate set, and
+//! the local phase is pure CPU anyway).
+//!
+//! All derived partition state (subgraphs, the replica table, frontier
+//! flags) comes from a shared [`PartitionView`]: [`Etsch::new`] builds
+//! one, [`Etsch::from_view`] borrows one the caller already built (e.g.
+//! for metrics). Aggregation is *change-driven*: the local phase emits
+//! per-part dirty-vertex lists and the aggregation visits only the
+//! replicas of dirty vertices, instead of re-aggregating every replica
+//! of every vertex each round ([`Etsch::run_dense`] keeps the dense
+//! reference for the equivalence tests).
 
 pub mod betweenness;
 pub mod cc;
@@ -25,7 +34,10 @@ pub mod sssp;
 pub mod subgraph;
 pub mod vertex_baseline;
 
+use std::borrow::Cow;
+
 use crate::graph::Graph;
+use crate::partition::view::PartitionView;
 use crate::partition::EdgePartition;
 pub use subgraph::{build_subgraphs, Subgraph};
 
@@ -43,7 +55,22 @@ pub trait Algorithm: Send + Sync {
     fn local(&self, sub: &Subgraph, states: &mut [Self::State]);
 
     /// Aggregation phase: reconcile replica states (called for every
-    /// vertex; non-frontier vertices pass a single replica).
+    /// vertex whose state changed during the local phase; non-frontier
+    /// vertices pass a single replica).
+    ///
+    /// Contract for change-driven aggregation: `aggregate` must be a
+    /// deterministic function of `replicas`, and a vertex none of whose
+    /// replica states moved in the local phase must not need
+    /// re-aggregation. All transient accumulator fields (`partial` sums,
+    /// vote lists) must be rebuilt from scratch by
+    /// [`local`](Algorithm::local), so a skipped aggregation can never
+    /// leak a stale accumulator into the next round. If a rule must be
+    /// re-applied even when the rebuilt accumulator can collide with the
+    /// post-aggregation reset value, reset the accumulator to a marker
+    /// `local` can never produce instead (see `kcore::REEVAL`). The
+    /// shipped algorithms are pinned to the dense reference by the
+    /// equivalence tests in `tests/properties.rs` (betweenness's phases
+    /// by the Brandes-oracle tests).
     fn aggregate(&self, replicas: &[Self::State]) -> Self::State;
 
     /// Round bound (for algorithms without natural quiescence).
@@ -60,77 +87,216 @@ pub trait Algorithm: Send + Sync {
 pub struct RunStats {
     /// Local-computation + aggregation rounds executed.
     pub rounds: usize,
-    /// Total replica states exchanged during aggregations (Σ per round of
-    /// Σ_i |F_i ∩ changed|; the paper's MESSAGES counts the per-round
-    /// ceiling Σ_i |F_i| — we track both).
+    /// Replica states actually exchanged during aggregations: Σ per round
+    /// of Σ_i |F_i ∩ changed| — only frontier vertices whose state moved
+    /// in the local phase need their replicas reconciled. (The paper's
+    /// MESSAGES counts the per-round ceiling Σ_i |F_i|; we track both.)
     pub messages_exchanged: usize,
     /// Per-round ceiling: Σ_i |F_i| * rounds.
     pub messages_ceiling: usize,
 }
 
+/// Per-part working set of one run: the live replica states, the
+/// pre-round snapshot the dirty diff compares against, and this round's
+/// dirty local-vertex list.
+struct PartSlot<'s, S> {
+    sub: &'s Subgraph,
+    states: Vec<S>,
+    /// States as of the start of the round (== the post-aggregation
+    /// values; aggregation keeps this in sync so no per-round clone of
+    /// the full state vector is needed).
+    prev: Vec<S>,
+    dirty: Vec<u32>,
+}
+
 /// The ETSCH engine bound to one graph + partitioning.
-pub struct Etsch<'g> {
-    g: &'g Graph,
-    subs: Vec<Subgraph>,
-    /// replica locations per global vertex: (partition, local id)
-    replicas: Vec<Vec<(u32, u32)>>,
-    frontier_total: usize,
+///
+/// All derived partition state comes from a [`PartitionView`]:
+/// [`new`](Self::new) builds one, [`from_view`](Self::from_view) borrows
+/// a caller-built one so metrics and the engine share a single build.
+pub struct Etsch<'a> {
+    g: &'a Graph,
+    view: Cow<'a, PartitionView>,
     stats: RunStats,
 }
 
-impl<'g> Etsch<'g> {
-    pub fn new(g: &'g Graph, p: &EdgePartition) -> Self {
-        let subs = build_subgraphs(g, p);
-        let mut replicas: Vec<Vec<(u32, u32)>> =
-            vec![Vec::new(); g.vertex_count()];
-        for s in &subs {
-            for (l, &gv) in s.global.iter().enumerate() {
-                replicas[gv as usize].push((s.part as u32, l as u32));
-            }
+impl<'a> Etsch<'a> {
+    /// Build the engine, deriving a fresh [`PartitionView`].
+    pub fn new(g: &'a Graph, p: &EdgePartition) -> Self {
+        Etsch {
+            g,
+            view: Cow::Owned(PartitionView::build(g, p)),
+            stats: RunStats::default(),
         }
-        let frontier_total =
-            replicas.iter().filter(|r| r.len() >= 2).map(|r| r.len()).sum();
-        Etsch { g, subs, replicas, frontier_total, stats: RunStats::default() }
+    }
+
+    /// Build the engine on a view the caller already derived (no extra
+    /// pass over the partition).
+    pub fn from_view(g: &'a Graph, view: &'a PartitionView) -> Self {
+        Etsch { g, view: Cow::Borrowed(view), stats: RunStats::default() }
+    }
+
+    /// The shared derived-state view this engine runs on.
+    pub fn view(&self) -> &PartitionView {
+        &self.view
     }
 
     /// Partition subgraphs (for inspection / the XLA-backed local phase).
     pub fn subgraphs(&self) -> &[Subgraph] {
-        &self.subs
+        self.view.subgraphs()
     }
 
     /// Run an algorithm to quiescence; returns the per-vertex final state.
+    ///
+    /// Aggregation is change-driven: the parallel local phase diffs each
+    /// part's states against its pre-round snapshot and emits a dirty
+    /// local-vertex list; the aggregation visits only the replicas of
+    /// dirty vertices. Final states, round counts and message counts are
+    /// identical to the dense reference [`run_dense`](Self::run_dense)
+    /// (property-tested), and bit-identical across pool thread counts.
     pub fn run<A: Algorithm>(&mut self, alg: &mut A) -> Vec<A::State> {
-        self.stats = RunStats::default();
+        let g = self.g;
+        let view: &PartitionView = &self.view;
+        let n = g.vertex_count();
+        let mut stats = RunStats::default();
+
         // init (global), then scatter to replicas
-        let global_init: Vec<A::State> =
-            (0..self.g.vertex_count() as u32)
-                .map(|v| alg.init(v, self.g))
-                .collect();
-        let mut local_states: Vec<Vec<A::State>> = self
-            .subs
+        let mut global: Vec<A::State> =
+            (0..n as u32).map(|v| alg.init(v, g)).collect();
+        let mut slots: Vec<PartSlot<'_, A::State>> = view
+            .subgraphs()
+            .iter()
+            .map(|s| {
+                let states: Vec<A::State> = s
+                    .global
+                    .iter()
+                    .map(|&gv| global[gv as usize].clone())
+                    .collect();
+                PartSlot {
+                    sub: s,
+                    prev: states.clone(),
+                    states,
+                    dirty: Vec::new(),
+                }
+            })
+            .collect();
+
+        let max_rounds = alg.max_rounds();
+        // round-stamped dedup scratch for the global dirty list
+        let mut mark = vec![usize::MAX; n];
+        let mut dirty_global: Vec<u32> = Vec::new();
+        let mut buf: Vec<A::State> = Vec::with_capacity(4);
+        loop {
+            if stats.rounds >= max_rounds {
+                break;
+            }
+            alg.begin_round(stats.rounds);
+            // ---- local computation phase (parallel over partitions) ----
+            // one pool shard per partition; each shard also diffs its
+            // states against the pre-round snapshot to emit a dirty list
+            {
+                let alg_ref: &A = alg;
+                crate::util::pool::run_mut(
+                    &mut slots,
+                    &|_, slot: &mut PartSlot<'_, A::State>| {
+                        alg_ref.local(slot.sub, &mut slot.states);
+                        slot.dirty.clear();
+                        for (l, (now, before)) in slot
+                            .states
+                            .iter()
+                            .zip(slot.prev.iter())
+                            .enumerate()
+                        {
+                            if now != before {
+                                slot.dirty.push(l as u32);
+                            }
+                        }
+                    },
+                );
+            }
+            // ---- change-driven aggregation phase ----
+            // merge per-part dirty lists into one ascending global list
+            // (stamp-deduped; fixed part order keeps this deterministic)
+            dirty_global.clear();
+            for slot in &slots {
+                for &l in &slot.dirty {
+                    let gv = slot.sub.global[l as usize] as usize;
+                    if mark[gv] != stats.rounds {
+                        mark[gv] = stats.rounds;
+                        dirty_global.push(gv as u32);
+                    }
+                }
+            }
+            dirty_global.sort_unstable();
+            let mut changed = false;
+            let mut exchanged = 0usize;
+            for &v in &dirty_global {
+                let reps = view.replicas_of(v);
+                buf.clear();
+                for &(p, l) in reps {
+                    buf.push(
+                        slots[p as usize].states[l as usize].clone(),
+                    );
+                }
+                if reps.len() >= 2 {
+                    exchanged += reps.len();
+                }
+                let agg = alg.aggregate(&buf);
+                if agg != global[v as usize] {
+                    changed = true;
+                }
+                global[v as usize] = agg.clone();
+                for &(p, l) in reps {
+                    slots[p as usize].states[l as usize] = agg.clone();
+                    slots[p as usize].prev[l as usize] = agg.clone();
+                }
+            }
+            stats.rounds += 1;
+            stats.messages_exchanged += exchanged;
+            stats.messages_ceiling += view.frontier_total;
+            if !changed {
+                break;
+            }
+        }
+        self.stats = stats;
+        global
+    }
+
+    /// Dense reference aggregation: re-aggregates every replicated vertex
+    /// each round (the pre-view engine). Kept as the slow-path oracle the
+    /// equivalence tests compare [`run`](Self::run) against; message
+    /// accounting matches `run` (an exchange is counted only when some
+    /// replica actually moved during the local phase).
+    pub fn run_dense<A: Algorithm>(&mut self, alg: &mut A) -> Vec<A::State> {
+        let g = self.g;
+        let view: &PartitionView = &self.view;
+        let n = g.vertex_count();
+        let mut stats = RunStats::default();
+
+        let mut global: Vec<A::State> =
+            (0..n as u32).map(|v| alg.init(v, g)).collect();
+        let mut local_states: Vec<Vec<A::State>> = view
+            .subgraphs()
             .iter()
             .map(|s| {
                 s.global
                     .iter()
-                    .map(|&gv| global_init[gv as usize].clone())
+                    .map(|&gv| global[gv as usize].clone())
                     .collect()
             })
             .collect();
-        let mut global = global_init;
 
         let max_rounds = alg.max_rounds();
+        let mut buf: Vec<A::State> = Vec::with_capacity(4);
         loop {
-            if self.stats.rounds >= max_rounds {
+            if stats.rounds >= max_rounds {
                 break;
             }
-            alg.begin_round(self.stats.rounds);
-            // ---- local computation phase (parallel over partitions) ----
-            // one pool shard per partition worker; the pool's reusable
-            // threads replace the former per-round std::thread::spawn
+            alg.begin_round(stats.rounds);
             {
                 let alg_ref: &A = alg;
-                let mut tasks: Vec<(&Subgraph, &mut Vec<A::State>)> = self
-                    .subs
+                let mut tasks: Vec<(&Subgraph, &mut Vec<A::State>)> = view
+                    .subgraphs()
                     .iter()
                     .zip(local_states.iter_mut())
                     .collect();
@@ -141,21 +307,23 @@ impl<'g> Etsch<'g> {
                     },
                 );
             }
-            // ---- aggregation phase ----
             let mut changed = false;
             let mut exchanged = 0usize;
-            let mut buf: Vec<A::State> = Vec::with_capacity(4);
-            for (v, reps) in self.replicas.iter().enumerate() {
+            for v in 0..n {
+                let reps = view.replicas_of(v as u32);
                 if reps.is_empty() {
                     continue;
                 }
                 buf.clear();
+                let mut moved = false;
                 for &(p, l) in reps {
-                    buf.push(
-                        local_states[p as usize][l as usize].clone(),
-                    );
+                    let s = &local_states[p as usize][l as usize];
+                    if *s != global[v] {
+                        moved = true;
+                    }
+                    buf.push(s.clone());
                 }
-                if reps.len() >= 2 {
+                if moved && reps.len() >= 2 {
                     exchanged += reps.len();
                 }
                 let agg = alg.aggregate(&buf);
@@ -167,13 +335,14 @@ impl<'g> Etsch<'g> {
                     local_states[p as usize][l as usize] = agg.clone();
                 }
             }
-            self.stats.rounds += 1;
-            self.stats.messages_exchanged += exchanged;
-            self.stats.messages_ceiling += self.frontier_total;
+            stats.rounds += 1;
+            stats.messages_exchanged += exchanged;
+            stats.messages_ceiling += view.frontier_total;
             if !changed {
                 break;
             }
         }
+        self.stats = stats;
         global
     }
 
@@ -207,6 +376,43 @@ mod tests {
             assert_eq!(got, w2, "vertex {v}");
         }
         assert!(engine.rounds_executed() >= 1);
+    }
+
+    #[test]
+    fn dirty_aggregation_matches_dense_reference_on_sssp() {
+        let g = GraphKind::PowerlawCluster { n: 400, m: 4, p: 0.3 }
+            .generate(5);
+        let p = Dfep::default().partition(&g, 5, 2);
+        let view = crate::partition::view::PartitionView::build(&g, &p);
+        let (dirty, dirty_stats) = {
+            let mut e = Etsch::from_view(&g, &view);
+            let out = e.run(&mut sssp::Sssp::new(0));
+            (out, e.stats().clone())
+        };
+        let (dense, dense_stats) = {
+            let mut e = Etsch::from_view(&g, &view);
+            let out = e.run_dense(&mut sssp::Sssp::new(0));
+            (out, e.stats().clone())
+        };
+        assert_eq!(dirty, dense);
+        assert_eq!(dirty_stats.rounds, dense_stats.rounds);
+        assert_eq!(
+            dirty_stats.messages_exchanged,
+            dense_stats.messages_exchanged
+        );
+        assert_eq!(
+            dirty_stats.messages_ceiling,
+            dense_stats.messages_ceiling
+        );
+        // the exchange count is genuinely change-driven: this run's final
+        // quiescent round exchanges nothing while the ceiling still adds
+        // the full frontier, so strict inequality must hold
+        assert!(
+            dirty_stats.messages_exchanged < dirty_stats.messages_ceiling,
+            "exchanged {} not below ceiling {}",
+            dirty_stats.messages_exchanged,
+            dirty_stats.messages_ceiling
+        );
     }
 
     #[test]

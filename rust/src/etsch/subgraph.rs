@@ -1,105 +1,23 @@
 //! Per-partition local subgraph: the unit of work an ETSCH worker gets.
 //!
-//! Each partition's edges, their endpoint vertices re-indexed to a dense
-//! local id space, plus the frontier flags. Memory is O(|E_i|) per the
-//! paper's size argument (§II: |V_i| = O(|E_i|)).
+//! The [`Subgraph`] type itself lives in [`crate::partition::view`] — it
+//! is derived partition state, built once by
+//! [`PartitionView`](crate::partition::view::PartitionView) alongside the
+//! replica table and frontier flags. This module keeps the historical
+//! entry point as a thin projection of the view.
 
 use crate::graph::Graph;
+use crate::partition::view::PartitionView;
 use crate::partition::EdgePartition;
 
-/// A partition's induced subgraph with local vertex ids.
-#[derive(Clone, Debug)]
-pub struct Subgraph {
-    /// Which partition this is.
-    pub part: usize,
-    /// Global vertex id of each local vertex.
-    pub global: Vec<u32>,
-    /// Local CSR offsets (length = local vertex count + 1).
-    pub offsets: Vec<u32>,
-    /// Local adjacency: (local neighbor, global edge id).
-    pub adj: Vec<(u32, u32)>,
-    /// Frontier flag per local vertex (replicated in >= 2 partitions).
-    pub frontier: Vec<bool>,
-    /// Number of edges in this partition.
-    pub edge_count: usize,
-}
+pub use crate::partition::view::Subgraph;
 
-impl Subgraph {
-    #[inline]
-    pub fn vertex_count(&self) -> usize {
-        self.global.len()
-    }
-
-    #[inline]
-    pub fn neighbors(&self, v_local: u32) -> &[(u32, u32)] {
-        &self.adj[self.offsets[v_local as usize] as usize
-            ..self.offsets[v_local as usize + 1] as usize]
-    }
-
-    #[inline]
-    pub fn degree(&self, v_local: u32) -> usize {
-        (self.offsets[v_local as usize + 1] - self.offsets[v_local as usize])
-            as usize
-    }
-}
-
-/// Build all K subgraphs for a partitioning.
+/// Build all K subgraphs for a partitioning — a thin projection of
+/// [`PartitionView`]. Callers that also need metrics or an
+/// [`Etsch`](crate::etsch::Etsch) engine should build the view once and
+/// share it instead.
 pub fn build_subgraphs(g: &Graph, p: &EdgePartition) -> Vec<Subgraph> {
-    let mult = p.vertex_multiplicity(g);
-    let edge_sets = p.edge_sets();
-    let mut out = Vec::with_capacity(p.k);
-    let mut local_of = vec![u32::MAX; g.vertex_count()];
-    for (part, edges) in edge_sets.iter().enumerate() {
-        // collect local vertices in order of first appearance
-        let mut global: Vec<u32> = Vec::new();
-        for &e in edges {
-            let (u, v) = g.endpoints(e);
-            for w in [u, v] {
-                if local_of[w as usize] == u32::MAX {
-                    local_of[w as usize] = global.len() as u32;
-                    global.push(w);
-                }
-            }
-        }
-        let nv = global.len();
-        // local degree count
-        let mut deg = vec![0u32; nv + 1];
-        for &e in edges {
-            let (u, v) = g.endpoints(e);
-            deg[local_of[u as usize] as usize + 1] += 1;
-            deg[local_of[v as usize] as usize + 1] += 1;
-        }
-        let mut offsets = deg;
-        for i in 1..offsets.len() {
-            offsets[i] += offsets[i - 1];
-        }
-        let mut adj = vec![(0u32, 0u32); offsets[nv] as usize];
-        let mut cursor = offsets.clone();
-        for &e in edges {
-            let (u, v) = g.endpoints(e);
-            let (lu, lv) =
-                (local_of[u as usize], local_of[v as usize]);
-            adj[cursor[lu as usize] as usize] = (lv, e);
-            cursor[lu as usize] += 1;
-            adj[cursor[lv as usize] as usize] = (lu, e);
-            cursor[lv as usize] += 1;
-        }
-        let frontier =
-            global.iter().map(|&w| mult[w as usize] >= 2).collect();
-        // reset the scratch map for the next partition
-        for &w in &global {
-            local_of[w as usize] = u32::MAX;
-        }
-        out.push(Subgraph {
-            part,
-            global,
-            offsets,
-            adj,
-            frontier,
-            edge_count: edges.len(),
-        });
-    }
-    out
+    PartitionView::build(g, p).into_subgraphs()
 }
 
 #[cfg(test)]

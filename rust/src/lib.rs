@@ -19,9 +19,15 @@
 //! request path.
 //!
 //! Shared-memory parallelism comes from [`util::pool`]: DFEP's funding
-//! rounds, ETSCH's local-computation phase and the MapReduce engine all
-//! shard over the same reusable worker pool, with fixed-order reductions
-//! so results are bit-identical for every thread count.
+//! rounds, ETSCH's local-computation phase, the MapReduce engine and the
+//! [`partition::view::PartitionView`] build all shard over the same
+//! reusable worker pool, with fixed-order reductions so results are
+//! bit-identical for every thread count.
+//!
+//! Derived partition state (per-part edge CSRs, local subgraphs, the
+//! replica table, frontier flags) is built exactly once per
+//! (graph, partition) by [`partition::view::PartitionView`] and shared by
+//! the metrics, the ETSCH engine and the cluster simulators.
 //!
 //! Quick tour:
 //!

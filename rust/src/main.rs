@@ -152,13 +152,16 @@ fn cmd_etsch(args: &Args) -> Result<()> {
     let k = args.get_usize("k", 8)?;
     let seed = args.get_u64("seed", 1)?;
     let p = Dfep::default().partition(&g, k, seed);
-    let mut engine = dfep::etsch::Etsch::new(&g, &p);
+    // one derived-state build serves the frontier stats and the engine
+    let view = dfep::partition::view::PartitionView::build(&g, &p);
+    let mut engine = dfep::etsch::Etsch::from_view(&g, &view);
     let alg = args.get_or("alg", "sssp");
     println!(
-        "graph |V|={} |E|={}  DFEP k={k} ({} rounds)",
+        "graph |V|={} |E|={}  DFEP k={k} ({} rounds, {} frontier replicas)",
         g.vertex_count(),
         g.edge_count(),
-        p.rounds
+        p.rounds,
+        view.messages()
     );
     match alg {
         "sssp" => {

@@ -2,7 +2,13 @@
 //! size, NSTDEV), communication cost (MESSAGES = Σ|F_i|), connectedness,
 //! and path-compression *gain* (computed by the ETSCH engine, re-exported
 //! here for the report struct).
+//!
+//! Everything derived is read off a single [`PartitionView`] build —
+//! callers that also construct an ETSCH engine should build the view
+//! once and pass it to [`evaluate_with`] and
+//! [`Etsch::from_view`](crate::etsch::Etsch::from_view).
 
+use super::view::PartitionView;
 use super::EdgePartition;
 use crate::graph::Graph;
 
@@ -29,19 +35,26 @@ pub fn normalized_sizes(g: &Graph, p: &EdgePartition) -> Vec<f64> {
     p.sizes().iter().map(|&s| s as f64 / ideal).collect()
 }
 
+/// (largest, NSTDEV) over part sizes — the one copy of the §V-A balance
+/// formulas, shared by the standalone functions and [`evaluate_with`].
+fn balance(sizes: &[usize], edge_count: usize, k: usize) -> (f64, f64) {
+    let ideal = edge_count as f64 / k as f64;
+    let norm = sizes.iter().map(|&s| s as f64 / ideal);
+    let largest = norm.clone().fold(0.0f64, f64::max);
+    let nstdev = (norm.map(|x| (x - 1.0) * (x - 1.0)).sum::<f64>()
+        / k as f64)
+        .sqrt();
+    (largest, nstdev)
+}
+
 /// NSTDEV = sqrt( Σ (|E_i|/(E/K) - 1)^2 / K ).
 pub fn nstdev(g: &Graph, p: &EdgePartition) -> f64 {
-    let norm = normalized_sizes(g, p);
-    (norm.iter().map(|&x| (x - 1.0) * (x - 1.0)).sum::<f64>()
-        / p.k as f64)
-        .sqrt()
+    balance(&p.sizes(), g.edge_count(), p.k).1
 }
 
 /// Largest normalized partition size.
 pub fn largest(g: &Graph, p: &EdgePartition) -> f64 {
-    normalized_sizes(g, p)
-        .into_iter()
-        .fold(0.0f64, f64::max)
+    balance(&p.sizes(), g.edge_count(), p.k).0
 }
 
 /// MESSAGES = Σ_i |F_i|: every replica of a frontier vertex must exchange
@@ -57,65 +70,35 @@ pub fn messages(g: &Graph, p: &EdgePartition) -> usize {
 
 /// Fraction of partitions whose induced subgraph is disconnected
 /// (Fig 6e). Plain DFEP is always 0; DFEPC and JaBeJa-derived partitions
-/// may not be.
+/// may not be. Standalone convenience over one view build; callers with
+/// a view in hand use [`PartitionView::disconnected_fraction`].
 pub fn disconnected_fraction(g: &Graph, p: &EdgePartition) -> f64 {
-    let sets = p.edge_sets();
-    let mut disconnected = 0usize;
-    let mut nonempty = 0usize;
-    // reusable scratch keyed by vertex
-    let mut mark = vec![u32::MAX; g.vertex_count()];
-    let mut edge_of: std::collections::HashMap<u32, Vec<(u32, u32)>> =
-        std::collections::HashMap::new();
-    for (i, edges) in sets.iter().enumerate() {
-        if edges.is_empty() {
-            continue;
-        }
-        nonempty += 1;
-        // local adjacency over this part's edges
-        edge_of.clear();
-        for &e in edges {
-            let (u, v) = g.endpoints(e);
-            edge_of.entry(u).or_default().push((v, e));
-            edge_of.entry(v).or_default().push((u, e));
-        }
-        // BFS from the first edge's endpoint, over this part only
-        let stamp = i as u32;
-        let (start, _) = g.endpoints(edges[0]);
-        let mut stack = vec![start];
-        mark[start as usize] = stamp;
-        let mut seen_vertices = 1usize;
-        while let Some(u) = stack.pop() {
-            if let Some(nbrs) = edge_of.get(&u) {
-                for &(w, _) in nbrs {
-                    if mark[w as usize] != stamp {
-                        mark[w as usize] = stamp;
-                        seen_vertices += 1;
-                        stack.push(w);
-                    }
-                }
-            }
-        }
-        if seen_vertices != edge_of.len() {
-            disconnected += 1;
-        }
-    }
-    if nonempty == 0 {
-        0.0
-    } else {
-        disconnected as f64 / nonempty as f64
-    }
+    PartitionView::build(g, p).disconnected_fraction()
 }
 
 /// Evaluate everything but gain (gain needs an ETSCH run; see
-/// [`crate::etsch::gain`]).
+/// [`crate::etsch::gain`]) — one [`PartitionView`] build serves every
+/// derived metric.
 pub fn evaluate(g: &Graph, p: &EdgePartition) -> Report {
+    let view = PartitionView::build(g, p);
+    evaluate_with(g, p, &view)
+}
+
+/// [`evaluate`] on a view the caller already built (no extra derivation
+/// pass over the owner array).
+pub fn evaluate_with(
+    g: &Graph,
+    p: &EdgePartition,
+    view: &PartitionView,
+) -> Report {
+    let (largest, nstdev) = balance(view.sizes(), g.edge_count(), p.k);
     Report {
         k: p.k,
-        largest: largest(g, p),
-        nstdev: nstdev(g, p),
-        messages: messages(g, p),
+        largest,
+        nstdev,
+        messages: view.messages(),
         rounds: p.rounds,
-        disconnected: disconnected_fraction(g, p),
+        disconnected: view.disconnected_fraction(),
     }
 }
 

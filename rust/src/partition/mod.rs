@@ -1,7 +1,8 @@
 //! Edge partitioning: the paper's core abstraction plus all partitioners.
 //!
 //! An [`EdgePartition`] assigns every edge to exactly one of `k` parts;
-//! vertex sets `V_i` (and the frontier `F_i`) are derived. Partitioners:
+//! vertex sets `V_i` (and the frontier `F_i`) are derived — hot paths
+//! derive them exactly once through [`view::PartitionView`]. Partitioners:
 //! [`dfep::Dfep`] (the paper's contribution), [`dfepc::Dfepc`] (the
 //! variant of §IV-A), [`jabeja::JaBeJa`] (the comparison baseline) and the
 //! trivial [`baselines`].
@@ -13,6 +14,7 @@ pub mod fennel;
 pub mod jabeja;
 pub mod multilevel;
 pub mod metrics;
+pub mod view;
 
 use crate::graph::Graph;
 
@@ -28,6 +30,11 @@ pub struct EdgePartition {
 
 impl EdgePartition {
     /// Edge ids of each part.
+    ///
+    /// Slow reference derivation: hot paths go through
+    /// [`view::PartitionView`], which derives all of this state in one
+    /// build; `edge_sets`/[`vertex_sets`](Self::vertex_sets) survive as
+    /// the independent oracles the equivalence tests compare against.
     pub fn edge_sets(&self) -> Vec<Vec<u32>> {
         let mut sets = vec![Vec::new(); self.k];
         for (e, &p) in self.owner.iter().enumerate() {
@@ -67,11 +74,22 @@ impl EdgePartition {
 
     /// For every vertex, the number of distinct partitions it appears in.
     /// (Frontier vertices are those with multiplicity >= 2.)
+    ///
+    /// Single stamp-array pass over the adjacency: no vertex sets are
+    /// materialized. The old derivation survives as
+    /// [`vertex_sets`](Self::vertex_sets), which the equivalence tests
+    /// recount against this.
     pub fn vertex_multiplicity(&self, g: &Graph) -> Vec<u32> {
         let mut mult = vec![0u32; g.vertex_count()];
-        for vs in self.vertex_sets(g) {
-            for w in vs {
-                mult[w as usize] += 1;
+        // seen[p] == v  <=>  part p already counted for vertex v
+        let mut seen = vec![u32::MAX; self.k];
+        for v in 0..g.vertex_count() as u32 {
+            for &(_, e) in g.neighbors(v) {
+                let p = self.owner[e as usize] as usize;
+                if seen[p] != v {
+                    seen[p] = v;
+                    mult[v as usize] += 1;
+                }
             }
         }
         mult

@@ -1,0 +1,458 @@
+//! `PartitionView` — the one shared derived-state layer for partitions.
+//!
+//! An [`EdgePartition`] is just an owner array; everything else the system
+//! needs (per-part edge lists, per-part local CSRs, the replica table,
+//! frontier flags, part sizes) is *derived*. Before this module existed,
+//! every consumer re-derived that state independently — the metrics walked
+//! the owner array three times, the ETSCH engine twice more. The view
+//! builds all of it exactly once, in parallel over partitions on
+//! [`crate::util::pool`], and every consumer (metrics, ETSCH, the cluster
+//! simulators, benches, the CLI) shares the result.
+//!
+//! Determinism (see DESIGN.md "Determinism contract"): the only passes
+//! over the owner array are a sequential counting sort; each per-part
+//! local CSR is a pure function of that part's (ascending) edge-id slice;
+//! and all cross-part merges (multiplicity, the replica table) walk parts
+//! in fixed ascending order. The view is bit-identical for every pool
+//! thread count.
+
+use std::collections::HashMap;
+
+use crate::graph::Graph;
+use crate::partition::EdgePartition;
+use crate::util::pool;
+
+/// A partition's induced subgraph with dense local vertex ids.
+///
+/// Local ids are assigned in order of first appearance over the part's
+/// edges (ascending edge id), so local vertex 0 is the first endpoint of
+/// the part's lowest-numbered edge. Memory is O(|E_i|) per the paper's
+/// size argument (§II: |V_i| = O(|E_i|)).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Subgraph {
+    /// Which partition this is.
+    pub part: usize,
+    /// Global vertex id of each local vertex.
+    pub global: Vec<u32>,
+    /// Local CSR offsets (length = local vertex count + 1).
+    pub offsets: Vec<u32>,
+    /// Local adjacency: (local neighbor, global edge id).
+    pub adj: Vec<(u32, u32)>,
+    /// Frontier flag per local vertex (replicated in >= 2 partitions).
+    pub frontier: Vec<bool>,
+    /// Number of edges in this partition.
+    pub edge_count: usize,
+}
+
+impl Subgraph {
+    #[inline]
+    pub fn vertex_count(&self) -> usize {
+        self.global.len()
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v_local: u32) -> &[(u32, u32)] {
+        &self.adj[self.offsets[v_local as usize] as usize
+            ..self.offsets[v_local as usize + 1] as usize]
+    }
+
+    #[inline]
+    pub fn degree(&self, v_local: u32) -> usize {
+        (self.offsets[v_local as usize + 1] - self.offsets[v_local as usize])
+            as usize
+    }
+}
+
+/// All derived state of one (graph, partition) pair, built once.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PartitionView {
+    /// Number of parts.
+    pub k: usize,
+    /// `|E_i|` per part.
+    pub sizes: Vec<usize>,
+    /// Per-part edge CSR offsets into [`part_edges`](Self::part_edges)
+    /// (length k + 1).
+    pub part_starts: Vec<u32>,
+    /// Edge ids grouped by part, ascending within each part.
+    pub part_edges: Vec<u32>,
+    /// Number of distinct parts each vertex appears in (frontier
+    /// vertices have multiplicity >= 2; isolated vertices 0).
+    pub multiplicity: Vec<u32>,
+    /// Per-part local subgraphs (dense local ids + CSR + frontier flags).
+    pub subs: Vec<Subgraph>,
+    /// Replica-table CSR offsets per global vertex (length |V| + 1).
+    pub rep_offsets: Vec<u32>,
+    /// Replica locations, parts ascending per vertex: (part, local id).
+    pub replicas: Vec<(u32, u32)>,
+    /// MESSAGES = Σ over frontier vertices of their replica count.
+    pub frontier_total: usize,
+}
+
+impl PartitionView {
+    /// Derive everything from the owner array in one build.
+    pub fn build(g: &Graph, p: &EdgePartition) -> PartitionView {
+        let k = p.k;
+        let n = g.vertex_count();
+
+        // ---- the derivation pass over the owner array: counting sort of
+        // edge ids into the per-part edge CSR (ascending within parts) ----
+        let mut sizes = vec![0usize; k];
+        for &o in &p.owner {
+            sizes[o as usize] += 1;
+        }
+        let mut part_starts = vec![0u32; k + 1];
+        for i in 0..k {
+            part_starts[i + 1] = part_starts[i] + sizes[i] as u32;
+        }
+        let mut part_edges = vec![0u32; p.owner.len()];
+        let mut cursor: Vec<u32> = part_starts[..k].to_vec();
+        for (e, &o) in p.owner.iter().enumerate() {
+            part_edges[cursor[o as usize] as usize] = e as u32;
+            cursor[o as usize] += 1;
+        }
+
+        // ---- per-part local CSRs, one pool shard per part (each a pure
+        // function of its edge slice; merged in fixed part order below) ----
+        let mut subs: Vec<Subgraph> = (0..k)
+            .map(|part| Subgraph {
+                part,
+                global: Vec::new(),
+                offsets: vec![0],
+                adj: Vec::new(),
+                frontier: Vec::new(),
+                edge_count: 0,
+            })
+            .collect();
+        {
+            let part_starts = &part_starts;
+            let part_edges = &part_edges;
+            pool::run_mut(&mut subs, &|part, sub: &mut Subgraph| {
+                let edges = &part_edges[part_starts[part] as usize
+                    ..part_starts[part + 1] as usize];
+                build_local_csr(g, edges, sub);
+            });
+        }
+
+        // ---- vertex multiplicity: fixed ascending part order ----
+        let mut multiplicity = vec![0u32; n];
+        for sub in &subs {
+            for &gv in &sub.global {
+                multiplicity[gv as usize] += 1;
+            }
+        }
+
+        // ---- frontier flags (read-only fan-out over the shared mult) ----
+        {
+            let mult = &multiplicity;
+            pool::run_mut(&mut subs, &|_, sub: &mut Subgraph| {
+                sub.frontier = sub
+                    .global
+                    .iter()
+                    .map(|&gv| mult[gv as usize] >= 2)
+                    .collect();
+            });
+        }
+
+        // ---- replica table: vertex -> (part, local), parts ascending ----
+        let mut rep_offsets = vec![0u32; n + 1];
+        for v in 0..n {
+            rep_offsets[v + 1] = rep_offsets[v] + multiplicity[v];
+        }
+        let mut replicas = vec![(0u32, 0u32); rep_offsets[n] as usize];
+        let mut rcursor: Vec<u32> = rep_offsets[..n].to_vec();
+        for sub in &subs {
+            for (l, &gv) in sub.global.iter().enumerate() {
+                replicas[rcursor[gv as usize] as usize] =
+                    (sub.part as u32, l as u32);
+                rcursor[gv as usize] += 1;
+            }
+        }
+
+        let frontier_total = multiplicity
+            .iter()
+            .filter(|&&m| m >= 2)
+            .map(|&m| m as usize)
+            .sum();
+
+        PartitionView {
+            k,
+            sizes,
+            part_starts,
+            part_edges,
+            multiplicity,
+            subs,
+            rep_offsets,
+            replicas,
+            frontier_total,
+        }
+    }
+
+    /// `|E_i|` per part.
+    pub fn sizes(&self) -> &[usize] {
+        &self.sizes
+    }
+
+    /// Edge ids of one part, ascending.
+    pub fn edges_of(&self, part: usize) -> &[u32] {
+        &self.part_edges[self.part_starts[part] as usize
+            ..self.part_starts[part + 1] as usize]
+    }
+
+    /// Replica locations of a global vertex: (part, local id), parts
+    /// ascending. Empty for isolated vertices.
+    pub fn replicas_of(&self, v: u32) -> &[(u32, u32)] {
+        &self.replicas[self.rep_offsets[v as usize] as usize
+            ..self.rep_offsets[v as usize + 1] as usize]
+    }
+
+    /// The per-part local subgraphs.
+    pub fn subgraphs(&self) -> &[Subgraph] {
+        &self.subs
+    }
+
+    /// Consume the view, keeping only the subgraphs (the thin projection
+    /// behind [`crate::etsch::build_subgraphs`]).
+    pub fn into_subgraphs(self) -> Vec<Subgraph> {
+        self.subs
+    }
+
+    /// MESSAGES = Σ_i |F_i| (paper §V-A): every replica of a frontier
+    /// vertex exchanges state each aggregation.
+    pub fn messages(&self) -> usize {
+        self.frontier_total
+    }
+
+    /// Fraction of nonempty parts whose induced subgraph is disconnected
+    /// (Fig 6e), computed on the per-part local CSRs — no per-part hash
+    /// adjacency. Parallel over parts; the verdict per part is a pure
+    /// function of its local CSR.
+    pub fn disconnected_fraction(&self) -> f64 {
+        // 0 = empty part, 1 = connected, 2 = disconnected
+        let mut flags: Vec<u8> = vec![0; self.k];
+        {
+            let subs = &self.subs;
+            pool::run_mut(&mut flags, &|part, flag: &mut u8| {
+                let sub = &subs[part];
+                if sub.edge_count == 0 {
+                    *flag = 0;
+                    return;
+                }
+                // DFS from local vertex 0 == the first endpoint of the
+                // part's lowest-numbered edge (first-appearance order)
+                let nv = sub.vertex_count();
+                let mut seen = vec![false; nv];
+                seen[0] = true;
+                let mut reached = 1usize;
+                let mut stack = vec![0u32];
+                while let Some(u) = stack.pop() {
+                    for &(w, _) in sub.neighbors(u) {
+                        if !seen[w as usize] {
+                            seen[w as usize] = true;
+                            reached += 1;
+                            stack.push(w);
+                        }
+                    }
+                }
+                *flag = if reached == nv { 1 } else { 2 };
+            });
+        }
+        let nonempty = flags.iter().filter(|&&f| f != 0).count();
+        let disconnected = flags.iter().filter(|&&f| f == 2).count();
+        if nonempty == 0 {
+            0.0
+        } else {
+            disconnected as f64 / nonempty as f64
+        }
+    }
+}
+
+/// Per-shard global->local vertex id scratch. Big parts get a dense
+/// array (O(1) loads, O(|V|) init per shard); small parts a hash map
+/// (O(|V_i|) memory, no |V|-sized init). Both are only ever *looked up*,
+/// never iterated, so the built CSR is identical either way.
+enum LocalIds {
+    Dense(Vec<u32>),
+    Sparse(HashMap<u32, u32>),
+}
+
+impl LocalIds {
+    const EMPTY: u32 = u32::MAX;
+
+    fn for_part(edge_count: usize, vertex_count: usize) -> LocalIds {
+        if edge_count * 8 >= vertex_count {
+            LocalIds::Dense(vec![Self::EMPTY; vertex_count])
+        } else {
+            LocalIds::Sparse(HashMap::with_capacity(edge_count * 2))
+        }
+    }
+
+    /// Local id of `w`, assigning the next one on first sight.
+    fn get_or_insert(&mut self, w: u32, next: u32) -> (u32, bool) {
+        match self {
+            LocalIds::Dense(v) => {
+                if v[w as usize] == Self::EMPTY {
+                    v[w as usize] = next;
+                    (next, true)
+                } else {
+                    (v[w as usize], false)
+                }
+            }
+            LocalIds::Sparse(m) => match m.entry(w) {
+                std::collections::hash_map::Entry::Vacant(slot) => {
+                    slot.insert(next);
+                    (next, true)
+                }
+                std::collections::hash_map::Entry::Occupied(slot) => {
+                    (*slot.get(), false)
+                }
+            },
+        }
+    }
+
+    #[inline]
+    fn get(&self, w: u32) -> u32 {
+        match self {
+            LocalIds::Dense(v) => v[w as usize],
+            LocalIds::Sparse(m) => m[&w],
+        }
+    }
+}
+
+/// Build one part's local CSR from its (ascending) edge-id slice. Local
+/// ids are assigned in order of first appearance, exactly like the
+/// pre-view `build_subgraphs`, so the result is a pure function of the
+/// edge slice.
+fn build_local_csr(g: &Graph, edges: &[u32], sub: &mut Subgraph) {
+    let mut local_of = LocalIds::for_part(edges.len(), g.vertex_count());
+    let mut global: Vec<u32> = Vec::new();
+    for &e in edges {
+        let (u, v) = g.endpoints(e);
+        for w in [u, v] {
+            let (_, fresh) =
+                local_of.get_or_insert(w, global.len() as u32);
+            if fresh {
+                global.push(w);
+            }
+        }
+    }
+    let nv = global.len();
+    let mut offsets = vec![0u32; nv + 1];
+    for &e in edges {
+        let (u, v) = g.endpoints(e);
+        offsets[local_of.get(u) as usize + 1] += 1;
+        offsets[local_of.get(v) as usize + 1] += 1;
+    }
+    for i in 1..offsets.len() {
+        offsets[i] += offsets[i - 1];
+    }
+    let mut adj = vec![(0u32, 0u32); offsets[nv] as usize];
+    let mut cursor = offsets.clone();
+    for &e in edges {
+        let (u, v) = g.endpoints(e);
+        let (lu, lv) = (local_of.get(u), local_of.get(v));
+        adj[cursor[lu as usize] as usize] = (lv, e);
+        cursor[lu as usize] += 1;
+        adj[cursor[lv as usize] as usize] = (lu, e);
+        cursor[lv as usize] += 1;
+    }
+    sub.global = global;
+    sub.offsets = offsets;
+    sub.adj = adj;
+    sub.frontier = Vec::new(); // filled once multiplicity is known
+    sub.edge_count = edges.len();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn square() -> (Graph, EdgePartition) {
+        let g = GraphBuilder::new()
+            .add_edge(0, 1)
+            .add_edge(1, 2)
+            .add_edge(2, 3)
+            .add_edge(3, 0)
+            .build();
+        // canonical edge order: (0,1),(0,3),(1,2),(2,3)
+        let p = EdgePartition { k: 2, owner: vec![0, 0, 1, 1], rounds: 1 };
+        (g, p)
+    }
+
+    #[test]
+    fn edge_csr_matches_slow_edge_sets() {
+        let (g, p) = square();
+        let view = PartitionView::build(&g, &p);
+        let slow = p.edge_sets();
+        for part in 0..p.k {
+            assert_eq!(view.edges_of(part), &slow[part][..], "part {part}");
+        }
+        assert_eq!(view.sizes(), &p.sizes()[..]);
+    }
+
+    #[test]
+    fn replica_table_is_part_ascending_and_consistent() {
+        let (g, p) = square();
+        let view = PartitionView::build(&g, &p);
+        for v in 0..g.vertex_count() as u32 {
+            let reps = view.replicas_of(v);
+            assert_eq!(reps.len(), view.multiplicity[v as usize] as usize);
+            for w in reps.windows(2) {
+                assert!(w[0].0 < w[1].0, "parts not ascending for {v}");
+            }
+            for &(part, l) in reps {
+                assert_eq!(
+                    view.subs[part as usize].global[l as usize],
+                    v,
+                    "replica of {v} points at the wrong local slot"
+                );
+            }
+        }
+        // vertices 1 and 3 are frontier
+        assert_eq!(view.multiplicity, vec![1, 2, 1, 2]);
+        assert_eq!(view.messages(), 4);
+    }
+
+    #[test]
+    fn subgraphs_match_first_appearance_order() {
+        let (g, p) = square();
+        let view = PartitionView::build(&g, &p);
+        // part 0 owns edges (0,1),(0,3): first-appearance order 0,1,3
+        assert_eq!(view.subs[0].global, vec![0, 1, 3]);
+        assert_eq!(view.subs[0].edge_count, 2);
+        for sub in view.subgraphs() {
+            for (l, &gv) in sub.global.iter().enumerate() {
+                let expect = gv == 1 || gv == 3;
+                assert_eq!(sub.frontier[l], expect, "vertex {gv}");
+            }
+            let total: usize =
+                (0..sub.vertex_count() as u32).map(|v| sub.degree(v)).sum();
+            assert_eq!(total, 2 * sub.edge_count);
+        }
+    }
+
+    #[test]
+    fn disconnection_detected_on_local_csr() {
+        let (g, _) = square();
+        // part 0 owns (0,1)+(2,3), part 1 owns (0,3)+(1,2): both split
+        let p = EdgePartition { k: 2, owner: vec![0, 1, 1, 0], rounds: 1 };
+        let view = PartitionView::build(&g, &p);
+        assert!((view.disconnected_fraction() - 1.0).abs() < 1e-12);
+        let p2 = EdgePartition { k: 2, owner: vec![0, 0, 1, 1], rounds: 1 };
+        assert_eq!(
+            PartitionView::build(&g, &p2).disconnected_fraction(),
+            0.0
+        );
+    }
+
+    #[test]
+    fn empty_parts_are_represented_and_skipped() {
+        let (g, _) = square();
+        let p = EdgePartition { k: 3, owner: vec![0, 0, 1, 1], rounds: 1 };
+        let view = PartitionView::build(&g, &p);
+        assert_eq!(view.subs[2].vertex_count(), 0);
+        assert_eq!(view.subs[2].edge_count, 0);
+        assert_eq!(view.edges_of(2), &[] as &[u32]);
+        assert_eq!(view.disconnected_fraction(), 0.0);
+    }
+}

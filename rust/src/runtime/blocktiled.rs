@@ -157,9 +157,9 @@ pub fn multi_relax_256(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::etsch::build_subgraphs;
     use crate::graph::generators::GraphKind;
     use crate::graph::stats::bfs_distances;
+    use crate::partition::view::PartitionView;
     use crate::partition::{dfep::Dfep, Partitioner};
 
     fn runtime() -> Option<Runtime> {
@@ -177,8 +177,8 @@ mod tests {
         // graph bigger than one block so tiling is exercised
         let g = GraphKind::ErdosRenyi { n: 700, m: 2100 }.generate(3);
         let p = Dfep::default().partition(&g, 2, 1);
-        let subs = build_subgraphs(&g, &p);
-        let sub = &subs[0];
+        let view = PartitionView::build(&g, &p);
+        let sub = &view.subgraphs()[0];
         assert!(sub.vertex_count() > BLOCK, "want multi-tile case");
         let t = TiledSubgraph::pack(sub, 1.0);
         assert!(t.density() <= 1.0);
@@ -244,8 +244,8 @@ mod tests {
         };
         let g = GraphKind::ErdosRenyi { n: 600, m: 1200 }.generate(4);
         let p = Dfep::default().partition(&g, 2, 2);
-        let subs = build_subgraphs(&g, &p);
-        let t = TiledSubgraph::pack(&subs[0], 1.0);
+        let view = PartitionView::build(&g, &p);
+        let t = TiledSubgraph::pack(&view.subgraphs()[0], 1.0);
         // a sparse graph far from dense: strictly fewer tiles than nb^2
         // is not guaranteed for tiny nb, but density must be <= 1 and the
         // tile list sorted

@@ -1,10 +1,13 @@
-//! PR-1 coverage: graph IO round-trip fidelity and partition invariants
-//! under the shared thread pool — every edge owned exactly once, and
-//! balance / communication metrics (in fact the whole ownership vector)
-//! bit-stable across 1, 2 and 8 pool threads.
+//! Pool-determinism coverage: graph IO round-trip fidelity and partition
+//! invariants under the shared thread pool — every edge owned exactly
+//! once, and balance / communication metrics (in fact the whole ownership
+//! vector) bit-stable across 1, 2 and 8 pool threads. Also pins the
+//! parallel `PartitionView` build and ETSCH's change-driven aggregation
+//! to the same contract.
 
 use dfep::etsch::{sssp::Sssp, Etsch};
 use dfep::graph::{generators::GraphKind, io};
+use dfep::partition::view::PartitionView;
 use dfep::partition::{dfep::Dfep, dfepc::Dfepc, metrics, Partitioner};
 use dfep::util::pool;
 
@@ -99,6 +102,30 @@ fn dfepc_partition_bit_identical_across_1_2_8_threads() {
 }
 
 #[test]
+fn partition_view_bit_identical_across_1_2_8_threads() {
+    // the parallel view build must be a pure function of the partition:
+    // same per-part CSRs, replica table, frontier flags and metrics for
+    // every pool width
+    let g = GraphKind::PowerlawCluster { n: 2_000, m: 5, p: 0.3 }.generate(8);
+    let p = pool::with_threads(1, || Dfep::default().partition(&g, 8, 4));
+    let base = pool::with_threads(1, || PartitionView::build(&g, &p));
+    let r_base =
+        pool::with_threads(1, || metrics::evaluate_with(&g, &p, &base));
+    for threads in [2usize, 8] {
+        let view =
+            pool::with_threads(threads, || PartitionView::build(&g, &p));
+        assert_eq!(view, base, "{threads} threads: views differ");
+        let r = pool::with_threads(threads, || {
+            metrics::evaluate_with(&g, &p, &view)
+        });
+        assert_eq!(r.nstdev.to_bits(), r_base.nstdev.to_bits());
+        assert_eq!(r.largest.to_bits(), r_base.largest.to_bits());
+        assert_eq!(r.messages, r_base.messages);
+        assert_eq!(r.disconnected.to_bits(), r_base.disconnected.to_bits());
+    }
+}
+
+#[test]
 fn etsch_results_and_rounds_stable_across_thread_counts() {
     let g = GraphKind::PowerlawCluster { n: 1_000, m: 4, p: 0.3 }.generate(6);
     let p = Dfep::default().partition(&g, 6, 1);
@@ -123,4 +150,16 @@ fn etsch_results_and_rounds_stable_across_thread_counts() {
             "{threads} threads"
         );
     }
+    // the dense reference agrees with the change-driven path at every
+    // thread count (the dirty lists are merged in fixed part order)
+    let dense = pool::with_threads(1, || {
+        let view = PartitionView::build(&g, &p);
+        let mut engine = Etsch::from_view(&g, &view);
+        let dist = engine.run_dense(&mut Sssp::new(0));
+        (dist, engine.rounds_executed(), engine.stats().clone())
+    });
+    assert_eq!(dense.0, d1, "dense reference: distances differ");
+    assert_eq!(dense.1, rounds1, "dense reference: rounds differ");
+    assert_eq!(dense.2.messages_exchanged, stats1.messages_exchanged);
+    assert_eq!(dense.2.messages_ceiling, stats1.messages_ceiling);
 }

@@ -3,9 +3,11 @@
 //! every failure message carries the deterministic case seed.
 
 use dfep::etsch::{
-    cc::ConnectedComponents, mis, mis::LubyMis, sssp, sssp::Sssp, Etsch,
+    cc::ConnectedComponents, kcore::KCore, labelprop::LabelPropagation,
+    mis, mis::LubyMis, pagerank::PageRank, sssp, sssp::Sssp, Etsch,
 };
 use dfep::graph::stats;
+use dfep::partition::view::PartitionView;
 use dfep::partition::{
     baselines::{GreedyBfs, HashEdge, RandomEdge},
     dfep::Dfep,
@@ -100,6 +102,144 @@ fn vertex_sets_are_exactly_edge_endpoints() {
             let mut got = vs.clone();
             got.sort_unstable();
             assert_eq!(got, expect);
+        }
+    });
+}
+
+#[test]
+fn partition_view_agrees_with_slow_derivations() {
+    // PartitionView derives everything in one pool-parallel build; the
+    // slow per-consumer derivations (edge_sets / vertex_sets and counts
+    // recomputed from them) survive exactly as the oracle here
+    forall(8, |g: &mut Gen| {
+        let graph = g.any_graph(12, 100);
+        let k = g.int(1, 6);
+        let part_seed: u64 = g.rng.next_u64();
+        for p in partitioners() {
+            let part = p.partition(&graph, k, part_seed);
+            let view = PartitionView::build(&graph, &part);
+            let name = p.name();
+            // per-part edge CSR == slow edge_sets (ascending in both)
+            let esets = part.edge_sets();
+            for pi in 0..part.k {
+                assert_eq!(
+                    view.edges_of(pi),
+                    &esets[pi][..],
+                    "{name}: part {pi} edges"
+                );
+            }
+            assert_eq!(view.sizes(), &part.sizes()[..], "{name}: sizes");
+            // per-part dense vertex ids == slow vertex_sets, including
+            // the first-appearance order
+            let vsets = part.vertex_sets(&graph);
+            for (pi, sub) in view.subgraphs().iter().enumerate() {
+                assert_eq!(
+                    sub.global, vsets[pi],
+                    "{name}: part {pi} vertex order"
+                );
+                for (l, &gv) in sub.global.iter().enumerate() {
+                    assert_eq!(
+                        sub.frontier[l],
+                        view.multiplicity[gv as usize] >= 2,
+                        "{name}: frontier flag of {gv}"
+                    );
+                }
+            }
+            // multiplicity: stamp-pass == view == recount of vertex_sets
+            let mut slow_mult = vec![0u32; graph.vertex_count()];
+            for vs in &vsets {
+                for &v in vs {
+                    slow_mult[v as usize] += 1;
+                }
+            }
+            assert_eq!(
+                part.vertex_multiplicity(&graph),
+                slow_mult,
+                "{name}: vertex_multiplicity"
+            );
+            assert_eq!(view.multiplicity, slow_mult, "{name}: view mult");
+            // replica table inverts the subgraph global maps
+            for v in 0..graph.vertex_count() as u32 {
+                let reps = view.replicas_of(v);
+                assert_eq!(
+                    reps.len(),
+                    slow_mult[v as usize] as usize,
+                    "{name}: replica count of {v}"
+                );
+                for &(pi, l) in reps {
+                    assert_eq!(
+                        view.subgraphs()[pi as usize].global[l as usize],
+                        v,
+                        "{name}: replica slot of {v}"
+                    );
+                }
+            }
+            // MESSAGES
+            let expect: usize = slow_mult
+                .iter()
+                .filter(|&&c| c >= 2)
+                .map(|&c| c as usize)
+                .sum();
+            assert_eq!(view.messages(), expect, "{name}: messages");
+            assert_eq!(
+                metrics::messages(&graph, &part),
+                expect,
+                "{name}: metrics::messages"
+            );
+        }
+    });
+}
+
+#[test]
+fn dirty_aggregation_matches_dense_reference() {
+    // change-driven aggregation must be observationally identical to the
+    // dense re-aggregate-everything reference: same final states, same
+    // round counts, same message counts — across algorithm families
+    // (min-reconciled, sum-reconciled, randomized)
+    forall(6, |g: &mut Gen| {
+        let graph = g.any_graph(12, 100);
+        let k = g.int(1, 6);
+        let part_seed: u64 = g.rng.next_u64();
+        let source = g.int(0, graph.vertex_count() - 1) as u32;
+        let alg_seed: u64 = g.rng.next_u64();
+        for p in partitioners() {
+            let part = p.partition(&graph, k, part_seed);
+            let view = PartitionView::build(&graph, &part);
+            let name = p.name();
+
+            macro_rules! check {
+                ($label:expr, $mk:expr) => {{
+                    let (a, ra, sa) = {
+                        let mut e = Etsch::from_view(&graph, &view);
+                        let out = e.run(&mut $mk);
+                        (out, e.rounds_executed(), e.stats().clone())
+                    };
+                    let (b, rb, sb) = {
+                        let mut e = Etsch::from_view(&graph, &view);
+                        let out = e.run_dense(&mut $mk);
+                        (out, e.rounds_executed(), e.stats().clone())
+                    };
+                    assert_eq!(a, b, "{name}/{}: states", $label);
+                    assert_eq!(ra, rb, "{name}/{}: rounds", $label);
+                    assert_eq!(
+                        sa.messages_exchanged, sb.messages_exchanged,
+                        "{name}/{}: exchanged",
+                        $label
+                    );
+                    assert_eq!(
+                        sa.messages_ceiling, sb.messages_ceiling,
+                        "{name}/{}: ceiling",
+                        $label
+                    );
+                }};
+            }
+
+            check!("sssp", Sssp::new(source));
+            check!("cc", ConnectedComponents::new(alg_seed));
+            check!("pagerank", PageRank::new(&graph, 8));
+            check!("mis", LubyMis::new(alg_seed));
+            check!("kcore", KCore::new(3));
+            check!("labelprop", LabelPropagation::default());
         }
     });
 }
