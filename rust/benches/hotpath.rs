@@ -1,4 +1,7 @@
-//! Regenerates the hotpath series — see bench::figures::hotpath_with.
+//! Regenerates the hotpath series — see bench::figures::hotpath_with:
+//! DFEP thread scaling, the partition_view derived-state series, and the
+//! streaming series (edges/sec for the ingest-time hdrf / dbh / restream
+//! partitioners, with StreamingGreedy as the materialized comparison).
 //! Knobs: DFEP_SAMPLES (default 5; paper 100), DFEP_SCALE (default 0.05),
 //! DFEP_BENCH_OUT (default BENCH_hotpath.json).
 //!

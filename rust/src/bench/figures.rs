@@ -21,6 +21,7 @@ use crate::partition::{
 };
 use crate::util::stats::{mean, Summary};
 
+/// Seeded repetitions per data point (`DFEP_SAMPLES`, default 5).
 pub fn samples() -> usize {
     std::env::var("DFEP_SAMPLES")
         .ok()
@@ -28,6 +29,7 @@ pub fn samples() -> usize {
         .unwrap_or(5)
 }
 
+/// Dataset scale factor (`DFEP_SCALE`, default 0.05; paper 1.0).
 pub fn scale() -> f64 {
     std::env::var("DFEP_SCALE")
         .ok()
@@ -56,14 +58,23 @@ fn load(name: &str, scale_f: f64) -> Graph {
 
 /// Averaged metrics for one (partitioner, graph, k) cell.
 pub struct Cell {
+    /// Largest normalized part size across samples.
     pub largest: Summary,
+    /// NSTDEV (§V-A) across samples.
     pub nstdev: Summary,
+    /// MESSAGES (frontier replica count) across samples.
     pub messages: Summary,
+    /// Partitioner rounds across samples.
     pub rounds: Summary,
+    /// Path-compression gain across samples (empty if not measured).
     pub gain: Summary,
+    /// Disconnected-partition fraction across samples.
     pub disconnected: Summary,
 }
 
+/// Run one (partitioner, graph, k) cell: `samples` seeded partitions,
+/// each evaluated through one shared [`PartitionView`] build (plus
+/// `gain_samples` ETSCH gain sources when nonzero).
 pub fn measure(
     g: &Graph,
     p: &dyn Partitioner,
@@ -475,6 +486,52 @@ pub fn hotpath_with(quick: bool) {
             "etsch_new_mean_s",
             crate::util::timer::time_n(warmup, n, || {
                 let _ = crate::etsch::Etsch::new(&g, &p);
+            }),
+        );
+    }
+
+    // streaming series: ingest-time partitioner throughput (edges/sec),
+    // with the materializing StreamingGreedy as the comparison point
+    {
+        use crate::partition::fennel::StreamingGreedy;
+        use crate::partition::streaming::{Dbh, Hdrf, Restream};
+        let m = g.edge_count() as f64;
+        let mut series = |name: &str, key: &str, times: Vec<f64>| {
+            let s = Summary::of(&times);
+            t.row(&[
+                name.into(),
+                fmt_f(s.mean),
+                fmt_f(s.p95),
+                fmt_f(m / s.mean / 1e6),
+            ]);
+            sink.num(key, m / s.mean.max(1e-12));
+        };
+        series(
+            "HDRF (stream ingest)",
+            "streaming_hdrf_edges_per_s",
+            crate::util::timer::time_n(warmup, n, || {
+                let _ = Hdrf::default().partition(&g, 8, 1);
+            }),
+        );
+        series(
+            "DBH (stream ingest, 2 passes)",
+            "streaming_dbh_edges_per_s",
+            crate::util::timer::time_n(warmup, n, || {
+                let _ = Dbh::default().partition(&g, 8, 1);
+            }),
+        );
+        series(
+            "ReStream (HDRF + 1 refine)",
+            "streaming_restream_edges_per_s",
+            crate::util::timer::time_n(warmup, n, || {
+                let _ = Restream::default().partition(&g, 8, 1);
+            }),
+        );
+        series(
+            "StreamingGreedy (materialized)",
+            "streaming_greedy_edges_per_s",
+            crate::util::timer::time_n(warmup, n, || {
+                let _ = StreamingGreedy::default().partition(&g, 8, 1);
             }),
         );
     }

@@ -19,6 +19,7 @@ pub struct Table {
 }
 
 impl Table {
+    /// New table with the given column headers (printed on first row).
     pub fn new(columns: &[&str]) -> Table {
         Table {
             widths: columns.iter().map(|c| c.len().max(10)).collect(),
@@ -27,6 +28,7 @@ impl Table {
         }
     }
 
+    /// Print one aligned row (prints the header first if needed).
     pub fn row(&mut self, cells: &[String]) {
         if !self.printed_header {
             self.print_header_line();
@@ -53,7 +55,8 @@ impl Table {
     }
 }
 
-/// Format helpers used across benches.
+/// Format a float with magnitude-appropriate precision (the one number
+/// formatter every bench table uses).
 pub fn fmt_f(x: f64) -> String {
     if x == 0.0 {
         "0".into()
@@ -66,6 +69,7 @@ pub fn fmt_f(x: f64) -> String {
     }
 }
 
+/// Format a [`Summary`] as `mean±stdev`.
 pub fn fmt_summary(s: &Summary) -> String {
     format!("{}±{}", fmt_f(s.mean), fmt_f(s.stdev))
 }
@@ -90,6 +94,7 @@ pub struct JsonSink {
 }
 
 impl JsonSink {
+    /// New empty sink.
     pub fn new() -> JsonSink {
         JsonSink::default()
     }

@@ -62,8 +62,11 @@ impl Default for CostModel {
 /// Work volume of one MapReduce round.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct RoundWork {
+    /// Records processed by the Map phase.
     pub map_records: f64,
+    /// Bytes moved through the shuffle.
     pub shuffle_bytes: f64,
+    /// Records processed by the Reduce phase.
     pub reduce_records: f64,
     /// Raw in-memory edge operations executed *inside* a task (e.g.
     /// ETSCH's local Dijkstra) — these bypass the MapReduce record

@@ -29,9 +29,11 @@ const VERTEX_COPY_BYTES: f64 = 24.0;
 /// Result of a simulated cluster DFEP run.
 #[derive(Clone, Debug)]
 pub struct ClusterDfepRun {
+    /// The partition produced (bit-identical to the reference engine).
     pub partition: EdgePartition,
     /// Simulated wall-clock per round (seconds) for the chosen node count.
     pub round_times: Vec<f64>,
+    /// Total simulated wall-clock including start-edge selection.
     pub total_time: f64,
     /// Work volumes per round (node-count independent; reusable to
     /// re-simulate other cluster sizes).

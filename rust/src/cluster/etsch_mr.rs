@@ -24,10 +24,15 @@ const GRAPH_PASS_BYTES: f64 = 16.0;
 /// Simulated-time result of a cluster SSSP run.
 #[derive(Clone, Debug)]
 pub struct ClusterSsspRun {
+    /// ETSCH rounds / BSP supersteps executed.
     pub rounds: usize,
+    /// Total simulated wall-clock (seconds).
     pub total_time: f64,
+    /// Simulated wall-clock per round.
     pub round_times: Vec<f64>,
+    /// Messages exchanged across the run.
     pub messages: usize,
+    /// Final per-vertex distances (for cross-engine correctness checks).
     pub distances: Vec<u32>,
 }
 

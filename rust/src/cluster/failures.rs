@@ -38,8 +38,11 @@ impl Default for FaultModel {
 /// Outcome of simulating one job under faults.
 #[derive(Clone, Debug, Default)]
 pub struct FaultyRun {
+    /// Total simulated wall-clock including redo and detection costs.
     pub total_time: f64,
+    /// Node failures injected.
     pub failures: usize,
+    /// Rounds stretched by a severe straggler.
     pub straggled_rounds: usize,
 }
 

@@ -23,6 +23,7 @@ use crate::util::pool;
 /// vertex record (sharded over the shared pool), shuffles messages by
 /// destination vertex, then calls `reduce` per vertex with its messages.
 pub trait VertexJob: Sync {
+    /// Message type shuffled between vertices.
     type Msg: Send;
 
     /// Map phase: may emit messages to any vertex.
@@ -36,8 +37,11 @@ pub trait VertexJob: Sync {
 /// Outcome of one engine round.
 #[derive(Clone, Copy, Debug)]
 pub struct RoundOutcome {
+    /// Messages shuffled this round.
     pub messages: usize,
+    /// Vertices whose reduce reported a state change.
     pub changed: usize,
+    /// Work volumes for the cluster cost model.
     pub work: RoundWork,
 }
 

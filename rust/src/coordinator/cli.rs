@@ -12,6 +12,7 @@ use crate::{anyhow, bail};
 /// Parsed command line.
 #[derive(Clone, Debug, Default)]
 pub struct Args {
+    /// The subcommand (first argument; `"help"` when absent).
     pub command: String,
     opts: BTreeMap<String, String>,
     flags: Vec<String>,
@@ -43,14 +44,17 @@ impl Args {
         Ok(out)
     }
 
+    /// Value of `--key`, if given.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.opts.get(key).map(|s| s.as_str())
     }
 
+    /// Value of `--key`, or `default` when absent.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// `--key` parsed as usize (error on malformed, `default` if absent).
     pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
         match self.get(key) {
             None => Ok(default),
@@ -60,6 +64,7 @@ impl Args {
         }
     }
 
+    /// `--key` parsed as u64 (error on malformed, `default` if absent).
     pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
         match self.get(key) {
             None => Ok(default),
@@ -69,6 +74,7 @@ impl Args {
         }
     }
 
+    /// `--key` parsed as f64 (error on malformed, `default` if absent).
     pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
         match self.get(key) {
             None => Ok(default),
@@ -78,6 +84,7 @@ impl Args {
         }
     }
 
+    /// True when the bare `--name` flag was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }

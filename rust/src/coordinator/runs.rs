@@ -15,6 +15,7 @@ use crate::partition::{
     jabeja::JaBeJa,
     metrics::{self, Report},
     multilevel::Multilevel,
+    streaming::{Dbh, Hdrf, Restream},
     view::PartitionView,
     EdgePartition, Partitioner,
 };
@@ -22,17 +23,32 @@ use crate::partition::{
 /// Which partitioner to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum PartitionerKind {
+    /// The paper's funding-based partitioner ([`Dfep`]).
     Dfep,
+    /// The §IV-A variant with poor/rich raids ([`Dfepc`]).
     Dfepc,
+    /// The comparison baseline ([`JaBeJa`]).
     JaBeJa,
+    /// Uniform random edge assignment ([`RandomEdge`]).
     Random,
+    /// Round-robin edge assignment ([`HashEdge`]).
     Hash,
+    /// Lockstep greedy BFS growth ([`GreedyBfs`]).
     GreedyBfs,
+    /// Fennel-style streaming greedy ([`StreamingGreedy`]).
     Streaming,
+    /// METIS-style multilevel partitioner ([`Multilevel`]).
     Multilevel,
+    /// Ingest-time degree-aware greedy ([`Hdrf`]).
+    Hdrf,
+    /// Ingest-time degree-based hashing ([`Dbh`]).
+    Dbh,
+    /// HDRF plus restreaming refinement ([`Restream`]).
+    Restream,
 }
 
 impl PartitionerKind {
+    /// Parse a CLI `--algo` string (case-insensitive).
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s.to_lowercase().as_str() {
             "dfep" => Self::Dfep,
@@ -43,10 +59,14 @@ impl PartitionerKind {
             "greedy" | "greedybfs" => Self::GreedyBfs,
             "streaming" | "fennel" => Self::Streaming,
             "multilevel" | "metis" => Self::Multilevel,
+            "hdrf" => Self::Hdrf,
+            "dbh" => Self::Dbh,
+            "restream" | "re-stream" => Self::Restream,
             other => return Err(anyhow!("unknown partitioner '{other}'")),
         })
     }
 
+    /// Construct the partitioner with its default configuration.
     pub fn build(&self) -> Box<dyn Partitioner> {
         match self {
             Self::Dfep => Box::new(Dfep::default()),
@@ -57,9 +77,13 @@ impl PartitionerKind {
             Self::GreedyBfs => Box::new(GreedyBfs),
             Self::Streaming => Box::new(StreamingGreedy::default()),
             Self::Multilevel => Box::new(Multilevel::default()),
+            Self::Hdrf => Box::new(Hdrf::default()),
+            Self::Dbh => Box::new(Dbh::default()),
+            Self::Restream => Box::new(Restream::default()),
         }
     }
 
+    /// Every kind, in display order (the ablation sweep iterates this).
     pub fn all() -> &'static [PartitionerKind] {
         &[
             Self::Dfep,
@@ -70,6 +94,9 @@ impl PartitionerKind {
             Self::GreedyBfs,
             Self::Streaming,
             Self::Multilevel,
+            Self::Hdrf,
+            Self::Dbh,
+            Self::Restream,
         ]
     }
 }
@@ -77,8 +104,11 @@ impl PartitionerKind {
 /// A single experiment configuration.
 #[derive(Clone, Debug)]
 pub struct RunConfig {
+    /// Which partitioner to run.
     pub partitioner: PartitionerKind,
+    /// Number of parts.
     pub k: usize,
+    /// Seed controlling all randomness of the run.
     pub seed: u64,
     /// sources for the gain estimate (0 = skip gain)
     pub gain_samples: usize,
@@ -98,9 +128,13 @@ impl Default for RunConfig {
 /// Metrics of one run (the paper's per-plot quantities).
 #[derive(Clone, Debug)]
 pub struct RunResult {
+    /// The §V-A metric report.
     pub report: Report,
+    /// Path-compression gain (None when `gain_samples == 0`).
     pub gain: Option<f64>,
+    /// The partition itself.
     pub partition: EdgePartition,
+    /// Wall-clock seconds the partitioner took.
     pub partition_secs: f64,
 }
 
@@ -221,7 +255,7 @@ mod tests {
     #[test]
     fn parse_all_partitioners() {
         for s in ["dfep", "DFEPC", "jabeja", "random", "hash", "greedy",
-                  "fennel", "multilevel"] {
+                  "fennel", "multilevel", "hdrf", "DBH", "restream"] {
             assert!(PartitionerKind::parse(s).is_ok(), "{s}");
         }
         assert!(PartitionerKind::parse("x").is_err());

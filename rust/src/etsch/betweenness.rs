@@ -24,14 +24,19 @@ use crate::util::rng::Rng;
 /// Forward phase state: fixed dist + accumulating sigma (+ round partial).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct SigmaState {
+    /// Hop distance from the source (fixed input).
     pub dist: u32,
+    /// Shortest-path count accumulated so far.
     pub sigma: f64,
+    /// This-round partial contribution from local predecessors.
     pub partial: f64,
 }
 
 /// Computes sigma given per-vertex distances (shared immutable).
 pub struct SigmaPhase {
+    /// The BFS source.
     pub source: u32,
+    /// Per-vertex distances from the completed SSSP phase.
     pub dist: std::sync::Arc<Vec<u32>>,
 }
 
@@ -83,14 +88,22 @@ impl Algorithm for SigmaPhase {
 /// Backward phase state: fixed dist/sigma + accumulating delta.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct DeltaState {
+    /// Hop distance from the source (fixed input).
     pub dist: u32,
+    /// Shortest-path count (fixed input).
     pub sigma: f64,
+    /// Dependency accumulated so far.
     pub delta: f64,
+    /// This-round partial contribution from local successors.
     pub partial: f64,
 }
 
+/// Computes the Brandes dependency delta given distances and sigma
+/// (shared immutable inputs from the earlier phases).
 pub struct DeltaPhase {
+    /// Per-vertex distances from the SSSP phase.
     pub dist: std::sync::Arc<Vec<u32>>,
+    /// Per-vertex shortest-path counts from the sigma phase.
     pub sigma: std::sync::Arc<Vec<f64>>,
 }
 

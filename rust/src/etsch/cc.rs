@@ -12,10 +12,12 @@ use crate::graph::Graph;
 /// replicas agree without coordination.
 #[derive(Clone, Debug)]
 pub struct ConnectedComponents {
+    /// Seed of the per-vertex random ids.
     pub seed: u64,
 }
 
 impl ConnectedComponents {
+    /// Label propagation with ids drawn from `seed`.
     pub fn new(seed: u64) -> Self {
         ConnectedComponents { seed }
     }

@@ -13,7 +13,9 @@ use crate::graph::Graph;
 /// Vertex state: alive flag + this-round partial alive-degree.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct KCoreState {
+    /// Still in the candidate core.
     pub alive: bool,
+    /// This-round alive-degree accumulator (see the `REEVAL` marker).
     pub partial_deg: u32,
 }
 
@@ -26,12 +28,15 @@ pub struct KCoreState {
 /// [`KCore::aggregate`]'s sum.
 const REEVAL: u32 = u32::MAX;
 
+/// Iterated k-core peeling in the ETSCH model.
 #[derive(Clone, Debug)]
 pub struct KCore {
+    /// The core order to peel to.
     pub k: u32,
 }
 
 impl KCore {
+    /// Peel to the `k`-core.
     pub fn new(k: u32) -> Self {
         KCore { k }
     }

@@ -14,12 +14,16 @@ use crate::graph::Graph;
 /// partition's local edges (kept sorted by label).
 #[derive(Clone, Debug, PartialEq)]
 pub struct LpaState {
+    /// Current community label.
     pub label: u32,
+    /// This-round (label, count) votes, sorted by label.
     pub votes: Vec<(u32, u32)>,
 }
 
+/// Community detection by label propagation in the ETSCH model.
 #[derive(Clone, Debug)]
 pub struct LabelPropagation {
+    /// Round bound (label propagation has no natural quiescence).
     pub max_rounds: usize,
 }
 

@@ -18,14 +18,18 @@ use crate::graph::Graph;
 /// Membership progress of one vertex.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Status {
+    /// Not yet decided either way.
     Undecided,
+    /// In the independent set.
     InSet,
+    /// Excluded (a neighbor is in the set).
     Excluded,
 }
 
 /// Vertex state for Luby rounds.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct MisState {
+    /// Membership progress.
     pub status: Status,
     /// This vertex's current draw.
     pub value: u64,
@@ -35,13 +39,18 @@ pub struct MisState {
     pub nbr_in_set: bool,
 }
 
+/// Luby's randomized maximal-independent-set algorithm in the ETSCH
+/// model (per-round draws derived from (seed, vertex, round) so replicas
+/// agree without coordination).
 #[derive(Clone, Debug)]
 pub struct LubyMis {
+    /// Seed of the per-round draws.
     pub seed: u64,
     round: usize,
 }
 
 impl LubyMis {
+    /// Luby MIS with draws derived from `seed`.
     pub fn new(seed: u64) -> Self {
         LubyMis { seed, round: 0 }
     }

@@ -14,19 +14,27 @@ use crate::graph::Graph;
 /// Vertex state: current rank, global degree, and this-round partial sum.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PrState {
+    /// Current rank.
     pub rank: f64,
+    /// Global degree (constant; local phases see only partial degrees).
     pub degree: u32,
+    /// This-round partial neighbor-rank sum.
     pub partial: f64,
 }
 
+/// Fixed-iteration PageRank in the ETSCH model.
 #[derive(Clone, Debug)]
 pub struct PageRank {
+    /// Damping factor (0.85 = the usual choice).
     pub damping: f64,
+    /// Iterations to run (one per ETSCH round).
     pub iterations: usize,
+    /// Vertex count (for the teleport term).
     pub n: usize,
 }
 
 impl PageRank {
+    /// PageRank over `g` for `iterations` rounds at damping 0.85.
     pub fn new(g: &Graph, iterations: usize) -> Self {
         PageRank { damping: 0.85, iterations, n: g.vertex_count() }
     }

@@ -15,10 +15,12 @@ pub const UNREACHED: u32 = u32::MAX;
 /// Algorithm-1 instance.
 #[derive(Clone, Debug)]
 pub struct Sssp {
+    /// The source vertex (distance 0).
     pub source: u32,
 }
 
 impl Sssp {
+    /// SSSP from `source`.
     pub fn new(source: u32) -> Self {
         Sssp { source }
     }

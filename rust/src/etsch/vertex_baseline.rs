@@ -10,7 +10,9 @@ use crate::graph::Graph;
 /// Result of a vertex-centric run.
 #[derive(Clone, Debug)]
 pub struct BspRun<T> {
+    /// Final per-vertex values.
     pub values: Vec<T>,
+    /// Supersteps executed (the baseline's round metric).
     pub supersteps: usize,
     /// Total messages sent across the run.
     pub messages: usize,

@@ -14,6 +14,7 @@ pub struct GraphBuilder {
 }
 
 impl GraphBuilder {
+    /// New empty builder.
     pub fn new() -> Self {
         Self::default()
     }

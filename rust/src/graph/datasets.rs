@@ -15,24 +15,33 @@ use super::Graph;
 /// Paper-reported reference row (for the tables bench).
 #[derive(Clone, Copy, Debug)]
 pub struct PaperRow {
+    /// Vertex count |V|.
     pub v: usize,
+    /// Edge count |E|.
     pub e: usize,
+    /// Diameter.
     pub d: u32,
+    /// Global clustering coefficient.
     pub cc: f64,
+    /// Clustering coefficient of a same-density random graph.
     pub rcc: f64,
 }
 
 /// One named dataset: its paper stats and the calibrated generator.
 #[derive(Clone, Debug)]
 pub struct Dataset {
+    /// Upper-case dataset name (lookup key of [`by_name`]).
     pub name: &'static str,
+    /// The paper-reported statistics row.
     pub paper: PaperRow,
+    /// The calibrated generator standing in for the SNAP download.
     pub kind: GraphKind,
     /// true = Table II (simulation engine), false = Table III (EC2)
     pub simulation: bool,
 }
 
 impl Dataset {
+    /// Generate the full-scale calibrated instance.
     pub fn generate(&self, seed: u64) -> Graph {
         self.kind.generate(seed)
     }

@@ -4,6 +4,12 @@
 //! module reads/writes it so real SNAP files drop in unchanged when
 //! available (this environment has no network, so `graph::datasets`
 //! generates calibrated synthetic analogues instead).
+//!
+//! [`parse_edge_line`] is the single line parser: [`read_edge_list`]
+//! (materializing) and the chunked [`super::stream::FileEdgeStream`]
+//! (bounded-memory) both go through it, so the two ingestion paths
+//! cannot drift. Both readers reuse one `read_line` buffer instead of
+//! allocating a fresh `String` per line.
 
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
@@ -12,30 +18,59 @@ use crate::util::error::{Context, Result};
 
 use super::{Graph, GraphBuilder};
 
+/// Parse one edge-list line: `Ok(None)` for blank / `#` / `%` comment
+/// lines, `Ok(Some((u, v)))` for a whitespace-separated vertex pair
+/// (orientation as written — callers normalize), `Err(what)` with a short
+/// description for malformed lines (callers attach file:line context).
+///
+/// The one copy of the SNAP line grammar, shared by [`read_edge_list`]
+/// and [`super::stream::FileEdgeStream`].
+pub fn parse_edge_line(
+    line: &str,
+) -> Result<Option<(u32, u32)>, &'static str> {
+    let t = line.trim();
+    if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+        return Ok(None);
+    }
+    let mut it = t.split_whitespace();
+    let u: u32 = it
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or("bad source vertex")?;
+    let v: u32 = it
+        .next()
+        .and_then(|s| s.parse().ok())
+        .ok_or("bad target vertex")?;
+    Ok(Some((u, v)))
+}
+
 /// Read a SNAP edge list. Applies the paper's cleaning: undirect, dedup,
 /// drop self-loops; `largest_component` additionally removes disconnected
 /// components and compacts ids.
 pub fn read_edge_list(path: &Path, largest_component: bool) -> Result<Graph> {
     let file = std::fs::File::open(path)
         .with_context(|| format!("open {}", path.display()))?;
-    let reader = std::io::BufReader::new(file);
+    let mut reader = std::io::BufReader::new(file);
     let mut b = GraphBuilder::new();
-    for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
-        let t = line.trim();
-        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
-            continue;
+    // one reused line buffer — no per-line String allocation
+    let mut line = String::new();
+    let mut lineno = 0usize;
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            break;
         }
-        let mut it = t.split_whitespace();
-        let u: u32 = it
-            .next()
-            .and_then(|s| s.parse().ok())
-            .with_context(|| format!("{}:{}: bad source", path.display(), lineno + 1))?;
-        let v: u32 = it
-            .next()
-            .and_then(|s| s.parse().ok())
-            .with_context(|| format!("{}:{}: bad target", path.display(), lineno + 1))?;
-        b.push_edge(u, v);
+        lineno += 1;
+        match parse_edge_line(&line) {
+            Ok(None) => {}
+            Ok(Some((u, v))) => b.push_edge(u, v),
+            Err(what) => {
+                return Err(crate::anyhow!(
+                    "{}:{lineno}: {what}",
+                    path.display()
+                ))
+            }
+        }
     }
     Ok(if largest_component { b.build_largest_component() } else { b.build() })
 }
@@ -91,6 +126,18 @@ mod tests {
         std::fs::write(&path, "# SNAP header\n0 1\n1 0\n% other\n1 2\n").unwrap();
         let g = read_edge_list(&path, false).unwrap();
         assert_eq!(g.edge_count(), 2);
+    }
+
+    #[test]
+    fn parse_edge_line_grammar() {
+        assert_eq!(parse_edge_line(""), Ok(None));
+        assert_eq!(parse_edge_line("  # comment\n"), Ok(None));
+        assert_eq!(parse_edge_line("% comment"), Ok(None));
+        assert_eq!(parse_edge_line("3\t7\n"), Ok(Some((3, 7))));
+        assert_eq!(parse_edge_line("  9 2 extra"), Ok(Some((9, 2))));
+        assert!(parse_edge_line("x 1").is_err());
+        assert!(parse_edge_line("1").is_err());
+        assert!(parse_edge_line("1 y").is_err());
     }
 
     #[test]

@@ -1,9 +1,11 @@
-//! Graph substrate: CSR storage, builders, IO, generators, statistics and
-//! the Fig-6 rewiring protocol.
+//! Graph substrate: CSR storage, builders, IO, generators, statistics,
+//! out-of-core edge streaming and the Fig-6 rewiring protocol.
 //!
 //! Graphs are simple undirected graphs with contiguous `u32` vertex ids and
 //! explicit edge ids (`0..m`) — DFEP partitions *edges*, so edge identity
-//! is first-class throughout the crate.
+//! is first-class throughout the crate. When the graph is too large to
+//! materialize, [`stream::EdgeStream`] delivers the edge sequence in
+//! bounded-memory chunks for the ingest-time partitioners.
 
 pub mod builder;
 pub mod datasets;
@@ -11,6 +13,7 @@ pub mod generators;
 pub mod io;
 pub mod rewire;
 pub mod stats;
+pub mod stream;
 
 pub use builder::GraphBuilder;
 

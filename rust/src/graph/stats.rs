@@ -162,13 +162,21 @@ pub fn random_graph_cc(g: &Graph) -> f64 {
 /// The stats row the paper tabulates per dataset.
 #[derive(Clone, Debug)]
 pub struct GraphStats {
+    /// Vertex count |V|.
     pub vertices: usize,
+    /// Edge count |E|.
     pub edges: usize,
+    /// Diameter (double-sweep estimate).
     pub diameter: u32,
+    /// Global clustering coefficient.
     pub clustering: f64,
+    /// Expected clustering of a same-density random graph.
     pub random_cc: f64,
+    /// Mean degree `2|E|/|V|`.
     pub avg_degree: f64,
+    /// Maximum degree.
     pub max_degree: usize,
+    /// Connected component count.
     pub components: usize,
 }
 

@@ -29,6 +29,11 @@
 //! (graph, partition) by [`partition::view::PartitionView`] and shared by
 //! the metrics, the ETSCH engine and the cluster simulators.
 //!
+//! When the graph outgrows memory, [`graph::stream::EdgeStream`] delivers
+//! the edge sequence in bounded-memory chunks and the ingest-time
+//! partitioners in [`partition::streaming`] (HDRF, DBH, restreaming
+//! refinement) place each edge as it arrives — no CSR is ever built.
+//!
 //! Quick tour:
 //!
 //! ```no_run
@@ -44,6 +49,9 @@
 //! println!("rounds = {}", engine.rounds_executed());
 //! ```
 
+// Docs are part of the public contract: every public item must carry
+// rustdoc (CI builds `cargo doc --no-deps` with `-D warnings`).
+#![warn(missing_docs)]
 // Style lints the codebase predates; correctness lints stay on.
 #![allow(
     clippy::needless_range_loop,

@@ -95,6 +95,8 @@ pub(crate) struct DfepState {
 pub(crate) const FREE: u32 = u32::MAX;
 
 impl DfepState {
+    /// Initialize per Alg. 3: each partition starts on a random vertex
+    /// holding the full initial funding.
     pub fn new(g: &Graph, k: usize, initial: f64, rng: &mut Rng) -> Self {
         let n = g.vertex_count();
         let mut money = vec![vec![0.0; n]; k];
@@ -599,6 +601,7 @@ impl DfepState {
         }
     }
 
+    /// Total money across all partitions (the conservation invariant).
     #[allow(dead_code)] // exercised by the conservation tests
     pub fn total_money(&self) -> f64 {
         self.money.iter().map(|mv| mv.iter().sum::<f64>()).sum()

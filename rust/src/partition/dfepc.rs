@@ -12,13 +12,18 @@ use super::{EdgePartition, Partitioner};
 use crate::graph::Graph;
 use crate::util::rng::Rng;
 
+/// The DFEPC variant (§IV-A): DFEP plus poor-partition raids on rich
+/// neighbors once coverage completes.
 #[derive(Clone, Debug)]
 pub struct Dfepc {
     /// Poverty threshold divisor `p` (a partition is poor if
     /// `size < avg / p`).
     pub poverty_divisor: f64,
+    /// Per-edge funding cap (same semantics as [`super::dfep::Dfep`]).
     pub funding_cap: f64,
+    /// Initial funding multiplier on `|E|/k`.
     pub initial_fraction: f64,
+    /// Round bound.
     pub max_rounds: usize,
     /// Extra rounds after full coverage during which poor partitions may
     /// keep raiding (lets balance improve once every edge is owned).

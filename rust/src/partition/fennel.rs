@@ -21,6 +21,9 @@ use super::{EdgePartition, Partitioner};
 use crate::graph::Graph;
 use crate::util::rng::Rng;
 
+/// Fennel-style streaming greedy edge partitioner (requires the
+/// materialized [`Graph`]; the bounded-memory ingest-time counterparts
+/// live in [`crate::partition::streaming`]).
 #[derive(Clone, Debug)]
 pub struct StreamingGreedy {
     /// Load-balance penalty weight (Fennel's gamma).

@@ -13,6 +13,7 @@ use super::{EdgePartition, Partitioner};
 use crate::graph::Graph;
 use crate::util::rng::Rng;
 
+/// The JaBeJa comparison baseline: simulated-annealing edge swaps.
 #[derive(Clone, Debug)]
 pub struct JaBeJa {
     /// Number of swap rounds (the paper notes JaBeJa's round count is

@@ -15,6 +15,7 @@ use crate::graph::Graph;
 /// One row of the paper's simulation plots.
 #[derive(Clone, Debug)]
 pub struct Report {
+    /// Number of parts.
     pub k: usize,
     /// Size of the largest partition, normalized so 1.0 == |E|/K.
     pub largest: f64,

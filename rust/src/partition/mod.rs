@@ -4,8 +4,10 @@
 //! vertex sets `V_i` (and the frontier `F_i`) are derived — hot paths
 //! derive them exactly once through [`view::PartitionView`]. Partitioners:
 //! [`dfep::Dfep`] (the paper's contribution), [`dfepc::Dfepc`] (the
-//! variant of §IV-A), [`jabeja::JaBeJa`] (the comparison baseline) and the
-//! trivial [`baselines`].
+//! variant of §IV-A), [`jabeja::JaBeJa`] (the comparison baseline), the
+//! trivial [`baselines`], and the ingest-time [`streaming`] partitioners
+//! (HDRF / DBH / restreaming refinement) that place edges straight off a
+//! bounded-memory [`crate::graph::stream::EdgeStream`].
 
 pub mod baselines;
 pub mod dfep;
@@ -14,6 +16,7 @@ pub mod fennel;
 pub mod jabeja;
 pub mod multilevel;
 pub mod metrics;
+pub mod streaming;
 pub mod view;
 
 use crate::graph::Graph;
@@ -21,6 +24,7 @@ use crate::graph::Graph;
 /// A complete edge partitioning of a graph into `k` parts.
 #[derive(Clone, Debug)]
 pub struct EdgePartition {
+    /// Number of parts.
     pub k: usize,
     /// `owner[e]` = partition of edge `e` (always in `0..k` once complete).
     pub owner: Vec<u32>,

@@ -18,6 +18,8 @@ use super::{baselines::GreedyBfs, EdgePartition, Partitioner};
 use crate::graph::{Graph, GraphBuilder};
 use crate::util::rng::Rng;
 
+/// METIS-style multilevel partitioner: coarsen, partition the coarsest
+/// graph, then uncoarsen with balance-capped refinement.
 #[derive(Clone, Debug)]
 pub struct Multilevel {
     /// Stop coarsening when the graph has at most this many vertices

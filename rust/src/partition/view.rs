@@ -45,17 +45,20 @@ pub struct Subgraph {
 }
 
 impl Subgraph {
+    /// Number of local vertices.
     #[inline]
     pub fn vertex_count(&self) -> usize {
         self.global.len()
     }
 
+    /// `(local neighbor, global edge id)` pairs incident on `v_local`.
     #[inline]
     pub fn neighbors(&self, v_local: u32) -> &[(u32, u32)] {
         &self.adj[self.offsets[v_local as usize] as usize
             ..self.offsets[v_local as usize + 1] as usize]
     }
 
+    /// Local degree of `v_local`.
     #[inline]
     pub fn degree(&self, v_local: u32) -> usize {
         (self.offsets[v_local as usize + 1] - self.offsets[v_local as usize])

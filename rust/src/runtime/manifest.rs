@@ -14,7 +14,9 @@ use crate::util::json::{self, Json};
 /// Element type of a tensor (the subset our kernels use).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Dtype {
+    /// 32-bit IEEE float.
     F32,
+    /// 32-bit signed integer.
     I32,
 }
 
@@ -27,6 +29,7 @@ impl Dtype {
         }
     }
 
+    /// Bytes per element (both supported dtypes are 4-byte).
     pub fn size_bytes(self) -> usize {
         4
     }
@@ -35,11 +38,14 @@ impl Dtype {
 /// Shape + dtype of one tensor.
 #[derive(Clone, Debug, PartialEq)]
 pub struct TensorSpec {
+    /// Dimension sizes, row-major.
     pub shape: Vec<usize>,
+    /// Element type.
     pub dtype: Dtype,
 }
 
 impl TensorSpec {
+    /// Product of the dimensions.
     pub fn element_count(&self) -> usize {
         self.shape.iter().product()
     }
@@ -48,15 +54,20 @@ impl TensorSpec {
 /// One artifact's interface.
 #[derive(Clone, Debug)]
 pub struct ArtifactSpec {
+    /// Artifact name (the manifest key).
     pub name: String,
+    /// HLO text file, resolved relative to the manifest directory.
     pub file: PathBuf,
+    /// Input tensor interface, in call order.
     pub inputs: Vec<TensorSpec>,
+    /// Output tensor interface (artifacts always return a tuple).
     pub outputs: Vec<TensorSpec>,
 }
 
 /// The whole manifest.
 #[derive(Clone, Debug, Default)]
 pub struct Manifest {
+    /// Artifacts by name (sorted map keeps listing order stable).
     pub artifacts: BTreeMap<String, ArtifactSpec>,
 }
 
@@ -85,6 +96,7 @@ impl Manifest {
         Self::parse(&text, dir)
     }
 
+    /// Parse manifest JSON text; artifact files resolve relative to `dir`.
     pub fn parse(text: &str, dir: &Path) -> Result<Manifest> {
         let doc = json::parse(text).context("parse manifest.json")?;
         let obj = doc.as_obj().ok_or_else(|| anyhow!("manifest not an object"))?;
@@ -116,6 +128,7 @@ impl Manifest {
         Ok(Manifest { artifacts })
     }
 
+    /// Look an artifact up by name (error lists it as missing).
     pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
         self.artifacts
             .get(name)

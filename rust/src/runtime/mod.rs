@@ -26,11 +26,14 @@ pub use manifest::{ArtifactSpec, Dtype, Manifest, TensorSpec};
 /// A tensor crossing the rust <-> XLA boundary.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Tensor {
+    /// f32 payload (flat, row-major).
     F32(Vec<f32>),
+    /// i32 payload (flat, row-major).
     I32(Vec<i32>),
 }
 
 impl Tensor {
+    /// Element count.
     pub fn len(&self) -> usize {
         match self {
             Tensor::F32(v) => v.len(),
@@ -38,10 +41,12 @@ impl Tensor {
         }
     }
 
+    /// True when the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Element type.
     pub fn dtype(&self) -> Dtype {
         match self {
             Tensor::F32(_) => Dtype::F32,
@@ -49,6 +54,7 @@ impl Tensor {
         }
     }
 
+    /// View as f32 elements (error on dtype mismatch).
     pub fn as_f32(&self) -> Result<&[f32]> {
         match self {
             Tensor::F32(v) => Ok(v),
@@ -56,6 +62,7 @@ impl Tensor {
         }
     }
 
+    /// View as i32 elements (error on dtype mismatch).
     pub fn as_i32(&self) -> Result<&[i32]> {
         match self {
             Tensor::I32(v) => Ok(v),
@@ -94,10 +101,12 @@ pub struct Executable {
 }
 
 impl Executable {
+    /// The manifest interface this executable was validated against.
     pub fn spec(&self) -> &ArtifactSpec {
         &self.spec
     }
 
+    /// Executions performed so far (perf accounting).
     pub fn calls(&self) -> u64 {
         *self.calls.lock().unwrap()
     }
@@ -178,10 +187,12 @@ impl Runtime {
         Self::open(Path::new(&dir))
     }
 
+    /// PJRT platform name (`"cpu-sim"` for the reference interpreter).
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// The loaded artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }

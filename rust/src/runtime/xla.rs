@@ -30,6 +30,8 @@ fn err<T>(msg: impl Into<String>) -> Result<T> {
     Err(Error(msg.into()))
 }
 
+/// `Result` defaulted to the runtime [`Error`], mirroring the real
+/// binding's alias.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
 /// Tensor payload.
@@ -50,7 +52,9 @@ pub struct Literal {
 
 /// Element types the simulated backend moves across the boundary.
 pub trait NativeType: Copy {
+    /// Wrap a host vector into the tensor payload.
     fn wrap(v: Vec<Self>) -> Data;
+    /// Borrow the payload back as a typed slice (None on dtype mismatch).
     fn unwrap(d: &Data) -> Option<&[Self]>;
 }
 
@@ -169,6 +173,7 @@ pub struct XlaComputation {
 }
 
 impl XlaComputation {
+    /// Wrap a parsed module (the interpreter needs only its name).
     pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
         XlaComputation { name: proto.name.clone() }
     }
@@ -483,6 +488,8 @@ pub struct PjRtBuffer {
 }
 
 impl PjRtBuffer {
+    /// Copy the device buffer back to a host literal (synchronous, like
+    /// the real binding's API).
     pub fn to_literal_sync(&self) -> Result<Literal> {
         Ok(self.lit.clone())
     }
@@ -511,14 +518,17 @@ pub struct PjRtClient {
 }
 
 impl PjRtClient {
+    /// Create the CPU client (always succeeds in the simulator).
     pub fn cpu() -> Result<PjRtClient> {
         Ok(PjRtClient { _priv: () })
     }
 
+    /// Platform identifier — `"cpu-sim"` marks the reference interpreter.
     pub fn platform_name(&self) -> String {
         "cpu-sim".to_string()
     }
 
+    /// "Compile": dispatch the module name onto the registered kernel set.
     pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
         Ok(PjRtLoadedExecutable { kernel: parse_kernel(&comp.name)? })
     }

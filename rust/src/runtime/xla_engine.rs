@@ -21,8 +21,11 @@ use crate::util::rng::Rng;
 /// Shape class of a compiled funding artifact.
 #[derive(Clone, Copy, Debug)]
 pub struct FundingShape {
+    /// Compiled partition count.
     pub k: usize,
+    /// Compiled (padded) vertex capacity.
     pub v: usize,
+    /// Compiled (padded) edge capacity.
     pub e: usize,
 }
 
@@ -45,8 +48,11 @@ pub fn pick_shape(k: usize, nv: usize, ne: usize) -> Option<&'static str> {
 
 /// DFEP with XLA-offloaded rounds.
 pub struct XlaDfep {
+    /// Per-edge funding cap (same semantics as [`crate::partition::dfep::Dfep`]).
     pub funding_cap: f64,
+    /// Initial funding multiplier on `|E|/k`.
     pub initial_fraction: f64,
+    /// Round bound.
     pub max_rounds: usize,
 }
 
@@ -57,6 +63,8 @@ impl Default for XlaDfep {
 }
 
 impl XlaDfep {
+    /// Run DFEP with the funding rounds executed by the XLA artifact
+    /// (steps 1+2 on the device, step 3 in rust).
     pub fn partition(
         &self,
         rt: &Runtime,

@@ -11,7 +11,9 @@ use crate::util::rng::Rng;
 
 /// Generator context for one property case.
 pub struct Gen {
+    /// The case's deterministic PRNG — draw named seeds from it.
     pub rng: Rng,
+    /// The case seed (printed on failure for exact replay).
     pub seed: u64,
 }
 

@@ -9,15 +9,22 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (f64-backed, like JavaScript).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (sorted map keeps iteration deterministic).
     Obj(BTreeMap<String, Json>),
 }
 
 impl Json {
+    /// Object field lookup (None on non-objects / missing keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -25,6 +32,7 @@ impl Json {
         }
     }
 
+    /// Borrow as a string, if this is one.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -32,6 +40,7 @@ impl Json {
         }
     }
 
+    /// Read as a number, if this is one.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -39,10 +48,12 @@ impl Json {
         }
     }
 
+    /// Read as a number truncated to usize.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// Borrow as an array, if this is one.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -50,6 +61,7 @@ impl Json {
         }
     }
 
+    /// Borrow as an object map, if this is one.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),
@@ -61,7 +73,9 @@ impl Json {
 /// Parse error with byte offset.
 #[derive(Debug)]
 pub struct JsonError {
+    /// Byte offset the parser stopped at.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 

@@ -38,6 +38,7 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Next 32 uniform bits (the core PCG32 step).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
@@ -49,6 +50,7 @@ impl Rng {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next 64 uniform bits (two PCG32 steps).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64

@@ -52,16 +52,24 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
 /// Summary of repeated measurements (the bench harness prints these).
 #[derive(Clone, Debug, Default)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub stdev: f64,
+    /// Minimum.
     pub min: f64,
+    /// Median.
     pub p50: f64,
+    /// 95th percentile.
     pub p95: f64,
+    /// Maximum.
     pub max: f64,
 }
 
 impl Summary {
+    /// Summarize a sample (all fields 0 for an empty slice).
     pub fn of(xs: &[f64]) -> Summary {
         Summary {
             n: xs.len(),

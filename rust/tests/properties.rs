@@ -16,6 +16,7 @@ use dfep::partition::{
     jabeja::JaBeJa,
     metrics,
     multilevel::Multilevel,
+    streaming::{Dbh, Hdrf, Restream},
     Partitioner,
 };
 use dfep::testing::prop::{forall, Gen};
@@ -30,6 +31,10 @@ fn partitioners() -> Vec<Box<dyn Partitioner>> {
         Box::new(GreedyBfs),
         Box::new(StreamingGreedy::default()),
         Box::new(Multilevel::default()),
+        // ingest-time partitioners through their in-memory adapters
+        Box::new(Hdrf::default()),
+        Box::new(Dbh::default()),
+        Box::new(Restream::default()),
     ]
 }
 
