@@ -5,14 +5,13 @@
 //! funding cap, initial fraction) and cluster fault injection.
 //! Knobs: DFEP_SAMPLES, DFEP_SCALE.
 
-use dfep::bench::figures::{measure, samples, scale};
+use dfep::bench::figures::{measure, samples, scale, spec};
 use dfep::bench::{fmt_f, Table};
 use dfep::cluster::cost::CostModel;
 use dfep::cluster::dfep_mr::run_cluster_dfep;
 use dfep::cluster::failures::{simulate_with_faults, FaultModel};
-use dfep::coordinator::runs::PartitionerKind;
 use dfep::graph::datasets;
-use dfep::partition::dfep::Dfep;
+use dfep::partition::registry;
 
 fn main() {
     let n = samples();
@@ -26,11 +25,11 @@ fn main() {
         let mut t = Table::new(&[
             "algo", "largest", "nstdev", "messages", "rounds", "gain",
         ]);
-        for &kind in PartitionerKind::all() {
-            let p = kind.build();
-            let c = measure(&g, p.as_ref(), 20, n, 2);
+        for entry in registry::all() {
+            let s = spec(entry.name);
+            let c = measure(&g, &s, 20, n, 2);
             t.row(&[
-                p.name().into(),
+                entry.name.into(),
                 fmt_f(c.largest.mean),
                 fmt_f(c.nstdev.mean),
                 fmt_f(c.messages.mean),
@@ -46,29 +45,21 @@ fn main() {
         let mut t = Table::new(&[
             "variant", "largest", "nstdev", "messages", "rounds",
         ]);
-        let variants: Vec<(&str, Dfep)> = vec![
-            ("default", Dfep::default()),
+        // every ablation variant is a spec string now — the same
+        // grammar the CLI takes
+        let variants = vec![
+            ("default", "dfep"),
             (
                 "literal Alg.4 (no frontier-first)",
-                Dfep {
-                    frontier_first: false,
-                    max_rounds: 300,
-                    ..Default::default()
-                },
+                "dfep:frontier_first=false,max_rounds=300",
             ),
-            (
-                "initial x0.25",
-                Dfep { initial_fraction: 0.25, ..Default::default() },
-            ),
-            (
-                "initial x4",
-                Dfep { initial_fraction: 4.0, ..Default::default() },
-            ),
-            ("cap=2", Dfep { funding_cap: 2.0, ..Default::default() }),
-            ("cap=50", Dfep { funding_cap: 50.0, ..Default::default() }),
+            ("initial x0.25", "dfep:init=0.25"),
+            ("initial x4", "dfep:init=4"),
+            ("cap=2", "dfep:cap=2"),
+            ("cap=50", "dfep:cap=50"),
         ];
         for (name, v) in variants {
-            let c = measure(&g, &v, 20, n, 0);
+            let c = measure(&g, &spec(v), 20, n, 0);
             t.row(&[
                 name.into(),
                 fmt_f(c.largest.mean),

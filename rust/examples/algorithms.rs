@@ -24,7 +24,7 @@ fn main() {
     let g = GraphKind::PowerlawCluster { n: 2_000, m: 5, p: 0.35 }
         .generate(42);
     let k = 6;
-    let p = Dfep::default().partition(&g, k, 1);
+    let p = Dfep::default().partition_graph(&g, k, 1).unwrap();
     println!(
         "graph |V|={} |E|={}, DFEP k={k} ({} rounds)",
         g.vertex_count(),
@@ -107,7 +107,7 @@ fn main() {
 
     // cross-check on a small induced instance
     let small = GraphKind::ErdosRenyi { n: 80, m: 200 }.generate(5);
-    let sp = Dfep::default().partition(&small, 3, 2);
+    let sp = Dfep::default().partition_graph(&small, 3, 2).unwrap();
     let exact = etsch_betweenness(&small, &sp, 0, 0);
     let oracle = brandes_ref(&small);
     let max_err = exact

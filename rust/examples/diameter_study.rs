@@ -4,11 +4,11 @@
 //!     cargo run --release --example diameter_study
 
 use dfep::bench::Table;
-use dfep::etsch::gain::average_gain;
+use dfep::coordinator::runs::PartitionRequest;
 use dfep::graph::{datasets, rewire, stats};
-use dfep::partition::{dfep::Dfep, metrics, Partitioner};
+use dfep::partition::spec::PartitionerSpec;
 
-fn main() {
+fn main() -> dfep::util::error::Result<()> {
     let g0 = datasets::usroads().scaled(0.04, 42);
     println!(
         "base road graph: |V|={} |E|={}",
@@ -22,9 +22,18 @@ fn main() {
     for frac in [0.0, 0.02, 0.05, 0.1, 0.2, 0.4] {
         let g = rewire::rewire_fraction(&g0, frac, 7);
         let d = stats::diameter_estimate(&g, 4, 1);
-        let p = Dfep::default().partition(&g, 20, 1);
-        let r = metrics::evaluate(&g, &p);
-        let gain = average_gain(&g, &p, 2, 3);
+        // one facade run per rewired instance: metrics + gain off one
+        // shared view build
+        let res = PartitionRequest {
+            spec: PartitionerSpec::parse("dfep")?,
+            k: 20,
+            seed: 1,
+            gain_samples: 2,
+            ..Default::default()
+        }
+        .execute_on(&g)?;
+        let r = &res.metrics;
+        let gain = res.gain.unwrap_or(0.0);
         table.row(&[
             format!("{:.0}", frac * 100.0),
             d.to_string(),
@@ -40,4 +49,5 @@ fn main() {
         "\nExpected shapes (paper Fig 6): balance degrades and rounds rise \
          with diameter; messages fall; gain rises."
     );
+    Ok(())
 }

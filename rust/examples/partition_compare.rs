@@ -1,17 +1,19 @@
-//! Compare every partitioner on a small-world and a road-network graph —
-//! the Fig-7 story at example scale.
+//! Compare every registered partitioner on a small-world and a
+//! road-network graph — the Fig-7 story at example scale, driven entirely
+//! through the coordinator facade (`PartitionRequest -> RunReport`).
 //!
 //!     cargo run --release --example partition_compare
 
 use dfep::bench::Table;
-use dfep::coordinator::runs::{run, PartitionerKind, RunConfig};
+use dfep::coordinator::runs::PartitionRequest;
 use dfep::graph::datasets;
+use dfep::partition::{registry, spec};
 
-fn main() {
-    for (name, spec) in
+fn main() -> dfep::util::error::Result<()> {
+    for (name, ds) in
         [("ASTROPH@5%", "astroph"), ("USROADS@5%", "usroads")]
     {
-        let d = datasets::by_name(spec).unwrap();
+        let d = datasets::by_name(ds).expect("known dataset");
         let g = d.scaled(0.05, 42);
         println!(
             "\n=== {name}: |V|={} |E|={} ===",
@@ -21,22 +23,23 @@ fn main() {
         let mut table = Table::new(&[
             "algo", "rounds", "largest", "nstdev", "messages", "gain",
         ]);
-        for &kind in PartitionerKind::all() {
-            let cfg = RunConfig {
-                partitioner: kind,
+        for entry in registry::all() {
+            let req = PartitionRequest {
+                spec: spec::default_spec(entry),
                 k: 20,
                 seed: 1,
                 gain_samples: 3,
+                ..Default::default()
             };
-            let res = run(&g, &cfg);
-            let r = &res.report;
+            let res = req.execute_on(&g)?;
+            let r = &res.metrics;
             table.row(&[
-                format!("{kind:?}"),
+                res.spec.clone(),
                 r.rounds.to_string(),
                 format!("{:.3}", r.largest),
                 format!("{:.4}", r.nstdev),
                 r.messages.to_string(),
-                format!("{:.3}", res.gain.unwrap()),
+                format!("{:.3}", res.gain.unwrap_or(0.0)),
             ]);
         }
     }
@@ -44,4 +47,5 @@ fn main() {
         "\nExpected shapes (paper Fig 7): DFEP/DFEPC more balanced than \
          JaBeJa on small-world; JaBeJa needs ~10x the messages on roads."
     );
+    Ok(())
 }

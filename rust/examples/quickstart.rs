@@ -1,64 +1,62 @@
-//! Quickstart: partition a small-world graph with DFEP, inspect the
-//! paper's quality metrics, then run an ETSCH computation on the result.
+//! Quickstart: one `PartitionRequest` through the coordinator facade —
+//! partition a small-world graph with DFEP, get the paper's quality
+//! metrics and an attached ETSCH SSSP workload back in one `RunReport` —
+//! then reuse the partition for a second ETSCH computation.
 //!
 //!     cargo run --release --example quickstart
 
-use dfep::etsch::{cc::ConnectedComponents, sssp::Sssp, Etsch};
-use dfep::graph::generators::GraphKind;
-use dfep::partition::view::PartitionView;
-use dfep::partition::{dfep::Dfep, metrics, Partitioner};
+use dfep::coordinator::runs::{resolve_graph, PartitionRequest, Workload};
+use dfep::etsch::{cc::ConnectedComponents, Etsch};
+use dfep::partition::spec::PartitionerSpec;
+use dfep::util::error::Result;
 
-fn main() {
-    // 1. a graph — here a synthetic collaboration-network lookalike
-    let g = GraphKind::PowerlawCluster { n: 5_000, m: 8, p: 0.4 }
-        .generate(42);
+fn main() -> Result<()> {
+    // 1. one request: dataset spec + partitioner spec + k + seed +
+    //    workload; the facade resolves, partitions, evaluates and runs
+    //    the workload off one shared PartitionView build
+    let req = PartitionRequest {
+        spec: PartitionerSpec::parse("dfep")?,
+        dataset: "plc:n=5000,m=8,p=0.4".to_string(),
+        k: 8,
+        seed: 1,
+        graph_seed: 42,
+        gain_samples: 0,
+        threads: None,
+        workload: Some(Workload::Sssp { source: 0 }),
+    };
+    let res = req.execute()?;
+
+    let r = &res.metrics;
     println!(
-        "graph: |V| = {}, |E| = {}",
-        g.vertex_count(),
-        g.edge_count()
+        "{} on {} (k = {}) in {:.3}s:",
+        res.spec, res.dataset, res.k, res.timings.partition_secs
+    );
+    println!("  rounds        {}", r.rounds);
+    println!("  largest part  {:.3} (1.0 = perfectly balanced)", r.largest);
+    println!("  nstdev        {:.4}", r.nstdev);
+    println!("  messages      {} (sum of frontier replicas)", r.messages);
+    println!("  disconnected  {:.1}%", r.disconnected * 100.0);
+
+    // 2. the attached ETSCH workload came back with the report
+    let w = res.workload.as_ref().expect("workload was requested");
+    println!(
+        "\nETSCH {}: {} rounds, {} reached, {} messages, {:.3}s",
+        w.name, w.rounds, w.reached, w.messages, w.secs
     );
 
-    // 2. DFEP edge partitioning into k = 8 parts
-    let k = 8;
-    let (part, secs) =
-        dfep::util::timer::time(|| Dfep::default().partition(&g, k, 1));
-    // derive the partition's shared state (edge CSRs, replica table,
-    // frontier flags) once; metrics and ETSCH both read from it
-    let view = PartitionView::build(&g, &part);
-    let report = metrics::evaluate_with(&g, &part, &view);
-    println!("\nDFEP (k = {k}) in {secs:.3}s:");
-    println!("  rounds        {}", report.rounds);
-    println!("  largest part  {:.3} (1.0 = perfectly balanced)", report.largest);
-    println!("  nstdev        {:.4}", report.nstdev);
-    println!("  messages      {} (sum of frontier replicas)", report.messages);
-    println!("  disconnected  {:.1}%", report.disconnected * 100.0);
+    // the whole report serializes through the crate's flat JSON writer
+    println!("\nas JSON:\n{}", res.to_json());
 
-    // 3. ETSCH: single-source shortest paths over the edge partitions
-    // (sharing the view built above — no re-derivation)
-    let mut engine = Etsch::from_view(&g, &view);
-    let dist = engine.run(&mut Sssp::new(0));
-    let reached = dist.iter().filter(|&&d| d != u32::MAX).count();
-    println!(
-        "\nETSCH sssp: {} rounds, {} reached, max dist {}",
-        engine.rounds_executed(),
-        reached,
-        dist.iter().filter(|&&d| d != u32::MAX).max().unwrap()
-    );
-
-    // compare with the vertex-centric baseline (one hop per superstep)
-    let base = dfep::etsch::vertex_baseline::bsp_sssp(&g, 0);
-    println!(
-        "baseline:   {} supersteps  ->  gain = {:.2}",
-        base.supersteps,
-        1.0 - engine.rounds_executed() as f64 / base.supersteps as f64
-    );
-
-    // 4. ETSCH: connected components on the same partitioning
+    // 3. the partition itself is in the report — run a second ETSCH
+    //    computation on it (connected components)
+    let g = resolve_graph(&res.dataset, 42)?;
+    let mut engine = Etsch::new(&g, &res.partition);
     let labels = engine.run(&mut ConnectedComponents::new(7));
     let distinct: std::collections::HashSet<_> = labels.iter().collect();
     println!(
-        "\nETSCH connected components: {} rounds, {} component(s)",
+        "ETSCH connected components: {} rounds, {} component(s)",
         engine.rounds_executed(),
         distinct.len()
     );
+    Ok(())
 }

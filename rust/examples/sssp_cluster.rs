@@ -109,7 +109,7 @@ fn main() -> Result<()> {
     let mut all_match = true;
     for nodes in [2usize, 4, 8, 16] {
         let p = dfep::partition::dfep::Dfep::default()
-            .partition(&g, nodes, 7);
+            .partition_graph(&g, nodes, 7).unwrap();
         let e = run_etsch_sssp(&g, &p, 0, nodes, &cost);
         let b = run_baseline_sssp(&g, 0, nodes, &cost);
         all_match &= e.distances == b.distances;

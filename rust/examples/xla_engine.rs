@@ -35,7 +35,7 @@ fn main() -> Result<()> {
     let k = 8;
     let (px, tx) =
         time(|| XlaDfep::default().partition(&rt, &g, k, 3).unwrap());
-    let (pr, tr) = time(|| Dfep::default().partition(&g, k, 3));
+    let (pr, tr) = time(|| Dfep::default().partition_graph(&g, k, 3).unwrap());
     // one shared derivation per partition: metrics here, subgraphs below
     let view = PartitionView::build(&g, &px);
     let rx = metrics::evaluate_with(&g, &px, &view);

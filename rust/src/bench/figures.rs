@@ -12,14 +12,20 @@ use crate::bench::harness::{fmt_f, sample_seeds, Table};
 use crate::cluster::cost::CostModel;
 use crate::cluster::dfep_mr::{resimulate, run_cluster_dfep};
 use crate::cluster::etsch_mr::{run_baseline_sssp, run_etsch_sssp};
-use crate::etsch::gain::{average_gain, average_gain_with};
-use crate::etsch::Etsch;
+use crate::coordinator::runs::PartitionRequest;
+use crate::etsch::gain::average_gain;
 use crate::graph::{datasets, rewire, stats, Graph};
+use crate::partition::spec::PartitionerSpec;
 use crate::partition::view::PartitionView;
-use crate::partition::{
-    dfep::Dfep, dfepc::Dfepc, jabeja::JaBeJa, metrics, Partitioner,
-};
+use crate::partition::{metrics, Partitioner};
 use crate::util::stats::{mean, Summary};
+
+/// Parse a bench-internal spec string (all of them are valid by
+/// construction; a typo is a bench bug, so panic loudly).
+pub fn spec(s: &str) -> PartitionerSpec {
+    PartitionerSpec::parse(s)
+        .unwrap_or_else(|e| panic!("bad bench spec '{s}': {e}"))
+}
 
 /// Seeded repetitions per data point (`DFEP_SAMPLES`, default 5).
 pub fn samples() -> usize {
@@ -72,12 +78,12 @@ pub struct Cell {
     pub disconnected: Summary,
 }
 
-/// Run one (partitioner, graph, k) cell: `samples` seeded partitions,
-/// each evaluated through one shared [`PartitionView`] build (plus
-/// `gain_samples` ETSCH gain sources when nonzero).
+/// Run one (spec, graph, k) cell: `samples` seeded facade runs (each one
+/// [`PartitionRequest::execute_on`], which shares one [`PartitionView`]
+/// build between the metrics and every gain source).
 pub fn measure(
     g: &Graph,
-    p: &dyn Partitioner,
+    spec: &PartitionerSpec,
     k: usize,
     samples: usize,
     gain_samples: usize,
@@ -90,18 +96,24 @@ pub fn measure(
     let mut gains = Vec::new();
     let mut disc = Vec::new();
     for &s in &seeds {
-        let part = p.partition(g, k, s);
-        // one shared derivation per sample: metrics + every gain run
-        let view = PartitionView::build(g, &part);
-        let r = metrics::evaluate_with(g, &part, &view);
+        let req = PartitionRequest {
+            spec: spec.clone(),
+            k,
+            seed: s,
+            gain_samples,
+            ..Default::default()
+        };
+        let res = req
+            .execute_on(g)
+            .unwrap_or_else(|e| panic!("bench run '{spec}' failed: {e}"));
+        let r = &res.metrics;
         largest.push(r.largest);
         nstdev.push(r.nstdev);
         messages.push(r.messages as f64);
         rounds.push(r.rounds as f64);
         disc.push(r.disconnected);
-        if gain_samples > 0 {
-            let mut engine = Etsch::from_view(g, &view);
-            gains.push(average_gain_with(g, &mut engine, gain_samples, s));
+        if let Some(gain) = res.gain {
+            gains.push(gain);
         }
     }
     Cell {
@@ -130,11 +142,10 @@ pub fn fig5() {
             "algo", "K", "largest", "nstdev", "messages", "rounds", "gain",
         ]);
         for k in [2usize, 4, 8, 16, 32, 64, 128] {
-            for (name, p) in [
-                ("DFEP", &Dfep::default() as &dyn Partitioner),
-                ("DFEPC", &Dfepc::default() as &dyn Partitioner),
-            ] {
-                let c = measure(&g, p, k, n, 2);
+            for (name, p) in
+                [("DFEP", spec("dfep")), ("DFEPC", spec("dfepc"))]
+            {
+                let c = measure(&g, &p, k, n, 2);
                 t.row(&[
                     name.into(),
                     k.to_string(),
@@ -170,7 +181,7 @@ pub fn fig6() {
     for frac in [0.0, 0.01, 0.02, 0.05, 0.1, 0.2, 0.4] {
         let g = rewire::rewire_fraction(&g0, frac, 7);
         let d = stats::diameter_estimate(&g, 4, 1);
-        let c = measure(&g, &Dfep::default(), 20, n, 2);
+        let c = measure(&g, &spec("dfep"), 20, n, 2);
         t.row(&[
             fmt_f(frac * 100.0),
             d.to_string(),
@@ -204,11 +215,11 @@ pub fn fig7() {
             "algo", "largest", "nstdev", "messages", "rounds", "gain",
         ]);
         for (name, p) in [
-            ("DFEP", &Dfep::default() as &dyn Partitioner),
-            ("DFEPC", &Dfepc::default() as &dyn Partitioner),
-            ("JaBeJa", &JaBeJa::default() as &dyn Partitioner),
+            ("DFEP", spec("dfep")),
+            ("DFEPC", spec("dfepc")),
+            ("JaBeJa", spec("jabeja")),
         ] {
-            let c = measure(&g, p, 20, n, 2);
+            let c = measure(&g, &p, 20, n, 2);
             t.row(&[
                 name.into(),
                 fmt_f(c.largest.mean),
@@ -266,7 +277,10 @@ pub fn fig9() {
     for ds in ["dblp", "youtube", "amazon"] {
         let g = load(ds, sc);
         for nodes in [2usize, 4, 8, 16] {
-            let p = Dfep::default().partition(&g, nodes, 7);
+            let p = spec("dfep")
+                .build()
+                .partition_graph(&g, nodes, 7)
+                .expect("bench partition");
             let e = run_etsch_sssp(&g, &p, 0, nodes, &cost);
             let b = run_baseline_sssp(&g, 0, nodes, &cost);
             assert_eq!(e.distances, b.distances, "correctness");
@@ -361,14 +375,16 @@ pub fn hotpath_with(quick: bool) {
         let mut base_rounds = 0usize;
         let mut base_mean = 0.0f64;
         let mut identical = true;
+        let dfep = spec("dfep").build();
         for threads in [1usize, 2, 4, 8] {
             let (part, times) = pool::with_threads(threads, || {
-                let part = Dfep::default().partition(&gs, 8, 1);
+                let part =
+                    dfep.partition_graph(&gs, 8, 1).expect("bench dfep");
                 let times = crate::util::timer::time_n(
                     if quick { 0 } else { 1 },
                     n,
                     || {
-                        let _ = Dfep::default().partition(&gs, 8, 1);
+                        let _ = dfep.partition_graph(&gs, 8, 1);
                     },
                 );
                 (part, times)
@@ -416,16 +432,17 @@ pub fn hotpath_with(quick: bool) {
     // DFEP partition throughput
     let warmup = if quick { 0 } else { 1 };
     let mut t = Table::new(&["path", "mean_s", "p95_s", "Medges/s"]);
-    for (name, key, p) in [
-        ("DFEP k=8", "dfep_default_mean_s", Dfep::default()),
+    for (name, key, s) in [
+        ("DFEP k=8", "dfep_default_mean_s", "dfep"),
         (
             "DFEP k=8 literal-Alg4 (ablation)",
             "dfep_literal_alg4_mean_s",
-            Dfep { frontier_first: false, max_rounds: 300, ..Default::default() },
+            "dfep:frontier_first=false,max_rounds=300",
         ),
     ] {
+        let p = spec(s).build();
         let times = crate::util::timer::time_n(warmup, n, || {
-            let _ = p.partition(&g, 8, 1);
+            let _ = p.partition_graph(&g, 8, 1);
         });
         let s = Summary::of(&times);
         t.row(&[
@@ -438,7 +455,10 @@ pub fn hotpath_with(quick: bool) {
     }
 
     // ETSCH round loop
-    let p = Dfep::default().partition(&g, 8, 1);
+    let p = spec("dfep")
+        .build()
+        .partition_graph(&g, 8, 1)
+        .expect("bench dfep");
     let times = crate::util::timer::time_n(warmup, n, || {
         let mut engine = crate::etsch::Etsch::new(&g, &p);
         let _ = engine.run(&mut crate::etsch::sssp::Sssp::new(0));
@@ -493,8 +513,6 @@ pub fn hotpath_with(quick: bool) {
     // streaming series: ingest-time partitioner throughput (edges/sec),
     // with the materializing StreamingGreedy as the comparison point
     {
-        use crate::partition::fennel::StreamingGreedy;
-        use crate::partition::streaming::{Dbh, Hdrf, Restream};
         let m = g.edge_count() as f64;
         let mut series = |name: &str, key: &str, times: Vec<f64>| {
             let s = Summary::of(&times);
@@ -510,28 +528,28 @@ pub fn hotpath_with(quick: bool) {
             "HDRF (stream ingest)",
             "streaming_hdrf_edges_per_s",
             crate::util::timer::time_n(warmup, n, || {
-                let _ = Hdrf::default().partition(&g, 8, 1);
+                let _ = spec("hdrf").build().partition_graph(&g, 8, 1);
             }),
         );
         series(
             "DBH (stream ingest, 2 passes)",
             "streaming_dbh_edges_per_s",
             crate::util::timer::time_n(warmup, n, || {
-                let _ = Dbh::default().partition(&g, 8, 1);
+                let _ = spec("dbh").build().partition_graph(&g, 8, 1);
             }),
         );
         series(
             "ReStream (HDRF + 1 refine)",
             "streaming_restream_edges_per_s",
             crate::util::timer::time_n(warmup, n, || {
-                let _ = Restream::default().partition(&g, 8, 1);
+                let _ = spec("restream").build().partition_graph(&g, 8, 1);
             }),
         );
         series(
             "StreamingGreedy (materialized)",
             "streaming_greedy_edges_per_s",
             crate::util::timer::time_n(warmup, n, || {
-                let _ = StreamingGreedy::default().partition(&g, 8, 1);
+                let _ = spec("fennel").build().partition_graph(&g, 8, 1);
             }),
         );
     }
@@ -587,12 +605,10 @@ pub fn hotpath_with(quick: bool) {
     // gain vs baselines snapshot
     let dfep_gain = average_gain(&g, &p, 3, 1);
     println!("\ngain(DFEP k=8) = {}", fmt_f(dfep_gain));
-    let lit = Dfep {
-        frontier_first: false,
-        max_rounds: 300,
-        ..Default::default()
-    }
-    .partition(&g, 8, 1);
+    let lit = spec("dfep:frontier_first=false,max_rounds=300")
+        .build()
+        .partition_graph(&g, 8, 1)
+        .expect("bench dfep ablation");
     println!(
         "ablation literal-Alg4: rounds {} (capped) nstdev {} vs \
          frontier-first rounds {} nstdev {}",

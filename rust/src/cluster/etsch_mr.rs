@@ -169,7 +169,7 @@ mod tests {
             rows: 12, cols: 12, drop: 0.15, subdiv: 2, shortcuts: 0,
         }
         .generate(1);
-        let p = Dfep::default().partition(&g, 4, 1);
+        let p = Dfep::default().partition_graph(&g, 4, 1).unwrap();
         (g, p)
     }
 

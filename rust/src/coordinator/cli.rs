@@ -31,12 +31,8 @@ impl Args {
             // --key=value or --key value or --flag
             if let Some((k, v)) = key.split_once('=') {
                 out.opts.insert(k.to_string(), v.to_string());
-            } else if it
-                .peek()
-                .map(|n| !n.starts_with("--"))
-                .unwrap_or(false)
-            {
-                out.opts.insert(key.to_string(), it.next().unwrap());
+            } else if let Some(v) = it.next_if(|n| !n.starts_with("--")) {
+                out.opts.insert(key.to_string(), v);
             } else {
                 out.flags.push(key.to_string());
             }

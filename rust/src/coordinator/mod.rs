@@ -4,4 +4,4 @@
 pub mod cli;
 pub mod runs;
 
-pub use runs::{PartitionerKind, RunConfig, RunResult};
+pub use runs::{PartitionRequest, RunReport, Timings, Workload};

@@ -1,6 +1,16 @@
-//! End-to-end run orchestration: dataset -> partitioner -> metrics ->
-//! optional ETSCH workload — the single entry point the CLI, examples and
+//! End-to-end run orchestration: one [`PartitionRequest`] in, one
+//! [`RunReport`] out — the single facade the CLI, the examples and the
 //! benches all share.
+//!
+//! A request names a partitioner by [`PartitionerSpec`], a dataset by
+//! graph-spec string, `k`, the run seed, an optional pool-thread override
+//! and an optional ETSCH [`Workload`]; [`PartitionRequest::execute`]
+//! resolves the graph, partitions it through the unified
+//! [`Partitioner`](crate::partition::Partitioner) trait, derives the §V-A
+//! metrics off one shared [`PartitionView`] build, optionally runs the
+//! workload on the same view, and returns everything with wall-clock
+//! timings. [`RunReport::to_json`] serializes the report through the
+//! crate's flat JSON writer ([`crate::bench::harness::JsonSink`]).
 
 use crate::anyhow;
 use crate::util::error::Result;
@@ -8,134 +18,254 @@ use crate::util::error::Result;
 use crate::etsch::{gain, sssp::Sssp, Etsch};
 use crate::graph::{datasets, generators::GraphKind, Graph};
 use crate::partition::{
-    baselines::{GreedyBfs, HashEdge, RandomEdge},
-    dfep::Dfep,
-    dfepc::Dfepc,
-    fennel::StreamingGreedy,
-    jabeja::JaBeJa,
     metrics::{self, Report},
-    multilevel::Multilevel,
-    streaming::{Dbh, Hdrf, Restream},
+    spec::PartitionerSpec,
     view::PartitionView,
     EdgePartition, Partitioner,
 };
+use crate::util::pool;
 
-/// Which partitioner to run.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum PartitionerKind {
-    /// The paper's funding-based partitioner ([`Dfep`]).
-    Dfep,
-    /// The §IV-A variant with poor/rich raids ([`Dfepc`]).
-    Dfepc,
-    /// The comparison baseline ([`JaBeJa`]).
-    JaBeJa,
-    /// Uniform random edge assignment ([`RandomEdge`]).
-    Random,
-    /// Round-robin edge assignment ([`HashEdge`]).
-    Hash,
-    /// Lockstep greedy BFS growth ([`GreedyBfs`]).
-    GreedyBfs,
-    /// Fennel-style streaming greedy ([`StreamingGreedy`]).
-    Streaming,
-    /// METIS-style multilevel partitioner ([`Multilevel`]).
-    Multilevel,
-    /// Ingest-time degree-aware greedy ([`Hdrf`]).
-    Hdrf,
-    /// Ingest-time degree-based hashing ([`Dbh`]).
-    Dbh,
-    /// HDRF plus restreaming refinement ([`Restream`]).
-    Restream,
-}
-
-impl PartitionerKind {
-    /// Parse a CLI `--algo` string (case-insensitive).
-    pub fn parse(s: &str) -> Result<Self> {
-        Ok(match s.to_lowercase().as_str() {
-            "dfep" => Self::Dfep,
-            "dfepc" => Self::Dfepc,
-            "jabeja" | "ja-be-ja" => Self::JaBeJa,
-            "random" => Self::Random,
-            "hash" => Self::Hash,
-            "greedy" | "greedybfs" => Self::GreedyBfs,
-            "streaming" | "fennel" => Self::Streaming,
-            "multilevel" | "metis" => Self::Multilevel,
-            "hdrf" => Self::Hdrf,
-            "dbh" => Self::Dbh,
-            "restream" | "re-stream" => Self::Restream,
-            other => return Err(anyhow!("unknown partitioner '{other}'")),
-        })
-    }
-
-    /// Construct the partitioner with its default configuration.
-    pub fn build(&self) -> Box<dyn Partitioner> {
-        match self {
-            Self::Dfep => Box::new(Dfep::default()),
-            Self::Dfepc => Box::new(Dfepc::default()),
-            Self::JaBeJa => Box::new(JaBeJa::default()),
-            Self::Random => Box::new(RandomEdge),
-            Self::Hash => Box::new(HashEdge),
-            Self::GreedyBfs => Box::new(GreedyBfs),
-            Self::Streaming => Box::new(StreamingGreedy::default()),
-            Self::Multilevel => Box::new(Multilevel::default()),
-            Self::Hdrf => Box::new(Hdrf::default()),
-            Self::Dbh => Box::new(Dbh::default()),
-            Self::Restream => Box::new(Restream::default()),
-        }
-    }
-
-    /// Every kind, in display order (the ablation sweep iterates this).
-    pub fn all() -> &'static [PartitionerKind] {
-        &[
-            Self::Dfep,
-            Self::Dfepc,
-            Self::JaBeJa,
-            Self::Random,
-            Self::Hash,
-            Self::GreedyBfs,
-            Self::Streaming,
-            Self::Multilevel,
-            Self::Hdrf,
-            Self::Dbh,
-            Self::Restream,
-        ]
-    }
-}
-
-/// A single experiment configuration.
+/// One experiment, fully named: everything
+/// [`execute`](PartitionRequest::execute) needs to produce a
+/// [`RunReport`], and nothing it has to guess.
 #[derive(Clone, Debug)]
-pub struct RunConfig {
-    /// Which partitioner to run.
-    pub partitioner: PartitionerKind,
+pub struct PartitionRequest {
+    /// Which partitioner, with parameters (`dfep`, `hdrf:lambda=1.5`...).
+    pub spec: PartitionerSpec,
+    /// Graph spec: a dataset name (`astroph`, `usroads@0.05`) or a
+    /// generator (`er:n=1000,m=3000`) — see [`resolve_graph`].
+    pub dataset: String,
     /// Number of parts.
     pub k: usize,
-    /// Seed controlling all randomness of the run.
+    /// Seed controlling all randomness of the partitioner run.
     pub seed: u64,
-    /// sources for the gain estimate (0 = skip gain)
+    /// Seed for dataset generation/scaling.
+    pub graph_seed: u64,
+    /// Sources for the gain estimate (0 = skip gain).
     pub gain_samples: usize,
+    /// Pool-thread override for the whole run (`None` = ambient pool).
+    pub threads: Option<usize>,
+    /// Optional ETSCH workload to run on the produced partition.
+    pub workload: Option<Workload>,
 }
 
-impl Default for RunConfig {
+impl Default for PartitionRequest {
     fn default() -> Self {
-        RunConfig {
-            partitioner: PartitionerKind::Dfep,
+        PartitionRequest {
+            spec: PartitionerSpec::parse("dfep").expect("dfep is registered"),
+            dataset: "astroph@0.05".to_string(),
             k: 20,
             seed: 1,
+            graph_seed: 42,
             gain_samples: 0,
+            threads: None,
+            workload: None,
         }
     }
 }
 
-/// Metrics of one run (the paper's per-plot quantities).
+/// An ETSCH workload a request can attach to the produced partition.
+#[derive(Clone, Copy, Debug)]
+pub enum Workload {
+    /// Single-source shortest paths from `source`.
+    Sssp {
+        /// Source vertex.
+        source: u32,
+    },
+}
+
+/// The result of running a [`Workload`].
 #[derive(Clone, Debug)]
-pub struct RunResult {
+pub struct WorkloadReport {
+    /// Workload name (`"sssp"`).
+    pub name: &'static str,
+    /// ETSCH rounds executed.
+    pub rounds: usize,
+    /// Messages exchanged (change-driven count).
+    pub messages: usize,
+    /// Vertices reached / touched by the workload.
+    pub reached: usize,
+    /// Wall-clock seconds (engine build + run).
+    pub secs: f64,
+}
+
+/// Wall-clock breakdown of one run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Timings {
+    /// Dataset resolution (generation/scaling) seconds.
+    pub resolve_secs: f64,
+    /// Partitioner seconds.
+    pub partition_secs: f64,
+    /// Shared-view build + metric evaluation seconds.
+    pub evaluate_secs: f64,
+}
+
+/// Everything one run produced (the paper's per-plot quantities plus
+/// timings and the partition itself).
+#[derive(Clone, Debug)]
+pub struct RunReport {
+    /// Canonical spec string of the partitioner that ran.
+    pub spec: String,
+    /// The dataset spec that was resolved — set by
+    /// [`execute`](PartitionRequest::execute); empty when the caller
+    /// supplied the graph directly via
+    /// [`execute_on`](PartitionRequest::execute_on) (the request's
+    /// `dataset` field is not trusted to describe an arbitrary graph).
+    pub dataset: String,
+    /// Number of parts requested.
+    pub k: usize,
+    /// The run seed.
+    pub seed: u64,
+    /// `|V|` of the resolved graph.
+    pub vertices: usize,
+    /// `|E|` of the resolved graph.
+    pub edges: usize,
     /// The §V-A metric report.
-    pub report: Report,
+    pub metrics: Report,
     /// Path-compression gain (None when `gain_samples == 0`).
     pub gain: Option<f64>,
+    /// The workload result, when one was attached.
+    pub workload: Option<WorkloadReport>,
+    /// Wall-clock breakdown.
+    pub timings: Timings,
     /// The partition itself.
     pub partition: EdgePartition,
-    /// Wall-clock seconds the partitioner took.
-    pub partition_secs: f64,
+}
+
+impl RunReport {
+    /// Serialize the report as a flat JSON object through the crate's
+    /// one JSON writer (the same format the bench artifacts use).
+    pub fn to_json(&self) -> String {
+        let mut sink = crate::bench::harness::JsonSink::new();
+        sink.text("spec", &self.spec);
+        if !self.dataset.is_empty() {
+            sink.text("dataset", &self.dataset);
+        }
+        sink.num("k", self.k as f64);
+        sink.num("seed", self.seed as f64);
+        sink.num("vertices", self.vertices as f64);
+        sink.num("edges", self.edges as f64);
+        sink.num("rounds", self.metrics.rounds as f64);
+        sink.num("largest", self.metrics.largest);
+        sink.num("nstdev", self.metrics.nstdev);
+        sink.num("messages", self.metrics.messages as f64);
+        sink.num("disconnected", self.metrics.disconnected);
+        if let Some(gain) = self.gain {
+            sink.num("gain", gain);
+        }
+        sink.num("resolve_secs", self.timings.resolve_secs);
+        sink.num("partition_secs", self.timings.partition_secs);
+        sink.num("evaluate_secs", self.timings.evaluate_secs);
+        if let Some(w) = &self.workload {
+            sink.text("workload", w.name);
+            sink.num("workload_rounds", w.rounds as f64);
+            sink.num("workload_messages", w.messages as f64);
+            sink.num("workload_reached", w.reached as f64);
+            sink.num("workload_secs", w.secs);
+        }
+        sink.render()
+    }
+}
+
+impl PartitionRequest {
+    /// Resolve the dataset, then [`execute_on`](Self::execute_on) it.
+    pub fn execute(&self) -> Result<RunReport> {
+        let (g, resolve_secs) = crate::util::timer::time(|| {
+            resolve_graph(&self.dataset, self.graph_seed)
+        });
+        let g = g?;
+        let mut report = self.execute_on(&g)?;
+        report.dataset = self.dataset.clone();
+        report.timings.resolve_secs = resolve_secs;
+        Ok(report)
+    }
+
+    /// Run on an already-resolved graph (the benches resolve once and
+    /// execute many requests against it). Honors the
+    /// [`threads`](Self::threads) override for the entire run.
+    pub fn execute_on(&self, g: &Graph) -> Result<RunReport> {
+        match self.threads {
+            Some(t) => pool::with_threads(t, || self.run_inner(g)),
+            None => self.run_inner(g),
+        }
+    }
+
+    fn run_inner(&self, g: &Graph) -> Result<RunReport> {
+        let partitioner = self.spec.build();
+        let (partition, partition_secs) = crate::util::timer::time(|| {
+            partitioner.partition_graph(g, self.k, self.seed)
+        });
+        let partition = partition?;
+        partition.validate(g)?;
+        // one shared derived-state build serves the metrics, the gain
+        // estimate and the attached workload
+        let (out, evaluate_secs) = crate::util::timer::time(|| {
+            let view = PartitionView::build(g, &partition);
+            let metrics = metrics::evaluate_with(g, &partition, &view);
+            let gain = (self.gain_samples > 0).then(|| {
+                let mut engine = Etsch::from_view(g, &view);
+                gain::average_gain_with(
+                    g,
+                    &mut engine,
+                    self.gain_samples,
+                    self.seed,
+                )
+            });
+            let workload = self
+                .workload
+                .map(|w| run_workload(g, &view, w));
+            (metrics, gain, workload)
+        });
+        let (metrics, gain, workload) = out;
+        Ok(RunReport {
+            spec: self.spec.to_string(),
+            // only execute() (which resolved the graph itself) knows the
+            // graph really is self.dataset; direct execute_on callers get
+            // an empty field instead of a possibly-wrong label
+            dataset: String::new(),
+            k: self.k,
+            seed: self.seed,
+            vertices: g.vertex_count(),
+            edges: g.edge_count(),
+            metrics,
+            gain,
+            workload,
+            timings: Timings {
+                resolve_secs: 0.0,
+                partition_secs,
+                evaluate_secs,
+            },
+            partition,
+        })
+    }
+}
+
+fn run_workload(
+    g: &Graph,
+    view: &PartitionView,
+    w: Workload,
+) -> WorkloadReport {
+    match w {
+        Workload::Sssp { source } => {
+            let (out, secs) = crate::util::timer::time(|| {
+                let mut engine = Etsch::from_view(g, view);
+                let dist = engine.run(&mut Sssp::new(source));
+                let stats = engine.stats().clone();
+                (dist, stats)
+            });
+            let (dist, stats) = out;
+            WorkloadReport {
+                name: "sssp",
+                rounds: stats.rounds,
+                messages: stats.messages_exchanged,
+                reached: dist
+                    .iter()
+                    .filter(|&&d| d != crate::etsch::sssp::UNREACHED)
+                    .count(),
+                secs,
+            }
+        }
+    }
 }
 
 /// Resolve a graph source: a named dataset ("astroph", optionally scaled
@@ -189,42 +319,6 @@ pub fn resolve_graph(spec: &str, seed: u64) -> Result<Graph> {
     ))
 }
 
-/// Run one experiment.
-pub fn run(g: &Graph, cfg: &RunConfig) -> RunResult {
-    let partitioner = cfg.partitioner.build();
-    let (partition, partition_secs) = crate::util::timer::time(|| {
-        partitioner.partition(g, cfg.k, cfg.seed)
-    });
-    // one shared derived-state build serves the metrics and (when gain is
-    // requested) every ETSCH run
-    let view = PartitionView::build(g, &partition);
-    let report = metrics::evaluate_with(g, &partition, &view);
-    let gain = if cfg.gain_samples > 0 {
-        let mut engine = Etsch::from_view(g, &view);
-        Some(gain::average_gain_with(
-            g,
-            &mut engine,
-            cfg.gain_samples,
-            cfg.seed,
-        ))
-    } else {
-        None
-    };
-    RunResult { report, gain, partition, partition_secs }
-}
-
-/// Convenience: run ETSCH SSSP on a partition and report rounds/messages.
-pub fn run_sssp(
-    g: &Graph,
-    p: &EdgePartition,
-    source: u32,
-) -> (Vec<u32>, usize, usize) {
-    let mut engine = Etsch::new(g, p);
-    let dist = engine.run(&mut Sssp::new(source));
-    let stats = engine.stats();
-    (dist, stats.rounds, stats.messages_exchanged)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -238,26 +332,62 @@ mod tests {
     }
 
     #[test]
-    fn run_produces_metrics() {
-        let g = resolve_graph("er:n=300,m=900", 2).unwrap();
-        let cfg = RunConfig {
-            partitioner: PartitionerKind::Dfep,
+    fn request_produces_full_report() {
+        let req = PartitionRequest {
+            spec: PartitionerSpec::parse("dfep").unwrap(),
+            dataset: "er:n=300,m=900".to_string(),
             k: 4,
             seed: 3,
+            graph_seed: 2,
             gain_samples: 2,
+            threads: None,
+            workload: Some(Workload::Sssp { source: 0 }),
         };
-        let res = run(&g, &cfg);
+        let res = req.execute().unwrap();
+        let g = resolve_graph("er:n=300,m=900", 2).unwrap();
         res.partition.validate(&g).unwrap();
         assert!(res.gain.unwrap() >= 0.0);
-        assert!(res.report.rounds > 0);
+        assert!(res.metrics.rounds > 0);
+        let w = res.workload.as_ref().unwrap();
+        assert_eq!(w.name, "sssp");
+        assert!(w.reached > 0);
+        // the JSON serialization parses back and carries the key fields
+        let parsed = crate::util::json::parse(&res.to_json()).unwrap();
+        assert_eq!(
+            parsed.get("spec").unwrap().as_str().unwrap(),
+            "dfep"
+        );
+        assert_eq!(
+            parsed.get("k").unwrap().as_usize().unwrap(),
+            4
+        );
+        assert!(parsed.get("workload_rounds").is_some());
     }
 
     #[test]
-    fn parse_all_partitioners() {
-        for s in ["dfep", "DFEPC", "jabeja", "random", "hash", "greedy",
-                  "fennel", "multilevel", "hdrf", "DBH", "restream"] {
-            assert!(PartitionerKind::parse(s).is_ok(), "{s}");
-        }
-        assert!(PartitionerKind::parse("x").is_err());
+    fn bad_specs_and_datasets_error() {
+        let mut req = PartitionRequest {
+            dataset: "nosuchdataset".to_string(),
+            ..Default::default()
+        };
+        assert!(req.execute().is_err());
+        req.dataset = "er:n=100,m=200".to_string();
+        req.k = 0;
+        let e = req.execute().unwrap_err().to_string();
+        assert!(e.contains("k must be >= 1"), "{e}");
+    }
+
+    #[test]
+    fn parameterized_spec_flows_through() {
+        let g = resolve_graph("er:n=200,m=600", 1).unwrap();
+        let req = PartitionRequest {
+            spec: PartitionerSpec::parse("hdrf:lambda=1.5").unwrap(),
+            k: 6,
+            seed: 2,
+            ..Default::default()
+        };
+        let res = req.execute_on(&g).unwrap();
+        assert_eq!(res.spec, "hdrf:lambda=1.5");
+        res.partition.validate(&g).unwrap();
     }
 }

@@ -269,7 +269,7 @@ mod tests {
     #[test]
     fn etsch_exact_matches_brandes() {
         let g = GraphKind::ErdosRenyi { n: 60, m: 150 }.generate(2);
-        let p = RandomEdge.partition(&g, 4, 1);
+        let p = RandomEdge.partition_graph(&g, 4, 1).unwrap();
         let got = etsch_betweenness(&g, &p, 0, 0);
         let want = brandes_ref(&g);
         for v in 0..g.vertex_count() {
@@ -286,7 +286,7 @@ mod tests {
     fn etsch_exact_matches_brandes_on_dfep_partitions() {
         let g = GraphKind::PowerlawCluster { n: 80, m: 3, p: 0.4 }
             .generate(4);
-        let p = Dfep::default().partition(&g, 3, 1);
+        let p = Dfep::default().partition_graph(&g, 3, 1).unwrap();
         let got = etsch_betweenness(&g, &p, 0, 0);
         let want = brandes_ref(&g);
         for v in 0..g.vertex_count() {
@@ -303,7 +303,7 @@ mod tests {
     fn sampled_estimate_correlates() {
         let g = GraphKind::PowerlawCluster { n: 120, m: 3, p: 0.3 }
             .generate(5);
-        let p = RandomEdge.partition(&g, 4, 2);
+        let p = RandomEdge.partition_graph(&g, 4, 2).unwrap();
         let est = etsch_betweenness(&g, &p, 40, 7);
         let exact = brandes_ref(&g);
         // the hub with max exact centrality should rank near the top of

@@ -86,7 +86,7 @@ mod tests {
         b.push_edge(21, 22);
         b.push_edge(30, 31);
         let g = b.build();
-        let p = RandomEdge.partition(&g, 3, 5);
+        let p = RandomEdge.partition_graph(&g, 3, 5).unwrap();
         let mut engine = Etsch::new(&g, &p);
         let labels = engine.run(&mut ConnectedComponents::new(9));
         let (want, _) = components(&g);
@@ -109,7 +109,7 @@ mod tests {
     fn works_on_dfep_partitions() {
         let g = GraphKind::PowerlawCluster { n: 200, m: 3, p: 0.4 }
             .generate(6);
-        let p = Dfep::default().partition(&g, 4, 2);
+        let p = Dfep::default().partition_graph(&g, 4, 2).unwrap();
         let mut engine = Etsch::new(&g, &p);
         let labels = engine.run(&mut ConnectedComponents::new(1));
         // generator returns largest component -> all labels equal

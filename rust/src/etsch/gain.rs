@@ -70,7 +70,7 @@ mod tests {
     #[test]
     fn gain_in_unit_interval() {
         let g = GraphKind::ErdosRenyi { n: 200, m: 500 }.generate(1);
-        let p = Dfep::default().partition(&g, 4, 1);
+        let p = Dfep::default().partition_graph(&g, 4, 1).unwrap();
         let gain = average_gain(&g, &p, 3, 7);
         assert!((0.0..=1.0).contains(&gain), "gain {gain}");
     }
@@ -81,8 +81,8 @@ mod tests {
             rows: 12, cols: 12, drop: 0.15, subdiv: 2, shortcuts: 0,
         }
         .generate(2);
-        let pd = Dfep::default().partition(&g, 4, 3);
-        let ph = HashEdge.partition(&g, 4, 3);
+        let pd = Dfep::default().partition_graph(&g, 4, 3).unwrap();
+        let ph = HashEdge.partition_graph(&g, 4, 3).unwrap();
         let gd = average_gain(&g, &pd, 3, 5);
         let gh = average_gain(&g, &ph, 3, 5);
         assert!(gd > gh, "DFEP gain {gd} should beat hash gain {gh}");
@@ -94,7 +94,7 @@ mod tests {
             rows: 10, cols: 10, drop: 0.1, subdiv: 2, shortcuts: 0,
         }
         .generate(3);
-        let p = Dfep::default().partition(&g, 1, 1);
+        let p = Dfep::default().partition_graph(&g, 1, 1).unwrap();
         // k=1: local Dijkstra solves everything in 1 round (+1 quiescence)
         let gain = gain_for_source(&g, &p, 0);
         assert!(gain > 0.8, "gain {gain}");

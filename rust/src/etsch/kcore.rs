@@ -112,7 +112,7 @@ mod tests {
     use crate::partition::{baselines::RandomEdge, dfep::Dfep, Partitioner};
 
     fn run_etsch(g: &Graph, part_k: usize, core_k: u32, seed: u64) -> Vec<bool> {
-        let p = RandomEdge.partition(g, part_k, seed);
+        let p = RandomEdge.partition_graph(g, part_k, seed).unwrap();
         let mut engine = Etsch::new(g, &p);
         engine
             .run(&mut KCore::new(core_k))
@@ -176,7 +176,7 @@ mod tests {
     fn works_on_dfep_partitions() {
         let g = GraphKind::PowerlawCluster { n: 300, m: 4, p: 0.4 }
             .generate(3);
-        let p = Dfep::default().partition(&g, 4, 1);
+        let p = Dfep::default().partition_graph(&g, 4, 1).unwrap();
         let mut engine = Etsch::new(&g, &p);
         let got: Vec<bool> = engine
             .run(&mut KCore::new(3))

@@ -104,7 +104,7 @@ mod tests {
     #[test]
     fn separates_two_cliques() {
         let g = two_cliques();
-        let p = RandomEdge.partition(&g, 3, 1);
+        let p = RandomEdge.partition_graph(&g, 3, 1).unwrap();
         let mut engine = Etsch::new(&g, &p);
         let states = engine.run(&mut LabelPropagation::default());
         let a = states[0].label;
@@ -122,12 +122,12 @@ mod tests {
     fn partitioning_does_not_change_labels() {
         let g = two_cliques();
         let l1 = {
-            let p = RandomEdge.partition(&g, 1, 7);
+            let p = RandomEdge.partition_graph(&g, 1, 7).unwrap();
             let mut e = Etsch::new(&g, &p);
             e.run(&mut LabelPropagation::default())
         };
         let l4 = {
-            let p = RandomEdge.partition(&g, 4, 7);
+            let p = RandomEdge.partition_graph(&g, 4, 7).unwrap();
             let mut e = Etsch::new(&g, &p);
             e.run(&mut LabelPropagation::default())
         };

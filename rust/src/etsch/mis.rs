@@ -167,7 +167,7 @@ mod tests {
 
     fn run_mis(k: usize, part_seed: u64, alg_seed: u64) -> bool {
         let g = GraphKind::ErdosRenyi { n: 150, m: 400 }.generate(8);
-        let p = RandomEdge.partition(&g, k, part_seed);
+        let p = RandomEdge.partition_graph(&g, k, part_seed).unwrap();
         let mut engine = Etsch::new(&g, &p);
         let states = engine.run(&mut LubyMis::new(alg_seed));
         let in_set: Vec<bool> =
@@ -186,7 +186,7 @@ mod tests {
     fn works_on_dfep_partitions() {
         let g = GraphKind::PowerlawCluster { n: 250, m: 3, p: 0.4 }
             .generate(9);
-        let p = Dfep::default().partition(&g, 5, 4);
+        let p = Dfep::default().partition_graph(&g, 5, 4).unwrap();
         let mut engine = Etsch::new(&g, &p);
         let states = engine.run(&mut LubyMis::new(11));
         let in_set: Vec<bool> =

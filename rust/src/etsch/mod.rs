@@ -367,7 +367,7 @@ mod tests {
     fn sssp_on_dfep_partitions_matches_bfs() {
         let g = GraphKind::PowerlawCluster { n: 300, m: 4, p: 0.3 }
             .generate(1);
-        let p = Dfep::default().partition(&g, 4, 1);
+        let p = Dfep::default().partition_graph(&g, 4, 1).unwrap();
         let mut engine = Etsch::new(&g, &p);
         let dist = engine.run(&mut sssp::Sssp::new(0));
         let want = crate::graph::stats::bfs_distances(&g, 0);
@@ -382,7 +382,7 @@ mod tests {
     fn dirty_aggregation_matches_dense_reference_on_sssp() {
         let g = GraphKind::PowerlawCluster { n: 400, m: 4, p: 0.3 }
             .generate(5);
-        let p = Dfep::default().partition(&g, 5, 2);
+        let p = Dfep::default().partition_graph(&g, 5, 2).unwrap();
         let view = crate::partition::view::PartitionView::build(&g, &p);
         let (dirty, dirty_stats) = {
             let mut e = Etsch::from_view(&g, &view);
@@ -424,8 +424,8 @@ mod tests {
         }
         .generate(2);
         let k = 4;
-        let pd = Dfep::default().partition(&g, k, 3);
-        let ph = HashEdge.partition(&g, k, 3);
+        let pd = Dfep::default().partition_graph(&g, k, 3).unwrap();
+        let ph = HashEdge.partition_graph(&g, k, 3).unwrap();
         let rd = {
             let mut e = Etsch::new(&g, &pd);
             e.run(&mut sssp::Sssp::new(0));

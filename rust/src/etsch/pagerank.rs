@@ -116,7 +116,7 @@ mod tests {
     fn matches_sequential_reference() {
         let g = GraphKind::ErdosRenyi { n: 120, m: 360 }.generate(3);
         let iters = 15;
-        let p = RandomEdge.partition(&g, 4, 2);
+        let p = RandomEdge.partition_graph(&g, 4, 2).unwrap();
         let mut engine = Etsch::new(&g, &p);
         let got = engine.run(&mut PageRank::new(&g, iters));
         let want = pagerank_ref(&g, 0.85, iters);
@@ -134,7 +134,7 @@ mod tests {
     fn rank_sums_to_one_ish() {
         let g = GraphKind::PowerlawCluster { n: 200, m: 3, p: 0.3 }
             .generate(4);
-        let p = Dfep::default().partition(&g, 4, 1);
+        let p = Dfep::default().partition_graph(&g, 4, 1).unwrap();
         let mut engine = Etsch::new(&g, &p);
         let got = engine.run(&mut PageRank::new(&g, 20));
         let total: f64 = got.iter().map(|s| s.rank).sum();

@@ -74,7 +74,7 @@ mod tests {
     use crate::partition::{baselines::RandomEdge, Partitioner};
 
     fn check(g: &Graph, k: usize, source: u32) {
-        let p = RandomEdge.partition(g, k, 7);
+        let p = RandomEdge.partition_graph(g, k, 7).unwrap();
         let mut engine = Etsch::new(g, &p);
         let got = engine.run(&mut Sssp::new(source));
         let want = bfs_distances(g, source);
@@ -105,7 +105,7 @@ mod tests {
         // with k=1 everything is local: Dijkstra finishes in round 1 and
         // round 2 detects quiescence
         let g = GraphKind::ErdosRenyi { n: 100, m: 300 }.generate(4);
-        let p = RandomEdge.partition(&g, 1, 0);
+        let p = RandomEdge.partition_graph(&g, 1, 0).unwrap();
         let mut engine = Etsch::new(&g, &p);
         engine.run(&mut Sssp::new(0));
         assert!(engine.rounds_executed() <= 2);

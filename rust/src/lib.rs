@@ -34,19 +34,29 @@
 //! partitioners in [`partition::streaming`] (HDRF, DBH, restreaming
 //! refinement) place each edge as it arrives — no CSR is ever built.
 //!
+//! Partitioners are addressed by spec string (`name:key=val,...`) through
+//! [`partition::spec::PartitionerSpec`] and the [`partition::registry`];
+//! the coordinator facade
+//! ([`coordinator::runs::PartitionRequest`]) turns a spec + dataset + `k`
+//! + seed into a full [`coordinator::runs::RunReport`].
+//!
 //! Quick tour:
 //!
 //! ```no_run
 //! use dfep::graph::generators::GraphKind;
-//! use dfep::partition::{dfep::Dfep, Partitioner};
+//! use dfep::partition::spec::PartitionerSpec;
+//! use dfep::partition::Partitioner;
 //! use dfep::etsch::{Etsch, sssp::Sssp};
 //!
+//! # fn main() -> dfep::util::error::Result<()> {
 //! let g = GraphKind::PowerlawCluster { n: 2000, m: 8, p: 0.3 }
 //!     .generate(42);
-//! let part = Dfep::default().partition(&g, 8, 42);
+//! let spec: PartitionerSpec = "hdrf:lambda=1.5".parse()?;
+//! let part = spec.build().partition_graph(&g, 8, 42)?;
 //! let mut engine = Etsch::new(&g, &part);
 //! let dist = engine.run(&mut Sssp::new(0));
 //! println!("rounds = {}", engine.rounds_executed());
+//! # Ok(()) }
 //! ```
 
 // Docs are part of the public contract: every public item must carry

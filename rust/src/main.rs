@@ -1,8 +1,15 @@
 //! `repro` — the leader binary: partition graphs, run ETSCH workloads,
 //! simulate the EC2 cluster experiments, print dataset stats.
 //!
+//! Every command is a thin client of the coordinator facade
+//! (`PartitionRequest -> RunReport`); partitioners are named by spec
+//! (`--algo hdrf:lambda=1.5`) and resolved through the registry. All
+//! failures — malformed specs, missing files, bad `k` — print a one-line
+//! error and exit non-zero; no panics, no backtraces for user errors.
+//!
 //! Examples:
 //!   repro partition --graph astroph --algo dfep --k 20 --seed 1
+//!   repro partition --graph astroph --algo hdrf:lambda=1.5 --k 32
 //!   repro sssp --graph usroads@0.05 --k 8 --source 0
 //!   repro cluster --graph dblp@0.1 --nodes 2,4,8,16
 //!   repro stats --graph wordnet@0.1
@@ -17,10 +24,11 @@ use dfep::cluster::dfep_mr::{resimulate, run_cluster_dfep};
 use dfep::cluster::etsch_mr::{run_baseline_sssp, run_etsch_sssp};
 use dfep::coordinator::cli::Args;
 use dfep::coordinator::runs::{
-    resolve_graph, run, run_sssp, PartitionerKind, RunConfig,
+    resolve_graph, PartitionRequest, RunReport, Workload,
 };
 use dfep::graph::{io, stats};
-use dfep::partition::{dfep::Dfep, Partitioner};
+use dfep::partition::spec::PartitionerSpec;
+use dfep::partition::{registry, PartitionInput, Partitioner, StreamInput};
 use dfep::runtime::Runtime;
 
 const HELP: &str = "\
@@ -30,17 +38,20 @@ USAGE: repro <command> [--key value]...
 
 COMMANDS
   partition   partition a graph and print the paper's metrics
-              --graph SPEC --algo dfep|dfepc|jabeja|random|hash|greedy|fennel|multilevel|hdrf|dbh|restream
-              --k N --seed S [--gain-samples N] [--out FILE]
+              --graph SPEC --algo ALGOSPEC --k N --seed S
+              [--threads N] [--gain-samples N] [--out FILE] [--json FILE]
   stream-partition  out-of-core: partition a SNAP edge-list file without
-              materializing the graph (bounded-memory ingestion)
-              --input FILE --algo hdrf|dbh|restream --k N --seed S
+              materializing the graph (bounded-memory ingestion for the
+              streaming-native algos; others materialize)
+              --input FILE --algo ALGOSPEC --k N --seed S
               [--chunk N] [--out FILE] [--evaluate]
-  sssp        run ETSCH single-source shortest paths on DFEP partitions
-              --graph SPEC --k N --source V --seed S
-  etsch       run any ETSCH algorithm on DFEP partitions
-              --graph SPEC --alg sssp|cc|mis|pagerank|kcore|labelprop|betweenness
+  sssp        run ETSCH single-source shortest paths on a partitioning
+              --graph SPEC [--algo ALGOSPEC] --k N --source V --seed S
+  etsch       run any ETSCH algorithm on a partitioning
+              --graph SPEC [--algo ALGOSPEC]
+              --alg sssp|cc|mis|pagerank|kcore|labelprop|betweenness
               --k N [--core-k N] [--samples N] --seed S
+  algos       list every registered partitioner spec and its parameters
   faults      re-simulate the Fig-8 DFEP job under failure injection
               --graph SPEC --k N --nodes N --fail-rate P --seed S
   cluster     simulate the Hadoop/EC2 experiments (Figs 8-9)
@@ -52,6 +63,9 @@ COMMANDS
               --graph SPEC --k N --seed S [--artifacts DIR]
   help        this text
 
+ALGO SPECS (see `repro algos` for parameters and defaults)
+  name[:key=val,...]   e.g. dfep | hdrf:lambda=1.5 | jabeja:temp=2,rounds=50
+
 GRAPH SPECS
   astroph | email-enron | usroads | wordnet | dblp | youtube | amazon
   name@FRAC     scaled instance, e.g. usroads@0.05
@@ -61,7 +75,7 @@ GRAPH SPECS
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = dispatch(args) {
-        eprintln!("error: {e:#}");
+        eprintln!("error: {e}");
         std::process::exit(1);
     }
 }
@@ -73,6 +87,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "stream-partition" => cmd_stream_partition(&args),
         "sssp" => cmd_sssp(&args),
         "etsch" => cmd_etsch(&args),
+        "algos" => cmd_algos(),
         "faults" => cmd_faults(&args),
         "cluster" => cmd_cluster(&args),
         "stats" => cmd_stats(&args),
@@ -93,41 +108,83 @@ fn graph_arg(args: &Args) -> Result<dfep::graph::Graph> {
     resolve_graph(spec, args.get_u64("graph-seed", 42)?)
 }
 
-fn cmd_partition(args: &Args) -> Result<()> {
-    let g = graph_arg(args)?;
-    let cfg = RunConfig {
-        partitioner: PartitionerKind::parse(args.get_or("algo", "dfep"))?,
-        k: args.get_usize("k", 20)?,
+/// Build the facade request shared by `partition` / `sssp` / `etsch`.
+fn request_arg(args: &Args, default_k: usize) -> Result<PartitionRequest> {
+    Ok(PartitionRequest {
+        spec: PartitionerSpec::parse(args.get_or("algo", "dfep"))?,
+        dataset: args
+            .get("graph")
+            .ok_or_else(|| anyhow!("--graph is required"))?
+            .to_string(),
+        k: args.get_usize("k", default_k)?,
         seed: args.get_u64("seed", 1)?,
+        graph_seed: args.get_u64("graph-seed", 42)?,
         gain_samples: args.get_usize("gain-samples", 0)?,
-    };
+        threads: match args.get("threads") {
+            Some(_) => Some(args.get_usize("threads", 1)?),
+            None => None,
+        },
+        workload: None,
+    })
+}
+
+fn print_report(r: &RunReport) {
     println!(
-        "graph: |V|={} |E|={}",
-        g.vertex_count(),
-        g.edge_count()
+        "partitioner: {}  k={}  seed={}",
+        r.spec, r.k, r.seed
     );
-    let res = run(&g, &cfg);
-    let r = &res.report;
-    println!("partitioner: {:?}  k={}  seed={}", cfg.partitioner, cfg.k, cfg.seed);
-    println!("  time        {:.3}s", res.partition_secs);
-    println!("  rounds      {}", r.rounds);
-    println!("  largest     {:.4} (normalized)", r.largest);
-    println!("  nstdev      {:.4}", r.nstdev);
-    println!("  messages    {}", r.messages);
-    println!("  disconnected {:.2}%", r.disconnected * 100.0);
-    if let Some(gain) = res.gain {
+    println!("  time        {:.3}s", r.timings.partition_secs);
+    println!("  rounds      {}", r.metrics.rounds);
+    println!("  largest     {:.4} (normalized)", r.metrics.largest);
+    println!("  nstdev      {:.4}", r.metrics.nstdev);
+    println!("  messages    {}", r.metrics.messages);
+    println!("  disconnected {:.2}%", r.metrics.disconnected * 100.0);
+    if let Some(gain) = r.gain {
         println!("  gain        {gain:.4}");
     }
+}
+
+fn cmd_partition(args: &Args) -> Result<()> {
+    let req = request_arg(args, 20)?;
+    let res = req.execute()?;
+    println!(
+        "graph: {} |V|={} |E|={} (resolved in {:.3}s)",
+        res.dataset, res.vertices, res.edges, res.timings.resolve_secs
+    );
+    print_report(&res);
     if let Some(out) = args.get("out") {
         io::write_partition(&res.partition.owner, std::path::Path::new(out))?;
         println!("  wrote {out}");
+    }
+    if let Some(out) = args.get("json") {
+        std::fs::write(out, res.to_json())
+            .map_err(|e| anyhow!("writing {out}: {e}"))?;
+        println!("  wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_algos() -> Result<()> {
+    println!("registered partitioners (spec grammar: name[:key=val,...]):");
+    for e in registry::all() {
+        let native = if e.streaming_native { "  [streaming-native]" } else { "" };
+        println!("\n  {}{native} — {}", e.name, e.summary);
+        if !e.aliases.is_empty() {
+            println!("    aliases: {}", e.aliases.join(", "));
+        }
+        for p in e.params {
+            println!(
+                "    {}={}  {}",
+                p.key, p.default, p.doc
+            );
+        }
     }
     Ok(())
 }
 
 fn cmd_stream_partition(args: &Args) -> Result<()> {
     use dfep::graph::stream::FileEdgeStream;
-    use dfep::partition::streaming::{self, StreamingPartitioner};
+    use dfep::partition::streaming;
     let input = args
         .get("input")
         .ok_or_else(|| anyhow!("--input FILE is required"))?;
@@ -135,13 +192,30 @@ fn cmd_stream_partition(args: &Args) -> Result<()> {
     let k = args.get_usize("k", 8)?;
     let seed = args.get_u64("seed", 1)?;
     let chunk = args.get_usize("chunk", 4096)?.max(1);
-    let algo = args.get_or("algo", "hdrf").to_lowercase();
-    let p = streaming::streamer(&algo, chunk).ok_or_else(|| {
-        anyhow!("unknown streaming algo '{algo}' (try hdrf|dbh|restream)")
-    })?;
+    // the one `--algo` grammar: any registered spec; `--chunk` is sugar
+    // for the spec's chunk parameter where the algo has one
+    let mut spec = PartitionerSpec::parse(args.get_or("algo", "hdrf"))?;
+    if spec.algo().param("chunk").is_some()
+        && !spec.overrides().iter().any(|(key, _)| key == "chunk")
+    {
+        let sep = if spec.overrides().is_empty() { ':' } else { ',' };
+        spec = PartitionerSpec::parse(&format!("{spec}{sep}chunk={chunk}"))?;
+    }
+    let p = spec.build();
+    if !p.streaming_native() {
+        println!(
+            "note: '{spec}' is not streaming-native; the graph will be \
+             materialized in memory"
+        );
+    }
     let mut stream = FileEdgeStream::open(path)?;
-    let (part, secs) =
-        dfep::util::timer::time(|| p.partition_stream(&mut stream, k, seed));
+    let (part, secs) = dfep::util::timer::time(|| {
+        p.partition(
+            PartitionInput::Stream(StreamInput::new(&mut stream)),
+            k,
+            seed,
+        )
+    });
     let part = part?;
     // streaming-native quality: one more bounded-memory replay, no Graph
     let stats = streaming::stream_stats(&mut stream, &part.owner, k, chunk)?;
@@ -150,7 +224,7 @@ fn cmd_stream_partition(args: &Args) -> Result<()> {
         stats.edges, stats.vertices, chunk
     );
     println!(
-        "{algo} k={k} seed={seed}: {:.3}s ({:.2} Medges/s, {} pass(es))",
+        "{spec} k={k} seed={seed}: {:.3}s ({:.2} Medges/s, {} pass(es))",
         secs,
         stats.edges as f64 / secs.max(1e-9) / 1e6,
         part.rounds
@@ -158,22 +232,11 @@ fn cmd_stream_partition(args: &Args) -> Result<()> {
     println!("  replication factor {:.4}", stats.replication_factor());
     println!("  largest            {:.4} (normalized)", stats.largest_normalized());
     if args.flag("evaluate") {
-        use dfep::graph::stream::{collect, EdgeStream};
-        // optional in-memory check: only valid when the file is canonical
-        // (stream position == edge id), e.g. written by write_edge_list.
-        // Compare the stream elementwise against the built graph's edge
-        // list — a count check alone would miss a deduplicated but
-        // unsorted file, silently pairing owners with the wrong edges.
-        let g = io::read_edge_list(path, false)?;
-        stream.reset()?;
-        if collect(&mut stream)? != g.edges() {
-            return Err(anyhow!(
-                "--evaluate needs a canonical edge list (sorted, \
-                 deduplicated, as written by write_edge_list): the \
-                 stream's edge sequence does not match the built \
-                 graph's edge ids"
-            ));
-        }
+        // optional in-memory check: materialize enforces that the file is
+        // canonical (stream position == edge id, e.g. written by
+        // write_edge_list), so owners cannot silently pair with the
+        // wrong edges
+        let g = StreamInput::new(&mut stream).materialize("--evaluate")?;
         let r = dfep::partition::metrics::evaluate(&g, &part);
         println!(
             "  evaluate: largest {:.4}  nstdev {:.4}  messages {}  disconnected {:.2}%",
@@ -191,24 +254,29 @@ fn cmd_stream_partition(args: &Args) -> Result<()> {
 }
 
 fn cmd_sssp(args: &Args) -> Result<()> {
-    let g = graph_arg(args)?;
-    let k = args.get_usize("k", 8)?;
-    let seed = args.get_u64("seed", 1)?;
+    let mut req = request_arg(args, 8)?;
     let source = args.get_usize("source", 0)? as u32;
-    let p = Dfep::default().partition(&g, k, seed);
-    let (dist, rounds, messages) = run_sssp(&g, &p, source);
-    let reached =
-        dist.iter().filter(|&&d| d != u32::MAX).count();
+    req.workload = Some(Workload::Sssp { source });
+    // resolve once; the facade's execute_on and the baseline share it
+    let g = resolve_graph(&req.dataset, req.graph_seed)?;
+    let res = req.execute_on(&g)?;
+    let w = res
+        .workload
+        .as_ref()
+        .ok_or_else(|| anyhow!("workload produced no report"))?;
     let base = dfep::etsch::vertex_baseline::bsp_sssp(&g, source);
-    println!("graph: |V|={} |E|={}", g.vertex_count(), g.edge_count());
-    println!("ETSCH sssp: rounds={rounds} messages={messages} reached={reached}");
+    println!("graph: |V|={} |E|={}", res.vertices, res.edges);
+    println!(
+        "ETSCH sssp ({} k={}): rounds={} messages={} reached={}",
+        res.spec, res.k, w.rounds, w.messages, w.reached
+    );
     println!(
         "baseline:   supersteps={} messages={}",
         base.supersteps, base.messages
     );
     println!(
         "gain: {:.4}",
-        (1.0 - rounds as f64 / base.supersteps.max(1) as f64).max(0.0)
+        (1.0 - w.rounds as f64 / base.supersteps.max(1) as f64).max(0.0)
     );
     Ok(())
 }
@@ -221,13 +289,14 @@ fn cmd_etsch(args: &Args) -> Result<()> {
     let g = graph_arg(args)?;
     let k = args.get_usize("k", 8)?;
     let seed = args.get_u64("seed", 1)?;
-    let p = Dfep::default().partition(&g, k, seed);
+    let spec = PartitionerSpec::parse(args.get_or("algo", "dfep"))?;
+    let p = spec.build().partition_graph(&g, k, seed)?;
     // one derived-state build serves the frontier stats and the engine
     let view = dfep::partition::view::PartitionView::build(&g, &p);
     let mut engine = dfep::etsch::Etsch::from_view(&g, &view);
     let alg = args.get_or("alg", "sssp");
     println!(
-        "graph |V|={} |E|={}  DFEP k={k} ({} rounds, {} frontier replicas)",
+        "graph |V|={} |E|={}  {spec} k={k} ({} rounds, {} frontier replicas)",
         g.vertex_count(),
         g.edge_count(),
         p.rounds,
@@ -274,8 +343,8 @@ fn cmd_etsch(args: &Args) -> Result<()> {
             let top = pr
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.rank.partial_cmp(&b.1.rank).unwrap())
-                .unwrap();
+                .max_by(|a, b| a.1.rank.total_cmp(&b.1.rank))
+                .ok_or_else(|| anyhow!("pagerank on an empty graph"))?;
             println!(
                 "pagerank: {iters} rounds, top vertex {} rank {:.6}",
                 top.0, top.1.rank
@@ -307,7 +376,7 @@ fn cmd_etsch(args: &Args) -> Result<()> {
             let bc = betweenness::etsch_betweenness(&g, &p, samples, seed);
             let mut top: Vec<(usize, f64)> =
                 bc.iter().cloned().enumerate().collect();
-            top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            top.sort_by(|a, b| b.1.total_cmp(&a.1));
             println!("betweenness ({samples} sources), top 5:");
             for (v, c) in top.iter().take(5) {
                 println!("  vertex {v:>8}  {c:.1}");
@@ -353,11 +422,15 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let g = graph_arg(args)?;
     let k = args.get_usize("k", 20)?;
     let seed = args.get_u64("seed", 1)?;
+    let spec = PartitionerSpec::parse(args.get_or("algo", "dfep"))?;
     let nodes: Vec<usize> = args
         .get_or("nodes", "2,4,8,16")
         .split(',')
         .map(|s| s.parse().map_err(|_| anyhow!("bad node count '{s}'")))
         .collect::<Result<_>>()?;
+    if nodes.is_empty() {
+        return Err(anyhow!("--nodes needs at least one node count"));
+    }
     let cost = CostModel::default();
     println!("graph: |V|={} |E|={}", g.vertex_count(), g.edge_count());
     println!("-- DFEP partitioning job (Fig 8) --");
@@ -372,8 +445,9 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         );
     }
     println!("-- SSSP: ETSCH vs vertex-centric baseline (Fig 9) --");
+    let partitioner = spec.build();
     for &n in &nodes {
-        let p = Dfep::default().partition(&g, n, seed);
+        let p = partitioner.partition_graph(&g, n, seed)?;
         let e = run_etsch_sssp(&g, &p, 0, n, &cost);
         let b = run_baseline_sssp(&g, 0, n, &cost);
         println!(

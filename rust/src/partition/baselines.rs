@@ -3,8 +3,9 @@
 //! but this could have severe implications on communication efficiency,
 //! connectedness and path compression" — §IV).
 
-use super::{EdgePartition, Partitioner};
+use super::{check_k, EdgePartition, Partitioner};
 use crate::graph::Graph;
+use crate::util::error::Result;
 use crate::util::rng::Rng;
 
 /// Uniform random edge assignment — perfectly balanced in expectation,
@@ -13,11 +14,17 @@ use crate::util::rng::Rng;
 pub struct RandomEdge;
 
 impl Partitioner for RandomEdge {
-    fn partition(&self, g: &Graph, k: usize, seed: u64) -> EdgePartition {
+    fn partition_graph(
+        &self,
+        g: &Graph,
+        k: usize,
+        seed: u64,
+    ) -> Result<EdgePartition> {
+        check_k(k)?;
         let mut rng = Rng::new(seed);
         let owner =
             (0..g.edge_count()).map(|_| rng.below(k) as u32).collect();
-        EdgePartition { k, owner, rounds: 1 }
+        Ok(EdgePartition { k, owner, rounds: 1 })
     }
 
     fn name(&self) -> &'static str {
@@ -31,9 +38,15 @@ impl Partitioner for RandomEdge {
 pub struct HashEdge;
 
 impl Partitioner for HashEdge {
-    fn partition(&self, g: &Graph, k: usize, _seed: u64) -> EdgePartition {
+    fn partition_graph(
+        &self,
+        g: &Graph,
+        k: usize,
+        _seed: u64,
+    ) -> Result<EdgePartition> {
+        check_k(k)?;
         let owner = (0..g.edge_count()).map(|e| (e % k) as u32).collect();
-        EdgePartition { k, owner, rounds: 1 }
+        Ok(EdgePartition { k, owner, rounds: 1 })
     }
 
     fn name(&self) -> &'static str {
@@ -49,7 +62,13 @@ impl Partitioner for HashEdge {
 pub struct GreedyBfs;
 
 impl Partitioner for GreedyBfs {
-    fn partition(&self, g: &Graph, k: usize, seed: u64) -> EdgePartition {
+    fn partition_graph(
+        &self,
+        g: &Graph,
+        k: usize,
+        seed: u64,
+    ) -> Result<EdgePartition> {
+        check_k(k)?;
         let m = g.edge_count();
         let mut rng = Rng::new(seed);
         let mut owner = vec![u32::MAX; m];
@@ -115,7 +134,7 @@ impl Partitioner for GreedyBfs {
                 }
             }
         }
-        EdgePartition { k, owner, rounds }
+        Ok(EdgePartition { k, owner, rounds })
     }
 
     fn name(&self) -> &'static str {
@@ -137,9 +156,9 @@ mod tests {
     fn all_baselines_complete() {
         let g = g();
         for p in [
-            RandomEdge.partition(&g, 5, 1),
-            HashEdge.partition(&g, 5, 1),
-            GreedyBfs.partition(&g, 5, 1),
+            RandomEdge.partition_graph(&g, 5, 1).unwrap(),
+            HashEdge.partition_graph(&g, 5, 1).unwrap(),
+            GreedyBfs.partition_graph(&g, 5, 1).unwrap(),
         ] {
             p.validate(&g).unwrap();
         }
@@ -148,7 +167,7 @@ mod tests {
     #[test]
     fn hash_is_perfectly_balanced() {
         let g = g();
-        let p = HashEdge.partition(&g, 7, 0);
+        let p = HashEdge.partition_graph(&g, 7, 0).unwrap();
         let sizes = p.sizes();
         let (mn, mx) =
             (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
@@ -158,8 +177,8 @@ mod tests {
     #[test]
     fn random_has_high_messages_vs_greedy() {
         let g = g();
-        let mr = metrics::messages(&g, &RandomEdge.partition(&g, 8, 1));
-        let mg = metrics::messages(&g, &GreedyBfs.partition(&g, 8, 1));
+        let mr = metrics::messages(&g, &RandomEdge.partition_graph(&g, 8, 1).unwrap());
+        let mg = metrics::messages(&g, &GreedyBfs.partition_graph(&g, 8, 1).unwrap());
         assert!(
             mr > mg,
             "random messages {mr} should exceed greedy {mg}"
@@ -177,7 +196,7 @@ mod tests {
             b.push_edge(i, i + 1);
         }
         let g = b.build();
-        let p = GreedyBfs.partition(&g, 3, 2);
+        let p = GreedyBfs.partition_graph(&g, 3, 2).unwrap();
         p.validate(&g).unwrap();
     }
 }

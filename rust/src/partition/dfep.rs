@@ -23,8 +23,10 @@
 //! experiments lives in [`crate::cluster::dfep_mr`], and an XLA-offloaded
 //! round (L2 `funding_step` artifact) in [`crate::runtime::xla_engine`].
 
-use super::{EdgePartition, Partitioner};
+use super::{check_k, EdgePartition, Partitioner};
+use crate::bail;
 use crate::graph::Graph;
+use crate::util::error::Result;
 use crate::util::rng::Rng;
 
 /// Funding ledger for one partition: money on vertices (sparse map would
@@ -784,8 +786,17 @@ pub fn debug_run(g: &Graph, k: usize, seed: u64) {
 }
 
 impl Partitioner for Dfep {
-    fn partition(&self, g: &Graph, k: usize, seed: u64) -> EdgePartition {
-        self.run_traced(g, k, seed).0
+    fn partition_graph(
+        &self,
+        g: &Graph,
+        k: usize,
+        seed: u64,
+    ) -> Result<EdgePartition> {
+        check_k(k)?;
+        if g.edge_count() == 0 {
+            bail!("DFEP cannot partition an empty graph (0 edges)");
+        }
+        Ok(self.run_traced(g, k, seed).0)
     }
 
     fn name(&self) -> &'static str {
@@ -862,7 +873,7 @@ fn money_audit() {
     #[test]
     fn produces_complete_partitioning() {
         let g = small_world();
-        let p = Dfep::default().partition(&g, 8, 1);
+        let p = Dfep::default().partition_graph(&g, 8, 1).unwrap();
         p.validate(&g).unwrap();
         assert!(p.owner.iter().all(|&o| (o as usize) < 8));
         assert_eq!(p.owner.len(), g.edge_count());
@@ -871,17 +882,17 @@ fn money_audit() {
     #[test]
     fn deterministic_per_seed() {
         let g = small_world();
-        let a = Dfep::default().partition(&g, 4, 9);
-        let b = Dfep::default().partition(&g, 4, 9);
+        let a = Dfep::default().partition_graph(&g, 4, 9).unwrap();
+        let b = Dfep::default().partition_graph(&g, 4, 9).unwrap();
         assert_eq!(a.owner, b.owner);
-        let c = Dfep::default().partition(&g, 4, 10);
+        let c = Dfep::default().partition_graph(&g, 4, 10).unwrap();
         assert_ne!(a.owner, c.owner);
     }
 
     #[test]
     fn partitions_are_reasonably_balanced() {
         let g = small_world();
-        let p = Dfep::default().partition(&g, 4, 2);
+        let p = Dfep::default().partition_graph(&g, 4, 2).unwrap();
         let report = metrics::evaluate(&g, &p);
         assert!(
             report.nstdev < 0.6,
@@ -894,7 +905,7 @@ fn money_audit() {
     #[test]
     fn partitions_are_connected() {
         let g = small_world();
-        let p = Dfep::default().partition(&g, 6, 3);
+        let p = Dfep::default().partition_graph(&g, 6, 3).unwrap();
         let disc = metrics::disconnected_fraction(&g, &p);
         assert_eq!(disc, 0.0, "plain DFEP must give connected partitions");
     }
@@ -927,7 +938,7 @@ fn money_audit() {
     #[test]
     fn single_partition_takes_everything() {
         let g = small_world();
-        let p = Dfep::default().partition(&g, 1, 1);
+        let p = Dfep::default().partition_graph(&g, 1, 1).unwrap();
         assert!(p.owner.iter().all(|&o| o == 0));
     }
 
@@ -947,7 +958,12 @@ fn money_audit() {
         .generate(8);
         let mean = |g: &Graph| -> f64 {
             (1u64..=5)
-                .map(|s| Dfep::default().partition(g, 4, s).rounds as f64)
+                .map(|s| {
+                    Dfep::default()
+                        .partition_graph(g, 4, s)
+                        .unwrap()
+                        .rounds as f64
+                })
                 .sum::<f64>()
                 / 5.0
         };

@@ -8,8 +8,10 @@
 //! the connectedness guarantee.
 
 use super::dfep::{finalize, reseed_on_free_edge, DfepState};
-use super::{EdgePartition, Partitioner};
+use super::{check_k, EdgePartition, Partitioner};
+use crate::bail;
 use crate::graph::Graph;
+use crate::util::error::Result;
 use crate::util::rng::Rng;
 
 /// The DFEPC variant (§IV-A): DFEP plus poor-partition raids on rich
@@ -56,8 +58,16 @@ impl Dfepc {
 }
 
 impl Partitioner for Dfepc {
-    fn partition(&self, g: &Graph, k: usize, seed: u64) -> EdgePartition {
-        assert!(k >= 1 && g.edge_count() > 0);
+    fn partition_graph(
+        &self,
+        g: &Graph,
+        k: usize,
+        seed: u64,
+    ) -> Result<EdgePartition> {
+        check_k(k)?;
+        if g.edge_count() == 0 {
+            bail!("DFEPC cannot partition an empty graph (0 edges)");
+        }
         let mut rng = Rng::new(seed);
         let initial =
             self.initial_fraction * g.edge_count() as f64 / k as f64;
@@ -88,7 +98,7 @@ impl Partitioner for Dfepc {
             st.coordinator_step(self.funding_cap);
         }
         let owner = finalize(g, st.owner, k);
-        EdgePartition { k, owner, rounds: st.rounds }
+        Ok(EdgePartition { k, owner, rounds: st.rounds })
     }
 
     fn name(&self) -> &'static str {
@@ -108,15 +118,15 @@ mod tests {
     fn complete_and_valid() {
         let g = GraphKind::PowerlawCluster { n: 400, m: 4, p: 0.3 }
             .generate(5);
-        let p = Dfepc::default().partition(&g, 8, 1);
+        let p = Dfepc::default().partition_graph(&g, 8, 1).unwrap();
         p.validate(&g).unwrap();
     }
 
     #[test]
     fn deterministic() {
         let g = GraphKind::ErdosRenyi { n: 300, m: 900 }.generate(2);
-        let a = Dfepc::default().partition(&g, 4, 3);
-        let b = Dfepc::default().partition(&g, 4, 3);
+        let a = Dfepc::default().partition_graph(&g, 4, 3).unwrap();
+        let b = Dfepc::default().partition_graph(&g, 4, 3).unwrap();
         assert_eq!(a.owner, b.owner);
     }
 
@@ -132,11 +142,11 @@ mod tests {
         let seeds = [1u64, 2, 3, 4, 5];
         let nst_c: Vec<f64> = seeds
             .iter()
-            .map(|&s| metrics::nstdev(&g, &Dfepc::default().partition(&g, k, s)))
+            .map(|&s| metrics::nstdev(&g, &Dfepc::default().partition_graph(&g, k, s).unwrap()))
             .collect();
         let nst_d: Vec<f64> = seeds
             .iter()
-            .map(|&s| metrics::nstdev(&g, &Dfep::default().partition(&g, k, s)))
+            .map(|&s| metrics::nstdev(&g, &Dfep::default().partition_graph(&g, k, s).unwrap()))
             .collect();
         assert!(
             mean(&nst_c) <= mean(&nst_d) * 1.10,

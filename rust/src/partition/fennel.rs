@@ -17,8 +17,9 @@
 //! state per (vertex, partition) presence bit, which is what makes it a
 //! streaming algorithm.
 
-use super::{EdgePartition, Partitioner};
+use super::{check_k, EdgePartition, Partitioner};
 use crate::graph::Graph;
+use crate::util::error::Result;
 use crate::util::rng::Rng;
 
 /// Fennel-style streaming greedy edge partitioner (requires the
@@ -40,7 +41,13 @@ impl Default for StreamingGreedy {
 }
 
 impl Partitioner for StreamingGreedy {
-    fn partition(&self, g: &Graph, k: usize, seed: u64) -> EdgePartition {
+    fn partition_graph(
+        &self,
+        g: &Graph,
+        k: usize,
+        seed: u64,
+    ) -> Result<EdgePartition> {
+        check_k(k)?;
         let m = g.edge_count();
         let n = g.vertex_count();
         let mut order: Vec<u32> = (0..m as u32).collect();
@@ -87,7 +94,7 @@ impl Partitioner for StreamingGreedy {
                 mask[v] |= 1 << best;
             }
         }
-        EdgePartition { k, owner, rounds: 1 }
+        Ok(EdgePartition { k, owner, rounds: 1 })
     }
 
     fn name(&self) -> &'static str {
@@ -108,7 +115,7 @@ mod tests {
     #[test]
     fn complete_and_roughly_balanced() {
         let g = g();
-        let p = StreamingGreedy::default().partition(&g, 8, 1);
+        let p = StreamingGreedy::default().partition_graph(&g, 8, 1).unwrap();
         p.validate(&g).unwrap();
         assert!(
             metrics::nstdev(&g, &p) < 0.25,
@@ -120,8 +127,8 @@ mod tests {
     #[test]
     fn beats_random_on_messages() {
         let g = g();
-        let s = StreamingGreedy::default().partition(&g, 8, 1);
-        let r = RandomEdge.partition(&g, 8, 1);
+        let s = StreamingGreedy::default().partition_graph(&g, 8, 1).unwrap();
+        let r = RandomEdge.partition_graph(&g, 8, 1).unwrap();
         assert!(
             metrics::messages(&g, &s) < metrics::messages(&g, &r),
             "streaming {} !< random {}",
@@ -133,7 +140,7 @@ mod tests {
     #[test]
     fn wide_k_path_works() {
         let g = g();
-        let p = StreamingGreedy::default().partition(&g, 80, 2);
+        let p = StreamingGreedy::default().partition_graph(&g, 80, 2).unwrap();
         p.validate(&g).unwrap();
     }
 
@@ -141,9 +148,9 @@ mod tests {
     fn higher_gamma_is_more_balanced() {
         let g = g();
         let loose = StreamingGreedy { gamma: 0.1, shuffle: false }
-            .partition(&g, 8, 3);
+            .partition_graph(&g, 8, 3).unwrap();
         let tight = StreamingGreedy { gamma: 8.0, shuffle: false }
-            .partition(&g, 8, 3);
+            .partition_graph(&g, 8, 3).unwrap();
         assert!(
             metrics::nstdev(&g, &tight) <= metrics::nstdev(&g, &loose),
             "tight {} loose {}",

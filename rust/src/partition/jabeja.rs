@@ -9,8 +9,9 @@
 //! random to one of its two endpoint partitions (§V-C: the line-graph
 //! alternative "can be orders of magnitude bigger").
 
-use super::{EdgePartition, Partitioner};
+use super::{check_k, EdgePartition, Partitioner};
 use crate::graph::Graph;
+use crate::util::error::Result;
 use crate::util::rng::Rng;
 
 /// The JaBeJa comparison baseline: simulated-annealing edge swaps.
@@ -123,10 +124,16 @@ impl JaBeJa {
 }
 
 impl Partitioner for JaBeJa {
-    fn partition(&self, g: &Graph, k: usize, seed: u64) -> EdgePartition {
+    fn partition_graph(
+        &self,
+        g: &Graph,
+        k: usize,
+        seed: u64,
+    ) -> Result<EdgePartition> {
+        check_k(k)?;
         let color = self.vertex_partition(g, k, seed);
         let owner = Self::edges_from_colors(g, &color, seed);
-        EdgePartition { k, owner, rounds: self.rounds }
+        Ok(EdgePartition { k, owner, rounds: self.rounds })
     }
 
     fn name(&self) -> &'static str {
@@ -144,7 +151,7 @@ mod tests {
     fn complete_and_valid() {
         let g = GraphKind::ErdosRenyi { n: 200, m: 600 }.generate(1);
         let p = JaBeJa { rounds: 30, ..Default::default() }
-            .partition(&g, 4, 2);
+            .partition_graph(&g, 4, 2).unwrap();
         p.validate(&g).unwrap();
     }
 
@@ -197,8 +204,8 @@ mod tests {
         }
         .generate(3);
         let jb = JaBeJa { rounds: 60, ..Default::default() }
-            .partition(&g, 8, 1);
-        let df = Dfep::default().partition(&g, 8, 1);
+            .partition_graph(&g, 8, 1).unwrap();
+        let df = Dfep::default().partition_graph(&g, 8, 1).unwrap();
         let m_jb = metrics::messages(&g, &jb);
         let m_df = metrics::messages(&g, &df);
         assert!(

@@ -8,6 +8,13 @@
 //! trivial [`baselines`], and the ingest-time [`streaming`] partitioners
 //! (HDRF / DBH / restreaming refinement) that place edges straight off a
 //! bounded-memory [`crate::graph::stream::EdgeStream`].
+//!
+//! All of them dispatch through the one fallible [`Partitioner`] trait:
+//! [`Partitioner::partition`] takes a [`PartitionInput`] — either a
+//! materialized [`Graph`] or a replayable edge stream — so streaming
+//! partitioners run streaming-native and graph partitioners materialize,
+//! behind the same interface. Partitioners are constructed by name and
+//! parameters through [`spec::PartitionerSpec`] and the [`registry`].
 
 pub mod baselines;
 pub mod dfep;
@@ -16,10 +23,15 @@ pub mod fennel;
 pub mod jabeja;
 pub mod multilevel;
 pub mod metrics;
+pub mod registry;
+pub mod spec;
 pub mod streaming;
 pub mod view;
 
-use crate::graph::Graph;
+use crate::graph::stream::EdgeStream;
+use crate::graph::{Graph, GraphBuilder};
+use crate::bail;
+use crate::util::error::Result;
 
 /// A complete edge partitioning of a graph into `k` parts.
 #[derive(Clone, Debug)]
@@ -99,36 +111,188 @@ impl EdgePartition {
         mult
     }
 
-    /// Check this is a valid complete partitioning of `g`'s edges.
-    pub fn validate(&self, g: &Graph) -> Result<(), String> {
+    /// Check this is a valid complete partitioning of `g`'s edges:
+    /// `k >= 1`, one owner per edge, every owner in `0..k`. The error
+    /// reports *how many* owners are out of range (and the first
+    /// offender), not just the first edge found.
+    pub fn validate(&self, g: &Graph) -> Result<()> {
+        if self.k == 0 {
+            bail!("partition has k=0 (k must be >= 1)");
+        }
         if self.owner.len() != g.edge_count() {
-            return Err(format!(
+            bail!(
                 "owner len {} != edge count {}",
                 self.owner.len(),
                 g.edge_count()
-            ));
+            );
         }
-        if let Some((e, &p)) =
-            self.owner.iter().enumerate().find(|&(_, &p)| p as usize >= self.k)
-        {
-            return Err(format!("edge {e} has invalid owner {p}"));
+        let mut bad = 0usize;
+        let mut first: Option<(usize, u32)> = None;
+        for (e, &p) in self.owner.iter().enumerate() {
+            if p as usize >= self.k {
+                bad += 1;
+                if first.is_none() {
+                    first = Some((e, p));
+                }
+            }
+        }
+        if let Some((e, p)) = first {
+            bail!(
+                "{bad} edge(s) have owners outside 0..{} (first: edge {e} \
+                 with owner {p})",
+                self.k
+            );
         }
         Ok(())
     }
 }
 
+/// Reject `k == 0` with the one shared message (every partitioner's
+/// entry-point check).
+pub(crate) fn check_k(k: usize) -> Result<()> {
+    if k == 0 {
+        bail!("k must be >= 1 (got 0)");
+    }
+    Ok(())
+}
+
+/// A replayable edge stream plus optional size hints. The stream follows
+/// the [`EdgeStream`](crate::graph::stream) contract: cleaned `(u, v)`
+/// pairs with `u < v`, identical sequence on every replay, stream
+/// position == edge identity.
+///
+/// The hints are advisory pre-sizing information only — correctness
+/// never depends on them. [`materialize`](Self::materialize) uses
+/// `edges` to pre-allocate; the streaming-native partitioners grow
+/// their O(|V|) tables incrementally and currently ignore both.
+pub struct StreamInput<'a> {
+    /// The replayable edge source.
+    pub stream: &'a mut dyn EdgeStream,
+    /// Number of distinct vertices, when known (pre-sizing hint only).
+    pub vertices: Option<usize>,
+    /// Number of edges the stream yields, when known (pre-sizing hint
+    /// only).
+    pub edges: Option<usize>,
+}
+
+impl<'a> StreamInput<'a> {
+    /// Wrap a stream with no size hints.
+    pub fn new(stream: &'a mut dyn EdgeStream) -> StreamInput<'a> {
+        StreamInput { stream, vertices: None, edges: None }
+    }
+
+    /// Materialize the stream into a [`Graph`] — the fallback path for
+    /// partitioners that are not streaming-native (`algo` names the
+    /// requester in errors). This forfeits the bounded-memory property,
+    /// and it requires the stream to be *canonical* (sorted, deduplicated,
+    /// as written by [`crate::graph::io::write_edge_list`]): otherwise the
+    /// built graph's edge ids would not line up with stream positions and
+    /// the returned owner vector would pair parts with the wrong edges.
+    pub fn materialize(self, algo: &str) -> Result<Graph> {
+        self.stream.reset()?;
+        let mut edges = Vec::with_capacity(self.edges.unwrap_or(0));
+        let mut buf = Vec::new();
+        loop {
+            if self.stream.fill(4096, &mut buf)? == 0 {
+                break;
+            }
+            edges.extend_from_slice(&buf);
+        }
+        let mut b = GraphBuilder::new();
+        for &(u, v) in &edges {
+            b.push_edge(u, v);
+        }
+        let g = b.build();
+        if g.edges() != &edges[..] {
+            bail!(
+                "'{algo}' needs a materialized graph, which requires a \
+                 canonical edge list (sorted, deduplicated, as written by \
+                 write_edge_list): the stream's edge sequence does not \
+                 match the built graph's edge ids"
+            );
+        }
+        Ok(g)
+    }
+}
+
+/// The source a partitioner runs on: a materialized graph, or a
+/// replayable stream of edges that never has to fit in memory.
+pub enum PartitionInput<'a> {
+    /// A fully materialized graph (the fast path for every partitioner).
+    Graph(&'a Graph),
+    /// A replayable edge stream + size hints. Streaming-native
+    /// partitioners ([`streaming::Hdrf`], [`streaming::Dbh`],
+    /// [`streaming::Restream`]) ingest it in bounded memory; the rest
+    /// materialize it via [`StreamInput::materialize`].
+    Stream(StreamInput<'a>),
+}
+
+impl<'a> From<&'a Graph> for PartitionInput<'a> {
+    fn from(g: &'a Graph) -> PartitionInput<'a> {
+        PartitionInput::Graph(g)
+    }
+}
+
+impl<'a> From<StreamInput<'a>> for PartitionInput<'a> {
+    fn from(s: StreamInput<'a>) -> PartitionInput<'a> {
+        PartitionInput::Stream(s)
+    }
+}
+
 /// Common interface for all edge partitioners.
+///
+/// The one entry point is [`partition`](Self::partition): fallible, and
+/// source-aware through [`PartitionInput`] — bad `k`, empty inputs and
+/// ingest I/O failures surface as `Err`, never panics. Implementors
+/// provide the in-memory path ([`partition_graph`](Self::partition_graph));
+/// streaming-native partitioners additionally override
+/// [`partition`](Self::partition) to ingest the stream arm directly
+/// instead of materializing it.
 pub trait Partitioner {
-    /// Partition `g` into `k` parts; `seed` controls all randomness.
-    fn partition(&self, g: &Graph, k: usize, seed: u64) -> EdgePartition;
+    /// Partition the input into `k` parts; `seed` controls all
+    /// randomness. The default implementation dispatches the graph arm to
+    /// [`partition_graph`](Self::partition_graph) and materializes the
+    /// stream arm first.
+    fn partition(
+        &self,
+        input: PartitionInput<'_>,
+        k: usize,
+        seed: u64,
+    ) -> Result<EdgePartition> {
+        match input {
+            PartitionInput::Graph(g) => self.partition_graph(g, k, seed),
+            PartitionInput::Stream(s) => {
+                let g = s.materialize(self.name())?;
+                self.partition_graph(&g, k, seed)
+            }
+        }
+    }
+
+    /// Partition a materialized graph into `k` parts (the in-memory fast
+    /// path; [`partition`](Self::partition) routes here).
+    fn partition_graph(
+        &self,
+        g: &Graph,
+        k: usize,
+        seed: u64,
+    ) -> Result<EdgePartition>;
+
     /// Short display name for benches/tables.
     fn name(&self) -> &'static str;
+
+    /// True when the stream arm of [`partition`](Self::partition) ingests
+    /// in bounded memory instead of materializing the graph.
+    fn streaming_native(&self) -> bool {
+        false
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::graph::stream::MemoryEdgeStream;
     use crate::graph::GraphBuilder;
+    use crate::partition::dfep::Dfep;
 
     fn square() -> Graph {
         GraphBuilder::new()
@@ -167,11 +331,55 @@ mod tests {
     }
 
     #[test]
-    fn validate_catches_bad_owner() {
+    fn validate_catches_bad_owner_with_count() {
         let g = square();
-        let p = EdgePartition { k: 2, owner: vec![0, 0, 5, 1], rounds: 0 };
-        assert!(p.validate(&g).is_err());
+        let p = EdgePartition { k: 2, owner: vec![0, 7, 5, 1], rounds: 0 };
+        let e = p.validate(&g).unwrap_err().to_string();
+        assert!(e.contains("2 edge(s)"), "{e}");
+        assert!(e.contains("edge 1"), "{e}");
         let p2 = EdgePartition { k: 2, owner: vec![0, 0], rounds: 0 };
         assert!(p2.validate(&g).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_k_zero() {
+        let g = square();
+        let p = EdgePartition { k: 0, owner: vec![0; 4], rounds: 0 };
+        let e = p.validate(&g).unwrap_err().to_string();
+        assert!(e.contains("k=0"), "{e}");
+    }
+
+    #[test]
+    fn partition_rejects_k_zero() {
+        let g = square();
+        let e = Dfep::default()
+            .partition_graph(&g, 0, 1)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("k must be >= 1"), "{e}");
+    }
+
+    #[test]
+    fn graph_partitioner_accepts_canonical_stream() {
+        let g = square();
+        let mut s = MemoryEdgeStream::from_graph(&g);
+        let p = Dfep::default()
+            .partition(PartitionInput::Stream(StreamInput::new(&mut s)), 2, 1)
+            .unwrap();
+        p.validate(&g).unwrap();
+        // same input, same seed -> identical to the in-memory path
+        let q = Dfep::default().partition_graph(&g, 2, 1).unwrap();
+        assert_eq!(p.owner, q.owner);
+    }
+
+    #[test]
+    fn graph_partitioner_rejects_noncanonical_stream() {
+        // duplicate edge: the built graph dedups, so ids shift
+        let mut s = MemoryEdgeStream::from_edges(vec![(0, 1), (0, 1), (1, 2)]);
+        let err = Dfep::default()
+            .partition(PartitionInput::Stream(StreamInput::new(&mut s)), 2, 1)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("canonical"), "{err}");
     }
 }

@@ -14,8 +14,9 @@
 //!    the neighboring partition when that reduces frontier replicas
 //!    without breaking the balance cap.
 
-use super::{baselines::GreedyBfs, EdgePartition, Partitioner};
+use super::{baselines::GreedyBfs, check_k, EdgePartition, Partitioner};
 use crate::graph::{Graph, GraphBuilder};
+use crate::util::error::Result;
 use crate::util::rng::Rng;
 
 /// METIS-style multilevel partitioner: coarsen, partition the coarsest
@@ -215,7 +216,13 @@ fn refine(
 }
 
 impl Partitioner for Multilevel {
-    fn partition(&self, g: &Graph, k: usize, seed: u64) -> EdgePartition {
+    fn partition_graph(
+        &self,
+        g: &Graph,
+        k: usize,
+        seed: u64,
+    ) -> Result<EdgePartition> {
+        check_k(k)?;
         let mut rng = Rng::new(seed);
         // ---- coarsen ----
         let mut levels: Vec<Level> = Vec::new();
@@ -234,7 +241,7 @@ impl Partitioner for Multilevel {
         }
         // ---- initial partition on the coarsest graph ----
         let mut owner = if current.edge_count() > 0 {
-            GreedyBfs.partition(&current, k, rng.next_u64()).owner
+            GreedyBfs.partition_graph(&current, k, rng.next_u64())?.owner
         } else {
             Vec::new()
         };
@@ -268,9 +275,13 @@ impl Partitioner for Multilevel {
             // graph was already small: owner is for `current == g` clone
             let mut o = owner;
             refine(g, &mut o, k, self.balance_cap, self.refine_passes);
-            return EdgePartition { k, owner: o, rounds: rounds.max(1) };
+            return Ok(EdgePartition {
+                k,
+                owner: o,
+                rounds: rounds.max(1),
+            });
         }
-        EdgePartition { k, owner, rounds: rounds.max(1) }
+        Ok(EdgePartition { k, owner, rounds: rounds.max(1) })
     }
 
     fn name(&self) -> &'static str {
@@ -291,14 +302,14 @@ mod tests {
     #[test]
     fn complete_and_valid() {
         let g = g();
-        let p = Multilevel::default().partition(&g, 8, 1);
+        let p = Multilevel::default().partition_graph(&g, 8, 1).unwrap();
         p.validate(&g).unwrap();
     }
 
     #[test]
     fn balance_within_cap_margin() {
         let g = g();
-        let p = Multilevel::default().partition(&g, 8, 2);
+        let p = Multilevel::default().partition_graph(&g, 8, 2).unwrap();
         // finalize() of collapsed edges can exceed the refine cap slightly
         assert!(
             metrics::largest(&g, &p) < 1.5,
@@ -310,8 +321,8 @@ mod tests {
     #[test]
     fn fewer_messages_than_random() {
         let g = g();
-        let p = Multilevel::default().partition(&g, 8, 3);
-        let r = RandomEdge.partition(&g, 8, 3);
+        let p = Multilevel::default().partition_graph(&g, 8, 3).unwrap();
+        let r = RandomEdge.partition_graph(&g, 8, 3).unwrap();
         assert!(
             metrics::messages(&g, &p) < metrics::messages(&g, &r),
             "multilevel {} !< random {}",
@@ -323,14 +334,14 @@ mod tests {
     #[test]
     fn handles_tiny_graph_without_coarsening() {
         let g = GraphKind::ErdosRenyi { n: 40, m: 80 }.generate(1);
-        let p = Multilevel::default().partition(&g, 4, 1);
+        let p = Multilevel::default().partition_graph(&g, 4, 1).unwrap();
         p.validate(&g).unwrap();
     }
 
     #[test]
     fn refinement_reduces_messages() {
         let g = g();
-        let mut owner = RandomEdge.partition(&g, 6, 4).owner;
+        let mut owner = RandomEdge.partition_graph(&g, 6, 4).unwrap().owner;
         let before = metrics::messages(
             &g,
             &EdgePartition { k: 6, owner: owner.clone(), rounds: 1 },

@@ -1,0 +1,510 @@
+//! The partitioner registry: every algorithm the crate ships, addressable
+//! by name, with its typed, documented, defaulted parameters and a
+//! factory that builds the configured [`Partitioner`].
+//!
+//! [`spec::PartitionerSpec`](super::spec::PartitionerSpec) parses
+//! `name:key=val,...` strings against this registry; the CLI, the
+//! benches, the facade in [`crate::coordinator::runs`] and the property
+//! tests all enumerate [`all`] instead of hard-coding algorithm lists.
+//! The registry table in `DESIGN.md` is enforced against [`all`] by a
+//! unit test in this module, so the docs cannot drift from the code.
+
+use super::baselines::{GreedyBfs, HashEdge, RandomEdge};
+use super::dfep::Dfep;
+use super::dfepc::Dfepc;
+use super::fennel::StreamingGreedy;
+use super::jabeja::JaBeJa;
+use super::multilevel::Multilevel;
+use super::streaming::{Dbh, Hdrf, Restream};
+use super::Partitioner;
+
+/// The type of one spec parameter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamKind {
+    /// An `f64` (`lambda=1.5`).
+    Float,
+    /// A `usize` (`rounds=30`).
+    Int,
+    /// A `bool` (`shuffle=false`; accepts `true`/`false`/`1`/`0`).
+    Bool,
+}
+
+impl ParamKind {
+    /// Human name used in error messages ("a float", "an integer", ...).
+    pub fn article(&self) -> &'static str {
+        match self {
+            ParamKind::Float => "a float",
+            ParamKind::Int => "an integer",
+            ParamKind::Bool => "a bool (true|false|1|0)",
+        }
+    }
+}
+
+/// One tunable parameter of a registered partitioner.
+#[derive(Clone, Copy, Debug)]
+pub struct ParamSpec {
+    /// The spec key (`lambda` in `hdrf:lambda=1.5`).
+    pub key: &'static str,
+    /// Value type (drives parse-time validation).
+    pub kind: ParamKind,
+    /// Default value, rendered exactly as a spec string would write it.
+    pub default: &'static str,
+    /// Inclusive lower bound for numeric kinds (`f64::NEG_INFINITY` =
+    /// unconstrained; ignored for [`ParamKind::Bool`]).
+    pub min: f64,
+    /// One-line description for `repro help` / DESIGN.md.
+    pub doc: &'static str,
+}
+
+/// Resolved parameter values for one spec: defaults from the
+/// [`AlgoEntry`], overridden by the parsed `key=val` pairs. Lookups are
+/// infallible because [`super::spec::PartitionerSpec::parse`] validated
+/// every key and value against the entry.
+pub struct Resolved<'a> {
+    entry: &'a AlgoEntry,
+    overrides: &'a [(String, String)],
+}
+
+impl<'a> Resolved<'a> {
+    fn raw(&self, key: &str) -> &str {
+        self.overrides
+            .iter()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+            .unwrap_or_else(|| {
+                self.entry
+                    .params
+                    .iter()
+                    .find(|p| p.key == key)
+                    .unwrap_or_else(|| {
+                        panic!("{}: no such param '{key}'", self.entry.name)
+                    })
+                    .default
+            })
+    }
+
+    /// The resolved `f64` value of `key`.
+    pub fn f64(&self, key: &str) -> f64 {
+        self.raw(key).parse().expect("validated at parse time")
+    }
+
+    /// The resolved `usize` value of `key`.
+    pub fn usize(&self, key: &str) -> usize {
+        self.raw(key).parse().expect("validated at parse time")
+    }
+
+    /// The resolved `bool` value of `key`.
+    pub fn bool(&self, key: &str) -> bool {
+        parse_bool(self.raw(key)).expect("validated at parse time")
+    }
+}
+
+/// Parse a spec bool (`true`/`false`/`1`/`0`).
+pub(super) fn parse_bool(s: &str) -> Option<bool> {
+    match s {
+        "true" | "1" => Some(true),
+        "false" | "0" => Some(false),
+        _ => None,
+    }
+}
+
+/// One registered partitioner.
+pub struct AlgoEntry {
+    /// Canonical name (what [`Display`](super::spec::PartitionerSpec)
+    /// prints).
+    pub name: &'static str,
+    /// Accepted aliases (parse-time only).
+    pub aliases: &'static [&'static str],
+    /// One-line description.
+    pub summary: &'static str,
+    /// Paper the algorithm follows.
+    pub citation: &'static str,
+    /// Tunable parameters (empty = the algorithm has none).
+    pub params: &'static [ParamSpec],
+    /// True when the built partitioner ingests streams in bounded memory
+    /// (see [`Partitioner::streaming_native`]).
+    pub streaming_native: bool,
+    factory: fn(&Resolved<'_>) -> Box<dyn Partitioner>,
+}
+
+impl AlgoEntry {
+    /// Build the partitioner from parse-validated overrides.
+    pub(super) fn build(
+        &self,
+        overrides: &[(String, String)],
+    ) -> Box<dyn Partitioner> {
+        (self.factory)(&Resolved { entry: self, overrides })
+    }
+
+    /// The parameter spec for `key`, if the algorithm has one.
+    pub fn param(&self, key: &str) -> Option<&'static ParamSpec> {
+        self.params.iter().find(|p| p.key == key)
+    }
+}
+
+const NO_MIN: f64 = f64::NEG_INFINITY;
+
+macro_rules! p {
+    ($key:literal, $kind:ident, $default:literal, $min:expr, $doc:literal) => {
+        ParamSpec {
+            key: $key,
+            kind: ParamKind::$kind,
+            default: $default,
+            min: $min,
+            doc: $doc,
+        }
+    };
+}
+
+static DFEP_PARAMS: &[ParamSpec] = &[
+    p!("cap", Float, "10", 1e-9, "per-round funding cap for small parts"),
+    p!("init", Float, "1", 1e-9, "initial funding as a fraction of |E|/k"),
+    p!("max_rounds", Int, "10000", 1.0, "safety bound on rounds"),
+    p!("frontier_first", Bool, "true", NO_MIN, "concentrate funding at the frontier"),
+];
+
+static DFEPC_PARAMS: &[ParamSpec] = &[
+    p!("p", Float, "2", 1e-9, "poverty divisor (poor if size < avg/p)"),
+    p!("cap", Float, "10", 1e-9, "per-round funding cap for small parts"),
+    p!("init", Float, "1", 1e-9, "initial funding as a fraction of |E|/k"),
+    p!("max_rounds", Int, "10000", 1.0, "safety bound on rounds"),
+    p!("rebalance", Int, "16", 0.0, "raid rounds after full coverage"),
+];
+
+static JABEJA_PARAMS: &[ParamSpec] = &[
+    p!("rounds", Int, "200", 1.0, "swap rounds"),
+    p!("temp", Float, "2", 1e-9, "initial simulated-annealing temperature"),
+    p!("delta", Float, "0.01", 0.0, "temperature decrement per round"),
+    p!("sample", Int, "3", 0.0, "random peers sampled per vertex per round"),
+    p!("alpha", Float, "2", 1e-9, "energy-function exponent"),
+];
+
+static FENNEL_PARAMS: &[ParamSpec] = &[
+    p!("gamma", Float, "1.5", 0.0, "load-balance penalty weight"),
+    p!("shuffle", Bool, "true", NO_MIN, "randomize the arrival order"),
+];
+
+static MULTILEVEL_PARAMS: &[ParamSpec] = &[
+    p!("coarsest", Int, "256", 1.0, "stop coarsening at this many vertices"),
+    p!("balance_cap", Float, "1.08", 1e-9, "refinement balance cap on |E_i|/(|E|/k)"),
+    p!("refine_passes", Int, "2", 0.0, "refinement passes per level"),
+];
+
+static HDRF_PARAMS: &[ParamSpec] = &[
+    p!("lambda", Float, "1.1", 0.0, "balance weight of C_BAL"),
+    p!("epsilon", Float, "1", 1e-9, "C_BAL denominator offset"),
+    p!("group", Int, "1024", 1.0, "edges per frozen-state scoring group"),
+    p!("chunk", Int, "4096", 1.0, "edges per ingestion fill"),
+];
+
+static DBH_PARAMS: &[ParamSpec] =
+    &[p!("chunk", Int, "4096", 1.0, "edges per ingestion fill")];
+
+static RESTREAM_PARAMS: &[ParamSpec] = &[
+    p!("lambda", Float, "1.1", 0.0, "balance weight of the initial HDRF pass"),
+    p!("epsilon", Float, "1", 1e-9, "C_BAL denominator offset of the HDRF pass"),
+    p!("passes", Int, "1", 1.0, "refinement replays after the initial pass"),
+    p!("group", Int, "1024", 1.0, "scoring-group size (HDRF pass and replays)"),
+    p!("chunk", Int, "4096", 1.0, "edges per ingestion fill"),
+];
+
+static ENTRIES: &[AlgoEntry] = &[
+    AlgoEntry {
+        name: "dfep",
+        aliases: &[],
+        summary: "the paper's funding-based edge partitioner",
+        citation: "Guerrieri & Montresor 2014, \u{a7}IV",
+        params: DFEP_PARAMS,
+        streaming_native: false,
+        factory: |r| {
+            Box::new(Dfep {
+                funding_cap: r.f64("cap"),
+                initial_fraction: r.f64("init"),
+                max_rounds: r.usize("max_rounds"),
+                frontier_first: r.bool("frontier_first"),
+            })
+        },
+    },
+    AlgoEntry {
+        name: "dfepc",
+        aliases: &[],
+        summary: "DFEP plus poor-partition raids on rich neighbors",
+        citation: "Guerrieri & Montresor 2014, \u{a7}IV-A",
+        params: DFEPC_PARAMS,
+        streaming_native: false,
+        factory: |r| {
+            Box::new(Dfepc {
+                poverty_divisor: r.f64("p"),
+                funding_cap: r.f64("cap"),
+                initial_fraction: r.f64("init"),
+                max_rounds: r.usize("max_rounds"),
+                rebalance_rounds: r.usize("rebalance"),
+            })
+        },
+    },
+    AlgoEntry {
+        name: "jabeja",
+        aliases: &["ja-be-ja"],
+        summary: "simulated-annealing swap baseline, vertex-to-edge",
+        citation: "Rahimian et al. 2013",
+        params: JABEJA_PARAMS,
+        streaming_native: false,
+        factory: |r| {
+            Box::new(JaBeJa {
+                rounds: r.usize("rounds"),
+                t0: r.f64("temp"),
+                delta: r.f64("delta"),
+                sample: r.usize("sample"),
+                alpha: r.f64("alpha"),
+            })
+        },
+    },
+    AlgoEntry {
+        name: "random",
+        aliases: &[],
+        summary: "uniform random edge assignment",
+        citation: "Guerrieri & Montresor 2014, \u{a7}IV (strawman)",
+        params: &[],
+        streaming_native: false,
+        factory: |_| Box::new(RandomEdge),
+    },
+    AlgoEntry {
+        name: "hash",
+        aliases: &[],
+        summary: "round-robin edge assignment",
+        citation: "Guerrieri & Montresor 2014, \u{a7}IV (strawman)",
+        params: &[],
+        streaming_native: false,
+        factory: |_| Box::new(HashEdge),
+    },
+    AlgoEntry {
+        name: "greedy",
+        aliases: &["greedybfs"],
+        summary: "lockstep greedy BFS growth",
+        citation: "Guerrieri & Montresor 2014, \u{a7}IV (sketch)",
+        params: &[],
+        streaming_native: false,
+        factory: |_| Box::new(GreedyBfs),
+    },
+    AlgoEntry {
+        name: "fennel",
+        aliases: &["streaming"],
+        summary: "Fennel-style greedy over a shuffled edge order",
+        citation: "Tsourakakis et al. 2014",
+        params: FENNEL_PARAMS,
+        streaming_native: false,
+        factory: |r| {
+            Box::new(StreamingGreedy {
+                gamma: r.f64("gamma"),
+                shuffle: r.bool("shuffle"),
+            })
+        },
+    },
+    AlgoEntry {
+        name: "multilevel",
+        aliases: &["metis"],
+        summary: "METIS-style coarsen / partition / refine",
+        citation: "Karypis & Kumar 1998",
+        params: MULTILEVEL_PARAMS,
+        streaming_native: false,
+        factory: |r| {
+            Box::new(Multilevel {
+                coarsest: r.usize("coarsest"),
+                balance_cap: r.f64("balance_cap"),
+                refine_passes: r.usize("refine_passes"),
+            })
+        },
+    },
+    AlgoEntry {
+        name: "hdrf",
+        aliases: &[],
+        summary: "High-Degree Replicated First ingest-time greedy",
+        citation: "Petroni et al. 2015",
+        params: HDRF_PARAMS,
+        streaming_native: true,
+        factory: |r| {
+            Box::new(Hdrf {
+                lambda: r.f64("lambda"),
+                epsilon: r.f64("epsilon"),
+                group: r.usize("group"),
+                chunk: r.usize("chunk"),
+            })
+        },
+    },
+    AlgoEntry {
+        name: "dbh",
+        aliases: &[],
+        summary: "degree-based hashing, two bounded-memory passes",
+        citation: "Xie et al. 2014",
+        params: DBH_PARAMS,
+        streaming_native: true,
+        factory: |r| Box::new(Dbh { chunk: r.usize("chunk") }),
+    },
+    AlgoEntry {
+        name: "restream",
+        aliases: &["re-stream"],
+        summary: "HDRF plus restreaming refinement replays",
+        citation: "Nishimura & Ugander 2013",
+        params: RESTREAM_PARAMS,
+        streaming_native: true,
+        factory: |r| {
+            Box::new(Restream {
+                inner: Hdrf {
+                    lambda: r.f64("lambda"),
+                    epsilon: r.f64("epsilon"),
+                    group: r.usize("group"),
+                    chunk: r.usize("chunk"),
+                },
+                passes: r.usize("passes"),
+                group: r.usize("group"),
+                chunk: r.usize("chunk"),
+            })
+        },
+    },
+];
+
+/// Every registered partitioner, in display order (the ablation sweep and
+/// the property tests iterate this).
+pub fn all() -> &'static [AlgoEntry] {
+    ENTRIES
+}
+
+/// Look an entry up by canonical name or alias (case-insensitive).
+pub fn find(name: &str) -> Option<&'static AlgoEntry> {
+    let lower = name.to_lowercase();
+    ENTRIES
+        .iter()
+        .find(|e| e.name == lower || e.aliases.contains(&lower.as_str()))
+}
+
+/// The comma-separated canonical name list (for error messages / help).
+pub fn known_names() -> String {
+    let names: Vec<&str> = ENTRIES.iter().map(|e| e.name).collect();
+    names.join(", ")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn names_unique_and_aliases_resolve() {
+        let mut seen = std::collections::HashSet::new();
+        for e in all() {
+            assert!(seen.insert(e.name), "duplicate name {}", e.name);
+            for a in e.aliases {
+                assert!(seen.insert(*a), "alias {a} collides");
+                assert_eq!(find(a).unwrap().name, e.name);
+            }
+            assert_eq!(find(e.name).unwrap().name, e.name);
+            assert_eq!(find(&e.name.to_uppercase()).unwrap().name, e.name);
+        }
+        assert!(find("nosuch").is_none());
+    }
+
+    #[test]
+    fn defaults_parse_as_their_kind() {
+        for e in all() {
+            for p in e.params {
+                match p.kind {
+                    ParamKind::Float => {
+                        let v: f64 = p.default.parse().unwrap();
+                        assert!(v >= p.min, "{}:{}", e.name, p.key);
+                    }
+                    ParamKind::Int => {
+                        let v: usize = p.default.parse().unwrap();
+                        assert!(v as f64 >= p.min, "{}:{}", e.name, p.key);
+                    }
+                    ParamKind::Bool => {
+                        parse_bool(p.default).unwrap();
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn default_factories_match_struct_defaults() {
+        // the registry's documented defaults must be the struct defaults
+        // the rest of the crate uses
+        use crate::graph::generators::GraphKind;
+        let g = GraphKind::ErdosRenyi { n: 120, m: 360 }.generate(3);
+        for e in all() {
+            let built = e.build(&[]);
+            assert_eq!(
+                built.streaming_native(),
+                e.streaming_native,
+                "{}",
+                e.name
+            );
+            let a = built.partition_graph(&g, 4, 9).unwrap();
+            let reference: Box<dyn Partitioner> = match e.name {
+                "dfep" => Box::new(Dfep::default()),
+                "dfepc" => Box::new(Dfepc::default()),
+                "jabeja" => Box::new(JaBeJa::default()),
+                "random" => Box::new(RandomEdge),
+                "hash" => Box::new(HashEdge),
+                "greedy" => Box::new(GreedyBfs),
+                "fennel" => Box::new(StreamingGreedy::default()),
+                "multilevel" => Box::new(Multilevel::default()),
+                "hdrf" => Box::new(Hdrf::default()),
+                "dbh" => Box::new(Dbh::default()),
+                "restream" => Box::new(Restream::default()),
+                other => panic!("entry {other} missing a reference default"),
+            };
+            let b = reference.partition_graph(&g, 4, 9).unwrap();
+            assert_eq!(a.owner, b.owner, "{}: defaults drifted", e.name);
+        }
+    }
+
+    /// DESIGN.md's registry table is generated from this same data; the
+    /// test fails (with the expected rows) whenever the table and
+    /// `registry::all()` disagree on names, keys or defaults.
+    #[test]
+    fn design_md_registry_table_matches() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("../DESIGN.md");
+        let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+            panic!("cannot read {}: {e}", path.display())
+        });
+        let mut documented = Vec::new();
+        for line in text.lines() {
+            let Some(rest) = line.strip_prefix("| `") else { continue };
+            let Some((name, rest)) = rest.split_once("` | ") else {
+                continue;
+            };
+            // only rows of the registry table: the second cell is the
+            // parameter list (`—` when the algorithm has none)
+            let Some((params_cell, _)) = rest.split_once(" |") else {
+                continue;
+            };
+            if find(name).is_none() {
+                continue;
+            }
+            documented.push((name.to_string(), params_cell.to_string()));
+        }
+        let expected: Vec<(String, String)> = all()
+            .iter()
+            .map(|e| (e.name.to_string(), params_cell(e)))
+            .collect();
+        assert_eq!(
+            documented, expected,
+            "DESIGN.md registry table is out of sync with \
+             registry::all(); regenerate the rows as `| `name` | params \
+             | ... |` using the expected list above"
+        );
+    }
+
+    /// Render one entry's parameter cell exactly as DESIGN.md writes it.
+    fn params_cell(e: &AlgoEntry) -> String {
+        if e.params.is_empty() {
+            return "\u{2014}".to_string();
+        }
+        let cells: Vec<String> = e
+            .params
+            .iter()
+            .map(|p| format!("`{}={}`", p.key, p.default))
+            .collect();
+        cells.join(", ")
+    }
+}

@@ -1,0 +1,306 @@
+//! `name:key=val,...` partitioner specs: the one string grammar the CLI,
+//! the facade, the benches and the tests use to name a configured
+//! partitioner.
+//!
+//! ## Grammar
+//!
+//! ```text
+//! spec   := name [ ":" param ("," param)* ]
+//! param  := key "=" value
+//! ```
+//!
+//! `name` is a canonical registry name or alias (case-insensitive; see
+//! [`registry::all`]); keys and values are validated at parse time
+//! against the registry's typed [`registry::ParamSpec`]s, so
+//! [`PartitionerSpec::build`] is infallible. Examples:
+//!
+//! ```
+//! use dfep::partition::spec::PartitionerSpec;
+//!
+//! let s: PartitionerSpec = "hdrf:lambda=1.5".parse().unwrap();
+//! assert_eq!(s.to_string(), "hdrf:lambda=1.5");
+//! assert_eq!(s.algo().name, "hdrf");
+//! assert!("hdrf:lambda=abc".parse::<PartitionerSpec>().is_err());
+//! assert!("nosuch".parse::<PartitionerSpec>().is_err());
+//! ```
+//!
+//! ## Documented errors
+//!
+//! - unknown algorithm: `unknown partitioner 'nosuch' (known: dfep, ...)`
+//! - unknown key: `hdrf: unknown parameter 'foo' (available: lambda,
+//!   epsilon, group, chunk)`
+//! - unparsable value: `hdrf: parameter 'lambda': expected a float, got
+//!   'abc'`
+//! - out-of-range value: `hdrf: parameter 'group' must be >= 1 (got 0)`
+//! - malformed pair: `hdrf: bad parameter 'lambda' (expected key=value)`
+//! - duplicate key: `hdrf: duplicate parameter 'lambda'`
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::anyhow;
+use crate::util::error::{Error, Result};
+
+use super::registry::{self, AlgoEntry, ParamKind};
+use super::Partitioner;
+
+/// A parsed, validated partitioner spec: a registry entry plus `key=val`
+/// overrides in input order. Round-trips through [`fmt::Display`]
+/// (`parse(s).to_string()` re-parses to an equal spec, with the name
+/// canonicalized).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PartitionerSpec {
+    name: &'static str,
+    overrides: Vec<(String, String)>,
+}
+
+impl PartitionerSpec {
+    /// Parse `name[:key=val,...]`; every error message is documented in
+    /// the [module docs](self).
+    pub fn parse(s: &str) -> Result<PartitionerSpec> {
+        let s = s.trim();
+        let (name, params) = match s.split_once(':') {
+            Some((n, p)) => (n.trim(), Some(p)),
+            None => (s, None),
+        };
+        let entry = registry::find(name).ok_or_else(|| {
+            anyhow!(
+                "unknown partitioner '{name}' (known: {})",
+                registry::known_names()
+            )
+        })?;
+        let mut overrides: Vec<(String, String)> = Vec::new();
+        for pair in params.into_iter().flat_map(|p| p.split(',')) {
+            let pair = pair.trim();
+            if pair.is_empty() {
+                // "hdrf:" (and stray commas) read as "no parameter here"
+                continue;
+            }
+            let Some((key, value)) = pair.split_once('=') else {
+                return Err(anyhow!(
+                    "{}: bad parameter '{pair}' (expected key=value)",
+                    entry.name
+                ));
+            };
+            let (key, value) = (key.trim(), value.trim());
+            let Some(spec) = entry.param(key) else {
+                return Err(anyhow!(
+                    "{}: unknown parameter '{key}' (available: {})",
+                    entry.name,
+                    available(entry)
+                ));
+            };
+            if overrides.iter().any(|(k, _)| k == key) {
+                return Err(anyhow!(
+                    "{}: duplicate parameter '{key}'",
+                    entry.name
+                ));
+            }
+            let canonical = check_value(entry, spec, value)?;
+            overrides.push((key.to_string(), canonical));
+        }
+        Ok(PartitionerSpec { name: entry.name, overrides })
+    }
+
+    /// The registry entry this spec names.
+    pub fn algo(&self) -> &'static AlgoEntry {
+        registry::find(self.name).expect("spec names a registered algo")
+    }
+
+    /// Construct the configured partitioner. Infallible: keys and values
+    /// were validated by [`parse`](Self::parse).
+    pub fn build(&self) -> Box<dyn Partitioner> {
+        self.algo().build(&self.overrides)
+    }
+
+    /// The canonical algorithm name (no parameters).
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    /// The `key=val` overrides, in input order.
+    pub fn overrides(&self) -> &[(String, String)] {
+        &self.overrides
+    }
+}
+
+/// A spec with no parameter overrides for `entry` — the programmatic
+/// counterpart of parsing the bare name.
+pub fn default_spec(entry: &'static AlgoEntry) -> PartitionerSpec {
+    PartitionerSpec { name: entry.name, overrides: Vec::new() }
+}
+
+impl fmt::Display for PartitionerSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name)?;
+        for (i, (k, v)) in self.overrides.iter().enumerate() {
+            f.write_str(if i == 0 { ":" } else { "," })?;
+            write!(f, "{k}={v}")?;
+        }
+        Ok(())
+    }
+}
+
+impl FromStr for PartitionerSpec {
+    type Err = Error;
+
+    fn from_str(s: &str) -> Result<PartitionerSpec> {
+        PartitionerSpec::parse(s)
+    }
+}
+
+fn available(entry: &AlgoEntry) -> String {
+    if entry.params.is_empty() {
+        return "no parameters".to_string();
+    }
+    let keys: Vec<&str> = entry.params.iter().map(|p| p.key).collect();
+    keys.join(", ")
+}
+
+/// Validate `value` against `spec`, returning the canonical rendering
+/// (so `Display` round-trips bit-identically: `1.50` becomes `1.5`).
+fn check_value(
+    entry: &AlgoEntry,
+    spec: &super::registry::ParamSpec,
+    value: &str,
+) -> Result<String> {
+    let bad = || {
+        anyhow!(
+            "{}: parameter '{}': expected {}, got '{value}'",
+            entry.name,
+            spec.key,
+            spec.kind.article()
+        )
+    };
+    let out_of_range = |got: f64| {
+        anyhow!(
+            "{}: parameter '{}' must be >= {} (got {got})",
+            entry.name,
+            spec.key,
+            spec.min
+        )
+    };
+    match spec.kind {
+        ParamKind::Float => {
+            let v: f64 = value.parse().map_err(|_| bad())?;
+            if !v.is_finite() {
+                return Err(bad());
+            }
+            if v < spec.min {
+                return Err(out_of_range(v));
+            }
+            Ok(format!("{v}"))
+        }
+        ParamKind::Int => {
+            let v: usize = value.parse().map_err(|_| bad())?;
+            if (v as f64) < spec.min {
+                return Err(out_of_range(v as f64));
+            }
+            Ok(format!("{v}"))
+        }
+        ParamKind::Bool => {
+            let v = super::registry::parse_bool(value).ok_or_else(bad)?;
+            Ok(format!("{v}"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bare_names_and_aliases_round_trip() {
+        for e in registry::all() {
+            let s = PartitionerSpec::parse(e.name).unwrap();
+            assert_eq!(s.to_string(), e.name);
+            assert_eq!(s, s.to_string().parse().unwrap());
+            for a in e.aliases {
+                // aliases canonicalize
+                let s = PartitionerSpec::parse(a).unwrap();
+                assert_eq!(s.name(), e.name);
+            }
+        }
+    }
+
+    #[test]
+    fn params_round_trip_and_canonicalize() {
+        let s = PartitionerSpec::parse("hdrf:lambda=1.50,group=512").unwrap();
+        assert_eq!(s.to_string(), "hdrf:lambda=1.5,group=512");
+        let again: PartitionerSpec = s.to_string().parse().unwrap();
+        assert_eq!(s, again);
+        // case-insensitive name, whitespace-tolerant names and pairs
+        let s = PartitionerSpec::parse("HDRF: lambda = 2").unwrap();
+        assert_eq!(s.to_string(), "hdrf:lambda=2");
+        let s = PartitionerSpec::parse("hdrf : lambda=2").unwrap();
+        assert_eq!(s.to_string(), "hdrf:lambda=2");
+        // a bare trailing colon is the bare name, not an error
+        assert_eq!(
+            PartitionerSpec::parse("hdrf:").unwrap().to_string(),
+            "hdrf"
+        );
+    }
+
+    #[test]
+    fn documented_error_messages() {
+        let err = |s: &str| PartitionerSpec::parse(s).unwrap_err().to_string();
+        assert!(
+            err("nosuch").starts_with("unknown partitioner 'nosuch' (known: dfep,"),
+            "{}",
+            err("nosuch")
+        );
+        assert_eq!(
+            err("hdrf:lambda=abc"),
+            "hdrf: parameter 'lambda': expected a float, got 'abc'"
+        );
+        assert_eq!(
+            err("hdrf:foo=1"),
+            "hdrf: unknown parameter 'foo' (available: lambda, epsilon, \
+             group, chunk)"
+        );
+        assert_eq!(
+            err("random:x=1"),
+            "random: unknown parameter 'x' (available: no parameters)"
+        );
+        assert_eq!(
+            err("hdrf:lambda"),
+            "hdrf: bad parameter 'lambda' (expected key=value)"
+        );
+        assert_eq!(
+            err("hdrf:lambda=1,lambda=2"),
+            "hdrf: duplicate parameter 'lambda'"
+        );
+        assert_eq!(
+            err("hdrf:group=0"),
+            "hdrf: parameter 'group' must be >= 1 (got 0)"
+        );
+        assert_eq!(
+            err("fennel:shuffle=maybe"),
+            "fennel: parameter 'shuffle': expected a bool (true|false|1|0), \
+             got 'maybe'"
+        );
+    }
+
+    #[test]
+    fn built_partitioner_reflects_overrides() {
+        use crate::graph::generators::GraphKind;
+        use crate::partition::metrics;
+        let g = GraphKind::PowerlawCluster { n: 400, m: 4, p: 0.3 }
+            .generate(5);
+        // a huge lambda forces near-perfect balance vs the default
+        let tuned = PartitionerSpec::parse("hdrf:lambda=1000")
+            .unwrap()
+            .build()
+            .partition_graph(&g, 8, 1)
+            .unwrap();
+        let default = PartitionerSpec::parse("hdrf")
+            .unwrap()
+            .build()
+            .partition_graph(&g, 8, 1)
+            .unwrap();
+        assert!(
+            metrics::largest(&g, &tuned) <= metrics::largest(&g, &default)
+        );
+        assert_ne!(tuned.owner, default.owner);
+    }
+}

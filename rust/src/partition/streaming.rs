@@ -53,35 +53,25 @@
 //! never O(|E|). The owner vector itself (one `u32` per stream edge) is
 //! the output.
 
+use crate::bail;
 use crate::graph::stream::{EdgeStream, MemoryEdgeStream};
 use crate::graph::Graph;
 use crate::util::error::Result;
 use crate::util::pool;
 
-use super::{EdgePartition, Partitioner};
+use super::{check_k, EdgePartition, PartitionInput, Partitioner};
 
 /// Edges per parallel scoring shard. A fixed constant (never derived from
 /// the thread count), so shard boundaries — and therefore the merged
 /// result — are identical for every pool width.
 pub const SCORE_SHARD: usize = 128;
 
-/// An ingest-time partitioner: one or more bounded-memory passes over an
-/// edge stream, no materialized [`Graph`].
-pub trait StreamingPartitioner {
-    /// Partition the stream into `k` parts; `owner[i]` is the part of
-    /// the `i`-th stream edge. For canonical streams (e.g.
-    /// [`MemoryEdgeStream::from_graph`] or a file written by
-    /// [`crate::graph::io::write_edge_list`]) stream position == edge
-    /// id, so the result plugs straight into
-    /// [`crate::partition::view::PartitionView`] /
-    /// [`crate::partition::metrics`].
-    fn partition_stream(
-        &self,
-        stream: &mut dyn EdgeStream,
-        k: usize,
-        seed: u64,
-    ) -> Result<EdgePartition>;
-}
+// The partitioners here dispatch through the one [`Partitioner`] trait:
+// their `partition` override ingests the [`PartitionInput::Stream`] arm
+// directly (bounded memory, `owner[i]` = part of the `i`-th stream edge),
+// and `partition_graph` replays the materialized graph's canonical edge
+// list through the same `partition_stream` inherent method, so the two
+// paths cannot drift.
 
 // ---------------------------------------------------------------------
 // shared state tables
@@ -313,16 +303,22 @@ impl Hdrf {
     }
 }
 
-impl StreamingPartitioner for Hdrf {
-    fn partition_stream(
+impl Hdrf {
+    /// Partition the stream into `k` parts in bounded memory; `owner[i]`
+    /// is the part of the `i`-th stream edge (for canonical streams,
+    /// stream position == edge id). HDRF is deterministic: the seed is
+    /// unused.
+    pub fn partition_stream(
         &self,
         stream: &mut dyn EdgeStream,
         k: usize,
-        _seed: u64, // HDRF is deterministic: no randomness to seed
+        _seed: u64,
     ) -> Result<EdgePartition> {
-        assert!(k >= 1, "k must be >= 1");
-        assert!(self.group >= 1 && self.chunk >= 1);
-        assert!(self.epsilon > 0.0, "epsilon must be positive");
+        check_k(k)?;
+        check_knobs(self.group, self.chunk)?;
+        if self.epsilon <= 0.0 {
+            bail!("HDRF epsilon must be positive (got {})", self.epsilon);
+        }
         stream.reset()?;
         let mut deg: Vec<u32> = Vec::new();
         let mut presence = Presence::new(k);
@@ -360,14 +356,36 @@ impl StreamingPartitioner for Hdrf {
 }
 
 impl Partitioner for Hdrf {
-    fn partition(&self, g: &Graph, k: usize, seed: u64) -> EdgePartition {
+    fn partition(
+        &self,
+        input: PartitionInput<'_>,
+        k: usize,
+        seed: u64,
+    ) -> Result<EdgePartition> {
+        match input {
+            PartitionInput::Graph(g) => self.partition_graph(g, k, seed),
+            PartitionInput::Stream(s) => {
+                self.partition_stream(s.stream, k, seed)
+            }
+        }
+    }
+
+    fn partition_graph(
+        &self,
+        g: &Graph,
+        k: usize,
+        seed: u64,
+    ) -> Result<EdgePartition> {
         let mut s = MemoryEdgeStream::from_graph(g);
-        StreamingPartitioner::partition_stream(self, &mut s, k, seed)
-            .expect("in-memory streams are infallible")
+        self.partition_stream(&mut s, k, seed)
     }
 
     fn name(&self) -> &'static str {
         "HDRF"
+    }
+
+    fn streaming_native(&self) -> bool {
+        true
     }
 }
 
@@ -407,15 +425,17 @@ fn dbh_choice(u: u32, v: u32, deg: &[u32], k: usize, seed: u64) -> u32 {
         % k as u64) as u32
 }
 
-impl StreamingPartitioner for Dbh {
-    fn partition_stream(
+impl Dbh {
+    /// Partition the stream into `k` parts in two bounded-memory passes;
+    /// `owner[i]` is the part of the `i`-th stream edge.
+    pub fn partition_stream(
         &self,
         stream: &mut dyn EdgeStream,
         k: usize,
         seed: u64,
     ) -> Result<EdgePartition> {
-        assert!(k >= 1, "k must be >= 1");
-        assert!(self.chunk >= 1);
+        check_k(k)?;
+        check_knobs(1, self.chunk)?;
         // pass 1: full degree table (sums commute; order-independent)
         stream.reset()?;
         let mut deg: Vec<u32> = Vec::new();
@@ -465,14 +485,36 @@ impl StreamingPartitioner for Dbh {
 }
 
 impl Partitioner for Dbh {
-    fn partition(&self, g: &Graph, k: usize, seed: u64) -> EdgePartition {
+    fn partition(
+        &self,
+        input: PartitionInput<'_>,
+        k: usize,
+        seed: u64,
+    ) -> Result<EdgePartition> {
+        match input {
+            PartitionInput::Graph(g) => self.partition_graph(g, k, seed),
+            PartitionInput::Stream(s) => {
+                self.partition_stream(s.stream, k, seed)
+            }
+        }
+    }
+
+    fn partition_graph(
+        &self,
+        g: &Graph,
+        k: usize,
+        seed: u64,
+    ) -> Result<EdgePartition> {
         let mut s = MemoryEdgeStream::from_graph(g);
-        StreamingPartitioner::partition_stream(self, &mut s, k, seed)
-            .expect("in-memory streams are infallible")
+        self.partition_stream(&mut s, k, seed)
     }
 
     fn name(&self) -> &'static str {
         "DBH"
+    }
+
+    fn streaming_native(&self) -> bool {
+        true
     }
 }
 
@@ -624,6 +666,7 @@ impl Restream {
         k: usize,
         prev: &[u32],
     ) -> Result<EdgePartition> {
+        check_k(k)?;
         if let Some(&p) = prev.iter().find(|&&p| p as usize >= k) {
             return Err(crate::anyhow!(
                 "previous owner {p} out of range for k={k}"
@@ -645,7 +688,7 @@ impl Restream {
         k: usize,
         cur: &mut [u32],
     ) -> Result<()> {
-        assert!(self.group >= 1 && self.chunk >= 1);
+        check_knobs(self.group, self.chunk)?;
         // pass A: counts[v*k + p] = v's incident edges currently in p
         stream.reset()?;
         let mut counts: Vec<u32> = Vec::new();
@@ -710,8 +753,11 @@ impl Restream {
     }
 }
 
-impl StreamingPartitioner for Restream {
-    fn partition_stream(
+impl Restream {
+    /// Partition the stream into `k` parts in bounded memory: the inner
+    /// [`Hdrf`] pass followed by [`passes`](Self::passes) refinement
+    /// replays; `owner[i]` is the part of the `i`-th stream edge.
+    pub fn partition_stream(
         &self,
         stream: &mut dyn EdgeStream,
         k: usize,
@@ -731,36 +777,45 @@ impl StreamingPartitioner for Restream {
 }
 
 impl Partitioner for Restream {
-    fn partition(&self, g: &Graph, k: usize, seed: u64) -> EdgePartition {
+    fn partition(
+        &self,
+        input: PartitionInput<'_>,
+        k: usize,
+        seed: u64,
+    ) -> Result<EdgePartition> {
+        match input {
+            PartitionInput::Graph(g) => self.partition_graph(g, k, seed),
+            PartitionInput::Stream(s) => {
+                self.partition_stream(s.stream, k, seed)
+            }
+        }
+    }
+
+    fn partition_graph(
+        &self,
+        g: &Graph,
+        k: usize,
+        seed: u64,
+    ) -> Result<EdgePartition> {
         let mut s = MemoryEdgeStream::from_graph(g);
-        StreamingPartitioner::partition_stream(self, &mut s, k, seed)
-            .expect("in-memory streams are infallible")
+        self.partition_stream(&mut s, k, seed)
     }
 
     fn name(&self) -> &'static str {
         "ReStream"
     }
+
+    fn streaming_native(&self) -> bool {
+        true
+    }
 }
 
-/// Build a streaming partitioner by CLI name (`"hdrf"`, `"dbh"`,
-/// `"restream"`) with the given ingestion chunk size applied everywhere
-/// it matters (including [`Restream`]'s inner HDRF pass). `None` for
-/// unknown names. The one copy of this mapping — the CLI and the
-/// chunk-invariance tests all go through it.
-pub fn streamer(
-    name: &str,
-    chunk: usize,
-) -> Option<Box<dyn StreamingPartitioner>> {
-    Some(match name {
-        "hdrf" => Box::new(Hdrf { chunk, ..Hdrf::default() }),
-        "dbh" => Box::new(Dbh { chunk }),
-        "restream" => Box::new(Restream {
-            inner: Hdrf { chunk, ..Hdrf::default() },
-            chunk,
-            ..Restream::default()
-        }),
-        _ => return None,
-    })
+/// Shared knob validation for the streaming partitioners.
+fn check_knobs(group: usize, chunk: usize) -> Result<()> {
+    if group < 1 || chunk < 1 {
+        bail!("group and chunk sizes must be >= 1");
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------
@@ -853,13 +908,14 @@ pub fn stream_stats(
 mod tests {
     use super::*;
     use crate::graph::generators::GraphKind;
-    use crate::partition::metrics;
+    use crate::partition::spec::PartitionerSpec;
+    use crate::partition::{metrics, StreamInput};
 
     fn g() -> Graph {
         GraphKind::PowerlawCluster { n: 600, m: 4, p: 0.3 }.generate(7)
     }
 
-    fn streamers() -> Vec<(&'static str, Box<dyn StreamingPartitioner>)> {
+    fn streamers() -> Vec<(&'static str, Box<dyn Partitioner>)> {
         vec![
             ("hdrf", Box::new(Hdrf::default())),
             ("dbh", Box::new(Dbh::default())),
@@ -867,12 +923,22 @@ mod tests {
         ]
     }
 
+    /// Run the unified trait's stream arm.
+    fn stream_partition(
+        p: &dyn Partitioner,
+        s: &mut dyn EdgeStream,
+        k: usize,
+        seed: u64,
+    ) -> Result<EdgePartition> {
+        p.partition(PartitionInput::Stream(StreamInput::new(s)), k, seed)
+    }
+
     #[test]
     fn all_streamers_yield_valid_covers() {
         let g = g();
         for (name, p) in streamers() {
             let mut s = MemoryEdgeStream::from_graph(&g);
-            let part = p.partition_stream(&mut s, 8, 3).unwrap();
+            let part = stream_partition(p.as_ref(), &mut s, 8, 3).unwrap();
             part.validate(&g).unwrap_or_else(|e| panic!("{name}: {e}"));
             assert_eq!(
                 part.sizes().iter().sum::<usize>(),
@@ -890,11 +956,16 @@ mod tests {
         let m = g.edge_count();
         for (name, p) in streamers() {
             let mut s = MemoryEdgeStream::from_graph(&g);
-            let base = p.partition_stream(&mut s, 8, 3).unwrap();
+            let base = stream_partition(p.as_ref(), &mut s, 8, 3).unwrap();
             for chunk in [1usize, 64, 1000, m.max(1)] {
-                let retuned = streamer(name, chunk).unwrap();
+                let retuned = PartitionerSpec::parse(&format!(
+                    "{name}:chunk={chunk}"
+                ))
+                .unwrap()
+                .build();
                 let mut s = MemoryEdgeStream::from_graph(&g);
-                let got = retuned.partition_stream(&mut s, 8, 3).unwrap();
+                let got =
+                    stream_partition(retuned.as_ref(), &mut s, 8, 3).unwrap();
                 assert_eq!(
                     got.owner, base.owner,
                     "{name}: chunk {chunk} changed the result"
@@ -908,8 +979,8 @@ mod tests {
         // not a universal law, but on a clustered power-law graph the
         // degree-aware greedy should replicate less than pure hashing
         let g = g();
-        let h = Partitioner::partition(&Hdrf::default(), &g, 8, 1);
-        let d = Partitioner::partition(&Dbh::default(), &g, 8, 1);
+        let h = Hdrf::default().partition_graph(&g, 8, 1).unwrap();
+        let d = Dbh::default().partition_graph(&g, 8, 1).unwrap();
         let reps = |p: &EdgePartition| -> usize {
             p.vertex_multiplicity(&g).iter().map(|&m| m as usize).sum()
         };
@@ -924,7 +995,7 @@ mod tests {
     #[test]
     fn hdrf_is_reasonably_balanced() {
         let g = g();
-        let p = Partitioner::partition(&Hdrf::default(), &g, 8, 1);
+        let p = Hdrf::default().partition_graph(&g, 8, 1).unwrap();
         let largest = metrics::largest(&g, &p);
         assert!(largest < 1.8, "largest {largest}");
     }
@@ -932,12 +1003,9 @@ mod tests {
     #[test]
     fn restream_never_raises_replication_and_validates() {
         let g = g();
-        let prev = Partitioner::partition(
-            &crate::partition::baselines::RandomEdge,
-            &g,
-            6,
-            9,
-        );
+        let prev = crate::partition::baselines::RandomEdge
+            .partition_graph(&g, 6, 9)
+            .unwrap();
         let mut s = MemoryEdgeStream::from_graph(&g);
         let refined =
             Restream::default().refine(&mut s, 6, &prev.owner).unwrap();
@@ -958,7 +1026,7 @@ mod tests {
         let g = g();
         for (name, p) in streamers() {
             let mut s = MemoryEdgeStream::from_graph(&g);
-            let part = p.partition_stream(&mut s, 80, 2).unwrap();
+            let part = stream_partition(p.as_ref(), &mut s, 80, 2).unwrap();
             part.validate(&g).unwrap_or_else(|e| panic!("{name}: {e}"));
         }
     }
@@ -966,7 +1034,7 @@ mod tests {
     #[test]
     fn stream_stats_match_view_derivations() {
         let g = g();
-        let p = Partitioner::partition(&Hdrf::default(), &g, 5, 4);
+        let p = Hdrf::default().partition_graph(&g, 5, 4).unwrap();
         let mut s = MemoryEdgeStream::from_graph(&g);
         let st = stream_stats(&mut s, &p.owner, 5, 512).unwrap();
         assert_eq!(st.edges, g.edge_count());
@@ -983,11 +1051,11 @@ mod tests {
     #[test]
     fn seed_changes_dbh_but_not_hdrf() {
         let g = g();
-        let h1 = Partitioner::partition(&Hdrf::default(), &g, 8, 1);
-        let h2 = Partitioner::partition(&Hdrf::default(), &g, 8, 2);
+        let h1 = Hdrf::default().partition_graph(&g, 8, 1).unwrap();
+        let h2 = Hdrf::default().partition_graph(&g, 8, 2).unwrap();
         assert_eq!(h1.owner, h2.owner, "HDRF should ignore the seed");
-        let d1 = Partitioner::partition(&Dbh::default(), &g, 8, 1);
-        let d2 = Partitioner::partition(&Dbh::default(), &g, 8, 2);
+        let d1 = Dbh::default().partition_graph(&g, 8, 1).unwrap();
+        let d2 = Dbh::default().partition_graph(&g, 8, 2).unwrap();
         assert_ne!(d1.owner, d2.owner, "DBH should be seed-sensitive");
     }
 }

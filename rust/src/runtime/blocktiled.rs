@@ -176,7 +176,7 @@ mod tests {
         };
         // graph bigger than one block so tiling is exercised
         let g = GraphKind::ErdosRenyi { n: 700, m: 2100 }.generate(3);
-        let p = Dfep::default().partition(&g, 2, 1);
+        let p = Dfep::default().partition_graph(&g, 2, 1).unwrap();
         let view = PartitionView::build(&g, &p);
         let sub = &view.subgraphs()[0];
         assert!(sub.vertex_count() > BLOCK, "want multi-tile case");
@@ -243,7 +243,7 @@ mod tests {
             return;
         };
         let g = GraphKind::ErdosRenyi { n: 600, m: 1200 }.generate(4);
-        let p = Dfep::default().partition(&g, 2, 2);
+        let p = Dfep::default().partition_graph(&g, 2, 2).unwrap();
         let view = PartitionView::build(&g, &p);
         let t = TiledSubgraph::pack(&view.subgraphs()[0], 1.0);
         // a sparse graph far from dense: strictly fewer tiles than nb^2

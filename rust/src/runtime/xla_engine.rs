@@ -328,7 +328,7 @@ mod tests {
         };
         let g = GraphKind::ErdosRenyi { n: 500, m: 1500 }.generate(5);
         let px = XlaDfep::default().partition(&rt, &g, 4, 3).unwrap();
-        let pr = Dfep::default().partition(&g, 4, 3);
+        let pr = Dfep::default().partition_graph(&g, 4, 3).unwrap();
         let nx = metrics::nstdev(&g, &px);
         let nr = metrics::nstdev(&g, &pr);
         // same algorithm, different engines: quality must be in the same

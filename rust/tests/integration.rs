@@ -7,7 +7,8 @@ use std::path::Path;
 use dfep::cluster::cost::CostModel;
 use dfep::cluster::dfep_mr::run_cluster_dfep;
 use dfep::cluster::etsch_mr::{run_baseline_sssp, run_etsch_sssp};
-use dfep::coordinator::runs::{resolve_graph, run, PartitionerKind, RunConfig};
+use dfep::coordinator::runs::{resolve_graph, PartitionRequest};
+use dfep::partition::spec::PartitionerSpec;
 use dfep::etsch::build_subgraphs;
 use dfep::graph::{datasets, io, stats};
 use dfep::partition::{dfep::Dfep, metrics, Partitioner};
@@ -22,54 +23,49 @@ fn runtime() -> Option<Runtime> {
 #[test]
 fn pipeline_dataset_to_metrics() {
     let g = resolve_graph("astroph@0.03", 1).unwrap();
-    for kind in [
-        PartitionerKind::Dfep,
-        PartitionerKind::Dfepc,
-        PartitionerKind::Random,
-    ] {
-        let res = run(
-            &g,
-            &RunConfig { partitioner: kind, k: 10, seed: 2, gain_samples: 2 },
-        );
+    for algo in ["dfep", "dfepc", "random"] {
+        let req = PartitionRequest {
+            spec: PartitionerSpec::parse(algo).unwrap(),
+            k: 10,
+            seed: 2,
+            gain_samples: 2,
+            ..Default::default()
+        };
+        let res = req.execute_on(&g).unwrap();
         res.partition.validate(&g).unwrap();
-        assert!(res.report.largest >= 1.0);
+        assert!(res.metrics.largest >= 1.0);
         assert!(res.gain.unwrap() >= 0.0);
+        assert!(res.timings.partition_secs >= 0.0);
     }
 }
 
 #[test]
 fn dfep_beats_random_on_communication() {
     let g = resolve_graph("wordnet@0.03", 3).unwrap();
-    let d = run(
-        &g,
-        &RunConfig {
-            partitioner: PartitionerKind::Dfep,
+    let run = |algo: &str| {
+        PartitionRequest {
+            spec: PartitionerSpec::parse(algo).unwrap(),
             k: 12,
             seed: 1,
-            gain_samples: 0,
-        },
-    );
-    let r = run(
-        &g,
-        &RunConfig {
-            partitioner: PartitionerKind::Random,
-            k: 12,
-            seed: 1,
-            gain_samples: 0,
-        },
-    );
+            ..Default::default()
+        }
+        .execute_on(&g)
+        .unwrap()
+    };
+    let d = run("dfep");
+    let r = run("random");
     assert!(
-        (d.report.messages as f64) < 0.8 * r.report.messages as f64,
+        (d.metrics.messages as f64) < 0.8 * r.metrics.messages as f64,
         "DFEP messages {} should be well below random {}",
-        d.report.messages,
-        r.report.messages
+        d.metrics.messages,
+        r.metrics.messages
     );
 }
 
 #[test]
 fn partition_file_roundtrip() {
     let g = resolve_graph("er:n=200,m=500", 1).unwrap();
-    let p = Dfep::default().partition(&g, 4, 1);
+    let p = Dfep::default().partition_graph(&g, 4, 1).unwrap();
     let dir = std::env::temp_dir().join("dfep_integration");
     std::fs::create_dir_all(&dir).unwrap();
     let path = dir.join("partition.tsv");
@@ -89,7 +85,7 @@ fn cluster_jobs_agree_with_in_memory_engines() {
 
     // path compression needs diameter to compress: use the road analogue
     let road = datasets::usroads().scaled(0.02, 5);
-    let p = Dfep::default().partition(&road, 4, 9);
+    let p = Dfep::default().partition_graph(&road, 4, 9).unwrap();
     let e = run_etsch_sssp(&road, &p, 0, 4, &cost);
     let b = run_baseline_sssp(&road, 0, 4, &cost);
     assert_eq!(e.distances, b.distances);
@@ -108,7 +104,7 @@ fn xla_local_phase_agrees_with_subgraph_bfs() {
         return;
     };
     let g = resolve_graph("email-enron@0.02", 4).unwrap();
-    let p = Dfep::default().partition(&g, 3, 2);
+    let p = Dfep::default().partition_graph(&g, 3, 2).unwrap();
     let subs = build_subgraphs(&g, &p);
     for sub in subs.iter().filter(|s| s.vertex_count() > 0) {
         let t = TiledSubgraph::pack(sub, 1.0);
@@ -149,7 +145,7 @@ fn xla_dfep_engine_matches_rust_engine_exactly() {
     let px = dfep::runtime::xla_engine::XlaDfep::default()
         .partition(&rt, &g, 6, 11)
         .unwrap();
-    let pr = Dfep::default().partition(&g, 6, 11);
+    let pr = Dfep::default().partition_graph(&g, 6, 11).unwrap();
     px.validate(&g).unwrap();
     assert_eq!(px.rounds, pr.rounds, "round counts diverged");
     assert_eq!(

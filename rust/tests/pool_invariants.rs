@@ -33,8 +33,8 @@ fn graph_io_roundtrip_reproduces_identical_csr() {
 fn every_edge_owned_exactly_once() {
     let g = GraphKind::PowerlawCluster { n: 800, m: 5, p: 0.3 }.generate(5);
     for (name, p) in [
-        ("DFEP", Dfep::default().partition(&g, 8, 2)),
-        ("DFEPC", Dfepc::default().partition(&g, 8, 2)),
+        ("DFEP", Dfep::default().partition_graph(&g, 8, 2).unwrap()),
+        ("DFEPC", Dfepc::default().partition_graph(&g, 8, 2).unwrap()),
     ] {
         p.validate(&g).unwrap();
         // one owner entry per edge, each a valid partition id, and the
@@ -61,11 +61,11 @@ fn every_edge_owned_exactly_once() {
 #[test]
 fn dfep_partition_bit_identical_across_1_2_8_threads() {
     let g = GraphKind::PowerlawCluster { n: 3_000, m: 5, p: 0.3 }.generate(7);
-    let base = pool::with_threads(1, || Dfep::default().partition(&g, 8, 3));
+    let base = pool::with_threads(1, || Dfep::default().partition_graph(&g, 8, 3).unwrap());
     let r_base = metrics::evaluate(&g, &base);
     for threads in [2usize, 8] {
         let p =
-            pool::with_threads(threads, || Dfep::default().partition(&g, 8, 3));
+            pool::with_threads(threads, || Dfep::default().partition_graph(&g, 8, 3).unwrap());
         assert_eq!(p.owner, base.owner, "{threads} threads: owners differ");
         assert_eq!(
             p.rounds, base.rounds,
@@ -91,10 +91,10 @@ fn dfepc_partition_bit_identical_across_1_2_8_threads() {
         shortcuts: 0,
     }
     .generate(4);
-    let base = pool::with_threads(1, || Dfepc::default().partition(&g, 6, 9));
+    let base = pool::with_threads(1, || Dfepc::default().partition_graph(&g, 6, 9).unwrap());
     for threads in [2usize, 8] {
         let p = pool::with_threads(threads, || {
-            Dfepc::default().partition(&g, 6, 9)
+            Dfepc::default().partition_graph(&g, 6, 9).unwrap()
         });
         assert_eq!(p.owner, base.owner, "{threads} threads");
         assert_eq!(p.rounds, base.rounds, "{threads} threads");
@@ -107,7 +107,7 @@ fn partition_view_bit_identical_across_1_2_8_threads() {
     // same per-part CSRs, replica table, frontier flags and metrics for
     // every pool width
     let g = GraphKind::PowerlawCluster { n: 2_000, m: 5, p: 0.3 }.generate(8);
-    let p = pool::with_threads(1, || Dfep::default().partition(&g, 8, 4));
+    let p = pool::with_threads(1, || Dfep::default().partition_graph(&g, 8, 4).unwrap());
     let base = pool::with_threads(1, || PartitionView::build(&g, &p));
     let r_base =
         pool::with_threads(1, || metrics::evaluate_with(&g, &p, &base));
@@ -128,7 +128,7 @@ fn partition_view_bit_identical_across_1_2_8_threads() {
 #[test]
 fn etsch_results_and_rounds_stable_across_thread_counts() {
     let g = GraphKind::PowerlawCluster { n: 1_000, m: 4, p: 0.3 }.generate(6);
-    let p = Dfep::default().partition(&g, 6, 1);
+    let p = Dfep::default().partition_graph(&g, 6, 1).unwrap();
     let run = |threads: usize| {
         pool::with_threads(threads, || {
             let mut engine = Etsch::new(&g, &p);
@@ -162,4 +162,56 @@ fn etsch_results_and_rounds_stable_across_thread_counts() {
     assert_eq!(dense.1, rounds1, "dense reference: rounds differ");
     assert_eq!(dense.2.messages_exchanged, stats1.messages_exchanged);
     assert_eq!(dense.2.messages_ceiling, stats1.messages_ceiling);
+}
+
+#[test]
+fn facade_report_bit_identical_across_1_2_8_threads() {
+    // the whole PartitionRequest -> RunReport facade — partitioner run,
+    // shared view build, metric evaluation and the attached workload —
+    // must be a pure function of the request for every pool width
+    use dfep::coordinator::runs::{PartitionRequest, Workload};
+    use dfep::partition::spec::PartitionerSpec;
+    let run = |threads: usize| {
+        PartitionRequest {
+            spec: PartitionerSpec::parse("dfep").unwrap(),
+            dataset: "plc:n=2000,m=5,p=0.3".to_string(),
+            k: 8,
+            seed: 4,
+            graph_seed: 8,
+            gain_samples: 2,
+            threads: Some(threads),
+            workload: Some(Workload::Sssp { source: 0 }),
+        }
+        .execute()
+        .unwrap()
+    };
+    let base = run(1);
+    for threads in [2usize, 8] {
+        let r = run(threads);
+        assert_eq!(
+            r.partition.owner, base.partition.owner,
+            "{threads} threads: owners differ"
+        );
+        assert_eq!(r.partition.rounds, base.partition.rounds);
+        assert_eq!(
+            r.metrics.nstdev.to_bits(),
+            base.metrics.nstdev.to_bits(),
+            "{threads} threads"
+        );
+        assert_eq!(
+            r.metrics.largest.to_bits(),
+            base.metrics.largest.to_bits()
+        );
+        assert_eq!(r.metrics.messages, base.metrics.messages);
+        assert_eq!(
+            r.gain.unwrap().to_bits(),
+            base.gain.unwrap().to_bits(),
+            "{threads} threads: gain differs"
+        );
+        let (w, wb) =
+            (r.workload.as_ref().unwrap(), base.workload.as_ref().unwrap());
+        assert_eq!(w.rounds, wb.rounds, "{threads} threads: workload rounds");
+        assert_eq!(w.messages, wb.messages);
+        assert_eq!(w.reached, wb.reached);
+    }
 }

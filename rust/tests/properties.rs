@@ -7,35 +7,27 @@ use dfep::etsch::{
     mis, mis::LubyMis, pagerank::PageRank, sssp, sssp::Sssp, Etsch,
 };
 use dfep::graph::stats;
+use dfep::partition::spec::{self, PartitionerSpec};
 use dfep::partition::view::PartitionView;
 use dfep::partition::{
-    baselines::{GreedyBfs, HashEdge, RandomEdge},
-    dfep::Dfep,
-    dfepc::Dfepc,
-    fennel::StreamingGreedy,
-    jabeja::JaBeJa,
-    metrics,
-    multilevel::Multilevel,
-    streaming::{Dbh, Hdrf, Restream},
-    Partitioner,
+    baselines::RandomEdge, dfep::Dfep, metrics, registry, Partitioner,
 };
 use dfep::testing::prop::{forall, Gen};
 
+/// Every registered partitioner with default parameters — the registry is
+/// the one source of truth, so a newly registered algorithm is property-
+/// tested automatically. JaBeJa's swap rounds are capped through its own
+/// spec grammar to keep the suite fast.
 fn partitioners() -> Vec<Box<dyn Partitioner>> {
-    vec![
-        Box::new(Dfep::default()),
-        Box::new(Dfepc::default()),
-        Box::new(JaBeJa { rounds: 15, ..Default::default() }),
-        Box::new(RandomEdge),
-        Box::new(HashEdge),
-        Box::new(GreedyBfs),
-        Box::new(StreamingGreedy::default()),
-        Box::new(Multilevel::default()),
-        // ingest-time partitioners through their in-memory adapters
-        Box::new(Hdrf::default()),
-        Box::new(Dbh::default()),
-        Box::new(Restream::default()),
-    ]
+    registry::all()
+        .iter()
+        .map(|e| match e.name {
+            "jabeja" => PartitionerSpec::parse("jabeja:rounds=15")
+                .unwrap()
+                .build(),
+            _ => spec::default_spec(e).build(),
+        })
+        .collect()
 }
 
 // Every test below threads *explicit* `u64` seeds: each case draws its
@@ -51,7 +43,7 @@ fn every_partitioner_yields_a_disjoint_cover() {
         let k = g.int(1, 9);
         let part_seed: u64 = g.rng.next_u64();
         for p in partitioners() {
-            let part = p.partition(&graph, k, part_seed);
+            let part = p.partition_graph(&graph, k, part_seed).unwrap();
             // complete cover with valid owners is exactly validate()
             part.validate(&graph).unwrap_or_else(|e| {
                 panic!("{}: {e}", p.name());
@@ -77,8 +69,8 @@ fn every_partitioner_is_deterministic_per_seed() {
         let k = g.int(2, 6);
         let part_seed: u64 = g.rng.next_u64();
         for p in partitioners() {
-            let a = p.partition(&graph, k, part_seed);
-            let b = p.partition(&graph, k, part_seed);
+            let a = p.partition_graph(&graph, k, part_seed).unwrap();
+            let b = p.partition_graph(&graph, k, part_seed).unwrap();
             assert_eq!(a.owner, b.owner, "{} not deterministic", p.name());
             assert_eq!(a.rounds, b.rounds, "{} rounds differ", p.name());
         }
@@ -91,7 +83,7 @@ fn vertex_sets_are_exactly_edge_endpoints() {
         let graph = g.any_graph(12, 100);
         let k = g.int(2, 6);
         let part_seed: u64 = g.rng.next_u64();
-        let part = Dfep::default().partition(&graph, k, part_seed);
+        let part = Dfep::default().partition_graph(&graph, k, part_seed).unwrap();
         let vsets = part.vertex_sets(&graph);
         let esets = part.edge_sets();
         for (vs, es) in vsets.iter().zip(esets.iter()) {
@@ -121,7 +113,7 @@ fn partition_view_agrees_with_slow_derivations() {
         let k = g.int(1, 6);
         let part_seed: u64 = g.rng.next_u64();
         for p in partitioners() {
-            let part = p.partition(&graph, k, part_seed);
+            let part = p.partition_graph(&graph, k, part_seed).unwrap();
             let view = PartitionView::build(&graph, &part);
             let name = p.name();
             // per-part edge CSR == slow edge_sets (ascending in both)
@@ -208,7 +200,7 @@ fn dirty_aggregation_matches_dense_reference() {
         let source = g.int(0, graph.vertex_count() - 1) as u32;
         let alg_seed: u64 = g.rng.next_u64();
         for p in partitioners() {
-            let part = p.partition(&graph, k, part_seed);
+            let part = p.partition_graph(&graph, k, part_seed).unwrap();
             let view = PartitionView::build(&graph, &part);
             let name = p.name();
 
@@ -255,7 +247,7 @@ fn dfep_partitions_connected_on_connected_graphs() {
         let graph = g.graph(20, 150); // connected by construction
         let k = g.int(2, 8);
         let part_seed: u64 = g.rng.next_u64();
-        let part = Dfep::default().partition(&graph, k, part_seed);
+        let part = Dfep::default().partition_graph(&graph, k, part_seed).unwrap();
         let disc = metrics::disconnected_fraction(&graph, &part);
         assert_eq!(
             disc, 0.0,
@@ -270,7 +262,7 @@ fn messages_metric_counts_replicas() {
         let graph = g.any_graph(12, 80);
         let k = g.int(2, 5);
         let part_seed: u64 = g.rng.next_u64();
-        let part = RandomEdge.partition(&graph, k, part_seed);
+        let part = RandomEdge.partition_graph(&graph, k, part_seed).unwrap();
         // independent recomputation from vertex_sets
         let vsets = part.vertex_sets(&graph);
         let mut count = vec![0usize; graph.vertex_count()];
@@ -293,7 +285,7 @@ fn etsch_sssp_equals_bfs_under_any_partitioning() {
         let part_seed: u64 = g.rng.next_u64();
         let source = g.int(0, graph.vertex_count() - 1) as u32;
         for p in partitioners() {
-            let part = p.partition(&graph, k, part_seed);
+            let part = p.partition_graph(&graph, k, part_seed).unwrap();
             let mut engine = Etsch::new(&graph, &part);
             let got = engine.run(&mut Sssp::new(source));
             let want = stats::bfs_distances(&graph, source);
@@ -320,7 +312,7 @@ fn etsch_cc_equals_union_find_components() {
         let k = g.int(1, 6);
         let part_seed: u64 = g.rng.next_u64();
         let label_seed: u64 = g.rng.next_u64();
-        let part = RandomEdge.partition(&graph, k, part_seed);
+        let part = RandomEdge.partition_graph(&graph, k, part_seed).unwrap();
         let mut engine = Etsch::new(&graph, &part);
         let labels =
             engine.run(&mut ConnectedComponents::new(label_seed));
@@ -348,7 +340,7 @@ fn luby_mis_always_valid() {
         let k = g.int(1, 5);
         let part_seed: u64 = g.rng.next_u64();
         let luby_seed: u64 = g.rng.next_u64();
-        let part = Dfep::default().partition(&graph, k, part_seed);
+        let part = Dfep::default().partition_graph(&graph, k, part_seed).unwrap();
         let mut engine = Etsch::new(&graph, &part);
         let states = engine.run(&mut LubyMis::new(luby_seed));
         let in_set: Vec<bool> = states
@@ -366,7 +358,7 @@ fn rounds_and_gain_are_sane() {
         let k = g.int(2, 6);
         let part_seed: u64 = g.rng.next_u64();
         let gain_seed: u64 = g.rng.next_u64();
-        let part = Dfep::default().partition(&graph, k, part_seed);
+        let part = Dfep::default().partition_graph(&graph, k, part_seed).unwrap();
         assert!(part.rounds > 0);
         let gain = dfep::etsch::gain::average_gain(
             &graph,

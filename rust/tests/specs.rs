@@ -1,0 +1,117 @@
+//! Spec/registry contract tests (see DESIGN.md "Partitioner specs &
+//! registry"): every registered name round-trips through `Display`,
+//! malformed specs fail with the documented messages, and every
+//! registered spec with default parameters yields a `validate`-clean
+//! partition on the generator graphs at k in {1, 2, 8}.
+
+use dfep::partition::spec::{self, PartitionerSpec};
+use dfep::partition::{registry, Partitioner};
+use dfep::testing::prop::forall;
+
+#[test]
+fn every_registry_name_round_trips_through_display() {
+    for e in registry::all() {
+        // bare name
+        let s = PartitionerSpec::parse(e.name).unwrap();
+        assert_eq!(s.to_string(), e.name);
+        let re: PartitionerSpec = s.to_string().parse().unwrap();
+        assert_eq!(s, re, "{}", e.name);
+        assert_eq!(s, spec::default_spec(e), "{}", e.name);
+        // every parameter, set to its own default, round-trips too
+        for p in e.params {
+            let text = format!("{}:{}={}", e.name, p.key, p.default);
+            let s = PartitionerSpec::parse(&text).unwrap();
+            assert_eq!(s.to_string(), text, "{}:{}", e.name, p.key);
+            let re: PartitionerSpec = s.to_string().parse().unwrap();
+            assert_eq!(s, re, "{}:{}", e.name, p.key);
+        }
+        // aliases canonicalize to the registry name
+        for a in e.aliases {
+            assert_eq!(
+                PartitionerSpec::parse(a).unwrap().to_string(),
+                e.name,
+                "alias {a}"
+            );
+        }
+    }
+}
+
+/// The documented error-message table (DESIGN.md "Partitioner specs &
+/// registry"): the acceptance-bar cases plus one of each error class.
+#[test]
+fn malformed_specs_fail_with_documented_messages() {
+    let err = |s: &str| PartitionerSpec::parse(s).unwrap_err().to_string();
+    // unknown algorithm lists the known names
+    let e = err("nosuch");
+    assert!(e.starts_with("unknown partitioner 'nosuch' (known: "), "{e}");
+    for entry in registry::all() {
+        assert!(e.contains(entry.name), "{e} missing {}", entry.name);
+    }
+    // unparsable value names the parameter and the expected type
+    assert_eq!(
+        err("hdrf:lambda=abc"),
+        "hdrf: parameter 'lambda': expected a float, got 'abc'"
+    );
+    // unknown key lists the available keys
+    assert_eq!(
+        err("hdrf:nope=3"),
+        "hdrf: unknown parameter 'nope' (available: lambda, epsilon, \
+         group, chunk)"
+    );
+    // missing '=' is called out as a malformed pair
+    assert_eq!(
+        err("dfep:cap"),
+        "dfep: bad parameter 'cap' (expected key=value)"
+    );
+    // duplicates are rejected rather than silently last-wins
+    assert_eq!(
+        err("dbh:chunk=1,chunk=2"),
+        "dbh: duplicate parameter 'chunk'"
+    );
+    // range violations name the bound
+    assert_eq!(
+        err("restream:passes=0"),
+        "restream: parameter 'passes' must be >= 1 (got 0)"
+    );
+}
+
+#[test]
+fn every_default_spec_partitions_generator_graphs_cleanly() {
+    // the satellite property: every registered spec, default params,
+    // produces a validate-clean complete cover at k in {1, 2, 8}
+    forall(6, |g| {
+        let graph = g.any_graph(12, 110);
+        let part_seed: u64 = g.rng.next_u64();
+        for e in registry::all() {
+            // cap JaBeJa's rounds so the property suite stays fast; all
+            // other entries run with pure defaults
+            let s = if e.name == "jabeja" {
+                PartitionerSpec::parse("jabeja:rounds=10").unwrap()
+            } else {
+                spec::default_spec(e)
+            };
+            let p = s.build();
+            assert_eq!(p.streaming_native(), e.streaming_native, "{}", e.name);
+            for k in [1usize, 2, 8] {
+                let part = p
+                    .partition_graph(&graph, k, part_seed)
+                    .unwrap_or_else(|err| panic!("{} k={k}: {err}", e.name));
+                part.validate(&graph).unwrap_or_else(|err| {
+                    panic!("{} k={k}: {err}", e.name)
+                });
+                assert_eq!(
+                    part.sizes().iter().sum::<usize>(),
+                    graph.edge_count(),
+                    "{} k={k} loses edges",
+                    e.name
+                );
+            }
+            // k = 0 is an error, never a panic
+            assert!(
+                p.partition_graph(&graph, 0, part_seed).is_err(),
+                "{} accepted k=0",
+                e.name
+            );
+        }
+    });
+}

@@ -11,31 +11,46 @@
 //! the materializing StreamingGreedy on the calibrated power-law
 //! datasets at k in {8, 32}.
 
-use dfep::graph::stream::{FileEdgeStream, MemoryEdgeStream};
+use dfep::graph::stream::{EdgeStream, FileEdgeStream, MemoryEdgeStream};
 use dfep::graph::{datasets, generators::GraphKind, io, Graph};
-use dfep::partition::streaming::{
-    stream_stats, streamer, Dbh, Hdrf, Restream, StreamingPartitioner,
-};
+use dfep::partition::spec::PartitionerSpec;
+use dfep::partition::streaming::{stream_stats, Hdrf, Restream};
 use dfep::partition::{
-    baselines::RandomEdge, fennel::StreamingGreedy, metrics, EdgePartition,
-    Partitioner,
+    baselines::RandomEdge, fennel::StreamingGreedy, metrics, registry,
+    EdgePartition, PartitionInput, Partitioner, StreamInput,
 };
 use dfep::testing::prop::forall;
 use dfep::util::pool;
 
-fn streamers() -> Vec<(&'static str, Box<dyn StreamingPartitioner>)> {
-    vec![
-        ("hdrf", Box::new(Hdrf::default())),
-        ("dbh", Box::new(Dbh::default())),
-        ("restream", Box::new(Restream::default())),
-    ]
+/// Every streaming-native registry entry, built with default params —
+/// the unified-trait counterpart of the old hand-kept streamer list.
+fn streamers() -> Vec<(&'static str, Box<dyn Partitioner>)> {
+    let out: Vec<_> = registry::all()
+        .iter()
+        .filter(|e| e.streaming_native)
+        .map(|e| (e.name, dfep::partition::spec::default_spec(e).build()))
+        .collect();
+    assert_eq!(out.len(), 3, "hdrf/dbh/restream expected");
+    out
 }
 
-/// Rebuild a streamer with a specific ingestion chunk size (the same
-/// constructor the CLI uses).
-fn with_chunk(name: &str, chunk: usize) -> Box<dyn StreamingPartitioner> {
-    streamer(name, chunk)
-        .unwrap_or_else(|| panic!("unknown streamer {name}"))
+/// Rebuild a streamer with a specific ingestion chunk size through the
+/// same spec grammar the CLI uses.
+fn with_chunk(name: &str, chunk: usize) -> Box<dyn Partitioner> {
+    PartitionerSpec::parse(&format!("{name}:chunk={chunk}"))
+        .unwrap_or_else(|e| panic!("{name}: {e}"))
+        .build()
+}
+
+/// Run the unified trait's stream arm.
+fn stream_partition(
+    p: &dyn Partitioner,
+    s: &mut dyn EdgeStream,
+    k: usize,
+    seed: u64,
+) -> EdgePartition {
+    p.partition(PartitionInput::Stream(StreamInput::new(s)), k, seed)
+        .expect("stream partition failed")
 }
 
 /// Total replicas: Σ_v |{parts containing v}| — the replication factor's
@@ -55,12 +70,12 @@ fn chunked_file_ingestion_identical_to_in_memory() {
 
     for (name, p) in streamers() {
         let mut mem = MemoryEdgeStream::from_graph(&g);
-        let base = p.partition_stream(&mut mem, 8, 5).unwrap();
+        let base = stream_partition(p.as_ref(), &mut mem, 8, 5);
         base.validate(&g).unwrap();
         for chunk in [64usize, 4096, m] {
             let retuned = with_chunk(name, chunk);
             let mut file = FileEdgeStream::open(&path).unwrap();
-            let got = retuned.partition_stream(&mut file, 8, 5).unwrap();
+            let got = stream_partition(retuned.as_ref(), &mut file, 8, 5);
             assert_eq!(
                 got.owner, base.owner,
                 "{name}: disk chunk={chunk} differs from in-memory"
@@ -77,15 +92,18 @@ fn streaming_partitions_bit_identical_across_1_2_8_threads() {
     for (name, _) in streamers() {
         let base = pool::with_threads(1, || {
             let mut s = MemoryEdgeStream::from_graph(&g);
-            with_chunk(name, 4096).partition_stream(&mut s, 8, 7).unwrap()
+            stream_partition(with_chunk(name, 4096).as_ref(), &mut s, 8, 7)
         });
         for threads in [2usize, 8] {
             for chunk in [64usize, 4096, m] {
                 let got = pool::with_threads(threads, || {
                     let mut s = MemoryEdgeStream::from_graph(&g);
-                    with_chunk(name, chunk)
-                        .partition_stream(&mut s, 8, 7)
-                        .unwrap()
+                    stream_partition(
+                        with_chunk(name, chunk).as_ref(),
+                        &mut s,
+                        8,
+                        7,
+                    )
                 });
                 assert_eq!(
                     got.owner, base.owner,
@@ -102,7 +120,7 @@ fn restream_refinement_never_increases_replication() {
         let graph = gen.any_graph(12, 140);
         let k = gen.int(2, 7);
         let prev_seed: u64 = gen.rng.next_u64();
-        let prev = RandomEdge.partition(&graph, k, prev_seed);
+        let prev = RandomEdge.partition_graph(&graph, k, prev_seed).unwrap();
         let before = replicas(&graph, &prev);
         let mut s = MemoryEdgeStream::from_graph(&graph);
         let refined =
@@ -121,8 +139,8 @@ fn restream_improves_what_hdrf_started() {
     // the full pipeline (HDRF + refine) should not be worse than HDRF
     // alone — the refinement accepts only non-increasing moves
     let g = datasets::astroph().scaled(0.1, 42);
-    let hdrf = Hdrf::default().partition(&g, 8, 1);
-    let full = Restream::default().partition(&g, 8, 1);
+    let hdrf = Hdrf::default().partition_graph(&g, 8, 1).unwrap();
+    let full = Restream::default().partition_graph(&g, 8, 1).unwrap();
     full.validate(&g).unwrap();
     assert!(
         replicas(&g, &full) <= replicas(&g, &hdrf),
@@ -139,9 +157,10 @@ fn hdrf_replication_no_worse_than_streaming_greedy_at_k8_and_k32() {
     // materializing streaming baseline on replication
     let g = datasets::astroph().scaled(0.2, 42);
     for k in [8usize, 32] {
-        let hdrf = Hdrf::default().partition(&g, k, 1);
+        let hdrf = Hdrf::default().partition_graph(&g, k, 1).unwrap();
         hdrf.validate(&g).unwrap();
-        let greedy = StreamingGreedy::default().partition(&g, k, 1);
+        let greedy =
+            StreamingGreedy::default().partition_graph(&g, k, 1).unwrap();
         let (rh, rg) = (replicas(&g, &hdrf), replicas(&g, &greedy));
         assert!(
             rh <= rg,
@@ -165,7 +184,7 @@ fn streaming_quality_evaluates_through_partition_view() {
     let g = datasets::astroph().scaled(0.05, 42);
     for (name, p) in streamers() {
         let mut s = MemoryEdgeStream::from_graph(&g);
-        let part = p.partition_stream(&mut s, 6, 2).unwrap();
+        let part = stream_partition(p.as_ref(), &mut s, 6, 2);
         let report = metrics::evaluate(&g, &part);
         assert!(report.largest >= 1.0, "{name}");
         let st = stream_stats(&mut s, &part.owner, 6, 1024).unwrap();
