@@ -1,5 +1,7 @@
 //! Regenerates the hotpath series — see bench::figures::hotpath_with:
-//! DFEP thread scaling, the partition_view derived-state series, and the
+//! DFEP thread scaling, the dfep_round series (round-engine rounds/sec,
+//! edges-bought/sec and peak scratch bytes of the persistent
+//! RoundScratch), the partition_view derived-state series, and the
 //! streaming series (edges/sec for the ingest-time hdrf / dbh / restream
 //! partitioners, with StreamingGreedy as the materialized comparison).
 //! Knobs: DFEP_SAMPLES (default 5; paper 100), DFEP_SCALE (default 0.05),

@@ -472,6 +472,64 @@ pub fn hotpath_with(quick: bool) {
     ]);
     sink.num("etsch_sssp_mean_s", s.mean);
 
+    // dfep_round series: the round engine itself — drives DfepState
+    // directly (no finalize, no trace), reporting rounds/sec,
+    // edges-bought/sec and the high-water footprint of the persistent
+    // RoundScratch (which makes steady-state rounds allocation-free;
+    // see tests/alloc_budget.rs)
+    {
+        use crate::partition::dfep::{reseed_on_free_edge, DfepState};
+        use crate::util::rng::Rng;
+        let kk = 8usize;
+        let initial = (g.edge_count() as f64 / kk as f64).max(1.0);
+        let mut rounds = 0usize;
+        let mut bought = 0usize;
+        let mut peak = 0usize;
+        let times = crate::util::timer::time_n(warmup, n, || {
+            let mut rng = Rng::new(1);
+            let mut st = DfepState::new(&g, kk, initial, &mut rng);
+            let mut stall = 0usize;
+            while st.free_edges > 0 && st.rounds < 4_000 {
+                let before = st.free_edges;
+                st.funding_round(&g, None, None);
+                st.coordinator_step(10.0);
+                if st.free_edges == before {
+                    stall += 1;
+                    if stall >= 3 {
+                        reseed_on_free_edge(&g, &mut st, &mut rng);
+                        stall = 0;
+                    }
+                } else {
+                    stall = 0;
+                }
+            }
+            rounds = st.rounds;
+            bought = st.sizes.iter().sum();
+            peak = st.scratch_peak_bytes();
+        });
+        let s = Summary::of(&times);
+        t.row(&[
+            format!("DFEP round engine ({rounds} rounds)"),
+            fmt_f(s.mean),
+            fmt_f(s.p95),
+            fmt_f(bought as f64 / s.mean / 1e6),
+        ]);
+        println!(
+            "dfep_round: {} rounds/s, {} edges-bought/s, scratch peak {} \
+             bytes",
+            fmt_f(rounds as f64 / s.mean),
+            fmt_f(bought as f64 / s.mean),
+            peak
+        );
+        sink.num("dfep_round_mean_s", s.mean);
+        sink.num("dfep_round_rounds_per_s", rounds as f64 / s.mean);
+        sink.num(
+            "dfep_round_edges_bought_per_s",
+            bought as f64 / s.mean,
+        );
+        sink.num("dfep_round_scratch_peak_bytes", peak as f64);
+    }
+
     // partition_view series: the shared derived-state layer — one view
     // build, the full metric evaluation on top of it, and engine
     // construction (which is exactly one view build since PR 2)

@@ -83,11 +83,9 @@ pub fn run_cluster_dfep(
     // seed funding on the selected edges' lower endpoints (the paper
     // starts from edges; the reference simulator starts from vertices —
     // the cluster version follows the paper's Hadoop description)
-    for (i, money) in st.money.iter_mut().enumerate() {
-        for x in money.iter_mut() {
-            *x = 0.0;
-        }
-        st.holders[i].clear();
+    st.money.clear();
+    for h in st.holders.iter_mut() {
+        h.clear();
     }
     for (i, &e) in start_edges.iter().enumerate() {
         let (u, _) = g.endpoints(e);
@@ -103,8 +101,10 @@ pub fn run_cluster_dfep(
         // cash, eligible edge) — measure before mutation
         let mut funding_msgs = 0usize;
         for i in 0..k {
+            // cache-linear walk over partition i's flat ledger row
+            let row = st.money.part(i);
             for v in 0..n as u32 {
-                if st.money[i][v as usize] <= 0.0 {
+                if row[v as usize] <= 0.0 {
                     continue;
                 }
                 funding_msgs += g

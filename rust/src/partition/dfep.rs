@@ -22,16 +22,45 @@
 //! metric — are faithful. The MapReduce-shaped version used for the EC2
 //! experiments lives in [`crate::cluster::dfep_mr`], and an XLA-offloaded
 //! round (L2 `funding_step` artifact) in [`crate::runtime::xla_engine`].
+//!
+//! # Round engine memory model
+//!
+//! The round loop is the crate's hottest path and runs **allocation-free
+//! in steady state** (pinned by `tests/alloc_budget.rs`):
+//!
+//! - every per-round buffer — step-1 shard outputs, the bid buffer, the
+//!   per-edge group index, step-2 auction outputs, the frontier-scan
+//!   chunks and the per-partition frontier lists — lives in a persistent
+//!   `RoundScratch` owned by [`DfepState`] and is cleared, never freed,
+//!   between rounds;
+//! - bids are ordered by a **stable two-pass LSD counting sort** on the
+//!   edge id (`radix_sort_bids_by_edge`) instead of a comparison sort:
+//!   the canonical bid order (edge asc, then partition asc, then holder
+//!   registration order) pins every `f64` accumulation in step 2;
+//! - the old `sort_unstable` + `dedup` canonicalizations of holder and
+//!   frontier lists are replaced by epoch-stamped `u32` visit arrays: the
+//!   canonical holder order is **registration order** (first time a
+//!   vertex received cash since the last canonicalization) and the
+//!   canonical frontier fill order is `(free_deg, vertex id)` ascending —
+//!   both total orders, independent of thread count;
+//! - the money ledger is one flat stride-`n` allocation
+//!   ([`super::money::MoneyLedger`]) shared with the DFEPC variant, the
+//!   cluster simulator and the XLA engine.
 
+use super::money::MoneyLedger;
 use super::{check_k, EdgePartition, Partitioner};
 use crate::bail;
 use crate::graph::Graph;
 use crate::util::error::Result;
 use crate::util::rng::Rng;
 
-/// Funding ledger for one partition: money on vertices (sparse map would
-/// be slower; graphs here fit dense per-partition vectors comfortably).
-pub(crate) type Money = Vec<f64>;
+/// One step-1 bid: `(edge, partition, offer, contribution from the
+/// edge's lower endpoint)`.
+pub(crate) type Bid = (u32, u32, f64, f64);
+
+/// Distinct values per LSD digit (16 bits — at most two passes cover any
+/// `u32` edge id).
+const RADIX: usize = 1 << 16;
 
 /// Tunables (defaults follow the paper's implementation notes).
 #[derive(Clone, Debug)]
@@ -67,16 +96,274 @@ impl Default for Dfep {
     }
 }
 
-/// Full mutable state of a DFEP run (shared with the DFEPC variant).
-pub(crate) struct DfepState {
+/// Step-1 shard output (one holder chunk of one partition). Reused
+/// across rounds via [`RoundScratch`]; `clear` keeps every capacity.
+#[derive(Default)]
+struct Shard1Out {
+    /// Bids emitted by this chunk's holders.
+    bids: Vec<Bid>,
+    /// Holders with cash but no eligible edge (stay funded).
+    stranded: Vec<u32>,
+    /// Holders whose cash became bids (zeroed in apply).
+    spent: Vec<u32>,
+    /// Per-holder eligible-edge workspace.
+    eligible: Vec<u32>,
+}
+
+impl Shard1Out {
+    fn clear(&mut self) {
+        self.bids.clear();
+        self.stranded.clear();
+        self.spent.clear();
+        self.eligible.clear();
+    }
+
+    fn bytes(&self) -> usize {
+        self.bids.capacity() * std::mem::size_of::<Bid>()
+            + (self.stranded.capacity()
+                + self.spent.capacity()
+                + self.eligible.capacity())
+                * std::mem::size_of::<u32>()
+    }
+}
+
+/// Step-2 shard output (one run of bid-receiving edges). Reused across
+/// rounds via [`RoundScratch`].
+#[derive(Default)]
+struct Shard2Out {
+    /// (edge, winner-or-FREE, number of credit entries).
+    sales: Vec<(u32, u32, u32)>,
+    /// (partition, vertex, amount) in sequential credit order.
+    credits: Vec<(u32, u32, f64)>,
+    /// Per-edge merged-bid workspace: (partition, offer, from_lo).
+    merged: Vec<(u32, f64, f64)>,
+}
+
+impl Shard2Out {
+    fn clear(&mut self) {
+        self.sales.clear();
+        self.credits.clear();
+        self.merged.clear();
+    }
+
+    fn bytes(&self) -> usize {
+        self.sales.capacity() * std::mem::size_of::<(u32, u32, u32)>()
+            + self.credits.capacity()
+                * std::mem::size_of::<(u32, u32, f64)>()
+            + self.merged.capacity()
+                * std::mem::size_of::<(u32, f64, f64)>()
+    }
+}
+
+/// Persistent scratch for [`DfepState::funding_round`]: every buffer the
+/// round loop needs, allocated once and grown to its high-water mark, so
+/// steady-state rounds perform **zero** heap allocations (asserted by
+/// the counting-allocator test in `tests/alloc_budget.rs`).
+pub(crate) struct RoundScratch {
+    /// Canonicalized per-partition holder lists (registration order).
+    holder_lists: Vec<Vec<u32>>,
+    /// Step-1 shards: (partition, chunk lo, chunk hi) into
+    /// `holder_lists[partition]`.
+    shards: Vec<(u32, u32, u32)>,
+    /// Step-1 shard outputs (`shards.len()` used per round).
+    outs1: Vec<Shard1Out>,
+    /// Concatenated bids, later radix-sorted by edge id.
+    bids: Vec<Bid>,
+    /// Radix scatter buffer.
+    bids_tmp: Vec<Bid>,
+    /// Radix histogram — `min(|E|, RADIX)` entries: small graphs only
+    /// ever touch digits below their edge count, and two-pass graphs
+    /// (|E| > `RADIX`) need exactly `RADIX` slots.
+    counts: Vec<u32>,
+    /// Per-edge `[start, end)` ranges into `bids`.
+    groups: Vec<(u32, u32)>,
+    /// Step-2 shard outputs.
+    outs2: Vec<Shard2Out>,
+    /// How many `outs2` entries the current round filled.
+    outs2_used: usize,
+    /// Per-vertex visit stamps for holder canonicalization (a vertex is
+    /// recorded for lane `p` of a pass iff `stamp[v] == base + p`).
+    stamp: Vec<u32>,
+    /// Next unissued stamp value (wraps by re-zeroing `stamp`).
+    epoch: u32,
+    /// Per-partition visit stamp for the frontier merge: `seen_parts[p]`
+    /// is the last vertex recorded as partition `p`'s frontier. Sound
+    /// because the scan emits each live vertex's discoveries
+    /// consecutively and live vertices are distinct.
+    seen_parts: Vec<u32>,
+    /// Frontier-scan chunk outputs: (partition, vertex) discoveries.
+    found: Vec<Vec<(u32, u32)>>,
+    /// Per-partition frontier vertex lists (first-discovery order).
+    frontier_of: Vec<Vec<u32>>,
+    /// High-water heap footprint of all scratch element buffers.
+    peak_bytes: usize,
+}
+
+impl RoundScratch {
+    fn new(n: usize, k: usize, m: usize) -> RoundScratch {
+        let mut holder_lists = Vec::with_capacity(k);
+        holder_lists.resize_with(k, Vec::new);
+        let mut frontier_of = Vec::with_capacity(k);
+        frontier_of.resize_with(k, Vec::new);
+        RoundScratch {
+            holder_lists,
+            shards: Vec::new(),
+            outs1: Vec::new(),
+            bids: Vec::new(),
+            bids_tmp: Vec::new(),
+            counts: vec![0; m.clamp(1, RADIX)],
+            groups: Vec::new(),
+            outs2: Vec::new(),
+            outs2_used: 0,
+            stamp: vec![0; n],
+            epoch: 0,
+            seen_parts: vec![u32::MAX; k],
+            found: Vec::new(),
+            frontier_of,
+            peak_bytes: 0,
+        }
+    }
+
+    /// Element-buffer bytes currently held (excludes the fixed spines).
+    fn current_bytes(&self) -> usize {
+        use std::mem::size_of;
+        fn nested<T>(v: &[Vec<T>]) -> usize {
+            v.iter()
+                .map(|x| x.capacity() * size_of::<T>())
+                .sum::<usize>()
+        }
+        nested(&self.holder_lists)
+            + self.shards.capacity() * size_of::<(u32, u32, u32)>()
+            + self.outs1.iter().map(Shard1Out::bytes).sum::<usize>()
+            + self.bids.capacity() * size_of::<Bid>()
+            + self.bids_tmp.capacity() * size_of::<Bid>()
+            + self.counts.capacity() * size_of::<u32>()
+            + self.groups.capacity() * size_of::<(u32, u32)>()
+            + self.outs2.iter().map(Shard2Out::bytes).sum::<usize>()
+            + self.stamp.capacity() * size_of::<u32>()
+            + self.seen_parts.capacity() * size_of::<u32>()
+            + nested(&self.found)
+            + nested(&self.frontier_of)
+    }
+
+    fn note_peak(&mut self) {
+        self.peak_bytes = self.peak_bytes.max(self.current_bytes());
+    }
+}
+
+/// Reserve `span` fresh stamp values, returning the base id: vertex `v`
+/// counts as visited for lane `p` of this pass iff
+/// `stamp[v] == base + p`. Handles `u32` wrap-around by re-zeroing the
+/// stamp array (base is always >= 1, so zeroed entries never collide).
+fn begin_pass(stamp: &mut [u32], epoch: &mut u32, span: u32) -> u32 {
+    if *epoch > u32::MAX - span {
+        stamp.fill(0);
+        *epoch = 0;
+    }
+    let base = *epoch + 1;
+    *epoch += span;
+    base
+}
+
+/// Stable two-pass LSD counting sort of `bids` by edge id.
+///
+/// This pins **the** canonical bid order that fixes every `f64`
+/// accumulation in step 2: edge id ascending; within one edge, partition
+/// id ascending; within one (edge, partition) key, holder registration
+/// order. The sort keys only on the edge id — the partition and holder
+/// sub-orders are inherited from the input sequence, which step 1 emits
+/// partition-major in holder order, and stability preserves them.
+///
+/// `tmp` and `counts` are caller-owned scratch; `counts` needs
+/// `min(edge_bound, RADIX)` slots (which also covers the high-digit
+/// pass: its range never exceeds `RADIX`, and two-pass inputs imply
+/// `edge_bound > RADIX`). Steady-state calls allocate nothing beyond
+/// `tmp`'s high-water mark. Graphs with at most 2^16 edges finish after
+/// the low-digit pass.
+///
+/// Positions are `u32` (like the group index built on top of the sorted
+/// order), which caps one round at 2^32 bids — asserted below rather
+/// than wrapping silently.
+pub(crate) fn radix_sort_bids_by_edge(
+    bids: &mut Vec<Bid>,
+    tmp: &mut Vec<Bid>,
+    counts: &mut [u32],
+    edge_bound: u32,
+) {
+    // a real assert, not debug_assert: the ceiling is only reachable in
+    // release-scale runs, exactly where debug asserts compile out
+    assert!(
+        bids.len() <= u32::MAX as usize,
+        "a round emitted {} bids, above the u32 position ceiling",
+        bids.len()
+    );
+    if bids.len() <= 1 {
+        return;
+    }
+    tmp.resize(bids.len(), (0, 0, 0.0, 0.0));
+    // pass 1: low 16 bits, bids -> tmp
+    let lo_range = (edge_bound as usize).min(RADIX);
+    assert!(
+        counts.len() >= lo_range,
+        "radix histogram has {} slots, need {lo_range}",
+        counts.len()
+    );
+    counts[..lo_range].fill(0);
+    for b in bids.iter() {
+        counts[(b.0 & 0xFFFF) as usize] += 1;
+    }
+    let mut sum = 0u32;
+    for c in counts[..lo_range].iter_mut() {
+        let t = *c;
+        *c = sum;
+        sum += t;
+    }
+    for &b in bids.iter() {
+        let d = (b.0 & 0xFFFF) as usize;
+        tmp[counts[d] as usize] = b;
+        counts[d] += 1;
+    }
+    if edge_bound as usize <= RADIX {
+        // every edge id fits one digit: tmp is fully sorted
+        std::mem::swap(bids, tmp);
+        return;
+    }
+    // pass 2: high 16 bits, tmp -> bids (stable, so the low-digit order
+    // within each high digit is preserved)
+    let hi_range = ((edge_bound - 1) >> 16) as usize + 1;
+    counts[..hi_range].fill(0);
+    for b in tmp.iter() {
+        counts[(b.0 >> 16) as usize] += 1;
+    }
+    let mut sum = 0u32;
+    for c in counts[..hi_range].iter_mut() {
+        let t = *c;
+        *c = sum;
+        sum += t;
+    }
+    for &b in tmp.iter() {
+        let d = (b.0 >> 16) as usize;
+        bids[counts[d] as usize] = b;
+        counts[d] += 1;
+    }
+}
+
+/// Full mutable state of a DFEP run. Shared with the DFEPC variant, the
+/// MapReduce-shaped cluster simulator and the engine-level tests and
+/// benches (`tests/alloc_budget.rs`, the `dfep_round` series in the
+/// `hotpath` bench).
+pub struct DfepState {
+    /// Number of partitions.
     pub k: usize,
-    /// `owner[e]`: `FREE`, or partition id.
+    /// `owner[e]`: `u32::MAX` (free), or partition id.
     pub owner: Vec<u32>,
-    /// Per-partition vertex funding.
-    pub money: Vec<Money>,
+    /// Flat per-(partition, vertex) funding ledger (stride = |V|).
+    pub money: MoneyLedger,
     /// Edges owned per partition.
     pub sizes: Vec<usize>,
+    /// Edges not yet sold.
     pub free_edges: usize,
+    /// Rounds executed so far.
     pub rounds: usize,
     /// Frontier-first funding (see [`Dfep::frontier_first`]).
     pub frontier_first: bool,
@@ -84,14 +371,16 @@ pub(crate) struct DfepState {
     /// anchor when a partition's liquid cash is exactly zero.
     pub anchor: Vec<usize>,
     /// Per-partition list of vertices that *may* hold cash (push-only,
-    /// may contain stale entries and duplicates; consumers re-check
-    /// `money[i][v] > 0`). Keeps every round O(active state), not O(k*n).
+    /// may contain stale entries and duplicates; consumers re-check the
+    /// ledger cell). Keeps every round O(active state), not O(k*n).
     pub holders: Vec<Vec<u32>>,
     /// Number of incident FREE edges per vertex, maintained incrementally
     /// on every purchase (avoids an O(m) scan per round).
     pub free_deg: Vec<u32>,
     /// Vertices with `free_deg > 0` (pruned as they dry up).
     live_vertices: Vec<u32>,
+    /// Reusable round buffers (see [`RoundScratch`]).
+    scratch: RoundScratch,
 }
 
 pub(crate) const FREE: u32 = u32::MAX;
@@ -101,14 +390,14 @@ impl DfepState {
     /// holding the full initial funding.
     pub fn new(g: &Graph, k: usize, initial: f64, rng: &mut Rng) -> Self {
         let n = g.vertex_count();
-        let mut money = vec![vec![0.0; n]; k];
+        let mut money = MoneyLedger::new(k, n);
         let mut anchors = Vec::with_capacity(k);
         let mut holders = Vec::with_capacity(k);
         // paper Alg. 3: each partition starts on a random vertex with the
         // full initial funding
-        for part in money.iter_mut() {
+        for i in 0..k {
             let v = rng.below(n);
-            part[v] = initial;
+            *money.cell_mut(i, v) = initial;
             anchors.push(v);
             holders.push(vec![v as u32]);
         }
@@ -131,6 +420,7 @@ impl DfepState {
             holders,
             free_deg,
             live_vertices,
+            scratch: RoundScratch::new(n, k, g.edge_count()),
         }
     }
 
@@ -145,125 +435,158 @@ impl DfepState {
     /// refunds) are applied serially in fixed shard order afterwards, so
     /// the round trajectory — including every `f64` accumulation order —
     /// is bit-identical to the sequential execution for any thread count.
+    /// All buffers come from the persistent `RoundScratch`; steady-state
+    /// rounds allocate nothing.
     pub fn funding_round(
         &mut self,
         g: &Graph,
         poor: Option<&[bool]>,
         rich: Option<&[bool]>,
     ) {
-        // Step 1: bids per (partition, edge). Sparse hot path: only
-        // vertices in the holder lists are visited, and only edges that
-        // actually receive a bid are touched in step 2 — every round is
-        // O(active frontier), not O(k * m).
-        //
-        // bid = (edge, partition, offer, contribution-from-lower-endpoint)
-        let mut holder_lists: Vec<Vec<u32>> = Vec::with_capacity(self.k);
-        for i in 0..self.k {
-            let mut hs = std::mem::take(&mut self.holders[i]);
-            hs.sort_unstable();
-            hs.dedup();
-            holder_lists.push(hs);
+        let k = self.k;
+        // Step 1 canonicalization: stamp-dedup each partition's holder
+        // list, keeping only vertices that still hold cash, in
+        // registration order (the documented canonical holder order).
+        {
+            let RoundScratch { holder_lists, stamp, epoch, .. } =
+                &mut self.scratch;
+            let base = begin_pass(stamp.as_mut_slice(), epoch, k as u32);
+            for i in 0..k {
+                let tag = base + i as u32;
+                let row = self.money.part(i);
+                let hl = &mut holder_lists[i];
+                hl.clear();
+                for &v in &self.holders[i] {
+                    let vu = v as usize;
+                    if row[vu] > 0.0 && stamp[vu] != tag {
+                        stamp[vu] = tag;
+                        hl.push(v);
+                    }
+                }
+                self.holders[i].clear();
+            }
         }
         // shard = one holder chunk of one partition, in (partition,
         // holder-order) order; chunk size is a constant so the shard list
         // does not depend on the thread count
         const HOLDER_CHUNK: usize = 512;
-        let mut shards: Vec<(usize, usize, usize)> = Vec::new();
-        for (i, hs) in holder_lists.iter().enumerate() {
-            let mut lo = 0;
-            while lo < hs.len() {
-                let hi = (lo + HOLDER_CHUNK).min(hs.len());
-                shards.push((i, lo, hi));
-                lo = hi;
+        {
+            let RoundScratch { holder_lists, shards, .. } = &mut self.scratch;
+            shards.clear();
+            for (i, hs) in holder_lists.iter().enumerate() {
+                let mut lo = 0;
+                while lo < hs.len() {
+                    let hi = (lo + HOLDER_CHUNK).min(hs.len());
+                    shards.push((i as u32, lo as u32, hi as u32));
+                    lo = hi;
+                }
             }
         }
-        #[derive(Default)]
-        struct Shard1Out {
-            bids: Vec<(u32, u32, f64, f64)>,
-            /// holders with cash but no eligible edge (stay funded)
-            stranded: Vec<u32>,
-            /// holders whose cash became bids (zeroed in apply)
-            spent: Vec<u32>,
-        }
-        let mut outs: Vec<Shard1Out> = Vec::new();
-        outs.resize_with(shards.len(), Shard1Out::default);
+        // Step 1: bids per (partition, edge). Sparse hot path: only
+        // vertices in the holder lists are visited, and only edges that
+        // actually receive a bid are touched in step 2 — every round is
+        // O(active frontier), not O(k * m).
         {
+            let RoundScratch { holder_lists, shards, outs1, .. } =
+                &mut self.scratch;
+            let used = shards.len();
+            if outs1.len() < used {
+                outs1.resize_with(used, Shard1Out::default);
+            }
+            for o in &mut outs1[..used] {
+                o.clear();
+            }
             let money = &self.money;
             let owner = &self.owner;
             let frontier_first = self.frontier_first;
-            let shards = &shards;
-            let holder_lists = &holder_lists;
-            crate::util::pool::run_mut(&mut outs, &|s, out: &mut Shard1Out| {
-                let (i, lo, hi) = shards[s];
-                let money_i = &money[i];
-                let poor_i = poor.map(|p| p[i]).unwrap_or(false);
-                let mut eligible: Vec<u32> = Vec::with_capacity(64);
-                for &v in &holder_lists[i][lo..hi] {
-                    let cash = money_i[v as usize];
-                    if cash <= 0.0 {
-                        continue; // stale/duplicate holder entry
-                    }
-                    eligible.clear();
-                    let mut has_buyable = false;
-                    for &(_, e) in g.neighbors(v) {
-                        let o = owner[e as usize];
-                        let buyable = o == FREE
-                            || (poor_i
-                                && o != i as u32
-                                && rich
-                                    .map(|r| r[o as usize])
-                                    .unwrap_or(false));
-                        if buyable && !has_buyable && frontier_first {
-                            // first buyable edge seen: drop own edges
-                            // collected so far, fund the frontier only
-                            has_buyable = true;
-                            eligible.clear();
+            let shards = &*shards;
+            let holder_lists = &*holder_lists;
+            crate::util::pool::run_mut(
+                &mut outs1[..used],
+                &|s, out: &mut Shard1Out| {
+                    let (i, lo, hi) = shards[s];
+                    let i = i as usize;
+                    let money_i = money.part(i);
+                    let poor_i = poor.map(|p| p[i]).unwrap_or(false);
+                    for &v in &holder_lists[i][lo as usize..hi as usize] {
+                        // canonicalization kept only cash-holding vertices
+                        let cash = money_i[v as usize];
+                        out.eligible.clear();
+                        let mut has_buyable = false;
+                        for &(_, e) in g.neighbors(v) {
+                            let o = owner[e as usize];
+                            let buyable = o == FREE
+                                || (poor_i
+                                    && o != i as u32
+                                    && rich
+                                        .map(|r| r[o as usize])
+                                        .unwrap_or(false));
+                            if buyable && !has_buyable && frontier_first {
+                                // first buyable edge seen: drop own edges
+                                // collected so far, fund the frontier only
+                                has_buyable = true;
+                                out.eligible.clear();
+                            }
+                            let can = buyable
+                                || (o == i as u32
+                                    && !(frontier_first && has_buyable));
+                            if can {
+                                out.eligible.push(e);
+                            }
                         }
-                        let can = buyable
-                            || (o == i as u32
-                                && !(frontier_first && has_buyable));
-                        if can {
-                            eligible.push(e);
+                        if out.eligible.is_empty() {
+                            // stranded funding stays on the vertex
+                            out.stranded.push(v);
+                            continue;
                         }
+                        let share = cash / out.eligible.len() as f64;
+                        for &e in &out.eligible {
+                            let (u, _) = g.endpoints(e);
+                            let from_lo = if u == v { share } else { 0.0 };
+                            out.bids.push((e, i as u32, share, from_lo));
+                        }
+                        out.spent.push(v);
                     }
-                    if eligible.is_empty() {
-                        // stranded funding stays on the vertex
-                        out.stranded.push(v);
-                        continue;
-                    }
-                    let share = cash / eligible.len() as f64;
-                    for &e in &eligible {
-                        let (u, _) = g.endpoints(e);
-                        let from_lo = if u == v { share } else { 0.0 };
-                        out.bids.push((e, i as u32, share, from_lo));
-                    }
-                    out.spent.push(v);
-                }
-            });
+                },
+            );
         }
         // apply step-1 effects and concatenate bids in shard order (equal
         // to the sequential per-partition, per-holder order)
-        let mut bids: Vec<(u32, u32, f64, f64)> =
-            Vec::with_capacity(outs.iter().map(|o| o.bids.len()).sum());
-        for (s, out) in outs.iter_mut().enumerate() {
-            let i = shards[s].0;
-            for &v in &out.stranded {
-                self.holders[i].push(v);
+        {
+            let RoundScratch { shards, outs1, bids, .. } = &mut self.scratch;
+            bids.clear();
+            for (s, out) in outs1[..shards.len()].iter_mut().enumerate() {
+                let i = shards[s].0 as usize;
+                for &v in &out.stranded {
+                    self.holders[i].push(v);
+                }
+                let row = self.money.part_mut(i);
+                for &v in &out.spent {
+                    row[v as usize] = 0.0;
+                }
+                bids.append(&mut out.bids);
             }
-            for &v in &out.spent {
-                self.money[i][v as usize] = 0.0;
-            }
-            bids.append(&mut out.bids);
         }
 
-        // Step 2: auction — only over edges that received bids. Merge the
-        // per-(edge, partition) contributions by sorting, then compute
-        // every edge's outcome in parallel (outcomes only read the
-        // pre-auction state: each edge is decided by its own bids) and
-        // apply ownership changes + refunds serially in edge order.
-        bids.sort_unstable_by(|a, b| (a.0, a.1).cmp(&(b.0, b.1)));
-        let mut groups: Vec<(usize, usize)> = Vec::new();
+        // Step 2: auction — only over edges that received bids. Order the
+        // per-(edge, partition) contributions with the stable radix sort
+        // (canonical order documented there), then compute every edge's
+        // outcome in parallel (outcomes only read the pre-auction state:
+        // each edge is decided by its own bids) and apply ownership
+        // changes + refunds serially in edge order.
         {
+            let RoundScratch { bids, bids_tmp, counts, .. } =
+                &mut self.scratch;
+            radix_sort_bids_by_edge(
+                bids,
+                bids_tmp,
+                counts,
+                g.edge_count() as u32,
+            );
+        }
+        {
+            let RoundScratch { bids, groups, .. } = &mut self.scratch;
+            groups.clear();
             let mut idx = 0usize;
             while idx < bids.len() {
                 let e = bids[idx].0;
@@ -271,137 +594,146 @@ impl DfepState {
                 while idx < bids.len() && bids[idx].0 == e {
                     idx += 1;
                 }
-                groups.push((start, idx));
+                groups.push((start as u32, idx as u32));
             }
         }
         const GROUP_CHUNK: usize = 256;
-        #[derive(Default)]
-        struct Shard2Out {
-            /// (edge, winner-or-FREE, number of credit entries)
-            sales: Vec<(u32, u32, u32)>,
-            /// (partition, vertex, amount) in sequential credit order
-            credits: Vec<(u32, u32, f64)>,
-        }
-        let mut outs2: Vec<Shard2Out> = Vec::new();
-        outs2.resize_with(
-            groups.len().div_ceil(GROUP_CHUNK),
-            Shard2Out::default,
-        );
         {
+            let RoundScratch { bids, groups, outs2, outs2_used, .. } =
+                &mut self.scratch;
+            let used = groups.len().div_ceil(GROUP_CHUNK);
+            *outs2_used = used;
+            if outs2.len() < used {
+                outs2.resize_with(used, Shard2Out::default);
+            }
+            for o in &mut outs2[..used] {
+                o.clear();
+            }
             let owner = &self.owner;
-            let bids = &bids;
-            let groups = &groups;
-            crate::util::pool::run_mut(&mut outs2, &|c, out: &mut Shard2Out| {
-                let lo = c * GROUP_CHUNK;
-                let hi = ((c + 1) * GROUP_CHUNK).min(groups.len());
-                let mut merged: Vec<(u32, f64, f64)> = Vec::with_capacity(8);
-                for &(start, end) in &groups[lo..hi] {
-                    let e = bids[start].0;
-                    merged.clear();
-                    for &(_, i, offer, from_lo) in &bids[start..end] {
-                        if let Some(last) = merged.last_mut() {
-                            if last.0 == i {
-                                last.1 += offer;
-                                last.2 += from_lo;
-                                continue;
+            let bids = &*bids;
+            let groups = &*groups;
+            crate::util::pool::run_mut(
+                &mut outs2[..used],
+                &|c, out: &mut Shard2Out| {
+                    let lo = c * GROUP_CHUNK;
+                    let hi = ((c + 1) * GROUP_CHUNK).min(groups.len());
+                    for &(start, end) in &groups[lo..hi] {
+                        let (start, end) = (start as usize, end as usize);
+                        let e = bids[start].0;
+                        out.merged.clear();
+                        for &(_, i, offer, from_lo) in &bids[start..end] {
+                            if let Some(last) = out.merged.last_mut() {
+                                if last.0 == i {
+                                    last.1 += offer;
+                                    last.2 += from_lo;
+                                    continue;
+                                }
+                            }
+                            out.merged.push((i, offer, from_lo));
+                        }
+                        let (u, v) = g.endpoints(e);
+                        // find best bidder (lowest partition id wins ties,
+                        // as the dense argmax did)
+                        let mut best = u32::MAX;
+                        let mut best_offer = 0.0f64;
+                        for &(i, offer, _) in &out.merged {
+                            if offer > best_offer {
+                                best_offer = offer;
+                                best = i;
                             }
                         }
-                        merged.push((i, offer, from_lo));
-                    }
-                    let (u, v) = g.endpoints(e);
-                    // find best bidder (lowest partition id wins ties, as
-                    // the dense argmax did)
-                    let mut best = u32::MAX;
-                    let mut best_offer = 0.0f64;
-                    for &(i, offer, _) in &merged {
-                        if offer > best_offer {
-                            best_offer = offer;
-                            best = i;
-                        }
-                    }
-                    let cur = owner[e as usize];
-                    let cur_offer = merged
-                        .iter()
-                        .find(|&&(i, _, _)| i == cur)
-                        .map(|&(_, o, _)| o)
-                        .unwrap_or(0.0);
-                    let sold = if cur == FREE {
-                        best != u32::MAX && best_offer >= 1.0
-                    } else {
-                        // DFEPC raid: a poor bidder can buy an owned
-                        // (rich) edge by strictly outbidding the owner's
-                        // committed funding.
-                        best != u32::MAX
-                            && best != cur
-                            && best_offer >= 1.0
-                            && poor
-                                .map(|p| p[best as usize])
-                                .unwrap_or(false)
-                            && rich.map(|r| r[cur as usize]).unwrap_or(false)
-                            && best_offer > cur_offer
-                    };
-                    let new_owner = if sold { best } else { cur };
-                    let before = out.credits.len();
-                    for &(i, offer, from_lo) in &merged {
-                        if offer <= 0.0 {
-                            continue;
-                        }
-                        if sold && i == best {
-                            // winner pays 1, remainder split half/half
-                            let rem = (offer - 1.0) * 0.5;
-                            out.credits.push((i, u, rem));
-                            out.credits.push((i, v, rem));
-                        } else if !sold && i == new_owner {
-                            // own-edge circulation: half/half
-                            out.credits.push((i, u, offer * 0.5));
-                            out.credits.push((i, v, offer * 0.5));
+                        let cur = owner[e as usize];
+                        let cur_offer = out
+                            .merged
+                            .iter()
+                            .find(|&&(i, _, _)| i == cur)
+                            .map(|&(_, o, _)| o)
+                            .unwrap_or(0.0);
+                        let sold = if cur == FREE {
+                            best != u32::MAX && best_offer >= 1.0
                         } else {
-                            // exact refund to contributors
-                            out.credits.push((i, u, from_lo));
-                            out.credits.push((i, v, offer - from_lo));
+                            // DFEPC raid: a poor bidder can buy an owned
+                            // (rich) edge by strictly outbidding the
+                            // owner's committed funding.
+                            best != u32::MAX
+                                && best != cur
+                                && best_offer >= 1.0
+                                && poor
+                                    .map(|p| p[best as usize])
+                                    .unwrap_or(false)
+                                && rich
+                                    .map(|r| r[cur as usize])
+                                    .unwrap_or(false)
+                                && best_offer > cur_offer
+                        };
+                        let new_owner = if sold { best } else { cur };
+                        let before = out.credits.len();
+                        for &(i, offer, from_lo) in &out.merged {
+                            if offer <= 0.0 {
+                                continue;
+                            }
+                            if sold && i == best {
+                                // winner pays 1, remainder split half/half
+                                let rem = (offer - 1.0) * 0.5;
+                                out.credits.push((i, u, rem));
+                                out.credits.push((i, v, rem));
+                            } else if !sold && i == new_owner {
+                                // own-edge circulation: half/half
+                                out.credits.push((i, u, offer * 0.5));
+                                out.credits.push((i, v, offer * 0.5));
+                            } else {
+                                // exact refund to contributors
+                                out.credits.push((i, u, from_lo));
+                                out.credits.push((i, v, offer - from_lo));
+                            }
                         }
+                        let n_credits = (out.credits.len() - before) as u32;
+                        out.sales.push((
+                            e,
+                            if sold { best } else { FREE },
+                            n_credits,
+                        ));
                     }
-                    let n_credits = (out.credits.len() - before) as u32;
-                    out.sales.push((
-                        e,
-                        if sold { best } else { FREE },
-                        n_credits,
-                    ));
-                }
-            });
+                },
+            );
         }
         // serial apply in edge order: ownership first, then that edge's
         // credits — exactly the sequential interleaving
-        for out in &outs2 {
-            let mut credit_idx = 0usize;
-            for &(e, winner, n_credits) in &out.sales {
-                if winner != FREE {
-                    let (u, v) = g.endpoints(e);
-                    let (u, v) = (u as usize, v as usize);
-                    let cur = self.owner[e as usize];
-                    if cur != FREE {
-                        self.sizes[cur as usize] -= 1;
-                    } else {
-                        self.free_edges -= 1;
-                        self.free_deg[u] -= 1;
-                        self.free_deg[v] -= 1;
+        {
+            let outs2 = std::mem::take(&mut self.scratch.outs2);
+            for out in &outs2[..self.scratch.outs2_used] {
+                let mut credit_idx = 0usize;
+                for &(e, winner, n_credits) in &out.sales {
+                    if winner != FREE {
+                        let (u, v) = g.endpoints(e);
+                        let (u, v) = (u as usize, v as usize);
+                        let cur = self.owner[e as usize];
+                        if cur != FREE {
+                            self.sizes[cur as usize] -= 1;
+                        } else {
+                            self.free_edges -= 1;
+                            self.free_deg[u] -= 1;
+                            self.free_deg[v] -= 1;
+                        }
+                        self.owner[e as usize] = winner;
+                        self.sizes[winner as usize] += 1;
+                        self.anchor[winner as usize] = u;
                     }
-                    self.owner[e as usize] = winner;
-                    self.sizes[winner as usize] += 1;
-                    self.anchor[winner as usize] = u;
+                    for &(i, w, amount) in &out.credits
+                        [credit_idx..credit_idx + n_credits as usize]
+                    {
+                        self.credit(i as usize, w as usize, amount);
+                    }
+                    credit_idx += n_credits as usize;
                 }
-                for &(i, w, amount) in
-                    &out.credits[credit_idx..credit_idx + n_credits as usize]
-                {
-                    self.credit(i as usize, w as usize, amount);
-                }
-                credit_idx += n_credits as usize;
             }
+            self.scratch.outs2 = outs2;
         }
         if self.frontier_first {
             self.pool_at_frontier(g);
         }
         self.rounds += 1;
+        self.scratch.note_peak();
     }
 
     /// Add funds to (partition, vertex), registering the holder.
@@ -410,7 +742,7 @@ impl DfepState {
         if amount <= 0.0 {
             return;
         }
-        let cell = &mut self.money[i][v];
+        let cell = self.money.cell_mut(i, v);
         if *cell <= 0.0 {
             self.holders[i].push(v as u32);
         }
@@ -436,28 +768,33 @@ impl DfepState {
         // no communication. Driven by the incrementally-maintained live
         // vertex list, so the scan is O(live frontier * deg), shrinking
         // as coverage grows. The scan runs in parallel chunks; duplicate
-        // (vertex, partition) discoveries are canonicalized by the
-        // sort+dedup below, so no shared visit-stamp state is needed and
-        // the outcome is independent of chunking and thread count.
-        let free_deg = &self.free_deg;
-        self.live_vertices.retain(|&w| free_deg[w as usize] > 0);
-        const LIVE_CHUNK: usize = 2048;
-        let mut found: Vec<Vec<(u32, u32)>> = Vec::new();
-        found.resize_with(
-            self.live_vertices.len().div_ceil(LIVE_CHUNK),
-            Vec::new,
-        );
+        // (vertex, partition) discoveries are removed in the serial merge
+        // by the `seen_parts` visit stamps, so the outcome is independent
+        // of chunking and thread count.
         {
+            let free_deg = &self.free_deg;
+            self.live_vertices.retain(|&w| free_deg[w as usize] > 0);
+        }
+        const LIVE_CHUNK: usize = 2048;
+        let n_chunks = self.live_vertices.len().div_ceil(LIVE_CHUNK);
+        {
+            let RoundScratch { found, .. } = &mut self.scratch;
+            if found.len() < n_chunks {
+                found.resize_with(n_chunks, Vec::new);
+            }
+            for f in &mut found[..n_chunks] {
+                f.clear();
+            }
             let live = &self.live_vertices;
             let owner = &self.owner;
             crate::util::pool::run_mut(
-                &mut found,
+                &mut found[..n_chunks],
                 &|c, out: &mut Vec<(u32, u32)>| {
                     let lo = c * LIVE_CHUNK;
                     let hi = ((c + 1) * LIVE_CHUNK).min(live.len());
                     for &w in &live[lo..hi] {
                         // cheap adjacent-duplicate filter; exact dedup
-                        // happens in the per-partition sort below
+                        // happens in the stamped serial merge below
                         let mut last = FREE;
                         for &(_, e2) in g.neighbors(w) {
                             let p = owner[e2 as usize];
@@ -470,89 +807,58 @@ impl DfepState {
                 },
             );
         }
-        let mut frontier_of: Vec<Vec<usize>> = vec![Vec::new(); self.k];
-        for chunk in &found {
-            for &(p, w) in chunk {
-                frontier_of[p as usize].push(w as usize);
+        // serial merge with visit stamps: frontier_of[p] gets each
+        // frontier vertex exactly once, in first-discovery order (chunk
+        // order == live order, so the result is thread-count independent)
+        {
+            let RoundScratch { found, frontier_of, seen_parts, .. } =
+                &mut self.scratch;
+            seen_parts.fill(u32::MAX);
+            for fl in frontier_of.iter_mut() {
+                fl.clear();
+            }
+            for chunk in &found[..n_chunks] {
+                for &(p, w) in chunk {
+                    let pu = p as usize;
+                    if seen_parts[pu] != w {
+                        seen_parts[pu] = w;
+                        frontier_of[pu].push(w);
+                    }
+                }
             }
         }
-        // per-partition distribution: each task owns its partition's
-        // ledger (money + holders are disjoint across partitions)
-        let mut tasks: Vec<(&mut Money, &mut Vec<u32>, Vec<usize>)> = self
-            .money
-            .iter_mut()
-            .zip(self.holders.iter_mut())
-            .zip(frontier_of)
-            .map(|((m, h), f)| (m, h, f))
-            .collect();
-        crate::util::pool::run_mut(
-            &mut tasks,
-            &|_, task: &mut (&mut Money, &mut Vec<u32>, Vec<usize>)| {
-                let money_i: &mut Vec<f64> = &mut *task.0;
-                let holders_i: &mut Vec<u32> = &mut *task.1;
-                let frontier: &mut Vec<usize> = &mut task.2;
-                // collect the partition's entire liquid cash (region
-                // locality: money of partition i only ever sits on V_i)
-                let mut pool = 0.0f64;
-                let mut first_holder: Option<usize> = None;
-                let mut hs = std::mem::take(holders_i);
-                hs.sort_unstable();
-                hs.dedup();
-                for &hv in &hs {
-                    let v = hv as usize;
-                    let c = money_i[v];
-                    if c <= 0.0 {
-                        continue;
-                    }
-                    first_holder = first_holder.or(Some(v));
-                    pool += c;
-                    money_i[v] = 0.0;
-                }
-                if pool <= 0.0 {
-                    return;
-                }
-                if frontier.is_empty() {
-                    // boxed in: re-deposit on the first holder — stays
-                    // inside the region; the DFEPC raid dynamic is what
-                    // unboxes it
-                    let fh = first_holder.unwrap();
-                    money_i[fh] += pool;
-                    holders_i.push(fh as u32);
-                    return;
-                }
-                // greedy concentration: fund vertices with the cheapest
-                // frontier first — each gets exactly enough to bid 1 unit
-                // per free incident edge; leftovers spread equally as
-                // headroom. Interleaved owners can record a vertex twice —
-                // dedup before the greedy fill.
-                frontier.sort_unstable();
-                frontier.dedup();
-                frontier.sort_unstable_by_key(|&v| free_deg[v]);
-                let mut remaining = pool;
-                let mut funded = 0usize;
-                for &v in frontier.iter() {
-                    let need = free_deg[v] as f64 * 1.0001;
-                    if remaining < need {
-                        break;
-                    }
-                    money_i[v] += need;
-                    holders_i.push(v as u32);
-                    remaining -= need;
-                    funded += 1;
-                }
-                if funded == 0 {
-                    // cannot cover even the cheapest vertex: concentrate
-                    // all on it so accumulation crosses the threshold
-                    money_i[frontier[0]] += remaining;
-                    holders_i.push(frontier[0] as u32);
-                } else {
-                    let per = remaining / funded as f64;
-                    for &v in &frontier[..funded] {
-                        money_i[v] += per;
-                    }
-                }
-            },
-        );
+        // per-partition distribution: each shard owns its partition's
+        // ledger row, holder list and frontier list (disjoint state)
+        struct Dist {
+            money: *mut f64,
+            stride: usize,
+            holders: *mut Vec<u32>,
+            frontier: *mut Vec<u32>,
+        }
+        // SAFETY: shard i touches only partition i's money row, holder
+        // list and frontier list — disjoint across shard indices (the
+        // same pattern as `pool::run_mut`).
+        unsafe impl Sync for Dist {}
+        let dist = Dist {
+            stride: self.money.stride(),
+            money: self.money.as_mut_ptr(),
+            holders: self.holders.as_mut_ptr(),
+            frontier: self.scratch.frontier_of.as_mut_ptr(),
+        };
+        let free_deg = &self.free_deg;
+        crate::util::pool::run(self.k, &|i| {
+            // SAFETY: see `Dist` — every dereference is indexed by the
+            // shard's own partition id, so the borrows are disjoint.
+            let money_i = unsafe {
+                std::slice::from_raw_parts_mut(
+                    dist.money.add(i * dist.stride),
+                    dist.stride,
+                )
+            };
+            let holders_i = unsafe { &mut *dist.holders.add(i) };
+            let frontier = unsafe { &mut *dist.frontier.add(i) };
+            distribute_to_frontier(money_i, holders_i, frontier, free_deg);
+        });
     }
 
     /// Step 3 (Alg. 6): the coordinator injects funding inversely
@@ -560,7 +866,10 @@ impl DfepState {
     /// partition already has a presence.
     pub fn coordinator_step(&mut self, cap: f64) {
         let avg = self.sizes.iter().sum::<usize>() as f64 / self.k as f64;
-        for i in 0..self.k {
+        let k = self.k;
+        let RoundScratch { stamp, epoch, .. } = &mut self.scratch;
+        let base = begin_pass(stamp.as_mut_slice(), epoch, k as u32);
+        for i in 0..k {
             let size = self.sizes[i] as f64;
             // inversely proportional to size, plus one base unit per round
             // so end-game purchases (1-unit edges at exhausted frontiers)
@@ -570,43 +879,140 @@ impl DfepState {
             } else {
                 (avg / size + 1.0).min(cap)
             };
-            if units <= 0.0 {
-                continue;
-            }
-            // distribute between all vertices with positive committed funds
-            let mut hs = std::mem::take(&mut self.holders[i]);
-            hs.sort_unstable();
-            hs.dedup();
-            let money_i = &mut self.money[i];
+            // in-place stamped canonicalization: keep the first appearance
+            // of every vertex that still holds cash (registration order)
+            let tag = base + i as u32;
+            let row = self.money.part_mut(i);
+            let hs = &mut self.holders[i];
             let mut live = 0usize;
-            for &v in &hs {
-                if money_i[v as usize] > 0.0 {
+            let mut r = 0usize;
+            while r < hs.len() {
+                let v = hs[r];
+                let vu = v as usize;
+                if row[vu] > 0.0 && stamp[vu] != tag {
+                    stamp[vu] = tag;
+                    hs[live] = v;
                     live += 1;
                 }
+                r += 1;
+            }
+            hs.truncate(live);
+            if units <= 0.0 {
+                continue;
             }
             if live == 0 {
                 // partition spent everything: deposit on its last
                 // purchase's endpoint so it keeps receiving funding
                 // (skipping here would freeze the partition for good)
                 let a = self.anchor[i];
-                self.holders[i] = hs;
-                self.credit(i, a, units);
+                row[a] += units;
+                hs.push(a as u32);
                 continue;
             }
+            // distribute between all vertices with positive committed funds
             let per = units / live as f64;
-            for &v in &hs {
-                if money_i[v as usize] > 0.0 {
-                    money_i[v as usize] += per;
-                }
+            for &v in hs.iter() {
+                row[v as usize] += per;
             }
-            self.holders[i] = hs;
         }
     }
 
     /// Total money across all partitions (the conservation invariant).
-    #[allow(dead_code)] // exercised by the conservation tests
     pub fn total_money(&self) -> f64 {
-        self.money.iter().map(|mv| mv.iter().sum::<f64>()).sum()
+        self.money.total()
+    }
+
+    /// High-water heap footprint of the reusable round scratch, in bytes
+    /// (reported by the `dfep_round` bench series).
+    pub fn scratch_peak_bytes(&self) -> usize {
+        self.scratch.peak_bytes
+    }
+}
+
+/// Per-partition half of [`DfepState::pool_at_frontier`]: drain the
+/// partition's liquid cash (in holder registration order — the canonical
+/// order that pins the `f64` pool sum) and re-park it on the frontier,
+/// cheapest vertices first in `(free_deg, vertex id)` ascending order — a
+/// total order, so the fill is independent of discovery order.
+fn distribute_to_frontier(
+    money_i: &mut [f64],
+    holders_i: &mut Vec<u32>,
+    frontier: &mut Vec<u32>,
+    free_deg: &[u32],
+) {
+    // collect the partition's entire liquid cash (region locality: money
+    // of partition i only ever sits on V_i); duplicate holder entries
+    // contribute once because cells are zeroed as they drain
+    let mut pool = 0.0f64;
+    let mut first_holder: Option<usize> = None;
+    for &hv in holders_i.iter() {
+        let v = hv as usize;
+        let c = money_i[v];
+        if c <= 0.0 {
+            continue;
+        }
+        first_holder = first_holder.or(Some(v));
+        pool += c;
+        money_i[v] = 0.0;
+    }
+    holders_i.clear();
+    if pool <= 0.0 {
+        return;
+    }
+    if frontier.is_empty() {
+        // boxed in: re-deposit on the first holder — stays inside the
+        // region; the DFEPC raid dynamic is what unboxes it
+        let fh = first_holder.unwrap();
+        money_i[fh] += pool;
+        holders_i.push(fh as u32);
+        return;
+    }
+    greedy_fund_frontier(money_i, frontier, free_deg, pool, |v| {
+        holders_i.push(v)
+    });
+}
+
+/// The greedy frontier fill shared by the reference engine and the XLA
+/// engine (one implementation, so the two cannot silently diverge):
+/// fund vertices with the cheapest frontier first, in `(free_deg,
+/// vertex id)` ascending order — a total order, so ties cannot depend
+/// on discovery order. Each funded vertex gets exactly enough to bid 1
+/// unit per free incident edge; leftovers spread equally as headroom;
+/// if even the cheapest vertex cannot be covered, everything
+/// concentrates on it so accumulation crosses the threshold.
+/// Conservation-exact: exactly `pool` is added to `row`.
+///
+/// `frontier` must be non-empty and deduplicated; `funded_sink` is
+/// called once per vertex that received the full `need` grant (the
+/// reference engine registers holders through it).
+pub(crate) fn greedy_fund_frontier(
+    row: &mut [f64],
+    frontier: &mut Vec<u32>,
+    free_deg: &[u32],
+    pool: f64,
+    mut funded_sink: impl FnMut(u32),
+) {
+    frontier.sort_unstable_by_key(|&v| (free_deg[v as usize], v));
+    let mut remaining = pool;
+    let mut funded = 0usize;
+    for &v in frontier.iter() {
+        let need = free_deg[v as usize] as f64 * 1.0001;
+        if remaining < need {
+            break;
+        }
+        row[v as usize] += need;
+        funded_sink(v);
+        remaining -= need;
+        funded += 1;
+    }
+    if funded == 0 {
+        row[frontier[0] as usize] += remaining;
+        funded_sink(frontier[0]);
+    } else {
+        let per = remaining / funded as f64;
+        for &v in &frontier[..funded] {
+            row[v as usize] += per;
+        }
     }
 }
 
@@ -618,6 +1024,18 @@ impl Dfep {
         g: &Graph,
         k: usize,
         seed: u64,
+    ) -> (EdgePartition, Vec<usize>) {
+        self.run_inner(g, k, seed, false)
+    }
+
+    /// The one round loop behind [`run_traced`](Self::run_traced) and
+    /// [`debug_run`] (`debug` prints per-round diagnostics).
+    fn run_inner(
+        &self,
+        g: &Graph,
+        k: usize,
+        seed: u64,
+        debug: bool,
     ) -> (EdgePartition, Vec<usize>) {
         assert!(k >= 1 && g.edge_count() > 0);
         let mut rng = Rng::new(seed);
@@ -632,6 +1050,15 @@ impl Dfep {
             st.funding_round(g, None, None);
             st.coordinator_step(self.funding_cap);
             trace.push(st.free_edges);
+            if debug && (st.rounds % 10 == 0 || st.free_edges < 30) {
+                let money: Vec<i64> = (0..k)
+                    .map(|i| st.money.part_total(i) as i64)
+                    .collect();
+                println!(
+                    "round {} free {} sizes {:?} money {:?}",
+                    st.rounds, st.free_edges, st.sizes, money
+                );
+            }
             if st.free_edges == before {
                 stall += 1;
                 // a component can be unreachable from every start vertex
@@ -646,53 +1073,71 @@ impl Dfep {
             }
         }
         let owner = finalize(g, st.owner, k);
-        (
-            EdgePartition { k, owner, rounds: st.rounds },
-            trace,
-        )
+        (EdgePartition { k, owner, rounds: st.rounds }, trace)
     }
 }
 
-/// Stall recovery. First choice: top up funding *at the frontier* — for
-/// each free edge, find a partition owning an adjacent edge and grant it
-/// 2 units on the shared endpoint (preserves connectedness: money only
-/// lands inside an owned region). Only if some free edges have no owned
+/// Stall recovery, driven by the engine's maintained
+/// `live_vertices`/`free_deg` state (not an O(m) full-edge sweep: only
+/// vertices that still touch a free edge are walked, so late-run stalls —
+/// when almost everything is owned — cost O(live frontier), not O(m)).
+///
+/// First choice: top up funding *at the frontier* — walk the live
+/// vertices from a random offset; for the first free edge found whose
+/// endpoints touch an owned edge, grant the smallest adjacent owner 2
+/// units on the shared endpoint (preserves connectedness: money only
+/// lands inside an owned region). Only if no free edge has an owned
 /// neighbor at all (disconnected component never reached by any start
 /// vertex) does the smallest partition get reseeded there — the one case
-/// where a disconnected partition is unavoidable.
-pub(crate) fn reseed_on_free_edge(g: &Graph, st: &mut DfepState, rng: &mut Rng) {
-    let m = g.edge_count();
-    // ONE bounded top-up per invocation (injecting per free edge would
-    // counterfeit money and wreck balance): scan free edges from a random
-    // offset, boost the smallest adjacent owner at the shared endpoint.
-    let start = rng.below(m);
+/// where a disconnected partition is unavoidable. One bounded top-up per
+/// invocation (injecting per free edge would counterfeit money and wreck
+/// balance).
+pub fn reseed_on_free_edge(g: &Graph, st: &mut DfepState, rng: &mut Rng) {
+    // prune stale live entries here too: the literal-Alg4 ablation skips
+    // pool_at_frontier, which otherwise maintains the list
+    {
+        let free_deg = &st.free_deg;
+        st.live_vertices.retain(|&w| free_deg[w as usize] > 0);
+    }
+    if st.live_vertices.is_empty() {
+        return; // no free edges left at all
+    }
+    let len = st.live_vertices.len();
+    let start = rng.below(len);
+    let mut grant: Option<(usize, u32)> = None; // (partition, endpoint)
     let mut orphan: Option<u32> = None;
-    for off in 0..m {
-        let e = ((start + off) % m) as u32;
-        if st.owner[e as usize] != FREE {
-            continue;
-        }
-        let (u, v) = g.endpoints(e);
-        let mut best: Option<(usize, u32)> = None; // (partition, endpoint)
-        for w in [u, v] {
-            for &(_, e2) in g.neighbors(w) {
-                let o = st.owner[e2 as usize];
-                if o != FREE {
-                    let i = o as usize;
-                    if best
-                        .map(|(b, _)| st.sizes[i] < st.sizes[b])
-                        .unwrap_or(true)
-                    {
-                        best = Some((i, w));
+    'walk: for off in 0..len {
+        let w = st.live_vertices[(start + off) % len];
+        for &(_, e) in g.neighbors(w) {
+            if st.owner[e as usize] != FREE {
+                continue;
+            }
+            let (u, v) = g.endpoints(e);
+            let mut best: Option<(usize, u32)> = None;
+            for x in [u, v] {
+                for &(_, e2) in g.neighbors(x) {
+                    let o = st.owner[e2 as usize];
+                    if o != FREE {
+                        let i = o as usize;
+                        if best
+                            .map(|(b, _)| st.sizes[i] < st.sizes[b])
+                            .unwrap_or(true)
+                        {
+                            best = Some((i, x));
+                        }
                     }
                 }
             }
+            if best.is_some() {
+                grant = best;
+                break 'walk;
+            }
+            orphan = orphan.or(Some(e));
         }
-        if let Some((i, w)) = best {
-            st.credit(i, w as usize, 2.0);
-            return;
-        }
-        orphan = orphan.or(Some(e));
+    }
+    if let Some((i, x)) = grant {
+        st.credit(i, x as usize, 2.0);
+        return;
     }
     if let Some(e) = orphan {
         // free edges exist but none touches an owned region: an
@@ -701,8 +1146,8 @@ pub(crate) fn reseed_on_free_edge(g: &Graph, st: &mut DfepState, rng: &mut Rng) 
         // inputs only)
         let smallest = (0..st.k).min_by_key(|&i| st.sizes[i]).unwrap();
         let (u, v) = g.endpoints(e);
-        let w = if rng.chance(0.5) { u } else { v };
-        st.credit(smallest, w as usize, 2.0);
+        let x = if rng.chance(0.5) { u } else { v };
+        st.credit(smallest, x as usize, 2.0);
     }
 }
 
@@ -765,24 +1210,12 @@ pub(crate) fn finalize(g: &Graph, owner: Vec<u32>, k: usize) -> Vec<u32> {
     owner
 }
 
-
-/// Instrumented run for development (prints round diagnostics).
+/// Instrumented run for development: the traced runner with per-round
+/// diagnostics printed (shares [`Dfep::run_traced`]'s loop instead of
+/// carrying its own copy).
 pub fn debug_run(g: &Graph, k: usize, seed: u64) {
-    let cfg = Dfep::default();
-    let mut rng = Rng::new(seed);
-    let initial = cfg.initial_fraction * g.edge_count() as f64 / k as f64;
-    let mut st = DfepState::new(g, k, initial.max(1.0), &mut rng);
-    let mut stall = 0usize;
-    while st.free_edges > 0 && st.rounds < 400 {
-        let before = st.free_edges;
-        st.funding_round(g, None, None);
-        st.coordinator_step(cfg.funding_cap);
-        if st.rounds % 10 == 0 || st.free_edges < 30 {
-            let money: Vec<i64> = st.money.iter().map(|m| m.iter().sum::<f64>() as i64).collect();
-            println!("round {} free {} sizes {:?} money {:?}", st.rounds, st.free_edges, st.sizes, money);
-        }
-        if st.free_edges == before { stall += 1; if stall >= 3 { reseed_on_free_edge(g, &mut st, &mut rng); stall = 0; } } else { stall = 0; }
-    }
+    let cfg = Dfep { max_rounds: 400, ..Dfep::default() };
+    let _ = cfg.run_inner(g, k, seed, true);
 }
 
 impl Partitioner for Dfep {
@@ -806,68 +1239,173 @@ impl Partitioner for Dfep {
 
 #[cfg(test)]
 mod tests {
-#[test]
-fn money_audit_per_partition() {
-    use crate::graph::generators::GraphKind;
-    use crate::partition::dfep::DfepState;
-    use crate::util::rng::Rng;
-    let g = GraphKind::PowerlawCluster { n: 5000, m: 8, p: 0.4 }.generate(42);
-    let k = 8;
-    let mut rng = Rng::new(1);
-    let initial = g.edge_count() as f64 / k as f64;
-    let mut st = DfepState::new(&g, k, initial, &mut rng);
-    let mut injected = vec![0.0; k];
-    for round in 0..80 {
-        st.funding_round(&g, None, None);
-        let before: Vec<f64> = st.money.iter().map(|m| m.iter().sum()).collect();
-        st.coordinator_step(10.0);
-        let after: Vec<f64> = st.money.iter().map(|m| m.iter().sum()).collect();
-        for i in 0..k { injected[i] += after[i] - before[i]; }
-        for i in 0..k {
-            let expect = initial + injected[i] - st.sizes[i] as f64;
-            let actual: f64 = st.money[i].iter().sum();
-            if (expect - actual).abs() > 1.0 {
-                println!("round {} part {}: expect {:.1} actual {:.1}", round, i, expect, actual);
-                return;
-            }
-        }
-        if st.free_edges == 0 { println!("done round {} sizes {:?} injected {:?}", round, st.sizes, injected.iter().map(|x| *x as i64).collect::<Vec<_>>()); return; }
-    }
-    panic!("did not converge: free={} sizes={:?}", st.free_edges, st.sizes);
-}
-
-#[test]
-fn money_audit() {
-    use crate::graph::generators::GraphKind;
-    use crate::partition::dfep::DfepState;
-    use crate::util::rng::Rng;
-    let g = GraphKind::PowerlawCluster { n: 5000, m: 8, p: 0.4 }.generate(42);
-    let k = 8;
-    let mut rng = Rng::new(1);
-    let initial = g.edge_count() as f64 / k as f64;
-    let mut st = DfepState::new(&g, k, initial, &mut rng);
-    let mut injected = 0.0;
-    for round in 0..60 {
-        st.funding_round(&g, None, None);
-        let before = st.total_money();
-        st.coordinator_step(10.0);
-        injected += st.total_money() - before;
-        let bought: usize = st.sizes.iter().sum();
-        let expect = initial * k as f64 + injected - bought as f64;
-        let actual = st.total_money();
-        if (expect - actual).abs() > 1.0 {
-            println!("round {}: expect {:.1} actual {:.1} diff {:.1}", round, expect, actual, actual-expect);
-        }
-        if st.free_edges == 0 { println!("done at {} sizes {:?}", round, st.sizes); break; }
-    }
-}
-
     use super::*;
     use crate::graph::generators::GraphKind;
+    use crate::graph::GraphBuilder;
     use crate::partition::metrics;
 
     fn small_world() -> Graph {
         GraphKind::PowerlawCluster { n: 400, m: 4, p: 0.3 }.generate(5)
+    }
+
+    #[test]
+    fn money_audit_per_partition() {
+        let g = GraphKind::PowerlawCluster { n: 5000, m: 8, p: 0.4 }
+            .generate(42);
+        let k = 8;
+        let mut rng = Rng::new(1);
+        let initial = g.edge_count() as f64 / k as f64;
+        let mut st = DfepState::new(&g, k, initial, &mut rng);
+        let mut injected = vec![0.0; k];
+        for round in 0..120 {
+            st.funding_round(&g, None, None);
+            let before: Vec<f64> =
+                (0..k).map(|i| st.money.part_total(i)).collect();
+            st.coordinator_step(10.0);
+            for (i, inj) in injected.iter_mut().enumerate() {
+                *inj += st.money.part_total(i) - before[i];
+            }
+            for (i, inj) in injected.iter().enumerate() {
+                let expect = initial + inj - st.sizes[i] as f64;
+                let actual = st.money.part_total(i);
+                assert!(
+                    (expect - actual).abs() <= 1.0,
+                    "round {round} part {i}: expect {expect:.1} \
+                     actual {actual:.1}"
+                );
+            }
+            if st.free_edges == 0 {
+                return;
+            }
+        }
+        panic!(
+            "did not converge: free={} sizes={:?}",
+            st.free_edges, st.sizes
+        );
+    }
+
+    #[test]
+    fn money_audit() {
+        let g = GraphKind::PowerlawCluster { n: 5000, m: 8, p: 0.4 }
+            .generate(42);
+        let k = 8;
+        let mut rng = Rng::new(1);
+        let initial = g.edge_count() as f64 / k as f64;
+        let mut st = DfepState::new(&g, k, initial, &mut rng);
+        let mut injected = 0.0;
+        for round in 0..60 {
+            st.funding_round(&g, None, None);
+            let before = st.total_money();
+            st.coordinator_step(10.0);
+            injected += st.total_money() - before;
+            let bought: usize = st.sizes.iter().sum();
+            let expect = initial * k as f64 + injected - bought as f64;
+            let actual = st.total_money();
+            assert!(
+                (expect - actual).abs() <= 1.0,
+                "round {round}: expect {expect:.1} actual {actual:.1} \
+                 diff {:.1}",
+                actual - expect
+            );
+            if st.free_edges == 0 {
+                break;
+            }
+        }
+    }
+
+    #[test]
+    fn radix_bid_sort_matches_stable_reference_on_random_bid_sets() {
+        // property: on random bid sets — including duplicate
+        // (edge, partition) keys, as both endpoints of an edge produce —
+        // the radix sort equals a stable sort by edge id, i.e. the
+        // documented canonical order (edge asc, input order within)
+        let mut rng = Rng::new(77);
+        let mut tmp: Vec<Bid> = Vec::new();
+        let mut counts = vec![0u32; RADIX];
+        for case in 0..60u64 {
+            // alternate small (single-pass) and large (two-pass) edge
+            // id spaces
+            let edge_bound = if case % 2 == 0 {
+                1 + rng.below(50_000) as u32
+            } else {
+                (1 << 16) + 1 + rng.below(200_000) as u32
+            };
+            let len = rng.below(2_000);
+            let mut bids: Vec<Bid> = (0..len)
+                .map(|j| {
+                    let e = rng.below(edge_bound as usize) as u32;
+                    let p = rng.below(8) as u32;
+                    // offer tags the input position so stability is
+                    // observable even for duplicate (edge, partition) keys
+                    (e, p, j as f64, rng.f64())
+                })
+                .collect();
+            // force some exact duplicate keys (two-endpoint bids)
+            for j in (0..len / 4).step_by(2) {
+                let (e, p, _, _) = bids[j];
+                bids[len - 1 - j].0 = e;
+                bids[len - 1 - j].1 = p;
+            }
+            let mut reference = bids.clone();
+            reference.sort_by_key(|b| b.0); // stable
+            radix_sort_bids_by_edge(
+                &mut bids,
+                &mut tmp,
+                &mut counts,
+                edge_bound,
+            );
+            assert_eq!(bids, reference, "case {case}");
+        }
+    }
+
+    #[test]
+    fn radix_sorted_bids_group_partitions_in_order() {
+        // the engine feeds the sort partition-major bids; the output must
+        // then be (edge asc, partition asc) with duplicates adjacent —
+        // the contract the adjacent-merge in step 2 relies on
+        let mut rng = Rng::new(9);
+        let mut bids: Vec<Bid> = Vec::new();
+        for p in 0..6u32 {
+            for _ in 0..500 {
+                bids.push((rng.below(70_000) as u32, p, 1.0, 0.5));
+            }
+        }
+        let mut tmp = Vec::new();
+        let mut counts = vec![0u32; RADIX];
+        radix_sort_bids_by_edge(&mut bids, &mut tmp, &mut counts, 70_000);
+        for w in bids.windows(2) {
+            assert!(
+                (w[0].0, w[0].1) <= (w[1].0, w[1].1),
+                "not (edge, partition) ordered: {w:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn reseed_completes_disconnected_multi_component_graphs() {
+        // regression for the stall path: many components unreachable from
+        // the k start vertices previously forced repeated O(m) full-edge
+        // scans; the live-vertex walk must still find and seed every
+        // orphan component, and the run must converge (not fall through
+        // to the max_rounds finalize bail-out)
+        let mut b = GraphBuilder::new();
+        for c in 0..8u32 {
+            let base = c * 12;
+            for i in 0..12u32 {
+                b.push_edge(base + i, base + (i + 1) % 12);
+            }
+        }
+        let g = b.build();
+        let p = Dfep::default().partition_graph(&g, 3, 4).unwrap();
+        p.validate(&g).unwrap();
+        assert!(
+            p.rounds < Dfep::default().max_rounds,
+            "run hit max_rounds instead of converging via reseeds"
+        );
+        assert_eq!(p.sizes().iter().sum::<usize>(), g.edge_count());
+        // deterministic per seed through the reseed path as well
+        let q = Dfep::default().partition_graph(&g, 3, 4).unwrap();
+        assert_eq!(p.owner, q.owner);
     }
 
     #[test]
@@ -940,6 +1478,16 @@ fn money_audit() {
         let g = small_world();
         let p = Dfep::default().partition_graph(&g, 1, 1).unwrap();
         assert!(p.owner.iter().all(|&o| o == 0));
+    }
+
+    #[test]
+    fn scratch_peak_is_reported_after_rounds() {
+        let g = small_world();
+        let mut rng = Rng::new(2);
+        let mut st = DfepState::new(&g, 4, 100.0, &mut rng);
+        assert_eq!(st.scratch_peak_bytes(), 0);
+        st.funding_round(&g, None, None);
+        assert!(st.scratch_peak_bytes() > 0);
     }
 
     #[test]

@@ -6,6 +6,12 @@
 //! rich partitions and buy them on a strictly higher bid. This lets a
 //! partition that got boxed in catch up — better balance, at the cost of
 //! the connectedness guarantee.
+//!
+//! The variant reuses the reference engine's [`DfepState`] wholesale —
+//! including its persistent round scratch and flat
+//! [`crate::partition::money::MoneyLedger`] — so DFEPC rounds are just
+//! DFEP rounds with the poor/rich raid masks supplied, and inherit the
+//! zero-allocation steady state and thread-count-independent trajectory.
 
 use super::dfep::{finalize, reseed_on_free_edge, DfepState};
 use super::{check_k, EdgePartition, Partitioner};
@@ -45,15 +51,22 @@ impl Default for Dfepc {
 }
 
 impl Dfepc {
-    fn poor_rich(&self, sizes: &[usize]) -> (Vec<bool>, Vec<bool>) {
+    /// Recompute the poor/rich masks in place (the two buffers are
+    /// hoisted out of the round loop, so DFEPC rounds stay
+    /// allocation-free in steady state like plain DFEP rounds).
+    fn poor_rich_into(
+        &self,
+        sizes: &[usize],
+        poor: &mut Vec<bool>,
+        rich: &mut Vec<bool>,
+    ) {
         let avg =
             sizes.iter().sum::<usize>() as f64 / sizes.len() as f64;
         let thresh = avg / self.poverty_divisor;
-        let poor: Vec<bool> =
-            sizes.iter().map(|&s| (s as f64) < thresh).collect();
-        let rich: Vec<bool> =
-            sizes.iter().map(|&s| (s as f64) >= avg).collect();
-        (poor, rich)
+        poor.clear();
+        poor.extend(sizes.iter().map(|&s| (s as f64) < thresh));
+        rich.clear();
+        rich.extend(sizes.iter().map(|&s| (s as f64) >= avg));
     }
 }
 
@@ -73,9 +86,11 @@ impl Partitioner for Dfepc {
             self.initial_fraction * g.edge_count() as f64 / k as f64;
         let mut st = DfepState::new(g, k, initial.max(1.0), &mut rng);
         let mut stall = 0usize;
+        let mut poor: Vec<bool> = Vec::with_capacity(k);
+        let mut rich: Vec<bool> = Vec::with_capacity(k);
         while st.free_edges > 0 && st.rounds < self.max_rounds {
             let before = st.free_edges;
-            let (poor, rich) = self.poor_rich(&st.sizes);
+            self.poor_rich_into(&st.sizes, &mut poor, &mut rich);
             st.funding_round(g, Some(&poor), Some(&rich));
             st.coordinator_step(self.funding_cap);
             if st.free_edges == before {
@@ -90,7 +105,7 @@ impl Partitioner for Dfepc {
         }
         // post-coverage rebalancing: poor partitions raid rich ones
         for _ in 0..self.rebalance_rounds {
-            let (poor, rich) = self.poor_rich(&st.sizes);
+            self.poor_rich_into(&st.sizes, &mut poor, &mut rich);
             if !poor.iter().any(|&b| b) {
                 break;
             }

@@ -9,6 +9,11 @@
 //! (HDRF / DBH / restreaming refinement) that place edges straight off a
 //! bounded-memory [`crate::graph::stream::EdgeStream`].
 //!
+//! The DFEP engines share the flat per-(partition, vertex) funding
+//! ledger in [`money`] and a persistent round scratch (see
+//! `dfep::RoundScratch`), so the hottest loop — the funding round — runs
+//! allocation-free in steady state.
+//!
 //! All of them dispatch through the one fallible [`Partitioner`] trait:
 //! [`Partitioner::partition`] takes a [`PartitionInput`] — either a
 //! materialized [`Graph`] or a replayable edge stream — so streaming
@@ -21,6 +26,7 @@ pub mod dfep;
 pub mod dfepc;
 pub mod fennel;
 pub mod jabeja;
+pub mod money;
 pub mod multilevel;
 pub mod metrics;
 pub mod registry;

@@ -1,0 +1,174 @@
+//! Flat per-(partition, vertex) funding ledger for the DFEP engines.
+//!
+//! DFEP's money state is conceptually a `k x n` matrix: partition `i`'s
+//! cash on vertex `v`. The old representation (`Vec<Vec<f64>>`) paid one
+//! heap allocation per partition and scattered the rows across the heap;
+//! [`MoneyLedger`] flattens it into **one** `k * stride` allocation with
+//! partition `i`'s row at cells `[i * stride, (i + 1) * stride)`, so a
+//! per-partition sweep is a cache-linear slice walk and the whole ledger
+//! can be snapshotted, cleared or converted in a single pass.
+//!
+//! The ledger is shared by the reference engine
+//! ([`crate::partition::dfep::DfepState`]), the DFEPC variant, the
+//! MapReduce-shaped cluster run ([`crate::cluster::dfep_mr`]) and the
+//! XLA-offloaded engine ([`crate::runtime::xla_engine`]), which packs it
+//! to / unpacks it from the `f32` tensors of the `funding_step` artifact
+//! via [`MoneyLedger::fill_f32`] / [`MoneyLedger::load_f32`].
+
+/// Dense `k x stride` funding ledger in one flat `f64` allocation.
+///
+/// `stride` is normally the vertex count; the XLA engine uses the
+/// artifact's padded vertex capacity instead so rows line up with the
+/// compiled tensor layout.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MoneyLedger {
+    /// Cells per partition row (>= 1).
+    stride: usize,
+    /// Row-major cells: `cells[i * stride + v]` = partition `i`'s cash on
+    /// vertex `v`.
+    cells: Vec<f64>,
+}
+
+impl MoneyLedger {
+    /// Zero-filled ledger for `k` partitions with `stride` cells each.
+    pub fn new(k: usize, stride: usize) -> MoneyLedger {
+        let stride = stride.max(1);
+        MoneyLedger { stride, cells: vec![0.0; k * stride] }
+    }
+
+    /// Number of partition rows.
+    pub fn parts(&self) -> usize {
+        self.cells.len() / self.stride
+    }
+
+    /// Cells per partition row.
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Partition `i`'s cash on vertex `v`.
+    #[inline]
+    pub fn get(&self, i: usize, v: usize) -> f64 {
+        self.cells[i * self.stride + v]
+    }
+
+    /// Mutable cell for partition `i`, vertex `v`.
+    #[inline]
+    pub fn cell_mut(&mut self, i: usize, v: usize) -> &mut f64 {
+        &mut self.cells[i * self.stride + v]
+    }
+
+    /// Partition `i`'s row (cache-linear slice of `stride` cells).
+    #[inline]
+    pub fn part(&self, i: usize) -> &[f64] {
+        &self.cells[i * self.stride..(i + 1) * self.stride]
+    }
+
+    /// Mutable row for partition `i`.
+    #[inline]
+    pub fn part_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.cells[i * self.stride..(i + 1) * self.stride]
+    }
+
+    /// All rows as disjoint mutable slices, in partition order (for
+    /// per-partition parallel phases).
+    pub fn rows_mut(
+        &mut self,
+    ) -> std::slice::ChunksExactMut<'_, f64> {
+        self.cells.chunks_exact_mut(self.stride)
+    }
+
+    /// The raw row-major cells (e.g. for bit-exact trajectory pinning).
+    pub fn cells(&self) -> &[f64] {
+        &self.cells
+    }
+
+    /// Raw mutable pointer to the row-major cells — for the engine's
+    /// disjoint per-partition parallel phases (each shard slices its own
+    /// row, exactly like `pool::run_mut` hands out disjoint `&mut`s).
+    pub(crate) fn as_mut_ptr(&mut self) -> *mut f64 {
+        self.cells.as_mut_ptr()
+    }
+
+    /// Sum of partition `i`'s row.
+    pub fn part_total(&self, i: usize) -> f64 {
+        self.part(i).iter().sum()
+    }
+
+    /// Sum over the whole ledger (the conservation invariant's left side).
+    pub fn total(&self) -> f64 {
+        self.cells.iter().sum()
+    }
+
+    /// Zero every cell (keeps the allocation).
+    pub fn clear(&mut self) {
+        self.cells.fill(0.0);
+    }
+
+    /// Pack the ledger into an `f32` buffer of the same layout (the XLA
+    /// `funding_step` artifact's money tensor). `out.len()` must equal
+    /// `parts() * stride()`.
+    pub fn fill_f32(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.cells.len(), "f32 buffer shape mismatch");
+        for (o, &c) in out.iter_mut().zip(&self.cells) {
+            *o = c as f32;
+        }
+    }
+
+    /// Load the ledger from an `f32` buffer of the same layout (the money
+    /// tensor the artifact returns).
+    pub fn load_f32(&mut self, src: &[f32]) {
+        assert_eq!(src.len(), self.cells.len(), "f32 buffer shape mismatch");
+        for (c, &s) in self.cells.iter_mut().zip(src) {
+            *c = s as f64;
+        }
+    }
+
+    /// Heap footprint of the ledger in bytes.
+    pub fn bytes(&self) -> usize {
+        self.cells.capacity() * std::mem::size_of::<f64>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rows_are_disjoint_and_strided() {
+        let mut m = MoneyLedger::new(3, 4);
+        *m.cell_mut(0, 1) = 1.5;
+        *m.cell_mut(2, 3) = 2.5;
+        assert_eq!(m.get(0, 1), 1.5);
+        assert_eq!(m.part(2), &[0.0, 0.0, 0.0, 2.5]);
+        assert_eq!(m.part_total(0), 1.5);
+        assert_eq!(m.total(), 4.0);
+        assert_eq!(m.parts(), 3);
+        let rows: Vec<Vec<f64>> =
+            m.rows_mut().map(|r| r.to_vec()).collect();
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[2][3], 2.5);
+        m.clear();
+        assert_eq!(m.total(), 0.0);
+    }
+
+    #[test]
+    fn f32_roundtrip_matches_layout() {
+        let mut m = MoneyLedger::new(2, 3);
+        *m.cell_mut(1, 2) = 7.0;
+        let mut buf = vec![0f32; 6];
+        m.fill_f32(&mut buf);
+        assert_eq!(buf, vec![0.0, 0.0, 0.0, 0.0, 0.0, 7.0]);
+        buf[0] = 3.0;
+        m.load_f32(&buf);
+        assert_eq!(m.get(0, 0), 3.0);
+        assert_eq!(m.get(1, 2), 7.0);
+    }
+
+    #[test]
+    fn zero_stride_is_clamped() {
+        let m = MoneyLedger::new(2, 0);
+        assert_eq!(m.stride(), 1);
+        assert_eq!(m.parts(), 2);
+    }
+}

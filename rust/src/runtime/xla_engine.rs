@@ -14,7 +14,8 @@ use crate::util::error::Result;
 
 use super::{Runtime, Tensor};
 use crate::graph::Graph;
-use crate::partition::dfep::finalize;
+use crate::partition::dfep::{finalize, greedy_fund_frontier};
+use crate::partition::money::MoneyLedger;
 use crate::partition::EdgePartition;
 use crate::util::rng::Rng;
 
@@ -99,10 +100,14 @@ impl XlaDfep {
         }
         let mut rng = Rng::new(seed);
         let initial =
-            (self.initial_fraction * ne as f64 / k as f64).max(1.0) as f32;
-        let mut money = vec![0f32; shape.k * shape.v];
+            (self.initial_fraction * ne as f64 / k as f64).max(1.0);
+        // rust-side state lives in the shared flat ledger (stride = the
+        // artifact's padded vertex capacity, so rows line up with the
+        // compiled money tensor); it is packed to / unpacked from the
+        // artifact's f32 tensor every round
+        let mut money = MoneyLedger::new(shape.k, shape.v);
         for i in 0..k {
-            money[i * shape.v + rng.below(nv)] = initial;
+            *money.cell_mut(i, rng.below(nv)) = initial;
         }
 
         // ---- rounds: steps 1+2 on XLA, step 3 in rust ----
@@ -114,17 +119,20 @@ impl XlaDfep {
             if free == 0 || rounds >= self.max_rounds {
                 break;
             }
+            // one pack pass per round: the filled buffer moves into the
+            // tensor (same cost as the old money.clone())
+            let mut money_f32 = vec![0f32; shape.k * shape.v];
+            money.fill_f32(&mut money_f32);
             let out = exe.run(&[
                 Tensor::I32(src.clone()),
                 Tensor::I32(dst.clone()),
                 Tensor::I32(owner.clone()),
-                Tensor::F32(money.clone()),
+                Tensor::F32(money_f32),
             ])?;
             let new_owner = out[0].as_i32()?;
-            let new_money = out[1].as_f32()?;
             let bought = out[2].as_f32()?;
             owner.copy_from_slice(new_owner);
-            money.copy_from_slice(new_money);
+            money.load_f32(out[1].as_f32()?);
             for i in 0..k {
                 sizes[i] += bought[i] as usize;
             }
@@ -133,7 +141,7 @@ impl XlaDfep {
             // intra-partition money transport (same rationale as
             // DfepState::pool_at_frontier): route each partition's cash
             // to its true frontier, greedily concentrated
-            pool_at_frontier(g, &owner, &mut money, k, shape.v);
+            pool_at_frontier(g, &owner, &mut money, k);
 
             // step 3 (rust coordinator): inject inversely to size, plus
             // one base unit so the end-game stays injection-paced
@@ -146,7 +154,7 @@ impl XlaDfep {
                 } else {
                     (avg / s + 1.0).min(self.funding_cap)
                 };
-                let row = &mut money[i * shape.v..i * shape.v + nv];
+                let row = &mut money.part_mut(i)[..nv];
                 let holders =
                     row.iter().filter(|&&c| c > 0.0).count();
                 if holders == 0 {
@@ -154,11 +162,11 @@ impl XlaDfep {
                     // receiving funding
                     if let Some(e) = (0..ne).find(|&e| owner[e] == i as i32)
                     {
-                        row[src[e] as usize] += units as f32;
+                        row[src[e] as usize] += units;
                     }
                     continue;
                 }
-                let per = (units / holders as f64) as f32;
+                let per = units / holders as f64;
                 for c in row.iter_mut() {
                     if *c > 0.0 {
                         *c += per;
@@ -175,7 +183,7 @@ impl XlaDfep {
                         (0..ne).find(|&e| owner[e] == -1)
                     {
                         let i = (0..k).min_by_key(|&i| sizes[i]).unwrap();
-                        money[i * shape.v + src[e] as usize] += 2.0;
+                        *money.cell_mut(i, src[e] as usize) += 2.0;
                     }
                     stall = 0;
                 }
@@ -201,14 +209,14 @@ impl XlaDfep {
 
 /// Route each partition's liquid cash to its true frontier (region
 /// vertices adjacent to free edges), greedily funding the cheapest
-/// frontier vertices first — the flat-array twin of
-/// `DfepState::pool_at_frontier` for the XLA engine's padded state.
+/// frontier vertices first — the twin of `DfepState::pool_at_frontier`
+/// operating on the shared [`MoneyLedger`] with the artifact's padded
+/// stride.
 fn pool_at_frontier(
     g: &Graph,
     owner: &[i32],
-    money: &mut [f32],
+    money: &mut MoneyLedger,
     k: usize,
-    v_stride: usize,
 ) {
     let n = g.vertex_count();
     let mut free_deg = vec![0u32; n];
@@ -218,7 +226,7 @@ fn pool_at_frontier(
             free_deg[w as usize] += 1;
         }
     }
-    let mut frontier_of: Vec<Vec<usize>> = vec![Vec::new(); k];
+    let mut frontier_of: Vec<Vec<u32>> = vec![Vec::new(); k];
     let mut stamp = vec![u32::MAX; n];
     for (e, u, w) in g.edge_iter() {
         if owner[e as usize] != -1 {
@@ -229,19 +237,19 @@ fn pool_at_frontier(
                 let p = owner[e2 as usize];
                 if p >= 0 && stamp[x] != p as u32 {
                     stamp[x] = p as u32;
-                    frontier_of[p as usize].push(x);
+                    frontier_of[p as usize].push(x as u32);
                 }
             }
         }
     }
     for (i, frontier) in frontier_of.iter_mut().enumerate() {
-        let row = &mut money[i * v_stride..i * v_stride + n];
+        let row = &mut money.part_mut(i)[..n];
         let mut pool = 0.0f64;
         let mut first_holder = None;
         for (v, c) in row.iter_mut().enumerate() {
             if *c > 0.0 {
                 first_holder = first_holder.or(Some(v));
-                pool += *c as f64;
+                pool += *c;
                 *c = 0.0;
             }
         }
@@ -249,33 +257,15 @@ fn pool_at_frontier(
             continue;
         }
         if frontier.is_empty() {
-            row[first_holder.unwrap()] += pool as f32;
+            row[first_holder.unwrap()] += pool;
             continue;
         }
         // single-slot stamp can push a vertex once per adjacent owner —
-        // dedup before the greedy fill (matches DfepState::pool_at_frontier)
+        // dedup, then hand off to the one shared greedy fill (same code
+        // as the reference engine, so the two cannot diverge)
         frontier.sort_unstable();
         frontier.dedup();
-        frontier.sort_unstable_by_key(|&v| free_deg[v]);
-        let mut remaining = pool;
-        let mut funded = 0usize;
-        for &v in frontier.iter() {
-            let need = free_deg[v] as f64 * 1.0001;
-            if remaining < need {
-                break;
-            }
-            row[v] += need as f32;
-            remaining -= need;
-            funded += 1;
-        }
-        if funded == 0 {
-            row[frontier[0]] += remaining as f32;
-        } else {
-            let per = (remaining / funded as f64) as f32;
-            for &v in &frontier[..funded] {
-                row[v] += per;
-            }
-        }
+        greedy_fund_frontier(row, frontier, &free_deg, pool, |_| {});
     }
 }
 

@@ -1,0 +1,119 @@
+//! Allocation budget for the DFEP round engine: after warm-up, a funding
+//! round + coordinator step must perform **zero** heap allocations — the
+//! persistent `RoundScratch` and flat `MoneyLedger` are the whole point.
+//!
+//! A counting `#[global_allocator]` (cfg-gated off under miri, which
+//! supplies its own allocator machinery) wraps the system allocator and
+//! counts every `alloc`/`realloc`. This file is its own test binary and
+//! contains exactly one test, so no concurrent test thread can perturb
+//! the counter mid-measurement. The engine is driven on a single-thread
+//! pool: with one worker the pool runs shards inline, so the count
+//! reflects the engine's own buffers, not the pool's channel transport.
+//!
+//! The assertion: once the run passes its mid-run peak (holder/frontier
+//! buffers at their high-water capacity), every remaining round must
+//! allocate nothing — the trailing quarter of the rounds (at least 5)
+//! must all have a zero allocation delta. A regression that re-introduces
+//! a per-round `Vec` shows up in every round and trips this immediately.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use dfep::graph::generators::GraphKind;
+use dfep::partition::dfep::{reseed_on_free_edge, DfepState};
+use dfep::util::pool;
+use dfep::util::rng::Rng;
+
+/// Counts allocation events (`alloc` + growing `realloc`); frees are not
+/// counted — the budget is about acquiring memory in steady state.
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc_zeroed(layout) }
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+}
+
+#[cfg(not(miri))]
+#[global_allocator]
+static GLOBAL_COUNTER: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+#[test]
+#[cfg_attr(miri, ignore = "the counting allocator is disabled under miri")]
+fn dfep_round_steady_state_allocates_zero() {
+    pool::with_threads(1, || {
+        // ER degrees are concentrated, so per-shard work in the end-game
+        // is strictly below the mid-run peak and capacities are settled
+        // long before the measured tail
+        let g = GraphKind::ErdosRenyi { n: 2_000, m: 12_000 }.generate(42);
+        let k = 8usize;
+        let initial = (g.edge_count() as f64 / k as f64).max(1.0);
+        let mut rng = Rng::new(1);
+        let mut st = DfepState::new(&g, k, initial, &mut rng);
+        // pre-size the delta log so recording never allocates mid-loop
+        let mut deltas: Vec<u64> = Vec::with_capacity(1_100);
+        let mut stall = 0usize;
+        while st.free_edges > 0 && st.rounds < 1_000 {
+            let before_free = st.free_edges;
+            let a0 = alloc_count();
+            st.funding_round(&g, None, None);
+            st.coordinator_step(10.0);
+            if st.free_edges == before_free {
+                stall += 1;
+                if stall >= 3 {
+                    // the stall walk is part of the budget too
+                    reseed_on_free_edge(&g, &mut st, &mut rng);
+                    stall = 0;
+                }
+            } else {
+                stall = 0;
+            }
+            deltas.push(alloc_count() - a0);
+        }
+        assert_eq!(
+            st.free_edges, 0,
+            "engine did not converge within 1000 rounds (rounds={}, \
+             sizes={:?})",
+            st.rounds, st.sizes
+        );
+        let tail = (deltas.len() / 4).max(5).min(deltas.len());
+        let suffix = &deltas[deltas.len() - tail..];
+        assert!(
+            suffix.iter().all(|&d| d == 0),
+            "steady-state rounds still allocate: last {tail} of {} round \
+             deltas = {suffix:?}",
+            deltas.len()
+        );
+        // sanity: warm-up genuinely allocated (the counter works)
+        assert!(
+            deltas.first().copied().unwrap_or(0) > 0,
+            "first round allocated nothing — counting allocator inactive?"
+        );
+    });
+}

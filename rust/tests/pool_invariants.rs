@@ -8,8 +8,11 @@
 use dfep::etsch::{sssp::Sssp, Etsch};
 use dfep::graph::{generators::GraphKind, io};
 use dfep::partition::view::PartitionView;
-use dfep::partition::{dfep::Dfep, dfepc::Dfepc, metrics, Partitioner};
+use dfep::partition::{
+    dfep::Dfep, dfep::DfepState, dfepc::Dfepc, metrics, Partitioner,
+};
 use dfep::util::pool;
+use dfep::util::rng::Rng;
 
 #[test]
 fn graph_io_roundtrip_reproduces_identical_csr() {
@@ -76,6 +79,47 @@ fn dfep_partition_bit_identical_across_1_2_8_threads() {
         assert_eq!(r.largest.to_bits(), r_base.largest.to_bits());
         assert_eq!(r.messages, r_base.messages);
         assert_eq!(r.disconnected.to_bits(), r_base.disconnected.to_bits());
+    }
+}
+
+#[test]
+fn dfep_round_ledger_trajectory_bit_identical_across_1_2_8_threads() {
+    // Pins the round engine's full f64 trajectory — the flat money
+    // ledger, owners, sizes and free-edge count after every round — not
+    // just the final partition. This is what fixes the stable radix
+    // sort's canonical merge order (bids: edge asc, partition asc,
+    // holder registration order within): any reordering of an f64
+    // accumulation in step 2, step 3 or the frontier pooling would show
+    // up as a ledger bit difference on some thread count.
+    let g = GraphKind::PowerlawCluster { n: 1_500, m: 5, p: 0.3 }.generate(3);
+    let drive = |threads: usize| {
+        pool::with_threads(threads, || {
+            let mut rng = Rng::new(5);
+            let initial = (g.edge_count() as f64 / 8.0).max(1.0);
+            let mut st = DfepState::new(&g, 8, initial, &mut rng);
+            let mut ledger_bits: Vec<u64> = Vec::new();
+            for _ in 0..30 {
+                st.funding_round(&g, None, None);
+                st.coordinator_step(10.0);
+                ledger_bits
+                    .extend(st.money.cells().iter().map(|c| c.to_bits()));
+                if st.free_edges == 0 {
+                    break;
+                }
+            }
+            (st.owner.clone(), st.sizes.clone(), st.free_edges, ledger_bits)
+        })
+    };
+    let base = drive(1);
+    for threads in [2usize, 8] {
+        let r = drive(threads);
+        assert_eq!(r.0, base.0, "{threads} threads: owners differ");
+        assert_eq!(r.1, base.1, "{threads} threads: sizes differ");
+        assert_eq!(r.2, base.2, "{threads} threads: free edges differ");
+        assert_eq!(
+            r.3, base.3,
+            "{threads} threads: money ledger trajectory differs"
+        );
     }
 }
 

@@ -10,9 +10,11 @@ use dfep::graph::stats;
 use dfep::partition::spec::{self, PartitionerSpec};
 use dfep::partition::view::PartitionView;
 use dfep::partition::{
-    baselines::RandomEdge, dfep::Dfep, metrics, registry, Partitioner,
+    baselines::RandomEdge, dfep::Dfep, dfep::DfepState, metrics, registry,
+    Partitioner,
 };
 use dfep::testing::prop::{forall, Gen};
+use dfep::util::rng::Rng;
 
 /// Every registered partitioner with default parameters — the registry is
 /// the one source of truth, so a newly registered algorithm is property-
@@ -239,6 +241,72 @@ fn dirty_aggregation_matches_dense_reference() {
             check!("labelprop", LabelPropagation::default());
         }
     });
+}
+
+#[test]
+fn dfep_valid_connected_and_conserving_at_k_4_and_16() {
+    // re-check the radix/stamp/ledger round engine on both generator
+    // families the paper's figures use, at a small and a large k:
+    // validity, connectedness (a construction guarantee of plain DFEP on
+    // connected inputs), and per-round money conservation
+    use dfep::graph::generators::GraphKind;
+    let graphs = [
+        (
+            "powerlaw",
+            GraphKind::PowerlawCluster { n: 1_500, m: 5, p: 0.3 }
+                .generate(21),
+        ),
+        (
+            "road",
+            GraphKind::RoadNetwork {
+                rows: 14,
+                cols: 14,
+                drop: 0.0,
+                subdiv: 2,
+                shortcuts: 0,
+            }
+            .generate(22),
+        ),
+    ];
+    for (name, graph) in &graphs {
+        for k in [4usize, 16] {
+            let part =
+                Dfep::default().partition_graph(graph, k, 7).unwrap();
+            part.validate(graph).unwrap();
+            assert_eq!(
+                part.sizes().iter().sum::<usize>(),
+                graph.edge_count(),
+                "{name} k={k}: sizes must tile the edge set"
+            );
+            let disc = metrics::disconnected_fraction(graph, &part);
+            assert_eq!(
+                disc, 0.0,
+                "{name} k={k}: plain DFEP must stay connected"
+            );
+            // conservation across raw engine rounds: money + edges
+            // bought is invariant under funding_round (the coordinator
+            // is the only injector)
+            let mut rng = Rng::new(9);
+            let initial = (graph.edge_count() as f64 / k as f64).max(1.0);
+            let mut st = DfepState::new(graph, k, initial, &mut rng);
+            for round in 0..10 {
+                let before =
+                    st.total_money() + st.sizes.iter().sum::<usize>() as f64;
+                st.funding_round(graph, None, None);
+                let after =
+                    st.total_money() + st.sizes.iter().sum::<usize>() as f64;
+                assert!(
+                    (before - after).abs() < 1e-6 * before.max(1.0),
+                    "{name} k={k} round {round}: money leaked \
+                     {before} -> {after}"
+                );
+                st.coordinator_step(10.0);
+                if st.free_edges == 0 {
+                    break;
+                }
+            }
+        }
+    }
 }
 
 #[test]
