@@ -1,0 +1,13 @@
+//! Load-generator bench for `repro serve` — see bench::serve_load:
+//! closed-loop clients against an in-process server, ~90/10 hot/cold key
+//! mix, emitting req/s + p50/p99 (overall and per mix) plus the server's
+//! cache counters into BENCH_serve.json (override: DFEP_SERVE_OUT).
+//!
+//! `--quick` (or DFEP_QUICK=1) is the CI smoke mode: fewer clients and
+//! requests, same artifact shape. Other flags (cargo bench passes
+//! `--bench`) are ignored.
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("DFEP_QUICK").map(|v| v == "1").unwrap_or(false);
+    dfep::bench::serve_load::serve_load_with(quick);
+}

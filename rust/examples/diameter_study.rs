@@ -6,7 +6,6 @@
 use dfep::bench::Table;
 use dfep::coordinator::runs::PartitionRequest;
 use dfep::graph::{datasets, rewire, stats};
-use dfep::partition::spec::PartitionerSpec;
 
 fn main() -> dfep::util::error::Result<()> {
     let g0 = datasets::usroads().scaled(0.04, 42);
@@ -24,14 +23,11 @@ fn main() -> dfep::util::error::Result<()> {
         let d = stats::diameter_estimate(&g, 4, 1);
         // one facade run per rewired instance: metrics + gain off one
         // shared view build
-        let res = PartitionRequest {
-            spec: PartitionerSpec::parse("dfep")?,
-            k: 20,
-            seed: 1,
-            gain_samples: 2,
-            ..Default::default()
-        }
-        .execute_on(&g)?;
+        let res = PartitionRequest::new("dfep")?
+            .k(20)
+            .seed(1)
+            .gain_samples(2)
+            .execute_on(&g)?;
         let r = &res.metrics;
         let gain = res.gain.unwrap_or(0.0);
         table.row(&[

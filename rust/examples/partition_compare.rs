@@ -24,13 +24,10 @@ fn main() -> dfep::util::error::Result<()> {
             "algo", "rounds", "largest", "nstdev", "messages", "gain",
         ]);
         for entry in registry::all() {
-            let req = PartitionRequest {
-                spec: spec::default_spec(entry),
-                k: 20,
-                seed: 1,
-                gain_samples: 3,
-                ..Default::default()
-            };
+            let req = PartitionRequest::of(spec::default_spec(entry))
+                .k(20)
+                .seed(1)
+                .gain_samples(3);
             let res = req.execute_on(&g)?;
             let r = &res.metrics;
             table.row(&[

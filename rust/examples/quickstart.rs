@@ -7,23 +7,17 @@
 
 use dfep::coordinator::runs::{resolve_graph, PartitionRequest, Workload};
 use dfep::etsch::{cc::ConnectedComponents, Etsch};
-use dfep::partition::spec::PartitionerSpec;
 use dfep::util::error::Result;
 
 fn main() -> Result<()> {
     // 1. one request: dataset spec + partitioner spec + k + seed +
     //    workload; the facade resolves, partitions, evaluates and runs
     //    the workload off one shared PartitionView build
-    let req = PartitionRequest {
-        spec: PartitionerSpec::parse("dfep")?,
-        dataset: "plc:n=5000,m=8,p=0.4".to_string(),
-        k: 8,
-        seed: 1,
-        graph_seed: 42,
-        gain_samples: 0,
-        threads: None,
-        workload: Some(Workload::Sssp { source: 0 }),
-    };
+    let req = PartitionRequest::new("dfep")?
+        .dataset("plc:n=5000,m=8,p=0.4")
+        .k(8)
+        .seed(1)
+        .workload(Workload::Sssp { source: 0 });
     let res = req.execute()?;
 
     let r = &res.metrics;

@@ -96,13 +96,10 @@ pub fn measure(
     let mut gains = Vec::new();
     let mut disc = Vec::new();
     for &s in &seeds {
-        let req = PartitionRequest {
-            spec: spec.clone(),
-            k,
-            seed: s,
-            gain_samples,
-            ..Default::default()
-        };
+        let req = PartitionRequest::of(spec.clone())
+            .k(k)
+            .seed(s)
+            .gain_samples(gain_samples);
         let res = req
             .execute_on(g)
             .unwrap_or_else(|e| panic!("bench run '{spec}' failed: {e}"));

@@ -116,6 +116,13 @@ impl JsonSink {
         self.entries.push((key.to_string(), format!("\"{escaped}\"")));
     }
 
+    /// Record a pre-rendered JSON value (the caller guarantees `json` is
+    /// valid JSON — used for the one non-flat field in the crate, the
+    /// serving layer's `"owners"` array).
+    pub fn raw(&mut self, key: &str, json: String) {
+        self.entries.push((key.to_string(), json));
+    }
+
     /// Serialize as a single JSON object.
     pub fn render(&self) -> String {
         let body: Vec<String> = self

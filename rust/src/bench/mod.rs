@@ -4,6 +4,7 @@
 
 pub mod figures;
 pub mod harness;
+pub mod serve_load;
 
 pub use harness::{
     fmt_f, fmt_summary, print_header, print_row, sample_seeds, JsonSink,

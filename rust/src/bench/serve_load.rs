@@ -1,0 +1,185 @@
+//! `serve_load`: closed-loop load generator for the serving layer.
+//!
+//! Spawns an in-process [`Server`] on an ephemeral loopback port and
+//! drives it with N closed-loop [`ServeClient`] threads (each waits for
+//! its response before sending the next request — offered load tracks
+//! service capacity, never overruns it). The key mix is ~90% *hot* (a
+//! small set of pre-warmed cache keys, measuring the serving + cache
+//! path) and ~10% *cold* (fresh partition seeds, measuring end-to-end
+//! computation under concurrent load).
+//!
+//! Emits req/s and p50/p99 latency — overall and split by hot/cold —
+//! plus the server's own cache counters into `BENCH_serve.json`
+//! (override with `DFEP_SERVE_OUT`), mirroring the hotpath artifact that
+//! CI uploads and diffs run over run.
+
+use std::time::Instant;
+
+use crate::bench::harness::JsonSink;
+use crate::bench::{fmt_f, Table};
+use crate::coordinator::runs::PartitionRequest;
+use crate::coordinator::serve::{ServeClient, ServeConfig, Server};
+use crate::util::rng::Rng;
+
+/// Number of distinct pre-warmed hot cache keys.
+const HOT_KEYS: u64 = 4;
+
+fn request(seed: u64) -> PartitionRequest {
+    PartitionRequest::new("dfep")
+        .expect("dfep is registered")
+        .dataset("er:n=2000,m=6000")
+        .k(8)
+        .seed(seed)
+}
+
+/// Nearest-rank percentile of an ascending-sorted sample.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Run the load generator; `quick` is the CI smoke shape.
+pub fn serve_load_with(quick: bool) {
+    let (clients, per_client) = if quick { (4usize, 25usize) } else { (8usize, 150usize) };
+    let handle = Server::spawn(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: clients,
+        ..Default::default()
+    })
+    .expect("bind loopback server");
+    let addr = handle.addr();
+    println!(
+        "serve_load: {clients} closed-loop clients x {per_client} requests \
+         against {addr} ({HOT_KEYS} hot keys, ~10% cold)"
+    );
+
+    // warm the hot keys so the steady-state mix measures cache serving,
+    // not four initial cold misses
+    let mut warm = ServeClient::connect(addr);
+    for s in 1..=HOT_KEYS {
+        warm.partition(&request(s), false).expect("warmup request");
+    }
+
+    let t0 = Instant::now();
+    let per_thread: Vec<(Vec<f64>, Vec<f64>, usize)> =
+        std::thread::scope(|scope| {
+            let threads: Vec<_> = (0..clients)
+                .map(|c| {
+                    scope.spawn(move || {
+                        let mut rng = Rng::new(0xC0FF_EE00 ^ c as u64);
+                        let mut client = ServeClient::connect(addr);
+                        let mut hot = Vec::new();
+                        let mut cold = Vec::new();
+                        let mut errors = 0usize;
+                        for i in 0..per_client {
+                            let is_hot = rng.next_u32() % 10 != 0;
+                            let seed = if is_hot {
+                                1 + rng.next_u32() as u64 % HOT_KEYS
+                            } else {
+                                // unique per (client, iteration): always
+                                // a fresh computation
+                                10_000 + (c * 100_000 + i) as u64
+                            };
+                            let t = Instant::now();
+                            match client.partition(&request(seed), false) {
+                                Ok(_) => {
+                                    let secs = t.elapsed().as_secs_f64();
+                                    if is_hot {
+                                        hot.push(secs);
+                                    } else {
+                                        cold.push(secs);
+                                    }
+                                }
+                                Err(_) => errors += 1,
+                            }
+                        }
+                        (hot, cold, errors)
+                    })
+                })
+                .collect();
+            threads.into_iter().map(|t| t.join().unwrap()).collect()
+        });
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut hot = Vec::new();
+    let mut cold = Vec::new();
+    let mut errors = 0usize;
+    for (h, c, e) in per_thread {
+        hot.extend(h);
+        cold.extend(c);
+        errors += e;
+    }
+    let mut all: Vec<f64> = hot.iter().chain(cold.iter()).copied().collect();
+    all.sort_by(f64::total_cmp);
+    hot.sort_by(f64::total_cmp);
+    cold.sort_by(f64::total_cmp);
+    assert_eq!(errors, 0, "load generator saw request errors");
+    let total = all.len();
+    let rps = total as f64 / wall.max(1e-9);
+
+    let ms = |s: f64| s * 1e3;
+    let mut t = Table::new(&["mix", "n", "p50_ms", "p99_ms", "max_ms"]);
+    for (name, v) in [("all", &all), ("hot", &hot), ("cold", &cold)] {
+        t.row(&[
+            name.to_string(),
+            v.len().to_string(),
+            fmt_f(ms(percentile(v, 0.50))),
+            fmt_f(ms(percentile(v, 0.99))),
+            fmt_f(ms(v.last().copied().unwrap_or(0.0))),
+        ]);
+    }
+    println!(
+        "\n{total} requests in {} s -> {} req/s",
+        fmt_f(wall),
+        fmt_f(rps)
+    );
+
+    // the server's own accounting, straight off /stats
+    let mut probe = ServeClient::connect(addr);
+    let (status, stats_body) = probe.get("/stats").expect("stats probe");
+    assert_eq!(status, 200);
+    let stats = crate::util::json::parse(&stats_body).expect("stats JSON");
+    let stat = |key: &str| {
+        stats.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0)
+    };
+    println!(
+        "server: {} computations, cache hit rate {}",
+        stat("computations"),
+        fmt_f(stat("cache_hit_rate"))
+    );
+
+    let mut sink = JsonSink::new();
+    sink.text("bench", "serve_load");
+    sink.num("quick", if quick { 1.0 } else { 0.0 });
+    sink.num("clients", clients as f64);
+    sink.num("requests_total", total as f64);
+    sink.num("errors", errors as f64);
+    sink.num("wall_s", wall);
+    sink.num("req_per_s", rps);
+    sink.num("p50_ms", ms(percentile(&all, 0.50)));
+    sink.num("p99_ms", ms(percentile(&all, 0.99)));
+    sink.num("hot_p50_ms", ms(percentile(&hot, 0.50)));
+    sink.num("hot_p99_ms", ms(percentile(&hot, 0.99)));
+    sink.num("cold_p50_ms", ms(percentile(&cold, 0.50)));
+    sink.num("cold_p99_ms", ms(percentile(&cold, 0.99)));
+    sink.num("cache_hit_rate", stat("cache_hit_rate"));
+    sink.num("computations", stat("computations"));
+    sink.num(
+        "shed_total",
+        stat("shed_queue_full")
+            + stat("shed_busy")
+            + stat("shed_timeout")
+            + stat("shed_body_too_large"),
+    );
+
+    let out = std::env::var("DFEP_SERVE_OUT")
+        .unwrap_or_else(|_| "BENCH_serve.json".to_string());
+    let out_path = std::path::Path::new(&out);
+    match sink.write(out_path) {
+        Ok(()) => println!("\nwrote {}", out_path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", out_path.display()),
+    }
+}

@@ -3,5 +3,7 @@
 
 pub mod cli;
 pub mod runs;
+pub mod serve;
 
 pub use runs::{PartitionRequest, RunReport, Timings, Workload};
+pub use serve::{ServeClient, ServeConfig, Server};

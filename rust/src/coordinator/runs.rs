@@ -11,9 +11,41 @@
 //! workload on the same view, and returns everything with wall-clock
 //! timings. [`RunReport::to_json`] serializes the report through the
 //! crate's flat JSON writer ([`crate::bench::harness::JsonSink`]).
+//!
+//! ## Construction idiom
+//!
+//! Requests are built with the chainable builder, not struct literals:
+//!
+//! ```
+//! use dfep::coordinator::runs::PartitionRequest;
+//!
+//! let req = PartitionRequest::new("hdrf:lambda=1.5")
+//!     .unwrap()
+//!     .dataset("er:n=300,m=900")
+//!     .k(8)
+//!     .seed(3);
+//! let report = req.execute().unwrap();
+//! assert_eq!(report.k, 8);
+//! ```
+//!
+//! ## Wire format (`"v": 1`)
+//!
+//! Both sides of the facade round-trip through flat JSON objects so the
+//! serving layer (DESIGN.md "Serving layer") can speak them over HTTP:
+//! [`PartitionRequest::to_json`] / [`PartitionRequest::from_json`] and
+//! [`RunReport::to_json`] / [`RunReport::from_json`], all versioned with
+//! a `"v": 1` field (absent means 1; anything else is rejected).
+//! Unknown-field policy: *requests* are parsed strictly — an unknown
+//! field is an [`ErrorKind::InvalidRequest`] error, so typos fail loudly
+//! instead of silently running the default experiment — while *reports*
+//! are parsed leniently (unknown fields ignored), so older clients keep
+//! working when a newer server adds report fields.
+
+use std::collections::BTreeMap;
 
 use crate::anyhow;
-use crate::util::error::Result;
+use crate::util::error::{Error, ErrorKind, Result};
+use crate::util::json::Json;
 
 use crate::etsch::{gain, sssp::Sssp, Etsch};
 use crate::graph::{datasets, generators::GraphKind, Graph};
@@ -27,8 +59,10 @@ use crate::util::pool;
 
 /// One experiment, fully named: everything
 /// [`execute`](PartitionRequest::execute) needs to produce a
-/// [`RunReport`], and nothing it has to guess.
-#[derive(Clone, Debug)]
+/// [`RunReport`], and nothing it has to guess. Build with
+/// [`new`](Self::new) / [`of`](Self::of) and the chainable setters; the
+/// fields stay public for pattern-matching and inspection.
+#[derive(Clone, Debug, PartialEq)]
 pub struct PartitionRequest {
     /// Which partitioner, with parameters (`dfep`, `hdrf:lambda=1.5`...).
     pub spec: PartitionerSpec,
@@ -64,8 +98,212 @@ impl Default for PartitionRequest {
     }
 }
 
+impl PartitionRequest {
+    /// Builder entry point: parse a spec string and start from the
+    /// defaults (`PartitionRequest::new("hdrf:lambda=1.5")?.k(32)`).
+    /// Spec errors carry [`ErrorKind::InvalidSpec`].
+    pub fn new(spec: &str) -> Result<PartitionRequest> {
+        Ok(PartitionRequest::of(PartitionerSpec::parse(spec)?))
+    }
+
+    /// Builder entry point from an already-parsed spec (the programmatic
+    /// counterpart of [`new`](Self::new); infallible).
+    pub fn of(spec: PartitionerSpec) -> PartitionRequest {
+        PartitionRequest { spec, ..Default::default() }
+    }
+
+    /// Set the dataset / graph spec (see [`resolve_graph`]).
+    pub fn dataset(mut self, dataset: impl Into<String>) -> Self {
+        self.dataset = dataset.into();
+        self
+    }
+
+    /// Set the number of parts.
+    pub fn k(mut self, k: usize) -> Self {
+        self.k = k;
+        self
+    }
+
+    /// Set the partitioner run seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Set the dataset generation/scaling seed.
+    pub fn graph_seed(mut self, graph_seed: u64) -> Self {
+        self.graph_seed = graph_seed;
+        self
+    }
+
+    /// Set the number of gain-estimate sources (0 skips the estimate).
+    pub fn gain_samples(mut self, gain_samples: usize) -> Self {
+        self.gain_samples = gain_samples;
+        self
+    }
+
+    /// Pin the pool-thread count for the whole run.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Attach an ETSCH workload.
+    pub fn workload(mut self, workload: Workload) -> Self {
+        self.workload = Some(workload);
+        self
+    }
+
+    /// Serialize as a `"v": 1` wire request (see the [module
+    /// docs](self)). `threads` and `workload` appear only when set.
+    pub fn to_json(&self) -> String {
+        let mut sink = crate::bench::harness::JsonSink::new();
+        sink.num("v", 1.0);
+        sink.text("spec", &self.spec.to_string());
+        sink.text("dataset", &self.dataset);
+        sink.num("k", self.k as f64);
+        sink.num("seed", self.seed as f64);
+        sink.num("graph_seed", self.graph_seed as f64);
+        sink.num("gain_samples", self.gain_samples as f64);
+        if let Some(t) = self.threads {
+            sink.num("threads", t as f64);
+        }
+        if let Some(Workload::Sssp { source }) = self.workload {
+            sink.text("workload", "sssp");
+            sink.num("workload_source", source as f64);
+        }
+        sink.render()
+    }
+
+    /// Parse a `"v": 1` wire request. `spec` and `dataset` are required;
+    /// everything else falls back to [`Default`]. Parsing is *strict*:
+    /// unknown fields, a missing/unsupported version, non-integer
+    /// numerics, `k == 0` or `threads == 0` are
+    /// [`ErrorKind::InvalidRequest`] errors, and a bad spec string is
+    /// [`ErrorKind::InvalidSpec`].
+    pub fn from_json(text: &str) -> Result<PartitionRequest> {
+        const KNOWN: [&str; 9] = [
+            "v",
+            "spec",
+            "dataset",
+            "k",
+            "seed",
+            "graph_seed",
+            "gain_samples",
+            "threads",
+            "workload",
+        ];
+        let doc = crate::util::json::parse(text)
+            .map_err(|e| req_err(format!("invalid request JSON: {e}")))?;
+        let obj = doc
+            .as_obj()
+            .ok_or_else(|| req_err("request must be a JSON object"))?;
+        for key in obj.keys() {
+            let known = KNOWN.contains(&key.as_str())
+                || key == "workload_source";
+            if !known {
+                return Err(req_err(format!(
+                    "unknown request field '{key}' (known: {}, \
+                     workload_source)",
+                    KNOWN.join(", ")
+                )));
+            }
+        }
+        check_version(obj)?;
+        let spec = PartitionerSpec::parse(req_str(obj, "spec")?)?;
+        let mut req =
+            PartitionRequest::of(spec).dataset(req_str(obj, "dataset")?);
+        if let Some(v) = obj.get("k") {
+            req = req.k(req_uint(v, "k")? as usize);
+        }
+        if req.k == 0 {
+            return Err(req_err("field 'k' must be >= 1"));
+        }
+        if let Some(v) = obj.get("seed") {
+            req = req.seed(req_uint(v, "seed")?);
+        }
+        if let Some(v) = obj.get("graph_seed") {
+            req = req.graph_seed(req_uint(v, "graph_seed")?);
+        }
+        if let Some(v) = obj.get("gain_samples") {
+            req = req.gain_samples(req_uint(v, "gain_samples")? as usize);
+        }
+        if let Some(v) = obj.get("threads") {
+            let t = req_uint(v, "threads")? as usize;
+            if t == 0 {
+                return Err(req_err("field 'threads' must be >= 1"));
+            }
+            req = req.threads(t);
+        }
+        match obj.get("workload") {
+            None => {
+                if obj.contains_key("workload_source") {
+                    return Err(req_err(
+                        "field 'workload_source' requires 'workload'",
+                    ));
+                }
+            }
+            Some(w) => {
+                let name = w.as_str().ok_or_else(|| {
+                    req_err("field 'workload' must be a string")
+                })?;
+                if name != "sssp" {
+                    return Err(req_err(format!(
+                        "unknown workload '{name}' (known: sssp)"
+                    )));
+                }
+                let source = match obj.get("workload_source") {
+                    Some(v) => req_uint(v, "workload_source")? as u32,
+                    None => 0,
+                };
+                req = req.workload(Workload::Sssp { source });
+            }
+        }
+        Ok(req)
+    }
+}
+
+fn req_err(msg: impl Into<String>) -> Error {
+    Error::msg(msg).with_kind(ErrorKind::InvalidRequest)
+}
+
+/// Reject any `"v"` other than (a missing) 1 — both request and report
+/// parsing share the version gate.
+fn check_version(obj: &BTreeMap<String, Json>) -> Result<()> {
+    match obj.get("v") {
+        None => Ok(()),
+        Some(v) if v.as_f64() == Some(1.0) => Ok(()),
+        Some(_) => {
+            Err(req_err("unsupported wire version (this crate speaks v=1)"))
+        }
+    }
+}
+
+fn req_str<'a>(obj: &'a BTreeMap<String, Json>, field: &str) -> Result<&'a str> {
+    match obj.get(field) {
+        None => Err(req_err(format!("missing field '{field}'"))),
+        Some(v) => v
+            .as_str()
+            .ok_or_else(|| req_err(format!("field '{field}' must be a string"))),
+    }
+}
+
+/// A JSON number that is a non-negative integer exactly representable in
+/// an f64 (the parser is f64-backed, so larger values would silently
+/// round — reject them instead).
+fn req_uint(v: &Json, field: &str) -> Result<u64> {
+    let err = || {
+        req_err(format!("field '{field}' must be a non-negative integer"))
+    };
+    let n = v.as_f64().ok_or_else(err)?;
+    if !n.is_finite() || n < 0.0 || n.fract() != 0.0 || n > 2f64.powi(53) {
+        return Err(err());
+    }
+    Ok(n as u64)
+}
+
 /// An ETSCH workload a request can attach to the produced partition.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Workload {
     /// Single-source shortest paths from `source`.
     Sssp {
@@ -133,10 +371,30 @@ pub struct RunReport {
 }
 
 impl RunReport {
-    /// Serialize the report as a flat JSON object through the crate's
-    /// one JSON writer (the same format the bench artifacts use).
+    /// Serialize the report as a flat `"v": 1` JSON object through the
+    /// crate's one JSON writer (the same format the bench artifacts
+    /// use). The per-edge ownership vector is *not* included — it is
+    /// `|E|`-sized; callers that want it over the wire use
+    /// [`to_json_with_owners`](Self::to_json_with_owners).
     pub fn to_json(&self) -> String {
+        let mut sink = self.sink();
+        sink.render()
+    }
+
+    /// [`to_json`](Self::to_json) plus an `"owners"` array (`owners[e]`
+    /// = partition of edge `e`), so a remote client can reconstruct the
+    /// partition bit-identically.
+    pub fn to_json_with_owners(&self) -> String {
+        let mut sink = self.sink();
+        let cells: Vec<String> =
+            self.partition.owner.iter().map(|o| o.to_string()).collect();
+        sink.raw("owners", format!("[{}]", cells.join(",")));
+        sink.render()
+    }
+
+    fn sink(&self) -> crate::bench::harness::JsonSink {
         let mut sink = crate::bench::harness::JsonSink::new();
+        sink.num("v", 1.0);
         sink.text("spec", &self.spec);
         if !self.dataset.is_empty() {
             sink.text("dataset", &self.dataset);
@@ -163,7 +421,100 @@ impl RunReport {
             sink.num("workload_reached", w.reached as f64);
             sink.num("workload_secs", w.secs);
         }
-        sink.render()
+        sink
+    }
+
+    /// Parse a `"v": 1` wire report back into a [`RunReport`]. Parsing
+    /// is *lenient* (unknown fields are ignored — see the [module
+    /// docs](self) for the asymmetric unknown-field policy); `spec` and
+    /// `k` are required. The embedded [`EdgePartition`] is reconstructed
+    /// from the `"owners"` array when present
+    /// ([`to_json_with_owners`](Self::to_json_with_owners)); otherwise
+    /// `partition.owner` comes back empty.
+    pub fn from_json(text: &str) -> Result<RunReport> {
+        let doc = crate::util::json::parse(text)
+            .map_err(|e| Error::msg(format!("invalid report JSON: {e}")))?;
+        let obj = doc
+            .as_obj()
+            .ok_or_else(|| Error::msg("report must be a JSON object"))?;
+        check_version(obj)?;
+        let spec = req_str(obj, "spec")?.to_string();
+        let k = req_uint(
+            obj.get("k").ok_or_else(|| Error::msg("missing field 'k'"))?,
+            "k",
+        )? as usize;
+        let uint = |field: &str| -> Result<u64> {
+            match obj.get(field) {
+                Some(v) => req_uint(v, field),
+                None => Ok(0),
+            }
+        };
+        let num = |field: &str| -> Result<f64> {
+            match obj.get(field) {
+                Some(v) => v.as_f64().ok_or_else(|| {
+                    Error::msg(format!("field '{field}' must be a number"))
+                }),
+                None => Ok(0.0),
+            }
+        };
+        let metrics = Report {
+            k,
+            largest: num("largest")?,
+            nstdev: num("nstdev")?,
+            messages: uint("messages")? as usize,
+            rounds: uint("rounds")? as usize,
+            disconnected: num("disconnected")?,
+        };
+        let gain = match obj.get("gain") {
+            Some(v) => Some(v.as_f64().ok_or_else(|| {
+                Error::msg("field 'gain' must be a number")
+            })?),
+            None => None,
+        };
+        let workload = match obj.get("workload").and_then(|v| v.as_str()) {
+            // `name` is &'static str in-process; map the one known name
+            Some(name) => Some(WorkloadReport {
+                name: if name == "sssp" { "sssp" } else { "unknown" },
+                rounds: uint("workload_rounds")? as usize,
+                messages: uint("workload_messages")? as usize,
+                reached: uint("workload_reached")? as usize,
+                secs: num("workload_secs")?,
+            }),
+            None => None,
+        };
+        let owner: Vec<u32> = match obj.get("owners").and_then(|v| v.as_arr())
+        {
+            Some(cells) => {
+                let mut owner = Vec::with_capacity(cells.len());
+                for c in cells {
+                    owner.push(req_uint(c, "owners")? as u32);
+                }
+                owner
+            }
+            None => Vec::new(),
+        };
+        let rounds = metrics.rounds;
+        Ok(RunReport {
+            spec,
+            dataset: obj
+                .get("dataset")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string(),
+            k,
+            seed: uint("seed")?,
+            vertices: uint("vertices")? as usize,
+            edges: uint("edges")? as usize,
+            metrics,
+            gain,
+            workload,
+            timings: Timings {
+                resolve_secs: num("resolve_secs")?,
+                partition_secs: num("partition_secs")?,
+                evaluate_secs: num("evaluate_secs")?,
+            },
+            partition: EdgePartition { k, owner, rounds },
+        })
     }
 }
 
@@ -270,11 +621,20 @@ fn run_workload(
 
 /// Resolve a graph source: a named dataset ("astroph", optionally scaled
 /// like "astroph@0.1") or a generator spec ("er:n=1000,m=3000").
+///
+/// Errors are kind-tagged for the serving layer: an unresolvable name is
+/// [`ErrorKind::DatasetNotFound`], a malformed scale fraction or
+/// generator argument is [`ErrorKind::InvalidRequest`].
 pub fn resolve_graph(spec: &str, seed: u64) -> Result<Graph> {
     if let Some((name, frac)) = spec.split_once('@') {
-        let d = datasets::by_name(name)
-            .ok_or_else(|| anyhow!("unknown dataset '{name}'"))?;
-        let frac: f64 = frac.parse()?;
+        let d = datasets::by_name(name).ok_or_else(|| {
+            anyhow!("unknown dataset '{name}'")
+                .with_kind(ErrorKind::DatasetNotFound)
+        })?;
+        let frac: f64 = frac.parse().map_err(|_| {
+            anyhow!("bad scale fraction '{frac}' in '{spec}'")
+                .with_kind(ErrorKind::InvalidRequest)
+        })?;
         return Ok(d.scaled(frac, seed));
     }
     if let Some(d) = datasets::by_name(spec) {
@@ -285,14 +645,22 @@ pub fn resolve_graph(spec: &str, seed: u64) -> Result<Graph> {
         let mut m = 3000usize;
         let mut p = 0.3f64;
         for kv in args.split(',') {
-            let (key, val) = kv
-                .split_once('=')
-                .ok_or_else(|| anyhow!("bad generator arg '{kv}'"))?;
+            let (key, val) = kv.split_once('=').ok_or_else(|| {
+                anyhow!("bad generator arg '{kv}'")
+                    .with_kind(ErrorKind::InvalidRequest)
+            })?;
+            let bad_num = || {
+                anyhow!("generator key '{key}': bad number '{val}'")
+                    .with_kind(ErrorKind::InvalidRequest)
+            };
             match key {
-                "n" => n = val.parse()?,
-                "m" => m = val.parse()?,
-                "p" => p = val.parse()?,
-                _ => return Err(anyhow!("unknown generator key '{key}'")),
+                "n" => n = val.parse().map_err(|_| bad_num())?,
+                "m" => m = val.parse().map_err(|_| bad_num())?,
+                "p" => p = val.parse().map_err(|_| bad_num())?,
+                _ => {
+                    return Err(anyhow!("unknown generator key '{key}'")
+                        .with_kind(ErrorKind::InvalidRequest))
+                }
             }
         }
         let g = match kind {
@@ -309,14 +677,18 @@ pub fn resolve_graph(spec: &str, seed: u64) -> Result<Graph> {
                     shortcuts: 0,
                 }
             }
-            other => return Err(anyhow!("unknown generator '{other}'")),
+            other => {
+                return Err(anyhow!("unknown generator '{other}'")
+                    .with_kind(ErrorKind::DatasetNotFound))
+            }
         };
         return Ok(g.generate(seed));
     }
     Err(anyhow!(
         "cannot resolve graph '{spec}' (try astroph, usroads, \
          astroph@0.1, er:n=1000,m=3000)"
-    ))
+    )
+    .with_kind(ErrorKind::DatasetNotFound))
 }
 
 #[cfg(test)]
@@ -333,16 +705,14 @@ mod tests {
 
     #[test]
     fn request_produces_full_report() {
-        let req = PartitionRequest {
-            spec: PartitionerSpec::parse("dfep").unwrap(),
-            dataset: "er:n=300,m=900".to_string(),
-            k: 4,
-            seed: 3,
-            graph_seed: 2,
-            gain_samples: 2,
-            threads: None,
-            workload: Some(Workload::Sssp { source: 0 }),
-        };
+        let req = PartitionRequest::new("dfep")
+            .unwrap()
+            .dataset("er:n=300,m=900")
+            .k(4)
+            .seed(3)
+            .graph_seed(2)
+            .gain_samples(2)
+            .workload(Workload::Sssp { source: 0 });
         let res = req.execute().unwrap();
         let g = resolve_graph("er:n=300,m=900", 2).unwrap();
         res.partition.validate(&g).unwrap();
@@ -366,11 +736,10 @@ mod tests {
 
     #[test]
     fn bad_specs_and_datasets_error() {
-        let mut req = PartitionRequest {
-            dataset: "nosuchdataset".to_string(),
-            ..Default::default()
-        };
-        assert!(req.execute().is_err());
+        let mut req =
+            PartitionRequest::new("dfep").unwrap().dataset("nosuchdataset");
+        let e = req.execute().unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::DatasetNotFound);
         req.dataset = "er:n=100,m=200".to_string();
         req.k = 0;
         let e = req.execute().unwrap_err().to_string();
@@ -380,14 +749,101 @@ mod tests {
     #[test]
     fn parameterized_spec_flows_through() {
         let g = resolve_graph("er:n=200,m=600", 1).unwrap();
-        let req = PartitionRequest {
-            spec: PartitionerSpec::parse("hdrf:lambda=1.5").unwrap(),
-            k: 6,
-            seed: 2,
-            ..Default::default()
-        };
+        let req = PartitionRequest::new("hdrf:lambda=1.5").unwrap().k(6).seed(2);
         let res = req.execute_on(&g).unwrap();
         assert_eq!(res.spec, "hdrf:lambda=1.5");
         res.partition.validate(&g).unwrap();
+    }
+
+    #[test]
+    fn request_json_round_trips() {
+        let req = PartitionRequest::new("hdrf:lambda=1.5")
+            .unwrap()
+            .dataset("er:n=200,m=600")
+            .k(6)
+            .seed(9)
+            .graph_seed(3)
+            .gain_samples(2)
+            .threads(2)
+            .workload(Workload::Sssp { source: 7 });
+        let back = PartitionRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(back, req);
+        // optional fields defaulted: minimal request parses
+        let min = PartitionRequest::from_json(
+            r#"{"spec": "dfep", "dataset": "astroph@0.02"}"#,
+        )
+        .unwrap();
+        assert_eq!(min.k, PartitionRequest::default().k);
+        assert_eq!(min.threads, None);
+        assert_eq!(min.workload, None);
+    }
+
+    #[test]
+    fn request_json_is_strict() {
+        let err = |t: &str| PartitionRequest::from_json(t).unwrap_err();
+        // non-JSON, non-object, unknown field, bad version
+        assert_eq!(err("nope").kind(), ErrorKind::InvalidRequest);
+        assert_eq!(err("[1]").kind(), ErrorKind::InvalidRequest);
+        let e = err(r#"{"spec": "dfep", "dataset": "astroph", "kk": 3}"#);
+        assert_eq!(e.kind(), ErrorKind::InvalidRequest);
+        assert!(e.to_string().contains("unknown request field 'kk'"), "{e}");
+        let e = err(r#"{"v": 2, "spec": "dfep", "dataset": "astroph"}"#);
+        assert!(e.to_string().contains("unsupported wire version"), "{e}");
+        // missing requireds, zero k/threads, fractional numerics
+        assert_eq!(err(r#"{"dataset": "astroph"}"#).kind(), ErrorKind::InvalidRequest);
+        assert_eq!(err(r#"{"spec": "dfep"}"#).kind(), ErrorKind::InvalidRequest);
+        let base = r#"{"spec": "dfep", "dataset": "astroph""#;
+        assert_eq!(err(&format!("{base}, \"k\": 0}}")).kind(), ErrorKind::InvalidRequest);
+        assert_eq!(err(&format!("{base}, \"threads\": 0}}")).kind(), ErrorKind::InvalidRequest);
+        assert_eq!(err(&format!("{base}, \"k\": 2.5}}")).kind(), ErrorKind::InvalidRequest);
+        assert_eq!(
+            err(&format!("{base}, \"workload_source\": 3}}")).kind(),
+            ErrorKind::InvalidRequest
+        );
+        assert_eq!(
+            err(&format!("{base}, \"workload\": \"pagerank\"}}")).kind(),
+            ErrorKind::InvalidRequest
+        );
+        // a bad spec keeps its InvalidSpec kind
+        let e = err(r#"{"spec": "hdrf:lambda=abc", "dataset": "astroph"}"#);
+        assert_eq!(e.kind(), ErrorKind::InvalidSpec);
+    }
+
+    #[test]
+    fn report_json_round_trips_with_owners() {
+        let req = PartitionRequest::new("dfep")
+            .unwrap()
+            .dataset("er:n=200,m=600")
+            .k(4)
+            .seed(5)
+            .graph_seed(1)
+            .gain_samples(1)
+            .workload(Workload::Sssp { source: 0 });
+        let res = req.execute().unwrap();
+        let back = RunReport::from_json(&res.to_json_with_owners()).unwrap();
+        assert_eq!(back.spec, res.spec);
+        assert_eq!(back.dataset, res.dataset);
+        assert_eq!(back.k, res.k);
+        assert_eq!(back.seed, res.seed);
+        assert_eq!(back.vertices, res.vertices);
+        assert_eq!(back.edges, res.edges);
+        assert_eq!(back.metrics.nstdev.to_bits(), res.metrics.nstdev.to_bits());
+        assert_eq!(back.metrics.largest.to_bits(), res.metrics.largest.to_bits());
+        assert_eq!(back.metrics.messages, res.metrics.messages);
+        assert_eq!(back.gain.unwrap().to_bits(), res.gain.unwrap().to_bits());
+        assert_eq!(back.partition.owner, res.partition.owner);
+        assert_eq!(back.partition.rounds, res.partition.rounds);
+        let w = back.workload.as_ref().unwrap();
+        assert_eq!(w.name, "sssp");
+        assert_eq!(w.messages, res.workload.as_ref().unwrap().messages);
+        // without owners the partition comes back empty (documented)
+        let lean = RunReport::from_json(&res.to_json()).unwrap();
+        assert!(lean.partition.owner.is_empty());
+        // lenient: unknown report fields are ignored
+        let ok = RunReport::from_json(
+            r#"{"spec": "dfep", "k": 2, "brand_new_field": 1}"#,
+        )
+        .unwrap();
+        assert_eq!(ok.k, 2);
     }
 }

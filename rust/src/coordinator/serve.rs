@@ -1,0 +1,884 @@
+//! Partitioning-as-a-service: the long-running `repro serve` HTTP server.
+//!
+//! The paper frames edge partitioning as a *preprocessing service* for
+//! downstream graph processing; this module is that service. A
+//! [`Server`] holds resolved graphs and computed [`RunReport`]s warm in
+//! memory and answers `PartitionRequest`-shaped JSON over hand-rolled
+//! HTTP/1.1 ([`crate::util::http`], std-only — no server framework in
+//! the vendored crate set). See DESIGN.md "Serving layer" for the full
+//! endpoint table, wire schema and shedding policy.
+//!
+//! ## Endpoints
+//!
+//! - `POST /partition` — body: [`PartitionRequest::to_json`] (`"v": 1`);
+//!   response: [`RunReport::to_json`] (append `?owners=1` for the
+//!   per-edge ownership array).
+//! - `GET /healthz` — liveness probe.
+//! - `GET /stats` — flat JSON counters: cache hit rate, in-flight count,
+//!   shed counts, per-endpoint latency.
+//!
+//! ## Result cache + single flight
+//!
+//! Results are cached under [`cache_key`] — dataset, graph seed, the
+//! *canonical* spec form ([`crate::partition::spec::PartitionerSpec::canonical`]), `k`, run
+//! seed, gain samples and workload — so every spelling of the same
+//! experiment (`hdrf` vs `hdrf:lambda=1.1`, alias vs canonical name)
+//! hits one entry. The `threads` override is deliberately excluded:
+//! reports are bit-identical across pool widths (pinned by the pool
+//! invariants test). Concurrent identical requests are *single-flight*:
+//! the first computes, the rest block on the entry and are served the
+//! same `Arc`'d report; the `computations` probe counter on `/stats`
+//! pins this in the serving integration test. Failed computations are
+//! not cached — the entry is removed so a later retry recomputes.
+//!
+//! ## Shedding
+//!
+//! Bounded queues and bodies, never unbounded growth: a full accept
+//! queue answers 503 immediately, a body over the limit answers 413 and
+//! closes, more than `max_compute` distinct in-flight computations
+//! answers 429 ([`ErrorKind::Busy`]), and a request that waits longer
+//! than the per-request timeout on someone else's computation answers
+//! 503 ([`ErrorKind::Overloaded`]). The computation itself is not
+//! preempted (it is useful work; its result lands in the cache). A
+//! panicking handler answers 500 and wakes any single-flight waiters.
+//!
+//! ## Threading
+//!
+//! The server runs on its *own* [`ThreadPool`] — shard 0 is the accept
+//! loop, shards 1..=workers the connection workers — while request
+//! execution fans out through the ambient global pool. Nesting `run` on
+//! one pool deadlocks (see `util::pool`), so the two pools must stay
+//! distinct.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use crate::anyhow;
+use crate::bench::harness::JsonSink;
+use crate::coordinator::runs::{resolve_graph, PartitionRequest, RunReport};
+use crate::graph::Graph;
+use crate::util::error::{ErrorKind, Result};
+use crate::util::http::{self, Request, WireError};
+use crate::util::pool::ThreadPool;
+use crate::util::timer::LatencyStat;
+
+/// The documented [`ErrorKind`] → HTTP status mapping (DESIGN.md
+/// "Serving layer"). Exhaustive by construction; the unit test walks
+/// [`ErrorKind::ALL`] against the documented table.
+pub fn status_for(kind: ErrorKind) -> u16 {
+    match kind {
+        ErrorKind::InvalidSpec => 400,
+        ErrorKind::InvalidRequest => 400,
+        ErrorKind::DatasetNotFound => 404,
+        ErrorKind::Busy => 429,
+        ErrorKind::Overloaded => 503,
+        ErrorKind::Io => 500,
+        ErrorKind::Internal => 500,
+    }
+}
+
+/// The result-cache key of a request: every field that affects the
+/// report, with the spec in canonical form so spelling variants collide
+/// (`threads` excluded — reports are thread-count invariant).
+pub fn cache_key(req: &PartitionRequest) -> String {
+    use crate::coordinator::runs::Workload;
+    let workload = match req.workload {
+        None => "-".to_string(),
+        Some(Workload::Sssp { source }) => format!("sssp:{source}"),
+    };
+    format!(
+        "{}|{}|{}|{}|{}|{}|{}",
+        req.dataset,
+        req.graph_seed,
+        req.spec.canonical(),
+        req.k,
+        req.seed,
+        req.gain_samples,
+        workload,
+    )
+}
+
+/// Everything tunable about a [`Server`], with production-ish defaults.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Bind address (`127.0.0.1:7411`; port 0 picks an ephemeral port).
+    pub addr: String,
+    /// Connection-worker threads (the accept loop rides on one more).
+    pub workers: usize,
+    /// Largest accepted request body in bytes (413 beyond).
+    pub max_body_bytes: usize,
+    /// Accepted-connection queue bound (503 beyond).
+    pub max_queue: usize,
+    /// Distinct in-flight computations bound (429 beyond).
+    pub max_compute: usize,
+    /// Per-request budget in seconds: the read timeout per socket read,
+    /// and the longest a request waits on another request's in-flight
+    /// computation before shedding with 503.
+    pub request_timeout_s: f64,
+    /// Result-cache capacity in entries (FIFO eviction beyond).
+    pub cache_capacity: usize,
+    /// Resolved-graph cache capacity in entries (FIFO eviction beyond).
+    pub graph_capacity: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:7411".to_string(),
+            workers: 4,
+            max_body_bytes: 1 << 20,
+            max_queue: 128,
+            max_compute: 8,
+            request_timeout_s: 30.0,
+            cache_capacity: 256,
+            graph_capacity: 8,
+        }
+    }
+}
+
+/// One single-flight cache slot.
+enum Flight {
+    /// Someone is computing this key; wait on the cache condvar.
+    InFlight,
+    /// Computed; served by `Arc` clone.
+    Done(Arc<RunReport>),
+}
+
+/// Result cache: single-flight map + FIFO eviction order over the
+/// completed entries + in-flight count for the 429 bound.
+#[derive(Default)]
+struct Cache {
+    map: HashMap<String, Flight>,
+    order: VecDeque<String>,
+    in_flight: usize,
+}
+
+/// Resolved-graph cache, FIFO-bounded like the result cache.
+#[derive(Default)]
+struct GraphCache {
+    map: HashMap<(String, u64), Arc<Graph>>,
+    order: VecDeque<(String, u64)>,
+}
+
+/// Monotonic serving counters, all exposed on `/stats`.
+#[derive(Default)]
+struct Counters {
+    requests: AtomicUsize,
+    in_flight: AtomicUsize,
+    cache_hits: AtomicUsize,
+    cache_misses: AtomicUsize,
+    computations: AtomicUsize,
+    shed_queue_full: AtomicUsize,
+    shed_body_too_large: AtomicUsize,
+    shed_timeout: AtomicUsize,
+    shed_busy: AtomicUsize,
+    responses_4xx: AtomicUsize,
+    responses_5xx: AtomicUsize,
+    latency: Mutex<[LatencyStat; ENDPOINTS.len()]>,
+}
+
+const ENDPOINTS: [&str; 4] = ["partition", "healthz", "stats", "other"];
+
+fn endpoint_index(path: &str) -> usize {
+    match path {
+        "/partition" => 0,
+        "/healthz" => 1,
+        "/stats" => 2,
+        _ => 3,
+    }
+}
+
+/// Recover a mutex guard even if a panicking holder poisoned it (the
+/// serving loops must outlive any one bad request).
+fn relock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}
+
+struct Inner {
+    cfg: ServeConfig,
+    listener: TcpListener,
+    local_addr: SocketAddr,
+    stop: AtomicBool,
+    queue: Mutex<VecDeque<TcpStream>>,
+    queue_cv: Condvar,
+    cache: Mutex<Cache>,
+    cache_cv: Condvar,
+    graphs: Mutex<GraphCache>,
+    stats: Counters,
+}
+
+/// The `repro serve` server. Cheap to clone (shared state behind an
+/// `Arc`); [`bind`](Server::bind) then either [`serve`](Server::serve)
+/// on the current thread or [`spawn`](Server::spawn) a handle.
+#[derive(Clone)]
+pub struct Server {
+    inner: Arc<Inner>,
+}
+
+impl Server {
+    /// Bind the listener (kind [`ErrorKind::Io`] on failure). No worker
+    /// runs until [`serve`](Self::serve).
+    pub fn bind(cfg: ServeConfig) -> Result<Server> {
+        let listener = TcpListener::bind(&cfg.addr).map_err(|e| {
+            anyhow!("bind {}: {e}", cfg.addr).with_kind(ErrorKind::Io)
+        })?;
+        listener.set_nonblocking(true).map_err(|e| {
+            anyhow!("set_nonblocking: {e}").with_kind(ErrorKind::Io)
+        })?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| anyhow!("local_addr: {e}").with_kind(ErrorKind::Io))?;
+        Ok(Server {
+            inner: Arc::new(Inner {
+                cfg,
+                listener,
+                local_addr,
+                stop: AtomicBool::new(false),
+                queue: Mutex::new(VecDeque::new()),
+                queue_cv: Condvar::new(),
+                cache: Mutex::new(Cache::default()),
+                cache_cv: Condvar::new(),
+                graphs: Mutex::new(GraphCache::default()),
+                stats: Counters::default(),
+            }),
+        })
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.inner.local_addr
+    }
+
+    /// Ask every loop to exit; [`serve`](Self::serve) returns shortly
+    /// after (bounded by one accept/read poll interval).
+    pub fn stop(&self) {
+        self.inner.stop.store(true, Ordering::SeqCst);
+        self.inner.queue_cv.notify_all();
+    }
+
+    /// Run the accept loop + connection workers until
+    /// [`stop`](Self::stop) is called. Blocks the calling thread. The server
+    /// runs on a dedicated pool; request execution uses the ambient
+    /// global pool (never nest the two — see `util::pool`).
+    pub fn serve(&self) {
+        let shards = self.inner.cfg.workers.max(1) + 1;
+        let pool = ThreadPool::new(shards);
+        let inner = &self.inner;
+        pool.run(shards, &|i| {
+            if i == 0 {
+                inner.accept_loop();
+            } else {
+                inner.worker_loop();
+            }
+        });
+    }
+
+    /// [`bind`](Self::bind) + [`serve`](Self::serve) on a background
+    /// thread; the returned handle stops and joins the server on drop
+    /// (used by the tests, the load bench and embedding callers).
+    pub fn spawn(cfg: ServeConfig) -> Result<ServeHandle> {
+        let server = Server::bind(cfg)?;
+        let runner = server.clone();
+        let thread = std::thread::Builder::new()
+            .name("repro-serve".to_string())
+            .spawn(move || runner.serve())
+            .map_err(|e| anyhow!("spawn serve: {e}").with_kind(ErrorKind::Io))?;
+        Ok(ServeHandle { server, thread: Some(thread) })
+    }
+}
+
+/// A running [`Server`] on a background thread. Stops and joins on drop.
+pub struct ServeHandle {
+    server: Server,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServeHandle {
+    /// The bound address of the running server.
+    pub fn addr(&self) -> SocketAddr {
+        self.server.addr()
+    }
+
+    /// Stop the server and wait for its loops to exit.
+    pub fn stop(&mut self) {
+        self.server.stop();
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ServeHandle {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// The accept/worker poll interval: how long a stop request can go
+/// unnoticed, and the idle granularity of keep-alive connections.
+const POLL: Duration = Duration::from_millis(100);
+
+impl Inner {
+    fn accept_loop(&self) {
+        while !self.stop.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((stream, _peer)) => self.enqueue(stream),
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(POLL);
+                }
+                Err(_) => std::thread::sleep(POLL),
+            }
+        }
+        self.queue_cv.notify_all();
+    }
+
+    /// Queue an accepted connection, or shed it with an inline 503 when
+    /// the queue is at its bound.
+    fn enqueue(&self, stream: TcpStream) {
+        {
+            let mut q = relock(&self.queue);
+            if q.len() < self.cfg.max_queue {
+                q.push_back(stream);
+                self.queue_cv.notify_one();
+                return;
+            }
+        }
+        self.stats.shed_queue_full.fetch_add(1, Ordering::SeqCst);
+        let _ = stream.set_nonblocking(false);
+        let _ = stream.set_write_timeout(Some(Duration::from_secs(1)));
+        let mut w = &stream;
+        let body = error_body("connection queue full; retry later", ErrorKind::Overloaded);
+        let _ = http::write_response(&mut w, 503, body.as_bytes(), false);
+    }
+
+    fn worker_loop(&self) {
+        loop {
+            let stream = {
+                let mut q = relock(&self.queue);
+                loop {
+                    if let Some(s) = q.pop_front() {
+                        break Some(s);
+                    }
+                    if self.stop.load(Ordering::SeqCst) {
+                        break None;
+                    }
+                    let (qq, _timeout) = self
+                        .queue_cv
+                        .wait_timeout(q, POLL)
+                        .unwrap_or_else(|p| p.into_inner());
+                    q = qq;
+                }
+            };
+            match stream {
+                Some(s) => self.handle_connection(s),
+                None => return,
+            }
+        }
+    }
+
+    /// Serve one keep-alive connection until close, error, stop, or a
+    /// shedding condition that requires dropping the stream.
+    fn handle_connection(&self, stream: TcpStream) {
+        if stream.set_nonblocking(false).is_err() {
+            return;
+        }
+        let _ = stream.set_nodelay(true);
+        let _ = stream.set_read_timeout(Some(POLL));
+        let _ = stream.set_write_timeout(Some(Duration::from_secs(10)));
+        let Ok(read_half) = stream.try_clone() else {
+            return;
+        };
+        let mut reader = BufReader::new(read_half);
+        let mut writer = stream;
+        let per_read = Duration::from_secs_f64(self.cfg.request_timeout_s.max(0.05));
+        loop {
+            // idle poll: wait for the next request's first byte with a
+            // short timeout so stop() stays responsive on idle
+            // keep-alive connections
+            match reader.fill_buf() {
+                Ok(buf) if buf.is_empty() => return, // peer closed
+                Ok(_) => {}
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                            | std::io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    if self.stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    continue;
+                }
+                Err(_) => return,
+            }
+            // bytes are waiting: switch to the real per-read budget for
+            // the span of this request
+            let _ = reader.get_ref().set_read_timeout(Some(per_read));
+            let outcome = http::read_request(&mut reader, self.cfg.max_body_bytes);
+            let _ = reader.get_ref().set_read_timeout(Some(POLL));
+            match outcome {
+                Ok(None) => return,
+                Ok(Some(req)) => {
+                    if !self.respond(&req, &mut writer) {
+                        return;
+                    }
+                    if !req.keep_alive || self.stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                }
+                Err(WireError::TooLarge) => {
+                    self.stats.shed_body_too_large.fetch_add(1, Ordering::SeqCst);
+                    // drain (bounded) what the client already sent, so
+                    // closing the socket with unread bytes in the receive
+                    // buffer does not RST the 413 off the wire; truly
+                    // huge bodies still get cut off mid-send
+                    let mut scratch = [0u8; 4096];
+                    let mut drained = 0usize;
+                    while drained < 64 * 1024 {
+                        match std::io::Read::read(&mut reader, &mut scratch) {
+                            Ok(0) | Err(_) => break,
+                            Ok(n) => drained += n,
+                        }
+                    }
+                    let body = error_body(
+                        &format!("request exceeds {} bytes", self.cfg.max_body_bytes),
+                        ErrorKind::InvalidRequest,
+                    );
+                    let _ = http::write_response(&mut writer, 413, body.as_bytes(), false);
+                    return; // any remaining body would garble the stream
+                }
+                Err(WireError::Malformed(msg)) => {
+                    let body = error_body(
+                        &format!("malformed request: {msg}"),
+                        ErrorKind::InvalidRequest,
+                    );
+                    let _ = http::write_response(&mut writer, 400, body.as_bytes(), false);
+                    return;
+                }
+                Err(WireError::Io(_)) => return,
+            }
+        }
+    }
+
+    /// Route, execute and answer one parsed request; false when the
+    /// response could not be written (connection is dead).
+    fn respond(&self, req: &Request, writer: &mut TcpStream) -> bool {
+        self.stats.requests.fetch_add(1, Ordering::SeqCst);
+        self.stats.in_flight.fetch_add(1, Ordering::SeqCst);
+        let t0 = Instant::now();
+        let routed = catch_unwind(AssertUnwindSafe(|| self.route(req)));
+        let (status, body) = routed.unwrap_or_else(|_| {
+            (500, error_body("request handler panicked", ErrorKind::Internal))
+        });
+        self.stats.in_flight.fetch_sub(1, Ordering::SeqCst);
+        {
+            let mut lat = relock(&self.stats.latency);
+            lat[endpoint_index(&req.path)].record(t0.elapsed().as_secs_f64());
+        }
+        if status >= 500 {
+            self.stats.responses_5xx.fetch_add(1, Ordering::SeqCst);
+        } else if status >= 400 {
+            self.stats.responses_4xx.fetch_add(1, Ordering::SeqCst);
+        }
+        http::write_response(writer, status, body.as_bytes(), req.keep_alive).is_ok()
+    }
+
+    fn route(&self, req: &Request) -> (u16, String) {
+        match (req.method.as_str(), req.path.as_str()) {
+            ("GET", "/healthz") => (200, "{\n  \"ok\": true\n}\n".to_string()),
+            ("GET", "/stats") => (200, self.stats_json()),
+            ("POST", "/partition") => self.handle_partition(req),
+            (_, "/partition" | "/healthz" | "/stats") => (
+                405,
+                error_body(
+                    "method not allowed (POST /partition, GET /healthz, \
+                     GET /stats)",
+                    ErrorKind::InvalidRequest,
+                ),
+            ),
+            _ => (
+                404,
+                error_body(
+                    &format!("no such endpoint '{}'", req.path),
+                    ErrorKind::InvalidRequest,
+                ),
+            ),
+        }
+    }
+
+    fn handle_partition(&self, req: &Request) -> (u16, String) {
+        let Ok(text) = std::str::from_utf8(&req.body) else {
+            return (400, error_body("request body is not UTF-8", ErrorKind::InvalidRequest));
+        };
+        let preq = match PartitionRequest::from_json(text) {
+            Ok(p) => p,
+            Err(e) => return (status_for(e.kind()), error_body(&e.to_string(), e.kind())),
+        };
+        match self.run_cached(&preq) {
+            Ok(report) => {
+                let json = if req.query_flag("owners") {
+                    report.to_json_with_owners()
+                } else {
+                    report.to_json()
+                };
+                (200, json)
+            }
+            Err(e) => (status_for(e.kind()), error_body(&e.to_string(), e.kind())),
+        }
+    }
+
+    /// Single-flight cached execution of one request (see module docs).
+    fn run_cached(&self, preq: &PartitionRequest) -> Result<Arc<RunReport>> {
+        let key = cache_key(preq);
+        let deadline = Instant::now()
+            + Duration::from_secs_f64(self.cfg.request_timeout_s.max(0.05));
+        let mut cache = relock(&self.cache);
+        loop {
+            match cache.map.get(&key) {
+                Some(Flight::Done(report)) => {
+                    self.stats.cache_hits.fetch_add(1, Ordering::SeqCst);
+                    return Ok(report.clone());
+                }
+                Some(Flight::InFlight) => {
+                    let now = Instant::now();
+                    if now >= deadline {
+                        drop(cache);
+                        self.stats.shed_timeout.fetch_add(1, Ordering::SeqCst);
+                        return Err(anyhow!(
+                            "timed out after {:.1}s waiting for an \
+                             in-flight identical computation; retry later",
+                            self.cfg.request_timeout_s
+                        )
+                        .with_kind(ErrorKind::Overloaded));
+                    }
+                    let (c, _timeout) = self
+                        .cache_cv
+                        .wait_timeout(cache, deadline - now)
+                        .unwrap_or_else(|p| p.into_inner());
+                    cache = c;
+                }
+                None => {
+                    if cache.in_flight >= self.cfg.max_compute.max(1) {
+                        drop(cache);
+                        self.stats.shed_busy.fetch_add(1, Ordering::SeqCst);
+                        return Err(anyhow!(
+                            "{} distinct computations already in flight; \
+                             retry later",
+                            self.cfg.max_compute
+                        )
+                        .with_kind(ErrorKind::Busy));
+                    }
+                    cache.map.insert(key.clone(), Flight::InFlight);
+                    cache.in_flight += 1;
+                    drop(cache);
+                    return self.compute_flight(preq, &key);
+                }
+            }
+        }
+    }
+
+    /// Compute the report for `key` (this thread won the flight), then
+    /// publish it and wake waiters. The guard makes the InFlight entry
+    /// panic-safe: if the computation unwinds, the entry is removed and
+    /// waiters retry instead of hanging until their deadline.
+    fn compute_flight(&self, preq: &PartitionRequest, key: &str) -> Result<Arc<RunReport>> {
+        struct FlightGuard<'a> {
+            inner: &'a Inner,
+            key: &'a str,
+            armed: bool,
+        }
+        impl Drop for FlightGuard<'_> {
+            fn drop(&mut self) {
+                if !self.armed {
+                    return;
+                }
+                let mut cache = relock(&self.inner.cache);
+                cache.map.remove(self.key);
+                cache.in_flight = cache.in_flight.saturating_sub(1);
+                self.inner.cache_cv.notify_all();
+            }
+        }
+        let mut guard = FlightGuard { inner: self, key, armed: true };
+        let out = self.compute(preq);
+        guard.armed = false;
+        let mut cache = relock(&self.cache);
+        cache.in_flight = cache.in_flight.saturating_sub(1);
+        match out {
+            Ok(report) => {
+                let report = Arc::new(report);
+                cache.map.insert(key.to_string(), Flight::Done(report.clone()));
+                cache.order.push_back(key.to_string());
+                while cache.order.len() > self.cfg.cache_capacity.max(1) {
+                    if let Some(old) = cache.order.pop_front() {
+                        cache.map.remove(&old);
+                    }
+                }
+                self.stats.cache_misses.fetch_add(1, Ordering::SeqCst);
+                self.cache_cv.notify_all();
+                Ok(report)
+            }
+            Err(e) => {
+                // errors are not cached: remove the flight so a retry
+                // (possibly with the dataset now available) recomputes
+                cache.map.remove(key);
+                self.cache_cv.notify_all();
+                Err(e)
+            }
+        }
+    }
+
+    /// The actual work: resolve (or reuse) the graph, execute the
+    /// facade. Increments the `computations` probe counter the
+    /// single-flight test pins.
+    fn compute(&self, preq: &PartitionRequest) -> Result<RunReport> {
+        self.stats.computations.fetch_add(1, Ordering::SeqCst);
+        let graph = self.graph_for(&preq.dataset, preq.graph_seed)?;
+        let mut report = preq.execute_on(&graph)?;
+        // execute_on leaves the label empty (it cannot vouch for an
+        // arbitrary graph); the server resolved from preq.dataset itself
+        report.dataset = preq.dataset.clone();
+        Ok(report)
+    }
+
+    /// Resolved-graph cache lookup. Resolution runs outside the lock, so
+    /// two *different* requests racing on a brand-new dataset may both
+    /// resolve it (identical requests are already single-flighted); the
+    /// loser's copy is dropped.
+    fn graph_for(&self, dataset: &str, graph_seed: u64) -> Result<Arc<Graph>> {
+        let key = (dataset.to_string(), graph_seed);
+        {
+            let graphs = relock(&self.graphs);
+            if let Some(g) = graphs.map.get(&key) {
+                return Ok(g.clone());
+            }
+        }
+        let resolved = Arc::new(resolve_graph(dataset, graph_seed)?);
+        let mut graphs = relock(&self.graphs);
+        if let Some(g) = graphs.map.get(&key) {
+            return Ok(g.clone());
+        }
+        graphs.map.insert(key.clone(), resolved.clone());
+        graphs.order.push_back(key);
+        while graphs.order.len() > self.cfg.graph_capacity.max(1) {
+            if let Some(old) = graphs.order.pop_front() {
+                graphs.map.remove(&old);
+            }
+        }
+        Ok(resolved)
+    }
+
+    fn stats_json(&self) -> String {
+        let load = |c: &AtomicUsize| c.load(Ordering::SeqCst) as f64;
+        let mut sink = JsonSink::new();
+        sink.num("v", 1.0);
+        sink.num("requests_total", load(&self.stats.requests));
+        sink.num("in_flight", load(&self.stats.in_flight));
+        let hits = load(&self.stats.cache_hits);
+        let misses = load(&self.stats.cache_misses);
+        sink.num("cache_hits", hits);
+        sink.num("cache_misses", misses);
+        let rate = if hits + misses > 0.0 { hits / (hits + misses) } else { 0.0 };
+        sink.num("cache_hit_rate", rate);
+        sink.num("computations", load(&self.stats.computations));
+        {
+            let cache = relock(&self.cache);
+            sink.num("cache_entries", cache.order.len() as f64);
+            sink.num("computations_in_flight", cache.in_flight as f64);
+        }
+        sink.num("graphs_resident", relock(&self.graphs).map.len() as f64);
+        sink.num("shed_queue_full", load(&self.stats.shed_queue_full));
+        sink.num("shed_body_too_large", load(&self.stats.shed_body_too_large));
+        sink.num("shed_timeout", load(&self.stats.shed_timeout));
+        sink.num("shed_busy", load(&self.stats.shed_busy));
+        sink.num("responses_4xx", load(&self.stats.responses_4xx));
+        sink.num("responses_5xx", load(&self.stats.responses_5xx));
+        let lat = *relock(&self.stats.latency);
+        for (i, name) in ENDPOINTS.iter().enumerate() {
+            sink.num(&format!("lat_{name}_count"), lat[i].count as f64);
+            sink.num(&format!("lat_{name}_mean_s"), lat[i].mean_s());
+            sink.num(&format!("lat_{name}_max_s"), lat[i].max_s);
+        }
+        sink.render()
+    }
+}
+
+/// Render the documented wire error body: `{"error": ..., "kind": ...}`.
+fn error_body(msg: &str, kind: ErrorKind) -> String {
+    let mut sink = JsonSink::new();
+    sink.text("error", msg);
+    sink.text("kind", kind.as_str());
+    sink.render()
+}
+
+/// A tiny blocking SDK client for a [`Server`]: keep-alive with one
+/// transparent reconnect (idle connections may be dropped by the server
+/// between requests).
+pub struct ServeClient {
+    addr: SocketAddr,
+    conn: Option<BufReader<TcpStream>>,
+}
+
+/// Largest response body the client accepts (owners arrays scale with
+/// `|E|`, so this is deliberately roomy).
+const CLIENT_MAX_BODY: usize = 256 << 20;
+
+impl ServeClient {
+    /// A client for the server at `addr`. Connects lazily on the first
+    /// request.
+    pub fn connect(addr: SocketAddr) -> ServeClient {
+        ServeClient { addr, conn: None }
+    }
+
+    /// One request/response exchange: `(status, body)`. Reconnects and
+    /// retries once if the pooled connection died.
+    pub fn request(&mut self, method: &str, target: &str, body: &[u8]) -> Result<(u16, String)> {
+        let mut last_err: Option<String> = None;
+        for _attempt in 0..2 {
+            if self.conn.is_none() {
+                let stream = TcpStream::connect(self.addr).map_err(|e| {
+                    anyhow!("connect {}: {e}", self.addr).with_kind(ErrorKind::Io)
+                })?;
+                let _ = stream.set_nodelay(true);
+                self.conn = Some(BufReader::new(stream));
+            }
+            match self.exchange(method, target, body) {
+                Ok(out) => return Ok(out),
+                Err(e) => {
+                    // drop the dead connection; retry once on a fresh one
+                    self.conn = None;
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(anyhow!(
+            "request {method} {target} failed: {}",
+            last_err.unwrap_or_default()
+        )
+        .with_kind(ErrorKind::Io))
+    }
+
+    fn exchange(
+        &mut self,
+        method: &str,
+        target: &str,
+        body: &[u8],
+    ) -> std::result::Result<(u16, String), String> {
+        let conn = self.conn.as_mut().expect("connection established");
+        http::write_request(conn.get_mut(), method, target, body).map_err(|e| e.to_string())?;
+        let (status, bytes) = http::read_response(conn, CLIENT_MAX_BODY)
+            .map_err(|e| e.to_string())?;
+        Ok((status, String::from_utf8_lossy(&bytes).into_owned()))
+    }
+
+    /// `GET` a path.
+    pub fn get(&mut self, target: &str) -> Result<(u16, String)> {
+        self.request("GET", target, b"")
+    }
+
+    /// `POST /partition` and parse the report. Non-200 answers become
+    /// errors carrying the server's machine-readable kind. With
+    /// `owners`, the report includes the bit-exact ownership vector.
+    pub fn partition(&mut self, req: &PartitionRequest, owners: bool) -> Result<RunReport> {
+        let target = if owners { "/partition?owners=1" } else { "/partition" };
+        let (status, body) = self.request("POST", target, req.to_json().as_bytes())?;
+        if status != 200 {
+            let (msg, kind) = parse_error_body(&body);
+            return Err(anyhow!("server answered {status}: {msg}").with_kind(kind));
+        }
+        RunReport::from_json(&body)
+    }
+}
+
+/// Best-effort parse of a wire error body back into `(message, kind)`.
+fn parse_error_body(body: &str) -> (String, ErrorKind) {
+    let Ok(doc) = crate::util::json::parse(body) else {
+        return (body.trim().to_string(), ErrorKind::Internal);
+    };
+    let msg = doc.get("error").and_then(|v| v.as_str()).unwrap_or("").to_string();
+    let kind = doc
+        .get("kind")
+        .and_then(|v| v.as_str())
+        .and_then(ErrorKind::parse)
+        .unwrap_or(ErrorKind::Internal);
+    (msg, kind)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The exhaustive kind → status table documented in DESIGN.md
+    /// "Serving layer". Walking `ALL` keeps this test honest when a new
+    /// kind is added: the match in `status_for` must be extended, and so
+    /// must this table.
+    #[test]
+    fn kind_status_table_is_exhaustive_and_documented() {
+        let documented = [
+            (ErrorKind::InvalidSpec, 400),
+            (ErrorKind::InvalidRequest, 400),
+            (ErrorKind::DatasetNotFound, 404),
+            (ErrorKind::Busy, 429),
+            (ErrorKind::Overloaded, 503),
+            (ErrorKind::Io, 500),
+            (ErrorKind::Internal, 500),
+        ];
+        assert_eq!(documented.len(), ErrorKind::ALL.len());
+        for (kind, status) in documented {
+            assert_eq!(status_for(kind), status, "{kind:?}");
+            // every status in the table has a real reason phrase
+            assert_ne!(http::status_text(status), "Unknown", "{status}");
+        }
+    }
+
+    #[test]
+    fn cache_key_canonicalizes_spec_and_separates_fields() {
+        use crate::coordinator::runs::Workload;
+        let base = PartitionRequest::new("hdrf").unwrap().dataset("er:n=200,m=600").k(4).seed(7);
+        // default-elided vs explicit-default vs padded spelling collide
+        let explicit = PartitionRequest::new("hdrf:lambda=1.1")
+            .unwrap()
+            .dataset("er:n=200,m=600")
+            .k(4)
+            .seed(7);
+        assert_eq!(cache_key(&base), cache_key(&explicit));
+        // the threads override is excluded (reports are thread-invariant)
+        assert_eq!(cache_key(&base), cache_key(&base.clone().threads(8)));
+        // every other field separates
+        assert_ne!(cache_key(&base), cache_key(&base.clone().k(5)));
+        assert_ne!(cache_key(&base), cache_key(&base.clone().seed(8)));
+        assert_ne!(cache_key(&base), cache_key(&base.clone().graph_seed(9)));
+        assert_ne!(cache_key(&base), cache_key(&base.clone().dataset("er:n=201,m=600")));
+        assert_ne!(cache_key(&base), cache_key(&base.clone().gain_samples(2)));
+        assert_ne!(
+            cache_key(&base),
+            cache_key(&base.clone().workload(Workload::Sssp { source: 0 }))
+        );
+        // a real parameter override separates
+        let tuned = PartitionRequest::new("hdrf:lambda=1.5")
+            .unwrap()
+            .dataset("er:n=200,m=600")
+            .k(4)
+            .seed(7);
+        assert_ne!(cache_key(&base), cache_key(&tuned));
+    }
+
+    #[test]
+    fn error_body_round_trips_kind() {
+        let body = error_body("no such dataset", ErrorKind::DatasetNotFound);
+        let (msg, kind) = parse_error_body(&body);
+        assert_eq!(msg, "no such dataset");
+        assert_eq!(kind, ErrorKind::DatasetNotFound);
+        let (_msg, kind) = parse_error_body("total garbage");
+        assert_eq!(kind, ErrorKind::Internal);
+    }
+}

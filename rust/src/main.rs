@@ -13,6 +13,7 @@
 //!   repro sssp --graph usroads@0.05 --k 8 --source 0
 //!   repro cluster --graph dblp@0.1 --nodes 2,4,8,16
 //!   repro stats --graph wordnet@0.1
+//!   repro serve --addr 127.0.0.1:7411 --workers 4
 //!   repro xla-info
 //!   repro xla-partition --graph er:n=500,m=1500 --k 8
 
@@ -58,6 +59,13 @@ COMMANDS
               --graph SPEC --k N --nodes 2,4,8,16 --seed S
   stats       print the Table II/III row for a graph
               --graph SPEC [--seed S]
+  serve       partitioning-as-a-service: long-running HTTP/1.1 server
+              answering PartitionRequest JSON on POST /partition, with a
+              single-flight result cache and bounded-load shedding
+              (see DESIGN.md \"Serving layer\")
+              [--addr HOST:PORT] [--workers N] [--max-body BYTES]
+              [--max-queue N] [--max-compute N] [--timeout SECS]
+              [--cache N] [--graphs N]
   xla-info    show the PJRT platform and the AOT artifact manifest
   xla-partition  run DFEP with XLA-offloaded funding rounds
               --graph SPEC --k N --seed S [--artifacts DIR]
@@ -91,6 +99,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "faults" => cmd_faults(&args),
         "cluster" => cmd_cluster(&args),
         "stats" => cmd_stats(&args),
+        "serve" => cmd_serve(&args),
         "xla-info" => cmd_xla_info(&args),
         "xla-partition" => cmd_xla_partition(&args),
         "help" | "-h" | "--help" => {
@@ -110,22 +119,19 @@ fn graph_arg(args: &Args) -> Result<dfep::graph::Graph> {
 
 /// Build the facade request shared by `partition` / `sssp` / `etsch`.
 fn request_arg(args: &Args, default_k: usize) -> Result<PartitionRequest> {
-    Ok(PartitionRequest {
-        spec: PartitionerSpec::parse(args.get_or("algo", "dfep"))?,
-        dataset: args
-            .get("graph")
-            .ok_or_else(|| anyhow!("--graph is required"))?
-            .to_string(),
-        k: args.get_usize("k", default_k)?,
-        seed: args.get_u64("seed", 1)?,
-        graph_seed: args.get_u64("graph-seed", 42)?,
-        gain_samples: args.get_usize("gain-samples", 0)?,
-        threads: match args.get("threads") {
-            Some(_) => Some(args.get_usize("threads", 1)?),
-            None => None,
-        },
-        workload: None,
-    })
+    let mut req = PartitionRequest::new(args.get_or("algo", "dfep"))?
+        .dataset(
+            args.get("graph")
+                .ok_or_else(|| anyhow!("--graph is required"))?,
+        )
+        .k(args.get_usize("k", default_k)?)
+        .seed(args.get_u64("seed", 1)?)
+        .graph_seed(args.get_u64("graph-seed", 42)?)
+        .gain_samples(args.get_usize("gain-samples", 0)?);
+    if args.get("threads").is_some() {
+        req = req.threads(args.get_usize("threads", 1)?);
+    }
+    Ok(req)
 }
 
 fn print_report(r: &RunReport) {
@@ -469,6 +475,26 @@ fn cmd_stats(args: &Args) -> Result<()> {
     println!("avg degree  {:.2}", s.avg_degree);
     println!("max degree  {}", s.max_degree);
     println!("components  {}", s.components);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use dfep::coordinator::serve::{ServeConfig, Server};
+    let d = ServeConfig::default();
+    let cfg = ServeConfig {
+        addr: args.get_or("addr", &d.addr).to_string(),
+        workers: args.get_usize("workers", d.workers)?.max(1),
+        max_body_bytes: args.get_usize("max-body", d.max_body_bytes)?,
+        max_queue: args.get_usize("max-queue", d.max_queue)?,
+        max_compute: args.get_usize("max-compute", d.max_compute)?,
+        request_timeout_s: args.get_f64("timeout", d.request_timeout_s)?,
+        cache_capacity: args.get_usize("cache", d.cache_capacity)?,
+        graph_capacity: args.get_usize("graphs", d.graph_capacity)?,
+    };
+    let server = Server::bind(cfg)?;
+    println!("repro serve listening on http://{}", server.addr());
+    println!("  POST /partition  GET /healthz  GET /stats  (ctrl-c stops)");
+    server.serve();
     Ok(())
 }
 

@@ -39,7 +39,7 @@ use std::fmt;
 use std::str::FromStr;
 
 use crate::anyhow;
-use crate::util::error::{Error, Result};
+use crate::util::error::{Error, ErrorKind, Result};
 
 use super::registry::{self, AlgoEntry, ParamKind};
 use super::Partitioner;
@@ -56,8 +56,13 @@ pub struct PartitionerSpec {
 
 impl PartitionerSpec {
     /// Parse `name[:key=val,...]`; every error message is documented in
-    /// the [module docs](self).
+    /// the [module docs](self). All errors carry
+    /// [`ErrorKind::InvalidSpec`].
     pub fn parse(s: &str) -> Result<PartitionerSpec> {
+        Self::parse_inner(s).map_err(|e| e.with_kind(ErrorKind::InvalidSpec))
+    }
+
+    fn parse_inner(s: &str) -> Result<PartitionerSpec> {
         let s = s.trim();
         let (name, params) = match s.split_once(':') {
             Some((n, p)) => (n.trim(), Some(p)),
@@ -121,6 +126,56 @@ impl PartitionerSpec {
     /// The `key=val` overrides, in input order.
     pub fn overrides(&self) -> &[(String, String)] {
         &self.overrides
+    }
+
+    /// The fully-elaborated canonical form: the registry name plus
+    /// *every* parameter in registry order at its effective value
+    /// (override if present, default otherwise). Unlike [`fmt::Display`]
+    /// — which echoes only the explicit overrides, in input order — this
+    /// form is identical for every spelling of the same configuration:
+    /// `hdrf`, `HDRF:`, and `hdrf:lambda=1.1` (the default λ) all
+    /// canonicalize to `hdrf:lambda=1.1,epsilon=1,group=1024,chunk=4096`.
+    /// The serving layer's result cache keys on this string.
+    pub fn canonical(&self) -> String {
+        let entry = self.algo();
+        if entry.params.is_empty() {
+            return entry.name.to_string();
+        }
+        let cells: Vec<String> = entry
+            .params
+            .iter()
+            .map(|p| {
+                let v = self
+                    .overrides
+                    .iter()
+                    .find(|(k, _)| k == p.key)
+                    .map(|(_, v)| v.clone())
+                    .unwrap_or_else(|| canonical_default(p));
+                format!("{}={v}", p.key)
+            })
+            .collect();
+        format!("{}:{}", entry.name, cells.join(","))
+    }
+}
+
+/// Render a parameter's default through the same canonicalization as
+/// explicit values (`"1.50"` would become `"1.5"`), so defaults and
+/// default-valued overrides compare equal in [`PartitionerSpec::canonical`].
+fn canonical_default(p: &super::registry::ParamSpec) -> String {
+    match p.kind {
+        ParamKind::Float => {
+            let v: f64 = p.default.parse().expect("registry default parses");
+            format!("{v}")
+        }
+        ParamKind::Int => {
+            let v: usize = p.default.parse().expect("registry default parses");
+            format!("{v}")
+        }
+        ParamKind::Bool => {
+            let v = super::registry::parse_bool(p.default)
+                .expect("registry default parses");
+            format!("{v}")
+        }
     }
 }
 
@@ -279,6 +334,45 @@ mod tests {
             "fennel: parameter 'shuffle': expected a bool (true|false|1|0), \
              got 'maybe'"
         );
+    }
+
+    #[test]
+    fn canonical_elaborates_defaults_and_collides_spellings() {
+        // the default-elided / alias / explicit-default spellings of one
+        // configuration share a single canonical form (the serving
+        // layer's cache-key regression: DESIGN.md "Serving layer")
+        let bare = PartitionerSpec::parse("hdrf").unwrap();
+        let explicit = PartitionerSpec::parse("hdrf:lambda=1.1").unwrap();
+        assert_ne!(bare.to_string(), explicit.to_string());
+        assert_eq!(bare.canonical(), explicit.canonical());
+        assert_eq!(
+            bare.canonical(),
+            "hdrf:lambda=1.1,epsilon=1,group=1024,chunk=4096"
+        );
+        // a real override shows up in canonical form
+        let tuned = PartitionerSpec::parse("hdrf:lambda=1.5").unwrap();
+        assert_ne!(tuned.canonical(), bare.canonical());
+        // value canonicalization applies ("1.10" == default 1.1)
+        let padded = PartitionerSpec::parse("hdrf:lambda=1.10").unwrap();
+        assert_eq!(padded.canonical(), bare.canonical());
+        // aliases collide with their registry name
+        for e in registry::all() {
+            let c = default_spec(e).canonical();
+            for a in e.aliases {
+                assert_eq!(PartitionerSpec::parse(a).unwrap().canonical(), c);
+            }
+            // canonical form is itself a parsable spec that round-trips
+            let re = PartitionerSpec::parse(&c).unwrap();
+            assert_eq!(re.canonical(), c, "{}", e.name);
+        }
+    }
+
+    #[test]
+    fn parse_errors_carry_invalid_spec_kind() {
+        for s in ["nosuch", "hdrf:lambda=abc", "hdrf:nope=3", "dfep:cap"] {
+            let e = PartitionerSpec::parse(s).unwrap_err();
+            assert_eq!(e.kind(), ErrorKind::InvalidSpec, "{s}");
+        }
     }
 
     #[test]

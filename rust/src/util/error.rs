@@ -5,20 +5,96 @@
 //! [`Error`], a defaulted [`Result`] alias, the [`anyhow!`](crate::anyhow)
 //! and [`bail!`](crate::bail) macros, and a [`Context`] extension trait
 //! for `Result` and `Option`.
+//!
+//! Errors additionally carry a stable machine-readable [`ErrorKind`] so
+//! remote callers (the serving layer) can dispatch without parsing the
+//! human-readable message. Plain `anyhow!` errors are
+//! [`ErrorKind::Internal`]; producers that know better tag with
+//! [`Error::with_kind`]. The kind survives plain `?` propagation but is
+//! deliberately reset to `Internal` by [`Context`] wrapping (a wrapped
+//! error describes a new, composite failure).
 
 use std::fmt;
+
+/// Stable machine-readable classification of an [`Error`] — the part a
+/// remote caller can dispatch on. The serving layer maps kinds to HTTP
+/// statuses (see DESIGN.md "Serving layer"); the message stays free-form
+/// and undocumented, the kind is API.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ErrorKind {
+    /// A partitioner spec failed to parse or validate
+    /// (`hdrf:lambda=abc`).
+    InvalidSpec,
+    /// A request was malformed outside the spec field: bad JSON, an
+    /// unknown field, an out-of-range value, a bad generator argument.
+    InvalidRequest,
+    /// The named dataset / graph spec does not resolve to a graph.
+    DatasetNotFound,
+    /// Too many distinct computations in flight; retry later.
+    Busy,
+    /// The server shed the request (queue full or deadline exceeded).
+    Overloaded,
+    /// An operating-system I/O failure (bind, accept, read, write).
+    Io,
+    /// Anything unclassified — the default for plain `anyhow!` errors.
+    Internal,
+}
+
+impl ErrorKind {
+    /// Every kind, in declaration order (for exhaustive table tests).
+    pub const ALL: [ErrorKind; 7] = [
+        ErrorKind::InvalidSpec,
+        ErrorKind::InvalidRequest,
+        ErrorKind::DatasetNotFound,
+        ErrorKind::Busy,
+        ErrorKind::Overloaded,
+        ErrorKind::Io,
+        ErrorKind::Internal,
+    ];
+
+    /// Inverse of [`as_str`](Self::as_str): recover a kind from its wire
+    /// label (`None` for labels this crate version does not know).
+    pub fn parse(s: &str) -> Option<ErrorKind> {
+        ErrorKind::ALL.iter().copied().find(|k| k.as_str() == s)
+    }
+
+    /// Stable snake_case label — the `"kind"` field of wire errors.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            ErrorKind::InvalidSpec => "invalid_spec",
+            ErrorKind::InvalidRequest => "invalid_request",
+            ErrorKind::DatasetNotFound => "dataset_not_found",
+            ErrorKind::Busy => "busy",
+            ErrorKind::Overloaded => "overloaded",
+            ErrorKind::Io => "io",
+            ErrorKind::Internal => "internal",
+        }
+    }
+}
 
 /// A string-backed error. Context wraps are flattened into the message at
 /// attachment time (`"<context>: <cause>"`), which is all the callers in
 /// this crate need.
 pub struct Error {
     msg: String,
+    kind: ErrorKind,
 }
 
 impl Error {
-    /// Construct from any message.
+    /// Construct from any message (kind [`ErrorKind::Internal`]).
     pub fn msg(msg: impl Into<String>) -> Error {
-        Error { msg: msg.into() }
+        Error { msg: msg.into(), kind: ErrorKind::Internal }
+    }
+
+    /// Tag with a machine-readable kind (builder-style).
+    pub fn with_kind(mut self, kind: ErrorKind) -> Error {
+        self.kind = kind;
+        self
+    }
+
+    /// The machine-readable kind.
+    pub fn kind(&self) -> ErrorKind {
+        self.kind
     }
 }
 
@@ -132,6 +208,34 @@ mod tests {
         }
         assert_eq!(parse("12").unwrap(), 12);
         assert!(parse("nope").is_err());
+    }
+
+    #[test]
+    fn kinds_default_tag_and_label() {
+        // plain construction is Internal; with_kind retags
+        assert_eq!(fails().unwrap_err().kind(), ErrorKind::Internal);
+        let e = Error::msg("nope").with_kind(ErrorKind::DatasetNotFound);
+        assert_eq!(e.kind(), ErrorKind::DatasetNotFound);
+        assert_eq!(e.to_string(), "nope");
+        // `?` conversion from std errors stays Internal
+        fn conv() -> Result<u32> {
+            Ok("nope".parse::<u32>()?)
+        }
+        assert_eq!(conv().unwrap_err().kind(), ErrorKind::Internal);
+        // labels are distinct and snake_case-stable
+        let labels: std::collections::HashSet<_> =
+            ErrorKind::ALL.iter().map(|k| k.as_str()).collect();
+        assert_eq!(labels.len(), ErrorKind::ALL.len());
+        assert_eq!(ErrorKind::InvalidSpec.as_str(), "invalid_spec");
+    }
+
+    #[test]
+    fn context_resets_kind_to_internal() {
+        let r: Result<u32> =
+            Err(Error::msg("x").with_kind(ErrorKind::InvalidSpec));
+        let e = r.context("wrapping").unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::Internal);
+        assert_eq!(e.to_string(), "wrapping: x");
     }
 
     #[test]

@@ -1,0 +1,404 @@
+//! Hand-rolled HTTP/1.1 wire helpers for the serving layer.
+//!
+//! The vendored crate set has no `hyper`/`tiny_http`, and the server
+//! (DESIGN.md "Serving layer") needs only a narrow, bounded subset:
+//! `Content-Length`-framed requests and responses over keep-alive
+//! connections. Everything here is generic over [`BufRead`]/[`Write`] so
+//! the framing is unit-tested against in-memory cursors, with the real
+//! `TcpStream`s supplied by `coordinator::serve`.
+//!
+//! Bounds enforced at the wire (the shedding story depends on them):
+//! the request line + headers must fit in [`MAX_HEAD_BYTES`], and a
+//! declared `Content-Length` above the caller's `max_body` limit is
+//! rejected *before* any body byte is read ([`WireError::TooLarge`] —
+//! the server answers 413 and closes the connection, since the unread
+//! body would garble the next request).
+
+use std::fmt;
+use std::io::{BufRead, Read, Write};
+
+/// Upper bound on request line + headers, total bytes.
+pub const MAX_HEAD_BYTES: usize = 8 * 1024;
+
+/// One parsed request: method, split target, framed body.
+#[derive(Clone, Debug)]
+pub struct Request {
+    /// Uppercase method (`GET`, `POST`, ...) as sent.
+    pub method: String,
+    /// Path component of the target (`/partition`), query stripped.
+    pub path: String,
+    /// Raw query string after `?` (empty when absent).
+    pub query: String,
+    /// The request body (empty without `Content-Length`).
+    pub body: Vec<u8>,
+    /// Whether the client asked to keep the connection open (HTTP/1.1
+    /// default, overridden by `Connection: close`).
+    pub keep_alive: bool,
+}
+
+impl Request {
+    /// True when the query string contains `key`, `key=1` or `key=true`
+    /// (the only query syntax the server supports).
+    pub fn query_flag(&self, key: &str) -> bool {
+        self.query.split('&').any(|kv| {
+            kv == key
+                || kv.strip_prefix(key).and_then(|r| r.strip_prefix('='))
+                    == Some("1")
+                || kv.strip_prefix(key).and_then(|r| r.strip_prefix('='))
+                    == Some("true")
+        })
+    }
+}
+
+/// What went wrong reading one request/response from the wire.
+#[derive(Debug)]
+pub enum WireError {
+    /// Declared body exceeds the caller's limit, or the head exceeds
+    /// [`MAX_HEAD_BYTES`]. The server answers 413 and closes.
+    TooLarge,
+    /// The bytes are not the HTTP subset this module speaks. The server
+    /// answers 400 and closes.
+    Malformed(String),
+    /// The underlying transport failed (includes read timeouts). The
+    /// server drops the connection silently.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for WireError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WireError::TooLarge => f.write_str("request too large"),
+            WireError::Malformed(m) => write!(f, "malformed request: {m}"),
+            WireError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> WireError {
+        WireError::Io(e)
+    }
+}
+
+/// Read one CRLF-terminated line, counting its bytes against `budget`.
+fn read_line(
+    r: &mut impl BufRead,
+    budget: &mut usize,
+) -> Result<Option<String>, WireError> {
+    let mut line = String::new();
+    let n = r.read_line(&mut line)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    if n > *budget {
+        return Err(WireError::TooLarge);
+    }
+    *budget -= n;
+    if !line.ends_with('\n') {
+        return Err(WireError::Malformed("truncated line".into()));
+    }
+    while line.ends_with('\n') || line.ends_with('\r') {
+        line.pop();
+    }
+    Ok(Some(line))
+}
+
+/// Read one request. `Ok(None)` is a clean EOF *before* the request line
+/// (the peer closed an idle keep-alive connection); EOF mid-request is
+/// [`WireError::Malformed`].
+pub fn read_request(
+    r: &mut impl BufRead,
+    max_body: usize,
+) -> Result<Option<Request>, WireError> {
+    let mut budget = MAX_HEAD_BYTES;
+    let Some(start) = read_line(r, &mut budget)? else {
+        return Ok(None);
+    };
+    let mut parts = start.split_whitespace();
+    let (method, target, version) =
+        match (parts.next(), parts.next(), parts.next(), parts.next()) {
+            (Some(m), Some(t), Some(v), None) => (m, t, v),
+            _ => {
+                return Err(WireError::Malformed(format!(
+                    "bad request line '{start}'"
+                )))
+            }
+        };
+    if !version.starts_with("HTTP/1.") {
+        return Err(WireError::Malformed(format!(
+            "unsupported version '{version}'"
+        )));
+    }
+    let mut keep_alive = version != "HTTP/1.0";
+    let mut content_length = 0usize;
+    loop {
+        let Some(line) = read_line(r, &mut budget)? else {
+            return Err(WireError::Malformed("eof in headers".into()));
+        };
+        if line.is_empty() {
+            break;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(WireError::Malformed(format!("bad header '{line}'")));
+        };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        match name.as_str() {
+            "content-length" => {
+                content_length = value.parse().map_err(|_| {
+                    WireError::Malformed(format!(
+                        "bad content-length '{value}'"
+                    ))
+                })?;
+            }
+            "connection" => {
+                let v = value.to_ascii_lowercase();
+                if v.contains("close") {
+                    keep_alive = false;
+                } else if v.contains("keep-alive") {
+                    keep_alive = true;
+                }
+            }
+            // transfer-encoding (chunked bodies) is out of scope; a
+            // client using it would declare no content-length and the
+            // chunk header would fail the next request-line parse
+            _ => {}
+        }
+    }
+    if content_length > max_body {
+        return Err(WireError::TooLarge);
+    }
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body)
+        .map_err(|_| WireError::Malformed("eof in body".into()))?;
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
+    Ok(Some(Request {
+        method: method.to_string(),
+        path,
+        query,
+        body,
+        keep_alive,
+    }))
+}
+
+/// The reason phrase for the status codes the server emits.
+pub fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
+    }
+}
+
+/// Write one `Content-Length`-framed response and flush.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let head = format!(
+        "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\n\
+         Content-Length: {}\r\nConnection: {}\r\n\r\n",
+        status_text(status),
+        body.len(),
+        if keep_alive { "keep-alive" } else { "close" },
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Client side: write one framed request and flush.
+pub fn write_request(
+    w: &mut impl Write,
+    method: &str,
+    target: &str,
+    body: &[u8],
+) -> std::io::Result<()> {
+    let head = format!(
+        "{method} {target} HTTP/1.1\r\nHost: repro\r\n\
+         Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+        body.len(),
+    );
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Client side: read one response, returning `(status, body)`. `max_body`
+/// bounds the accepted `Content-Length` like [`read_request`].
+pub fn read_response(
+    r: &mut impl BufRead,
+    max_body: usize,
+) -> Result<(u16, Vec<u8>), WireError> {
+    let mut budget = MAX_HEAD_BYTES;
+    let Some(start) = read_line(r, &mut budget)? else {
+        return Err(WireError::Malformed("eof before status line".into()));
+    };
+    let mut parts = start.split_whitespace();
+    let status: u16 = match (parts.next(), parts.next()) {
+        (Some(v), Some(code)) if v.starts_with("HTTP/1.") => {
+            code.parse().map_err(|_| {
+                WireError::Malformed(format!("bad status line '{start}'"))
+            })?
+        }
+        _ => {
+            return Err(WireError::Malformed(format!(
+                "bad status line '{start}'"
+            )))
+        }
+    };
+    let mut content_length = 0usize;
+    loop {
+        let Some(line) = read_line(r, &mut budget)? else {
+            return Err(WireError::Malformed("eof in headers".into()));
+        };
+        if line.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            if name.trim().eq_ignore_ascii_case("content-length") {
+                content_length = value.trim().parse().map_err(|_| {
+                    WireError::Malformed(format!(
+                        "bad content-length '{}'",
+                        value.trim()
+                    ))
+                })?;
+            }
+        }
+    }
+    if content_length > max_body {
+        return Err(WireError::TooLarge);
+    }
+    let mut body = vec![0u8; content_length];
+    r.read_exact(&mut body)
+        .map_err(|_| WireError::Malformed("eof in body".into()))?;
+    Ok((status, body))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn req(text: &str) -> Result<Option<Request>, WireError> {
+        read_request(&mut Cursor::new(text.as_bytes().to_vec()), 1024)
+    }
+
+    #[test]
+    fn parses_post_with_body_and_query() {
+        let r = req(
+            "POST /partition?owners=1 HTTP/1.1\r\nHost: x\r\n\
+             Content-Length: 4\r\n\r\nabcd",
+        )
+        .unwrap()
+        .unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/partition");
+        assert_eq!(r.query, "owners=1");
+        assert_eq!(r.body, b"abcd");
+        assert!(r.keep_alive);
+        assert!(r.query_flag("owners"));
+        assert!(!r.query_flag("other"));
+    }
+
+    #[test]
+    fn keep_alive_defaults_and_overrides() {
+        let r = req("GET /healthz HTTP/1.1\r\n\r\n").unwrap().unwrap();
+        assert!(r.keep_alive);
+        assert!(r.body.is_empty());
+        let r = req("GET / HTTP/1.1\r\nConnection: close\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(!r.keep_alive);
+        let r = req("GET / HTTP/1.0\r\n\r\n").unwrap().unwrap();
+        assert!(!r.keep_alive);
+        let r = req("GET / HTTP/1.0\r\nConnection: keep-alive\r\n\r\n")
+            .unwrap()
+            .unwrap();
+        assert!(r.keep_alive);
+    }
+
+    #[test]
+    fn clean_eof_vs_malformed() {
+        assert!(req("").unwrap().is_none());
+        assert!(matches!(req("GARBAGE\r\n\r\n"), Err(WireError::Malformed(_))));
+        assert!(matches!(
+            req("GET / HTTP/1.1\r\nContent-Length: 9\r\n\r\nshort"),
+            Err(WireError::Malformed(_))
+        ));
+        assert!(matches!(
+            req("GET / SPDY/3\r\n\r\n"),
+            Err(WireError::Malformed(_))
+        ));
+        assert!(matches!(
+            req("GET / HTTP/1.1\r\nContent-Length: abc\r\n\r\n"),
+            Err(WireError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn oversized_body_and_head_are_too_large() {
+        // declared body over the limit fails before reading the body
+        assert!(matches!(
+            req("POST / HTTP/1.1\r\nContent-Length: 2000\r\n\r\n"),
+            Err(WireError::TooLarge)
+        ));
+        // an absurd header block trips the head budget
+        let mut text = String::from("GET / HTTP/1.1\r\n");
+        for i in 0..600 {
+            text.push_str(&format!("X-Pad-{i}: {}\r\n", "y".repeat(20)));
+        }
+        text.push_str("\r\n");
+        assert!(matches!(req(&text), Err(WireError::TooLarge)));
+    }
+
+    #[test]
+    fn response_round_trips_through_cursor() {
+        let mut wire = Vec::new();
+        write_response(&mut wire, 200, b"{\"ok\": true}", true).unwrap();
+        let (status, body) =
+            read_response(&mut Cursor::new(wire), 1024).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(body, b"{\"ok\": true}");
+        let mut wire = Vec::new();
+        write_response(&mut wire, 503, b"busy", false).unwrap();
+        let text = String::from_utf8(wire.clone()).unwrap();
+        assert!(text.starts_with("HTTP/1.1 503 Service Unavailable\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        let (status, body) =
+            read_response(&mut Cursor::new(wire), 1024).unwrap();
+        assert_eq!(status, 503);
+        assert_eq!(body, b"busy");
+    }
+
+    #[test]
+    fn request_round_trips_through_cursor() {
+        let mut wire = Vec::new();
+        write_request(&mut wire, "POST", "/partition", b"{}").unwrap();
+        let r = read_request(&mut Cursor::new(wire), 1024).unwrap().unwrap();
+        assert_eq!(r.method, "POST");
+        assert_eq!(r.path, "/partition");
+        assert_eq!(r.body, b"{}");
+        // two pipelined requests parse back-to-back
+        let mut wire = Vec::new();
+        write_request(&mut wire, "GET", "/stats", b"").unwrap();
+        write_request(&mut wire, "GET", "/healthz", b"").unwrap();
+        let mut cur = Cursor::new(wire);
+        let a = read_request(&mut cur, 1024).unwrap().unwrap();
+        let b = read_request(&mut cur, 1024).unwrap().unwrap();
+        assert_eq!(a.path, "/stats");
+        assert_eq!(b.path, "/healthz");
+        assert!(read_request(&mut cur, 1024).unwrap().is_none());
+    }
+}

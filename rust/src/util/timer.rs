@@ -24,9 +24,55 @@ pub fn time_n(warmup: usize, iters: usize, mut f: impl FnMut()) -> Vec<f64> {
         .collect()
 }
 
+/// Accumulating latency counter (count / total / max) — the per-endpoint
+/// statistic the serving layer exposes on `/stats`. Deliberately tiny:
+/// O(1) memory, no histogram; the load-generator bench derives p50/p99
+/// from its own full sample vectors instead.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LatencyStat {
+    /// Number of recorded observations.
+    pub count: usize,
+    /// Sum of observed seconds.
+    pub total_s: f64,
+    /// Largest observed seconds.
+    pub max_s: f64,
+}
+
+impl LatencyStat {
+    /// Fold in one observation.
+    pub fn record(&mut self, secs: f64) {
+        self.count += 1;
+        self.total_s += secs;
+        if secs > self.max_s {
+            self.max_s = secs;
+        }
+    }
+
+    /// Mean seconds (0.0 before any observation).
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.total_s / self.count as f64
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn latency_stat_accumulates() {
+        let mut s = LatencyStat::default();
+        assert_eq!(s.mean_s(), 0.0);
+        s.record(0.5);
+        s.record(1.5);
+        s.record(1.0);
+        assert_eq!(s.count, 3);
+        assert_eq!(s.mean_s(), 1.0);
+        assert_eq!(s.max_s, 1.5);
+    }
 
     #[test]
     fn time_returns_result() {

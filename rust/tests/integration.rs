@@ -8,7 +8,6 @@ use dfep::cluster::cost::CostModel;
 use dfep::cluster::dfep_mr::run_cluster_dfep;
 use dfep::cluster::etsch_mr::{run_baseline_sssp, run_etsch_sssp};
 use dfep::coordinator::runs::{resolve_graph, PartitionRequest};
-use dfep::partition::spec::PartitionerSpec;
 use dfep::etsch::build_subgraphs;
 use dfep::graph::{datasets, io, stats};
 use dfep::partition::{dfep::Dfep, metrics, Partitioner};
@@ -24,13 +23,11 @@ fn runtime() -> Option<Runtime> {
 fn pipeline_dataset_to_metrics() {
     let g = resolve_graph("astroph@0.03", 1).unwrap();
     for algo in ["dfep", "dfepc", "random"] {
-        let req = PartitionRequest {
-            spec: PartitionerSpec::parse(algo).unwrap(),
-            k: 10,
-            seed: 2,
-            gain_samples: 2,
-            ..Default::default()
-        };
+        let req = PartitionRequest::new(algo)
+            .unwrap()
+            .k(10)
+            .seed(2)
+            .gain_samples(2);
         let res = req.execute_on(&g).unwrap();
         res.partition.validate(&g).unwrap();
         assert!(res.metrics.largest >= 1.0);
@@ -43,14 +40,12 @@ fn pipeline_dataset_to_metrics() {
 fn dfep_beats_random_on_communication() {
     let g = resolve_graph("wordnet@0.03", 3).unwrap();
     let run = |algo: &str| {
-        PartitionRequest {
-            spec: PartitionerSpec::parse(algo).unwrap(),
-            k: 12,
-            seed: 1,
-            ..Default::default()
-        }
-        .execute_on(&g)
-        .unwrap()
+        PartitionRequest::new(algo)
+            .unwrap()
+            .k(12)
+            .seed(1)
+            .execute_on(&g)
+            .unwrap()
     };
     let d = run("dfep");
     let r = run("random");

@@ -214,20 +214,18 @@ fn facade_report_bit_identical_across_1_2_8_threads() {
     // shared view build, metric evaluation and the attached workload —
     // must be a pure function of the request for every pool width
     use dfep::coordinator::runs::{PartitionRequest, Workload};
-    use dfep::partition::spec::PartitionerSpec;
     let run = |threads: usize| {
-        PartitionRequest {
-            spec: PartitionerSpec::parse("dfep").unwrap(),
-            dataset: "plc:n=2000,m=5,p=0.3".to_string(),
-            k: 8,
-            seed: 4,
-            graph_seed: 8,
-            gain_samples: 2,
-            threads: Some(threads),
-            workload: Some(Workload::Sssp { source: 0 }),
-        }
-        .execute()
-        .unwrap()
+        PartitionRequest::new("dfep")
+            .unwrap()
+            .dataset("plc:n=2000,m=5,p=0.3")
+            .k(8)
+            .seed(4)
+            .graph_seed(8)
+            .gain_samples(2)
+            .threads(threads)
+            .workload(Workload::Sssp { source: 0 })
+            .execute()
+            .unwrap()
     };
     let base = run(1);
     for threads in [2usize, 8] {

@@ -1,0 +1,193 @@
+//! Serving-layer integration tests: a real `Server` on an ephemeral
+//! loopback port, hammered by real `ServeClient`s over TCP.
+//!
+//! The load-bearing assertions:
+//! - served reports are *bit-identical* to a direct in-process
+//!   `PartitionRequest::execute` (owners vector and float metrics);
+//! - concurrent identical requests are single-flight — the `/stats`
+//!   `computations` probe counter equals the number of distinct cache
+//!   keys, not the number of requests;
+//! - spelling variants of one spec (`hdrf` vs `hdrf:lambda=1.1`) share
+//!   one cache entry (canonical-form keys);
+//! - every documented error class answers its documented status code
+//!   and machine-readable kind.
+
+use dfep::coordinator::runs::PartitionRequest;
+use dfep::coordinator::serve::{ServeClient, ServeConfig, Server};
+use dfep::util::error::ErrorKind;
+
+/// Spawn a server on an ephemeral port with a small body limit (keeps
+/// the oversized-request test cheap).
+fn spawn() -> dfep::coordinator::serve::ServeHandle {
+    Server::spawn(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 4,
+        max_body_bytes: 4096,
+        ..Default::default()
+    })
+    .unwrap()
+}
+
+fn stat(client: &mut ServeClient, key: &str) -> f64 {
+    let (status, body) = client.get("/stats").unwrap();
+    assert_eq!(status, 200, "{body}");
+    dfep::util::json::parse(&body)
+        .unwrap()
+        .get(key)
+        .unwrap_or_else(|| panic!("no '{key}' in {body}"))
+        .as_f64()
+        .unwrap()
+}
+
+fn kind_of(body: &str) -> String {
+    dfep::util::json::parse(body)
+        .unwrap()
+        .get("kind")
+        .and_then(|v| v.as_str().map(str::to_string))
+        .unwrap_or_else(|| panic!("no 'kind' in {body}"))
+}
+
+#[test]
+fn healthz_stats_and_routing_on_one_keep_alive_connection() {
+    let server = spawn();
+    let mut c = ServeClient::connect(server.addr());
+    // several requests ride one connection (keep-alive)
+    let (status, body) = c.get("/healthz").unwrap();
+    assert_eq!(status, 200);
+    assert!(body.contains("true"), "{body}");
+    let (status, _body) = c.get("/healthz").unwrap();
+    assert_eq!(status, 200);
+    // unknown path
+    let (status, body) = c.get("/nope").unwrap();
+    assert_eq!(status, 404);
+    assert_eq!(kind_of(&body), "invalid_request");
+    // wrong method on a real endpoint
+    let (status, body) = c.request("GET", "/partition", b"").unwrap();
+    assert_eq!(status, 405);
+    assert_eq!(kind_of(&body), "invalid_request");
+    // stats counted all of the above
+    assert!(stat(&mut c, "requests_total") >= 4.0);
+    assert_eq!(stat(&mut c, "computations"), 0.0);
+}
+
+#[test]
+fn served_report_is_bit_identical_to_direct_execution() {
+    let server = spawn();
+    let req = PartitionRequest::new("dfep").unwrap().dataset("er:n=300,m=900").k(6).seed(3);
+    let direct = req.execute().unwrap();
+    let mut c = ServeClient::connect(server.addr());
+    let served = c.partition(&req, true).unwrap();
+    assert_eq!(served.partition.owner, direct.partition.owner);
+    assert_eq!(served.spec, direct.spec);
+    assert_eq!(served.dataset, direct.dataset);
+    assert_eq!(served.vertices, direct.vertices);
+    assert_eq!(served.edges, direct.edges);
+    assert_eq!(served.metrics.nstdev.to_bits(), direct.metrics.nstdev.to_bits());
+    assert_eq!(served.metrics.largest.to_bits(), direct.metrics.largest.to_bits());
+    assert_eq!(served.metrics.messages, direct.metrics.messages);
+    assert_eq!(served.metrics.rounds, direct.metrics.rounds);
+    // the repeat is a cache hit, not a second computation
+    let again = c.partition(&req, true).unwrap();
+    assert_eq!(again.partition.owner, direct.partition.owner);
+    assert_eq!(stat(&mut c, "computations"), 1.0);
+    assert!(stat(&mut c, "cache_hits") >= 1.0);
+}
+
+#[test]
+fn concurrent_identical_and_broken_requests_single_flight() {
+    let server = spawn();
+    let addr = server.addr();
+    let req = PartitionRequest::new("dfep").unwrap().dataset("er:n=400,m=1200").k(8).seed(11);
+    let owners: Vec<Vec<u32>> = std::thread::scope(|s| {
+        let mut valid = Vec::new();
+        let mut broken = Vec::new();
+        for i in 0..12usize {
+            let req = &req;
+            match i % 3 {
+                0 => valid.push(s.spawn(move || {
+                    let mut c = ServeClient::connect(addr);
+                    c.partition(req, true).unwrap().partition.owner
+                })),
+                1 => broken.push(s.spawn(move || {
+                    // malformed JSON: 400 invalid_request, and never
+                    // reaches the computation path
+                    let mut c = ServeClient::connect(addr);
+                    let (status, body) = c.request("POST", "/partition", b"{ not json").unwrap();
+                    assert_eq!(status, 400, "{body}");
+                    assert_eq!(kind_of(&body), "invalid_request");
+                })),
+                _ => broken.push(s.spawn(move || {
+                    // body over the server's limit: 413 at the wire
+                    let mut c = ServeClient::connect(addr);
+                    let big = vec![b'x'; 8192];
+                    let (status, body) = c.request("POST", "/partition", &big).unwrap();
+                    assert_eq!(status, 413, "{body}");
+                    assert_eq!(kind_of(&body), "invalid_request");
+                })),
+            }
+        }
+        for t in broken {
+            t.join().unwrap();
+        }
+        valid.into_iter().map(|t| t.join().unwrap()).collect()
+    });
+    // all concurrent identical requests saw the same owners...
+    for o in &owners[1..] {
+        assert_eq!(o, &owners[0]);
+    }
+    // ...served by exactly ONE computation (single flight): the probe
+    // counter equals the distinct-key count
+    let mut c = ServeClient::connect(addr);
+    assert_eq!(stat(&mut c, "computations"), 1.0);
+    // >= because the client SDK may retry a shed request once
+    assert!(stat(&mut c, "shed_body_too_large") >= 4.0);
+    assert_eq!(stat(&mut c, "computations_in_flight"), 0.0);
+}
+
+#[test]
+fn spelling_variants_share_one_cache_entry() {
+    let server = spawn();
+    let mut c = ServeClient::connect(server.addr());
+    let run = |c: &mut ServeClient, spec: &str| {
+        let req = PartitionRequest::new(spec).unwrap().dataset("er:n=200,m=600").k(4).seed(7);
+        c.partition(&req, false).unwrap()
+    };
+    let a = run(&mut c, "hdrf");
+    // explicit-default and padded spellings hit the same entry
+    let b = run(&mut c, "hdrf:lambda=1.1");
+    let d = run(&mut c, "hdrf:lambda=1.10");
+    assert_eq!(a.metrics.nstdev.to_bits(), b.metrics.nstdev.to_bits());
+    assert_eq!(a.metrics.nstdev.to_bits(), d.metrics.nstdev.to_bits());
+    assert_eq!(stat(&mut c, "computations"), 1.0);
+    assert_eq!(stat(&mut c, "cache_hits"), 2.0);
+    // a real parameter change is a different key
+    let _ = run(&mut c, "hdrf:lambda=1.5");
+    assert_eq!(stat(&mut c, "computations"), 2.0);
+}
+
+#[test]
+fn error_codes_follow_the_documented_kind_table() {
+    let server = spawn();
+    let mut c = ServeClient::connect(server.addr());
+    let post = |c: &mut ServeClient, body: &str| {
+        let (status, body) = c.request("POST", "/partition", body.as_bytes()).unwrap();
+        (status, kind_of(&body))
+    };
+    // bad spec string -> 400 invalid_spec
+    let req = PartitionRequest::new("dfep").unwrap().dataset("er:n=100,m=300").k(2);
+    let bad_spec = req.to_json().replace("\"dfep\"", "\"hdrf:lambda=abc\"");
+    assert_eq!(post(&mut c, &bad_spec), (400, "invalid_spec".to_string()));
+    // unknown dataset -> 404 dataset_not_found
+    let bad_ds = req.to_json().replace("er:n=100,m=300", "nosuchgraph");
+    assert_eq!(post(&mut c, &bad_ds), (404, "dataset_not_found".to_string()));
+    // unknown field -> 400 invalid_request (strict wire requests)
+    let extra = req.to_json().replace("\"k\"", "\"kay\"");
+    assert_eq!(post(&mut c, &extra), (400, "invalid_request".to_string()));
+    // the client SDK surfaces the kind on its typed error
+    let mut bad = PartitionRequest::new("dfep").unwrap().k(2);
+    bad = bad.dataset("nosuchgraph");
+    let err = c.partition(&bad, false).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::DatasetNotFound);
+    // nothing above ever computed
+    assert_eq!(stat(&mut c, "computations"), 0.0);
+}
