@@ -1,5 +1,13 @@
-//! Regenerates the paper's fig6 series — see bench::figures::fig6.
+//! Regenerates the paper's fig6 series — see bench::figures::fig6_with.
+//! Drives every sweep cell through the batch engine (coordinator::batch)
+//! and emits BENCH_fig6.json (override: DFEP_FIG_OUT).
 //! Knobs: DFEP_SAMPLES (default 5; paper 100), DFEP_SCALE (default 0.05).
+//!
+//! `--quick` (or DFEP_QUICK=1) is the CI smoke mode: fewer cells, one
+//! sample, same artifact schema. Other flags (cargo bench passes
+//! `--bench`) are ignored.
 fn main() {
-    dfep::bench::figures::fig6();
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("DFEP_QUICK").map(|v| v == "1").unwrap_or(false);
+    dfep::bench::figures::fig6_with(quick);
 }

@@ -1,5 +1,13 @@
-//! Regenerates the paper's tables series — see bench::figures::tables.
+//! Regenerates the paper's Tables II/III calibration — see
+//! bench::figures::tables_with. Emits BENCH_tables.json (override:
+//! DFEP_FIG_OUT).
 //! Knobs: DFEP_SAMPLES (default 5; paper 100), DFEP_SCALE (default 0.05).
+//!
+//! `--quick` (or DFEP_QUICK=1) is the CI smoke mode: simulation datasets
+//! only, same artifact schema. Other flags (cargo bench passes
+//! `--bench`) are ignored.
 fn main() {
-    dfep::bench::figures::tables();
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("DFEP_QUICK").map(|v| v == "1").unwrap_or(false);
+    dfep::bench::figures::tables_with(quick);
 }

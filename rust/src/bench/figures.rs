@@ -2,17 +2,30 @@
 //! is a thin main() around one of these runners, so the same code also
 //! backs integration tests and the CLI.
 //!
+//! Every sweep cell runs through the batch engine
+//! ([`BatchRequest::execute_on`]): the seeded repetitions of one
+//! `(spec, k)` point become the variants of one batch, fanned over the
+//! ambient pool lanes with recycled DFEP state — same reports as the old
+//! sequential loop (the engine is bit-identical to it; see
+//! `tests/batch.rs`), a fraction of the wall clock.
+//!
+//! Each runner emits a `BENCH_fig<N>.json` / `BENCH_tables.json`
+//! artifact (override the path with `DFEP_FIG_OUT`) alongside the
+//! printed table, so CI can upload the figure trajectory the same way it
+//! uploads the hotpath one. The `*_with(quick)` variants are the CI
+//! smoke shape: fewer cells, one sample, same artifact schema.
+//!
 //! Scaling knobs (env):
 //!   DFEP_SAMPLES  — seeded repetitions per point   (default 5; paper: 100)
 //!   DFEP_SCALE    — dataset scale factor           (default 0.05; paper: 1.0)
 //! `cargo bench` completes in minutes at the defaults; the paper-fidelity
 //! run is `DFEP_SAMPLES=100 DFEP_SCALE=1.0 cargo bench`.
 
-use crate::bench::harness::{fmt_f, sample_seeds, Table};
+use crate::bench::harness::{fmt_f, sample_seeds, JsonSink, Table};
 use crate::cluster::cost::CostModel;
 use crate::cluster::dfep_mr::{resimulate, run_cluster_dfep};
 use crate::cluster::etsch_mr::{run_baseline_sssp, run_etsch_sssp};
-use crate::coordinator::runs::PartitionRequest;
+use crate::coordinator::batch::{BatchRequest, Variant};
 use crate::etsch::gain::average_gain;
 use crate::graph::{datasets, rewire, stats, Graph};
 use crate::partition::spec::PartitionerSpec;
@@ -62,6 +75,29 @@ fn load(name: &str, scale_f: f64) -> Graph {
     }
 }
 
+/// Write a figure artifact: `default_name` in the working directory, or
+/// wherever `DFEP_FIG_OUT` points.
+fn write_artifact(sink: &JsonSink, default_name: &str) {
+    let out = std::env::var("DFEP_FIG_OUT")
+        .unwrap_or_else(|_| default_name.to_string());
+    let out_path = std::path::Path::new(&out);
+    match sink.write(out_path) {
+        Ok(()) => println!("\nwrote {}", out_path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", out_path.display()),
+    }
+}
+
+/// Record one measured cell under `prefix` (`<prefix>_nstdev`, ...).
+fn sink_cell(sink: &mut JsonSink, prefix: &str, c: &Cell) {
+    sink.num(&format!("{prefix}_largest"), c.largest.mean);
+    sink.num(&format!("{prefix}_nstdev"), c.nstdev.mean);
+    sink.num(&format!("{prefix}_messages"), c.messages.mean);
+    sink.num(&format!("{prefix}_rounds"), c.rounds.mean);
+    if c.gain.n > 0 {
+        sink.num(&format!("{prefix}_gain"), c.gain.mean);
+    }
+}
+
 /// Averaged metrics for one (partitioner, graph, k) cell.
 pub struct Cell {
     /// Largest normalized part size across samples.
@@ -78,9 +114,13 @@ pub struct Cell {
     pub disconnected: Summary,
 }
 
-/// Run one (spec, graph, k) cell: `samples` seeded facade runs (each one
-/// [`PartitionRequest::execute_on`], which shares one [`PartitionView`]
-/// build between the metrics and every gain source).
+/// Run one (spec, graph, k) cell: the `samples` seeded repetitions
+/// become the variants of one batch ([`BatchRequest::execute_on`]), so
+/// they fan out over the ambient pool lanes with recycled DFEP scratch.
+/// The per-seed reports are bit-identical to the sequential
+/// [`PartitionRequest::execute_on`](crate::coordinator::runs::PartitionRequest::execute_on)
+/// loop this replaced (that equivalence is pinned for every registry
+/// spec in `tests/batch.rs`).
 pub fn measure(
     g: &Graph,
     spec: &PartitionerSpec,
@@ -89,20 +129,27 @@ pub fn measure(
     gain_samples: usize,
 ) -> Cell {
     let seeds = sample_seeds(samples, 0xF16);
+    let breq = BatchRequest {
+        dataset: String::new(),
+        graph_seed: 42,
+        variants: seeds
+            .iter()
+            .map(|&s| Variant { spec: spec.clone(), k, seed: s })
+            .collect(),
+        gain_samples,
+        workload: None,
+        threads: None,
+    };
+    let rep = breq
+        .execute_on(g)
+        .unwrap_or_else(|e| panic!("bench run '{spec}' failed: {e}"));
     let mut largest = Vec::new();
     let mut nstdev = Vec::new();
     let mut messages = Vec::new();
     let mut rounds = Vec::new();
     let mut gains = Vec::new();
     let mut disc = Vec::new();
-    for &s in &seeds {
-        let req = PartitionRequest::of(spec.clone())
-            .k(k)
-            .seed(s)
-            .gain_samples(gain_samples);
-        let res = req
-            .execute_on(g)
-            .unwrap_or_else(|e| panic!("bench run '{spec}' failed: {e}"));
+    for res in &rep.reports {
         let r = &res.metrics;
         largest.push(r.largest);
         nstdev.push(r.nstdev);
@@ -125,20 +172,37 @@ pub fn measure(
 
 /// Fig 5: DFEP & DFEPC vs K on ASTROPH and USROADS.
 pub fn fig5() {
-    let n = samples();
+    fig5_with(false);
+}
+
+/// Fig 5 runner; `quick` is the CI smoke shape (one dataset, three K
+/// values, one sample — same artifact schema).
+pub fn fig5_with(quick: bool) {
+    let n = if quick { 1 } else { samples() };
     let sc = scale();
+    let mut sink = JsonSink::new();
+    sink.text("bench", "fig5");
+    sink.num("quick", if quick { 1.0 } else { 0.0 });
+    sink.num("samples", n as f64);
+    sink.num("scale", sc);
+    let datasets: &[&str] =
+        if quick { &["astroph"] } else { &["astroph", "usroads"] };
+    let ks: &[usize] =
+        if quick { &[2, 8, 32] } else { &[2, 4, 8, 16, 32, 64, 128] };
     println!("Fig 5 — DFEP/DFEPC vs K  (samples={n}, scale={sc})");
-    for ds in ["astroph", "usroads"] {
+    for &ds in datasets {
         let g = load(ds, sc);
         println!(
             "\n[{ds}] |V|={} |E|={}",
             g.vertex_count(),
             g.edge_count()
         );
+        sink.num(&format!("{ds}_vertices"), g.vertex_count() as f64);
+        sink.num(&format!("{ds}_edges"), g.edge_count() as f64);
         let mut t = Table::new(&[
             "algo", "K", "largest", "nstdev", "messages", "rounds", "gain",
         ]);
-        for k in [2usize, 4, 8, 16, 32, 64, 128] {
+        for &k in ks {
             for (name, p) in
                 [("DFEP", spec("dfep")), ("DFEPC", spec("dfepc"))]
             {
@@ -152,6 +216,11 @@ pub fn fig5() {
                     fmt_f(c.rounds.mean),
                     fmt_f(c.gain.mean),
                 ]);
+                sink_cell(
+                    &mut sink,
+                    &format!("{ds}_{}_k{k}", name.to_lowercase()),
+                    &c,
+                );
             }
         }
     }
@@ -159,13 +228,27 @@ pub fn fig5() {
         "\nshape check (paper): nstdev & messages rise with K; rounds and \
          gain fall with K."
     );
+    write_artifact(&sink, "BENCH_fig5.json");
 }
 
 /// Fig 6: DFEP vs diameter (rewired USROADS), K = 20.
 pub fn fig6() {
-    let n = samples();
+    fig6_with(false);
+}
+
+/// Fig 6 runner; `quick` trims the rewire fractions to three and runs
+/// one sample per point.
+pub fn fig6_with(quick: bool) {
+    let n = if quick { 1 } else { samples() };
     let sc = scale();
     let g0 = load("usroads", sc);
+    let mut sink = JsonSink::new();
+    sink.text("bench", "fig6");
+    sink.num("quick", if quick { 1.0 } else { 0.0 });
+    sink.num("samples", n as f64);
+    sink.num("scale", sc);
+    sink.num("vertices", g0.vertex_count() as f64);
+    sink.num("edges", g0.edge_count() as f64);
     println!(
         "Fig 6 — DFEP vs diameter (rewired USROADS, K=20, samples={n}, \
          scale={sc})"
@@ -175,7 +258,12 @@ pub fn fig6() {
         "remap%", "diam", "largest", "nstdev", "messages", "rounds",
         "gain", "disc%",
     ]);
-    for frac in [0.0, 0.01, 0.02, 0.05, 0.1, 0.2, 0.4] {
+    let fracs: &[f64] = if quick {
+        &[0.0, 0.1, 0.4]
+    } else {
+        &[0.0, 0.01, 0.02, 0.05, 0.1, 0.2, 0.4]
+    };
+    for &frac in fracs {
         let g = rewire::rewire_fraction(&g0, frac, 7);
         let d = stats::diameter_estimate(&g, 4, 1);
         let c = measure(&g, &spec("dfep"), 20, n, 2);
@@ -189,19 +277,43 @@ pub fn fig6() {
             fmt_f(c.gain.mean),
             fmt_f(c.disconnected.mean * 100.0),
         ]);
+        // key by permille so 1% and 10% stay distinct
+        let prefix = format!("remap{}", (frac * 1000.0).round() as u64);
+        sink.num(&format!("{prefix}_diameter"), d as f64);
+        sink_cell(&mut sink, &prefix, &c);
+        sink.num(
+            &format!("{prefix}_disconnected_pct"),
+            c.disconnected.mean * 100.0,
+        );
     }
     println!(
         "\nshape check (paper): largest/nstdev/rounds/gain rise with \
          diameter; messages fall."
     );
+    write_artifact(&sink, "BENCH_fig6.json");
 }
 
 /// Fig 7: DFEP vs DFEPC vs JaBeJa on the four simulation datasets, K=20.
 pub fn fig7() {
-    let n = samples();
+    fig7_with(false);
+}
+
+/// Fig 7 runner; `quick` keeps one small-world and one road dataset.
+pub fn fig7_with(quick: bool) {
+    let n = if quick { 1 } else { samples() };
     let sc = scale();
+    let mut sink = JsonSink::new();
+    sink.text("bench", "fig7");
+    sink.num("quick", if quick { 1.0 } else { 0.0 });
+    sink.num("samples", n as f64);
+    sink.num("scale", sc);
+    let datasets: &[&str] = if quick {
+        &["astroph", "usroads"]
+    } else {
+        &["astroph", "email-enron", "usroads", "wordnet"]
+    };
     println!("Fig 7 — DFEP/DFEPC/JaBeJa, K=20 (samples={n}, scale={sc})");
-    for ds in ["astroph", "email-enron", "usroads", "wordnet"] {
+    for &ds in datasets {
         let g = load(ds, sc);
         println!(
             "\n[{ds}] |V|={} |E|={}",
@@ -225,6 +337,11 @@ pub fn fig7() {
                 fmt_f(c.rounds.mean),
                 fmt_f(c.gain.mean),
             ]);
+            sink_cell(
+                &mut sink,
+                &format!("{ds}_{}", name.to_lowercase()),
+                &c,
+            );
         }
     }
     println!(
@@ -232,17 +349,32 @@ pub fn fig7() {
          similar gain; USROADS -> JaBeJa more balanced but ~10x messages \
          and lower gain."
     );
+    write_artifact(&sink, "BENCH_fig7.json");
 }
 
 /// Fig 8: DFEP speedup on the simulated EC2 cluster, K=20, nodes 2..16.
 pub fn fig8() {
-    let sc = cluster_scale();
+    fig8_with(false);
+}
+
+/// Fig 8 runner; `quick` keeps one dataset at the (smaller) simulation
+/// scale. The cluster simulation is round-structured, not per-seed, so
+/// this figure stays on the MapReduce simulator rather than the batch
+/// engine.
+pub fn fig8_with(quick: bool) {
+    let sc = if quick { scale() } else { cluster_scale() };
     let cost = CostModel::default();
+    let mut sink = JsonSink::new();
+    sink.text("bench", "fig8");
+    sink.num("quick", if quick { 1.0 } else { 0.0 });
+    sink.num("scale", sc);
     println!("Fig 8 — DFEP cluster speedup, K=20 (scale={sc})");
     let mut t = Table::new(&[
         "dataset", "nodes", "time_s", "speedup_vs_2",
     ]);
-    for ds in ["dblp", "youtube", "amazon"] {
+    let datasets: &[&str] =
+        if quick { &["dblp"] } else { &["dblp", "youtube", "amazon"] };
+    for &ds in datasets {
         let g = load(ds, sc);
         let run = run_cluster_dfep(&g, 20, 2, 7, &cost, 2000);
         let t2 = run.total_time;
@@ -254,24 +386,38 @@ pub fn fig8() {
                 fmt_f(tt),
                 fmt_f(t2 / tt),
             ]);
+            sink.num(&format!("{ds}_n{nodes}_time_s"), tt);
+            sink.num(&format!("{ds}_n{nodes}_speedup_vs_2"), t2 / tt);
         }
     }
     println!(
         "\nshape check (paper): speedup > 5x at 16 nodes vs 2 on the \
          larger datasets."
     );
+    write_artifact(&sink, "BENCH_fig8.json");
 }
 
 /// Fig 9: ETSCH SSSP vs vertex-centric baseline on the cluster.
 pub fn fig9() {
-    let sc = cluster_scale();
+    fig9_with(false);
+}
+
+/// Fig 9 runner; `quick` keeps one dataset at the simulation scale.
+pub fn fig9_with(quick: bool) {
+    let sc = if quick { scale() } else { cluster_scale() };
     let cost = CostModel::default();
+    let mut sink = JsonSink::new();
+    sink.text("bench", "fig9");
+    sink.num("quick", if quick { 1.0 } else { 0.0 });
+    sink.num("scale", sc);
     println!("Fig 9 — SSSP: ETSCH vs vertex-centric baseline (scale={sc})");
     let mut t = Table::new(&[
         "dataset", "nodes", "etsch_s", "rounds", "baseline_s",
         "supersteps", "ratio",
     ]);
-    for ds in ["dblp", "youtube", "amazon"] {
+    let datasets: &[&str] =
+        if quick { &["dblp"] } else { &["dblp", "youtube", "amazon"] };
+    for &ds in datasets {
         let g = load(ds, sc);
         for nodes in [2usize, 4, 8, 16] {
             let p = spec("dfep")
@@ -290,26 +436,47 @@ pub fn fig9() {
                 b.rounds.to_string(),
                 fmt_f(b.total_time / e.total_time),
             ]);
+            sink.num(&format!("{ds}_n{nodes}_etsch_s"), e.total_time);
+            sink.num(&format!("{ds}_n{nodes}_baseline_s"), b.total_time);
+            sink.num(
+                &format!("{ds}_n{nodes}_ratio"),
+                b.total_time / e.total_time,
+            );
         }
     }
     println!(
         "\nshape check (paper): ETSCH faster everywhere; advantage \
          largest at few nodes and narrows as nodes grow."
     );
+    write_artifact(&sink, "BENCH_fig9.json");
 }
 
 /// Tables II & III: paper-reported vs generated dataset statistics.
 pub fn tables() {
+    tables_with(false);
+}
+
+/// Tables runner; `quick` keeps the four simulation datasets only.
+pub fn tables_with(quick: bool) {
     let sc = scale();
+    let mut sink = JsonSink::new();
+    sink.text("bench", "tables");
+    sink.num("quick", if quick { 1.0 } else { 0.0 });
+    sink.num("scale", sc);
     println!("Tables II/III — dataset calibration (scale={sc})");
     let mut t = Table::new(&[
         "dataset", "V_paper", "V_gen", "E_paper", "E_gen", "D_paper",
         "D_gen", "CC_paper", "CC_gen", "RCC_gen",
     ]);
-    for d in datasets::simulation_datasets()
-        .into_iter()
-        .chain(datasets::ec2_datasets())
-    {
+    let ds: Vec<_> = if quick {
+        datasets::simulation_datasets()
+    } else {
+        datasets::simulation_datasets()
+            .into_iter()
+            .chain(datasets::ec2_datasets())
+            .collect()
+    };
+    for d in ds {
         let g = if sc >= 1.0 { d.generate(42) } else { d.scaled(sc, 42) };
         let s = stats::graph_stats(&g, 1);
         t.row(&[
@@ -324,6 +491,11 @@ pub fn tables() {
             format!("{:.2e}", s.clustering),
             format!("{:.2e}", s.random_cc),
         ]);
+        sink.num(&format!("{}_vertices", d.name), s.vertices as f64);
+        sink.num(&format!("{}_edges", d.name), s.edges as f64);
+        sink.num(&format!("{}_diameter", d.name), s.diameter as f64);
+        sink.num(&format!("{}_clustering", d.name), s.clustering);
+        sink.num(&format!("{}_random_cc", d.name), s.random_cc);
     }
     if sc < 1.0 {
         println!(
@@ -331,6 +503,7 @@ pub fn tables() {
              DFEP_SCALE=1.0 for the full-size calibration check)"
         );
     }
+    write_artifact(&sink, "BENCH_tables.json");
 }
 
 /// Ablations + hot-path micro benches (feeds EXPERIMENTS.md §Perf).
@@ -606,6 +779,81 @@ pub fn hotpath_with(quick: bool) {
             crate::util::timer::time_n(warmup, n, || {
                 let _ = spec("fennel").build().partition_graph(&g, 8, 1);
             }),
+        );
+    }
+
+    // batch series: the multi-(seed,k) engine vs the sequential facade
+    // loop it replaces. Acceptance target: >= 2x on an 8-variant sweep
+    // at 8 pool threads, with (tests/batch.rs) bit-identical reports.
+    {
+        use crate::util::pool;
+        let sweep: [(usize, u64); 8] = [
+            (2, 1),
+            (2, 2),
+            (4, 1),
+            (4, 2),
+            (8, 1),
+            (8, 2),
+            (16, 1),
+            (16, 2),
+        ];
+        let breq = BatchRequest {
+            dataset: String::new(),
+            graph_seed: 42,
+            variants: sweep
+                .iter()
+                .map(|&(k, s)| Variant { spec: spec("dfep"), k, seed: s })
+                .collect(),
+            gain_samples: 0,
+            workload: None,
+            threads: None,
+        };
+        let nvars = breq.variants.len();
+        let seq_times = crate::util::timer::time_n(warmup, n, || {
+            for v in &breq.variants {
+                let _ = breq
+                    .request_for(v)
+                    .execute_on(&g)
+                    .expect("bench sequential variant");
+            }
+        });
+        let seq = Summary::of(&seq_times);
+        let (batch_rep, batch_times) = pool::with_threads(8, || {
+            let rep = breq.execute_on(&g).expect("bench batch");
+            let times = crate::util::timer::time_n(warmup, n, || {
+                let _ = breq.execute_on(&g);
+            });
+            (rep, times)
+        });
+        let s = Summary::of(&batch_times);
+        t.row(&[
+            format!("batch {nvars} variants / 8 lanes"),
+            fmt_f(s.mean),
+            fmt_f(s.p95),
+            fmt_f(nvars as f64 * g.edge_count() as f64 / s.mean / 1e6),
+        ]);
+        t.row(&[
+            format!("batch {nvars} variants sequential"),
+            fmt_f(seq.mean),
+            fmt_f(seq.p95),
+            fmt_f(nvars as f64 * g.edge_count() as f64 / seq.mean / 1e6),
+        ]);
+        println!(
+            "batch: {} variants/s over {} lane(s), {}x vs sequential, \
+             scratch peak {} bytes",
+            fmt_f(nvars as f64 / s.mean),
+            batch_rep.lanes,
+            fmt_f(seq.mean / s.mean),
+            batch_rep.scratch_peak_bytes
+        );
+        sink.num("batch_mean_s", s.mean);
+        sink.num("batch_sequential_mean_s", seq.mean);
+        sink.num("batch_variants_per_s", nvars as f64 / s.mean);
+        sink.num("batch_speedup_vs_sequential", seq.mean / s.mean);
+        sink.num("batch_lanes", batch_rep.lanes as f64);
+        sink.num(
+            "batch_scratch_peak_bytes",
+            batch_rep.scratch_peak_bytes as f64,
         );
     }
 

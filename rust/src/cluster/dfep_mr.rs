@@ -108,9 +108,9 @@ pub fn run_cluster_dfep(
                     continue;
                 }
                 funding_msgs += g
-                    .neighbors(v)
+                    .neighbor_edges(v)
                     .iter()
-                    .filter(|&&(_, e)| {
+                    .filter(|&&e| {
                         let o = st.owner[e as usize];
                         o == FREE || o == i as u32
                     })

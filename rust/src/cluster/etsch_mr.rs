@@ -97,7 +97,7 @@ impl VertexJob for BspSsspJob<'_> {
         if d == u32::MAX {
             return;
         }
-        for &(w, _) in self.g.neighbors(v) {
+        for &w in self.g.neighbor_vertices(v) {
             emit(w, d + 1);
         }
     }

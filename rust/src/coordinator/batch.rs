@@ -1,0 +1,723 @@
+//! Batched multi-variant execution: one graph, many `(spec, k, seed)`
+//! runs — the engine behind `repro batch`, the serving layer's
+//! `POST /batch` and the figure benches' parameter sweeps.
+//!
+//! A [`BatchRequest`] names the dataset **once** and a list of
+//! [`Variant`]s to run against it. [`BatchRequest::execute`] resolves
+//! the graph once, profiles it once ([`SharedPrep`] — the degree array
+//! and stream-order hints every variant would otherwise re-derive), and
+//! then fans the variants out over the ambient
+//! [`pool`](crate::util::pool) in *lanes*:
+//!
+//! - lane `l` executes variant indices `l, l + lanes, l + 2·lanes, ...`
+//!   in order, entirely on one pool worker;
+//! - inside a lane every variant runs under
+//!   [`pool::with_inline`](crate::util::pool::with_inline), so the
+//!   variant's own data-parallel phases (funding rounds, view build,
+//!   metrics) execute as sequential loops instead of re-submitting to
+//!   the pool the lanes occupy — variant-level parallelism replaces
+//!   round-level parallelism, which is the right trade for sweeps (N
+//!   independent runs saturate the pool with zero synchronization per
+//!   round);
+//! - a lane's DFEP/DFEPC variants chain through the engine's per-thread
+//!   parked state (see
+//!   [`DfepState::reset`](crate::partition::dfep::DfepState::reset)):
+//!   the `k x n` money ledger, the round scratch and the owner/degree
+//!   buffers are allocated by the lane's first variant and *reused* by
+//!   every later one, so steady-state rounds allocate nothing
+//!   (`tests/batch.rs` pins this with a counting allocator).
+//!
+//! ## Determinism
+//!
+//! Results are merged into [`BatchReport::reports`] by **variant
+//! index**, never by completion or lane order. Each variant is executed
+//! by the exact sequential facade
+//! ([`PartitionRequest::execute_on`]) under an inline (1-thread) pool,
+//! and the crate-wide pool contract makes every run a pure function of
+//! `(graph, request)` independent of thread count — so a batch is
+//! bit-identical to running its variants sequentially, at any lane
+//! count, in any variant order (`tests/batch.rs`).
+//!
+//! ## Wire format (`"v": 1`)
+//!
+//! [`BatchRequest::to_json`] / [`from_json`](BatchRequest::from_json)
+//! and [`BatchReport::to_json`] /
+//! [`from_json`](BatchReport::from_json) follow the same conventions as
+//! the single-run wire format in [`super::runs`]: strict requests
+//! (unknown fields rejected), lenient reports, version-gated with
+//! `"v": 1`. The report embeds one full run report (with owners) per
+//! variant, in variant order.
+
+use crate::bench::harness::JsonSink;
+use crate::graph::Graph;
+use crate::partition::spec::PartitionerSpec;
+use crate::util::error::Result;
+use crate::util::pool;
+
+use super::runs::{
+    check_version, req_err, req_str, req_uint, resolve_graph,
+    PartitionRequest, RunReport, Workload,
+};
+
+/// One run of a batch: which partitioner, how many parts, which seed.
+/// Everything else (dataset, graph seed, gain sampling, workload) is
+/// batch-level — shared by every variant.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Variant {
+    /// Partitioner spec string (`dfep`, `hdrf:lambda=1.5`, ...).
+    pub spec: PartitionerSpec,
+    /// Number of parts.
+    pub k: usize,
+    /// Partitioner run seed.
+    pub seed: u64,
+}
+
+impl Variant {
+    /// Parse a spec string into a variant (spec errors carry
+    /// [`ErrorKind::InvalidSpec`](crate::util::error::ErrorKind)).
+    pub fn new(spec: &str, k: usize, seed: u64) -> Result<Variant> {
+        Ok(Variant { spec: PartitionerSpec::parse(spec)?, k, seed })
+    }
+}
+
+/// A multi-variant experiment against one resolved graph. Build with
+/// [`new`](Self::new) and the chainable setters, mirroring
+/// [`PartitionRequest`]'s construction idiom.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BatchRequest {
+    /// Graph spec shared by every variant (see
+    /// [`resolve_graph`](super::runs::resolve_graph)).
+    pub dataset: String,
+    /// Seed for dataset generation/scaling.
+    pub graph_seed: u64,
+    /// The runs to execute, in report order.
+    pub variants: Vec<Variant>,
+    /// Gain-estimate sources per variant (0 = skip).
+    pub gain_samples: usize,
+    /// Optional ETSCH workload attached to every variant.
+    pub workload: Option<Workload>,
+    /// Pool-thread override for the whole batch (`None` = ambient pool).
+    pub threads: Option<usize>,
+}
+
+impl BatchRequest {
+    /// A batch against `dataset` with the default graph seed and no
+    /// variants yet.
+    pub fn new(dataset: impl Into<String>) -> BatchRequest {
+        BatchRequest {
+            dataset: dataset.into(),
+            graph_seed: PartitionRequest::default().graph_seed,
+            variants: Vec::new(),
+            gain_samples: 0,
+            workload: None,
+            threads: None,
+        }
+    }
+
+    /// Set the dataset generation/scaling seed.
+    pub fn graph_seed(mut self, graph_seed: u64) -> Self {
+        self.graph_seed = graph_seed;
+        self
+    }
+
+    /// Append one variant.
+    pub fn variant(mut self, v: Variant) -> Self {
+        self.variants.push(v);
+        self
+    }
+
+    /// Set the per-variant gain-sample count (0 skips the estimate).
+    pub fn gain_samples(mut self, gain_samples: usize) -> Self {
+        self.gain_samples = gain_samples;
+        self
+    }
+
+    /// Attach an ETSCH workload to every variant.
+    pub fn workload(mut self, workload: Workload) -> Self {
+        self.workload = Some(workload);
+        self
+    }
+
+    /// Pin the pool-thread count for the whole batch.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Resolve the dataset once, then
+    /// [`execute_on`](Self::execute_on) it.
+    pub fn execute(&self) -> Result<BatchReport> {
+        let (g, resolve_secs) = crate::util::timer::time(|| {
+            resolve_graph(&self.dataset, self.graph_seed)
+        });
+        let g = g?;
+        let mut report = self.execute_on(&g)?;
+        report.dataset = self.dataset.clone();
+        for r in &mut report.reports {
+            r.dataset = self.dataset.clone();
+        }
+        report.resolve_secs = resolve_secs;
+        Ok(report)
+    }
+
+    /// Run every variant against an already-resolved graph. Honors the
+    /// [`threads`](Self::threads) override for the entire batch.
+    ///
+    /// Fails fast (before any variant runs) on an empty variant list or
+    /// `k == 0`; a variant that fails *during* execution surfaces as the
+    /// error of the lowest failing variant index, matching what a
+    /// sequential loop over
+    /// [`PartitionRequest::execute_on`] would return first.
+    pub fn execute_on(&self, g: &Graph) -> Result<BatchReport> {
+        match self.threads {
+            Some(t) => pool::with_threads(t, || self.run_inner(g)),
+            None => self.run_inner(g),
+        }
+    }
+
+    /// The request each variant expands to — exactly what a sequential
+    /// caller would execute (the bit-equality baseline in
+    /// `tests/batch.rs`).
+    pub fn request_for(&self, v: &Variant) -> PartitionRequest {
+        let mut req = PartitionRequest::of(v.spec.clone())
+            .dataset(&*self.dataset)
+            .k(v.k)
+            .seed(v.seed)
+            .graph_seed(self.graph_seed)
+            .gain_samples(self.gain_samples);
+        if let Some(w) = self.workload {
+            req = req.workload(w);
+        }
+        req
+    }
+
+    fn run_inner(&self, g: &Graph) -> Result<BatchReport> {
+        if self.variants.is_empty() {
+            return Err(req_err("batch has no variants"));
+        }
+        if let Some(v) = self.variants.iter().find(|v| v.k == 0) {
+            return Err(req_err(format!(
+                "variant '{}' has k == 0 (must be >= 1)",
+                v.spec
+            )));
+        }
+        let (shared, shared_secs) =
+            crate::util::timer::time(|| SharedPrep::compute(g));
+        let reqs: Vec<PartitionRequest> =
+            self.variants.iter().map(|v| self.request_for(v)).collect();
+
+        struct Lane {
+            /// `(variant index, outcome)` in lane execution order.
+            results: Vec<(usize, Result<RunReport>)>,
+            /// Parked-state scratch high-water after the lane finished.
+            peak_bytes: usize,
+        }
+        let nvars = reqs.len();
+        let lanes = pool::current_threads().min(nvars).max(1);
+        let mut outs: Vec<Lane> = (0..lanes)
+            .map(|_| Lane { results: Vec::new(), peak_bytes: 0 })
+            .collect();
+        let (_, exec_secs) = crate::util::timer::time(|| {
+            pool::run_mut(&mut outs, &|l, lane| {
+                // round-level parallelism off, variant-level on: the
+                // inner facade runs single-threaded on this worker, and
+                // its DFEP states chain through the worker's parked
+                // state across the lane's variants
+                pool::with_inline(|| {
+                    let mut idx = l;
+                    while idx < nvars {
+                        lane.results.push((idx, reqs[idx].execute_on(g)));
+                        idx += lanes;
+                    }
+                    lane.peak_bytes =
+                        crate::partition::dfep::parked_scratch_peak_bytes();
+                });
+            });
+        });
+
+        // merge strictly by variant index — lane assignment and
+        // completion order never reach the report
+        let mut slots: Vec<Option<Result<RunReport>>> =
+            (0..nvars).map(|_| None).collect();
+        let mut peak_bytes = 0usize;
+        for lane in outs {
+            peak_bytes = peak_bytes.max(lane.peak_bytes);
+            for (idx, res) in lane.results {
+                slots[idx] = Some(res);
+            }
+        }
+        let mut reports = Vec::with_capacity(nvars);
+        for slot in slots {
+            reports.push(slot.expect("every variant index was assigned")?);
+        }
+        Ok(BatchReport {
+            dataset: String::new(),
+            vertices: g.vertex_count(),
+            edges: g.edge_count(),
+            shared,
+            reports,
+            lanes,
+            resolve_secs: 0.0,
+            shared_secs,
+            exec_secs,
+            scratch_peak_bytes: peak_bytes,
+        })
+    }
+
+    /// Serialize as a `"v": 1` wire request: the batch-level fields plus
+    /// a `"variants"` array of `{spec, k, seed}` objects.
+    pub fn to_json(&self) -> String {
+        let mut sink = JsonSink::new();
+        sink.num("v", 1.0);
+        sink.text("dataset", &self.dataset);
+        sink.num("graph_seed", self.graph_seed as f64);
+        sink.num("gain_samples", self.gain_samples as f64);
+        if let Some(t) = self.threads {
+            sink.num("threads", t as f64);
+        }
+        if let Some(Workload::Sssp { source }) = self.workload {
+            sink.text("workload", "sssp");
+            sink.num("workload_source", source as f64);
+        }
+        let vars: Vec<String> = self
+            .variants
+            .iter()
+            .map(|v| {
+                let mut vs = JsonSink::new();
+                vs.text("spec", &v.spec.to_string());
+                vs.num("k", v.k as f64);
+                vs.num("seed", v.seed as f64);
+                vs.render()
+            })
+            .collect();
+        sink.raw("variants", format!("[{}]", vars.join(",")));
+        sink.render()
+    }
+
+    /// Parse a `"v": 1` wire request. Strict like the single-run parser:
+    /// unknown fields (at the top level and inside variant objects), a
+    /// bad version, non-integer numerics, `k == 0`, `threads == 0`, a
+    /// missing or empty `variants` array — all
+    /// [`ErrorKind::InvalidRequest`](crate::util::error::ErrorKind)
+    /// errors; bad spec strings keep
+    /// [`ErrorKind::InvalidSpec`](crate::util::error::ErrorKind).
+    pub fn from_json(text: &str) -> Result<BatchRequest> {
+        const KNOWN: [&str; 7] = [
+            "v",
+            "dataset",
+            "graph_seed",
+            "gain_samples",
+            "threads",
+            "workload",
+            "variants",
+        ];
+        let doc = crate::util::json::parse(text)
+            .map_err(|e| req_err(format!("invalid batch JSON: {e}")))?;
+        let obj = doc
+            .as_obj()
+            .ok_or_else(|| req_err("batch request must be a JSON object"))?;
+        for key in obj.keys() {
+            let known = KNOWN.contains(&key.as_str())
+                || key == "workload_source";
+            if !known {
+                return Err(req_err(format!(
+                    "unknown batch field '{key}' (known: {}, \
+                     workload_source)",
+                    KNOWN.join(", ")
+                )));
+            }
+        }
+        check_version(obj)?;
+        let mut req = BatchRequest::new(req_str(obj, "dataset")?);
+        if let Some(v) = obj.get("graph_seed") {
+            req = req.graph_seed(req_uint(v, "graph_seed")?);
+        }
+        if let Some(v) = obj.get("gain_samples") {
+            req = req.gain_samples(req_uint(v, "gain_samples")? as usize);
+        }
+        if let Some(v) = obj.get("threads") {
+            let t = req_uint(v, "threads")? as usize;
+            if t == 0 {
+                return Err(req_err("field 'threads' must be >= 1"));
+            }
+            req = req.threads(t);
+        }
+        match obj.get("workload") {
+            None => {
+                if obj.contains_key("workload_source") {
+                    return Err(req_err(
+                        "field 'workload_source' requires 'workload'",
+                    ));
+                }
+            }
+            Some(w) => {
+                let name = w.as_str().ok_or_else(|| {
+                    req_err("field 'workload' must be a string")
+                })?;
+                if name != "sssp" {
+                    return Err(req_err(format!(
+                        "unknown workload '{name}' (known: sssp)"
+                    )));
+                }
+                let source = match obj.get("workload_source") {
+                    Some(v) => req_uint(v, "workload_source")? as u32,
+                    None => 0,
+                };
+                req = req.workload(Workload::Sssp { source });
+            }
+        }
+        let vars = obj
+            .get("variants")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| {
+                req_err("field 'variants' must be an array of objects")
+            })?;
+        if vars.is_empty() {
+            return Err(req_err("field 'variants' must not be empty"));
+        }
+        for v in vars {
+            let vobj = v.as_obj().ok_or_else(|| {
+                req_err("each variant must be a JSON object")
+            })?;
+            for key in vobj.keys() {
+                if !["spec", "k", "seed"].contains(&key.as_str()) {
+                    return Err(req_err(format!(
+                        "unknown variant field '{key}' \
+                         (known: spec, k, seed)"
+                    )));
+                }
+            }
+            let spec = PartitionerSpec::parse(req_str(vobj, "spec")?)?;
+            let defaults = PartitionRequest::default();
+            let k = match vobj.get("k") {
+                Some(v) => req_uint(v, "k")? as usize,
+                None => defaults.k,
+            };
+            if k == 0 {
+                return Err(req_err("variant field 'k' must be >= 1"));
+            }
+            let seed = match vobj.get("seed") {
+                Some(v) => req_uint(v, "seed")?,
+                None => defaults.seed,
+            };
+            req = req.variant(Variant { spec, k, seed });
+        }
+        Ok(req)
+    }
+}
+
+/// Read-only state derived from the graph once per batch — what every
+/// variant would otherwise recompute on its own: the per-vertex degree
+/// array (the CSR offset deltas the streaming baselines and the DFEP
+/// free-degree initialization both re-derive) and its summary shape.
+/// The edge-order hint records that the resolved graph's edge list is
+/// already in canonical (sorted, deduplicated) stream order, so
+/// stream-ingesting variants can consume it without re-sorting.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SharedPrep {
+    /// Degree of every vertex, in vertex order.
+    pub degrees: Vec<u32>,
+    /// Maximum degree.
+    pub max_degree: u32,
+    /// Mean degree (`2|E| / |V|`).
+    pub avg_degree: f64,
+}
+
+impl SharedPrep {
+    /// Profile `g` (one O(|V|) pass over the CSR offsets).
+    pub fn compute(g: &Graph) -> SharedPrep {
+        let n = g.vertex_count();
+        let degrees: Vec<u32> = (0..n as u32)
+            .map(|v| g.neighbor_vertices(v).len() as u32)
+            .collect();
+        let max_degree = degrees.iter().copied().max().unwrap_or(0);
+        let avg_degree = if n == 0 {
+            0.0
+        } else {
+            2.0 * g.edge_count() as f64 / n as f64
+        };
+        SharedPrep { degrees, max_degree, avg_degree }
+    }
+}
+
+/// Everything one batch produced: per-variant run reports in variant
+/// order, the shared graph profile, and the batch-level timing and
+/// memory accounting.
+#[derive(Clone, Debug)]
+pub struct BatchReport {
+    /// The dataset spec that was resolved — set by
+    /// [`execute`](BatchRequest::execute), empty for
+    /// [`execute_on`](BatchRequest::execute_on) (same policy as
+    /// [`RunReport::dataset`]).
+    pub dataset: String,
+    /// `|V|` of the resolved graph.
+    pub vertices: usize,
+    /// `|E|` of the resolved graph.
+    pub edges: usize,
+    /// The once-per-batch graph profile.
+    pub shared: SharedPrep,
+    /// One report per variant, in request order — bit-identical to what
+    /// sequential [`PartitionRequest::execute_on`] calls would produce.
+    pub reports: Vec<RunReport>,
+    /// Lanes the batch actually fanned out over.
+    pub lanes: usize,
+    /// Dataset resolution seconds (0 for `execute_on`).
+    pub resolve_secs: f64,
+    /// Shared-profile seconds.
+    pub shared_secs: f64,
+    /// Wall-clock seconds for the variant fan-out (all lanes).
+    pub exec_secs: f64,
+    /// High-water round-scratch bytes across lanes (the reuse footprint
+    /// of the parked DFEP states; 0 when no DFEP-family variant ran).
+    pub scratch_peak_bytes: usize,
+}
+
+impl BatchReport {
+    /// Serialize as a `"v": 1` wire report: batch-level scalars plus a
+    /// `"reports"` array of full per-variant run reports (with owners,
+    /// so a remote client can reconstruct every partition
+    /// bit-identically).
+    pub fn to_json(&self) -> String {
+        let mut sink = JsonSink::new();
+        sink.num("v", 1.0);
+        if !self.dataset.is_empty() {
+            sink.text("dataset", &self.dataset);
+        }
+        sink.num("vertices", self.vertices as f64);
+        sink.num("edges", self.edges as f64);
+        sink.num("variants", self.reports.len() as f64);
+        sink.num("lanes", self.lanes as f64);
+        sink.num("max_degree", self.shared.max_degree as f64);
+        sink.num("avg_degree", self.shared.avg_degree);
+        sink.num("resolve_secs", self.resolve_secs);
+        sink.num("shared_secs", self.shared_secs);
+        sink.num("exec_secs", self.exec_secs);
+        sink.num("scratch_peak_bytes", self.scratch_peak_bytes as f64);
+        let reps: Vec<String> =
+            self.reports.iter().map(RunReport::to_json_with_owners).collect();
+        sink.raw("reports", format!("[{}]", reps.join(",")));
+        sink.render()
+    }
+
+    /// Parse a `"v": 1` wire report. Lenient like the single-run report
+    /// parser (unknown fields ignored); the `degrees` array is not on
+    /// the wire, so the embedded [`SharedPrep`] carries only the
+    /// summary shape.
+    pub fn from_json(text: &str) -> Result<BatchReport> {
+        let doc = crate::util::json::parse(text).map_err(|e| {
+            crate::util::error::Error::msg(format!(
+                "invalid batch report JSON: {e}"
+            ))
+        })?;
+        let obj = doc.as_obj().ok_or_else(|| {
+            crate::util::error::Error::msg(
+                "batch report must be a JSON object",
+            )
+        })?;
+        check_version(obj)?;
+        let uint = |field: &str| -> Result<u64> {
+            match obj.get(field) {
+                Some(v) => req_uint(v, field),
+                None => Ok(0),
+            }
+        };
+        let num = |field: &str| -> Result<f64> {
+            match obj.get(field) {
+                Some(v) => v.as_f64().ok_or_else(|| {
+                    crate::util::error::Error::msg(format!(
+                        "field '{field}' must be a number"
+                    ))
+                }),
+                None => Ok(0.0),
+            }
+        };
+        let mut reports = Vec::new();
+        if let Some(arr) = obj.get("reports").and_then(|v| v.as_arr()) {
+            for r in arr {
+                let robj = r.as_obj().ok_or_else(|| {
+                    crate::util::error::Error::msg(
+                        "each batch report entry must be a JSON object",
+                    )
+                })?;
+                reports.push(RunReport::from_obj(robj)?);
+            }
+        }
+        Ok(BatchReport {
+            dataset: obj
+                .get("dataset")
+                .and_then(|v| v.as_str())
+                .unwrap_or("")
+                .to_string(),
+            vertices: uint("vertices")? as usize,
+            edges: uint("edges")? as usize,
+            shared: SharedPrep {
+                degrees: Vec::new(),
+                max_degree: uint("max_degree")? as u32,
+                avg_degree: num("avg_degree")?,
+            },
+            reports,
+            lanes: uint("lanes")? as usize,
+            resolve_secs: num("resolve_secs")?,
+            shared_secs: num("shared_secs")?,
+            exec_secs: num("exec_secs")?,
+            scratch_peak_bytes: uint("scratch_peak_bytes")? as usize,
+        })
+    }
+}
+
+/// `variants` for a `(spec, k)` grid over `seeds` — the shape every
+/// figure sweep uses (`bench::figures`).
+pub fn grid(
+    specs: &[&str],
+    ks: &[usize],
+    seeds: &[u64],
+) -> Result<Vec<Variant>> {
+    let mut out = Vec::with_capacity(specs.len() * ks.len() * seeds.len());
+    for spec in specs {
+        for &k in ks {
+            for &seed in seeds {
+                out.push(Variant::new(spec, k, seed)?);
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_batch() -> BatchRequest {
+        BatchRequest::new("er:n=300,m=900")
+            .graph_seed(2)
+            .variant(Variant::new("dfep", 4, 1).unwrap())
+            .variant(Variant::new("random", 4, 1).unwrap())
+            .variant(Variant::new("hdrf:lambda=1.5", 6, 3).unwrap())
+    }
+
+    #[test]
+    fn batch_matches_sequential_reports() {
+        let batch = small_batch();
+        let g = resolve_graph(&batch.dataset, batch.graph_seed).unwrap();
+        let rep = batch.execute_on(&g).unwrap();
+        assert_eq!(rep.reports.len(), 3);
+        assert_eq!(rep.vertices, g.vertex_count());
+        for (v, r) in batch.variants.iter().zip(&rep.reports) {
+            let seq = batch.request_for(v).execute_on(&g).unwrap();
+            assert_eq!(r.spec, seq.spec);
+            assert_eq!(r.partition.owner, seq.partition.owner);
+            assert_eq!(
+                r.metrics.nstdev.to_bits(),
+                seq.metrics.nstdev.to_bits()
+            );
+            assert_eq!(r.metrics.messages, seq.metrics.messages);
+        }
+    }
+
+    #[test]
+    fn execute_resolves_once_and_labels_reports() {
+        let rep = small_batch().execute().unwrap();
+        assert_eq!(rep.dataset, "er:n=300,m=900");
+        assert!(rep.resolve_secs >= 0.0);
+        for r in &rep.reports {
+            assert_eq!(r.dataset, "er:n=300,m=900");
+        }
+    }
+
+    #[test]
+    fn errors_surface_lowest_failing_variant() {
+        // k > edges makes DFEP-family check_k fail; variant 1 of 3
+        let batch = BatchRequest::new("er:n=30,m=60")
+            .variant(Variant::new("random", 4, 1).unwrap())
+            .variant(Variant::new("dfep", 0, 1).unwrap())
+            .variant(Variant::new("random", 8, 1).unwrap());
+        let err = batch.execute().unwrap_err().to_string();
+        assert!(err.contains("k == 0"), "{err}");
+        let empty = BatchRequest::new("er:n=30,m=60").execute();
+        assert!(empty.unwrap_err().to_string().contains("no variants"));
+    }
+
+    #[test]
+    fn shared_prep_profiles_degrees() {
+        let g = resolve_graph("er:n=100,m=300", 1).unwrap();
+        let prep = SharedPrep::compute(&g);
+        assert_eq!(prep.degrees.len(), g.vertex_count());
+        assert_eq!(
+            prep.degrees.iter().map(|&d| d as usize).sum::<usize>(),
+            2 * g.edge_count()
+        );
+        assert_eq!(
+            prep.max_degree,
+            prep.degrees.iter().copied().max().unwrap()
+        );
+    }
+
+    #[test]
+    fn request_json_round_trips() {
+        let req = small_batch()
+            .gain_samples(2)
+            .threads(2)
+            .workload(Workload::Sssp { source: 7 });
+        let back = BatchRequest::from_json(&req.to_json()).unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn request_json_is_strict() {
+        let err = |t: &str| BatchRequest::from_json(t).unwrap_err();
+        let base = r#""dataset": "astroph",
+            "variants": [{"spec": "dfep", "k": 4, "seed": 1}]"#;
+        assert!(err(&format!("{{{base}, \"bogus\": 1}}"))
+            .to_string()
+            .contains("unknown batch field"));
+        assert!(err(&format!(
+            r#"{{"dataset": "a", "variants": [{{"spec": "dfep", "kk": 4}}]}}"#
+        ))
+        .to_string()
+        .contains("unknown variant field"));
+        assert!(err(r#"{"dataset": "a", "variants": []}"#)
+            .to_string()
+            .contains("must not be empty"));
+        assert!(err(r#"{"dataset": "a"}"#)
+            .to_string()
+            .contains("variants"));
+        assert!(err(&format!("{{\"v\": 2, {base}}}"))
+            .to_string()
+            .contains("unsupported wire version"));
+        assert!(err(
+            r#"{"dataset": "a",
+                "variants": [{"spec": "dfep", "k": 0}]}"#
+        )
+        .to_string()
+        .contains("must be >= 1"));
+    }
+
+    #[test]
+    fn report_json_round_trips() {
+        let rep = small_batch().execute().unwrap();
+        let back = BatchReport::from_json(&rep.to_json()).unwrap();
+        assert_eq!(back.dataset, rep.dataset);
+        assert_eq!(back.vertices, rep.vertices);
+        assert_eq!(back.edges, rep.edges);
+        assert_eq!(back.lanes, rep.lanes);
+        assert_eq!(back.shared.max_degree, rep.shared.max_degree);
+        assert_eq!(back.reports.len(), rep.reports.len());
+        for (b, r) in back.reports.iter().zip(&rep.reports) {
+            assert_eq!(b.spec, r.spec);
+            assert_eq!(b.partition.owner, r.partition.owner);
+            assert_eq!(
+                b.metrics.nstdev.to_bits(),
+                r.metrics.nstdev.to_bits()
+            );
+        }
+    }
+
+    #[test]
+    fn grid_enumerates_spec_major() {
+        let vars = grid(&["dfep", "random"], &[2, 8], &[1, 2]).unwrap();
+        assert_eq!(vars.len(), 8);
+        assert_eq!(vars[0], Variant::new("dfep", 2, 1).unwrap());
+        assert_eq!(vars[3], Variant::new("dfep", 8, 2).unwrap());
+        assert_eq!(vars[4], Variant::new("random", 2, 1).unwrap());
+    }
+}

@@ -1,9 +1,11 @@
 //! Leader/coordinator: run configuration, orchestration of partition +
 //! process phases, and the CLI surface of the `repro` binary.
 
+pub mod batch;
 pub mod cli;
 pub mod runs;
 pub mod serve;
 
+pub use batch::{BatchReport, BatchRequest, SharedPrep, Variant};
 pub use runs::{PartitionRequest, RunReport, Timings, Workload};
 pub use serve::{ServeClient, ServeConfig, Server};

@@ -263,13 +263,13 @@ impl PartitionRequest {
     }
 }
 
-fn req_err(msg: impl Into<String>) -> Error {
+pub(crate) fn req_err(msg: impl Into<String>) -> Error {
     Error::msg(msg).with_kind(ErrorKind::InvalidRequest)
 }
 
 /// Reject any `"v"` other than (a missing) 1 — both request and report
 /// parsing share the version gate.
-fn check_version(obj: &BTreeMap<String, Json>) -> Result<()> {
+pub(crate) fn check_version(obj: &BTreeMap<String, Json>) -> Result<()> {
     match obj.get("v") {
         None => Ok(()),
         Some(v) if v.as_f64() == Some(1.0) => Ok(()),
@@ -279,7 +279,10 @@ fn check_version(obj: &BTreeMap<String, Json>) -> Result<()> {
     }
 }
 
-fn req_str<'a>(obj: &'a BTreeMap<String, Json>, field: &str) -> Result<&'a str> {
+pub(crate) fn req_str<'a>(
+    obj: &'a BTreeMap<String, Json>,
+    field: &str,
+) -> Result<&'a str> {
     match obj.get(field) {
         None => Err(req_err(format!("missing field '{field}'"))),
         Some(v) => v
@@ -291,7 +294,7 @@ fn req_str<'a>(obj: &'a BTreeMap<String, Json>, field: &str) -> Result<&'a str> 
 /// A JSON number that is a non-negative integer exactly representable in
 /// an f64 (the parser is f64-backed, so larger values would silently
 /// round — reject them instead).
-fn req_uint(v: &Json, field: &str) -> Result<u64> {
+pub(crate) fn req_uint(v: &Json, field: &str) -> Result<u64> {
     let err = || {
         req_err(format!("field '{field}' must be a non-negative integer"))
     };
@@ -437,6 +440,13 @@ impl RunReport {
         let obj = doc
             .as_obj()
             .ok_or_else(|| Error::msg("report must be a JSON object"))?;
+        Self::from_obj(obj)
+    }
+
+    /// [`from_json`](Self::from_json) on an already-parsed object — the
+    /// batch wire format embeds run reports as array elements, so the
+    /// batch parser feeds them through here without re-serializing.
+    pub(crate) fn from_obj(obj: &BTreeMap<String, Json>) -> Result<RunReport> {
         check_version(obj)?;
         let spec = req_str(obj, "spec")?.to_string();
         let k = req_uint(

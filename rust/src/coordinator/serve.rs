@@ -13,9 +13,18 @@
 //! - `POST /partition` — body: [`PartitionRequest::to_json`] (`"v": 1`);
 //!   response: [`RunReport::to_json`] (append `?owners=1` for the
 //!   per-edge ownership array).
+//! - `POST /batch` — body: [`BatchRequest::to_json`] (`"v": 1`);
+//!   response: [`BatchReport::to_json`]. The graph resolves once, every
+//!   variant is looked up in the result cache individually, and only the
+//!   misses run — as one batch-engine invocation fanned over the ambient
+//!   pool lanes. Computed variants land in the cache, so a follow-up
+//!   `POST /partition` for any of them is a hit.
 //! - `GET /healthz` — liveness probe.
 //! - `GET /stats` — flat JSON counters: cache hit rate, in-flight count,
-//!   shed counts, per-endpoint latency.
+//!   shed counts, per-endpoint latency, and graph-resolve latency
+//!   (`resolve_count` / `resolve_mean_ms` / `resolve_max_ms`) so cold-path
+//!   `POST /partition` p99s are attributable to dataset resolution
+//!   rather than partitioning.
 //!
 //! ## Result cache + single flight
 //!
@@ -60,6 +69,7 @@ use std::time::{Duration, Instant};
 
 use crate::anyhow;
 use crate::bench::harness::JsonSink;
+use crate::coordinator::batch::{BatchReport, BatchRequest, SharedPrep};
 use crate::coordinator::runs::{resolve_graph, PartitionRequest, RunReport};
 use crate::graph::Graph;
 use crate::util::error::{ErrorKind, Result};
@@ -180,16 +190,22 @@ struct Counters {
     responses_4xx: AtomicUsize,
     responses_5xx: AtomicUsize,
     latency: Mutex<[LatencyStat; ENDPOINTS.len()]>,
+    /// Graph-resolution latency alone (satellite of the endpoint
+    /// latencies): cold `POST /partition` and `POST /batch` responses
+    /// include dataset generation/scaling time, and this stat is what
+    /// separates that from partitioning when reading `/stats`.
+    resolve: Mutex<LatencyStat>,
 }
 
-const ENDPOINTS: [&str; 4] = ["partition", "healthz", "stats", "other"];
+const ENDPOINTS: [&str; 5] = ["partition", "batch", "healthz", "stats", "other"];
 
 fn endpoint_index(path: &str) -> usize {
     match path {
         "/partition" => 0,
-        "/healthz" => 1,
-        "/stats" => 2,
-        _ => 3,
+        "/batch" => 1,
+        "/healthz" => 2,
+        "/stats" => 3,
+        _ => 4,
     }
 }
 
@@ -498,11 +514,12 @@ impl Inner {
             ("GET", "/healthz") => (200, "{\n  \"ok\": true\n}\n".to_string()),
             ("GET", "/stats") => (200, self.stats_json()),
             ("POST", "/partition") => self.handle_partition(req),
-            (_, "/partition" | "/healthz" | "/stats") => (
+            ("POST", "/batch") => self.handle_batch(req),
+            (_, "/partition" | "/batch" | "/healthz" | "/stats") => (
                 405,
                 error_body(
-                    "method not allowed (POST /partition, GET /healthz, \
-                     GET /stats)",
+                    "method not allowed (POST /partition, POST /batch, \
+                     GET /healthz, GET /stats)",
                     ErrorKind::InvalidRequest,
                 ),
             ),
@@ -534,6 +551,183 @@ impl Inner {
                 (200, json)
             }
             Err(e) => (status_for(e.kind()), error_body(&e.to_string(), e.kind())),
+        }
+    }
+
+    fn handle_batch(&self, req: &Request) -> (u16, String) {
+        let Ok(text) = std::str::from_utf8(&req.body) else {
+            return (400, error_body("request body is not UTF-8", ErrorKind::InvalidRequest));
+        };
+        let breq = match BatchRequest::from_json(text) {
+            Ok(b) => b,
+            Err(e) => return (status_for(e.kind()), error_body(&e.to_string(), e.kind())),
+        };
+        match self.run_batch(&breq) {
+            Ok(report) => (200, report.to_json()),
+            Err(e) => (status_for(e.kind()), error_body(&e.to_string(), e.kind())),
+        }
+    }
+
+    /// One batch against the caches: resolve (or reuse) the graph once,
+    /// consult the result cache per variant, run only the misses as a
+    /// single batch-engine invocation, and publish each computed variant
+    /// under its own [`cache_key`] so later `POST /partition` requests
+    /// hit. The whole batch occupies *one* `max_compute` slot (it is one
+    /// handler thread doing useful work, however many variants it
+    /// carries). Variants already in flight elsewhere are recomputed
+    /// here rather than waited on — reports are bit-identical, so the
+    /// duplicated work costs time, never correctness — and only the
+    /// flights this batch claimed are published.
+    fn run_batch(&self, breq: &BatchRequest) -> Result<BatchReport> {
+        if breq.variants.is_empty() {
+            return Err(anyhow!("batch has no variants").with_kind(ErrorKind::InvalidRequest));
+        }
+        let graph = self.graph_for(&breq.dataset, breq.graph_seed)?;
+        let keys: Vec<String> = breq
+            .variants
+            .iter()
+            .map(|v| cache_key(&breq.request_for(v)))
+            .collect();
+        let nvars = keys.len();
+        let mut done: Vec<Option<Arc<RunReport>>> = vec![None; nvars];
+        let mut misses: Vec<usize> = Vec::new();
+        let mut claimed = vec![false; nvars];
+        {
+            let mut cache = relock(&self.cache);
+            for (i, key) in keys.iter().enumerate() {
+                match cache.map.get(key) {
+                    Some(Flight::Done(report)) => done[i] = Some(report.clone()),
+                    Some(Flight::InFlight) => misses.push(i),
+                    None => {
+                        misses.push(i);
+                        // claim unless a duplicate variant earlier in
+                        // this same batch already did
+                        if !keys[..i].iter().zip(&claimed).any(|(k, &c)| c && k == key) {
+                            claimed[i] = true;
+                        }
+                    }
+                }
+            }
+            let hits = nvars - misses.len();
+            if hits > 0 {
+                self.stats.cache_hits.fetch_add(hits, Ordering::SeqCst);
+            }
+            if !misses.is_empty() {
+                if cache.in_flight >= self.cfg.max_compute.max(1) {
+                    drop(cache);
+                    self.stats.shed_busy.fetch_add(1, Ordering::SeqCst);
+                    return Err(anyhow!(
+                        "{} distinct computations already in flight; \
+                         retry later",
+                        self.cfg.max_compute
+                    )
+                    .with_kind(ErrorKind::Busy));
+                }
+                cache.in_flight += 1;
+                for (i, key) in keys.iter().enumerate() {
+                    if claimed[i] {
+                        cache.map.insert(key.clone(), Flight::InFlight);
+                    }
+                }
+            }
+        }
+
+        if misses.is_empty() {
+            // every variant served from cache: profile the (cached)
+            // graph and assemble in variant order; no engine run, so the
+            // execution-side accounting is honestly zero
+            let (shared, shared_secs) =
+                crate::util::timer::time(|| SharedPrep::compute(&graph));
+            let reports =
+                done.into_iter().map(|r| (*r.expect("all hits")).clone()).collect();
+            return Ok(BatchReport {
+                dataset: breq.dataset.clone(),
+                vertices: graph.vertex_count(),
+                edges: graph.edge_count(),
+                shared,
+                reports,
+                lanes: 0,
+                resolve_secs: 0.0,
+                shared_secs,
+                exec_secs: 0.0,
+                scratch_peak_bytes: 0,
+            });
+        }
+
+        // unwind claimed flights if the engine panics, so waiters retry
+        // instead of hanging until their deadline
+        struct BatchGuard<'a> {
+            inner: &'a Inner,
+            keys: &'a [String],
+            claimed: &'a [bool],
+            armed: bool,
+        }
+        impl Drop for BatchGuard<'_> {
+            fn drop(&mut self) {
+                if !self.armed {
+                    return;
+                }
+                let mut cache = relock(&self.inner.cache);
+                for (key, &c) in self.keys.iter().zip(self.claimed) {
+                    if c {
+                        cache.map.remove(key);
+                    }
+                }
+                cache.in_flight = cache.in_flight.saturating_sub(1);
+                self.inner.cache_cv.notify_all();
+            }
+        }
+        let mut guard =
+            BatchGuard { inner: self, keys: &keys, claimed: &claimed, armed: true };
+        self.stats.computations.fetch_add(misses.len(), Ordering::SeqCst);
+        let sub = BatchRequest {
+            dataset: breq.dataset.clone(),
+            graph_seed: breq.graph_seed,
+            variants: misses.iter().map(|&i| breq.variants[i].clone()).collect(),
+            gain_samples: breq.gain_samples,
+            workload: breq.workload,
+            threads: breq.threads,
+        };
+        let out = sub.execute_on(&graph);
+        guard.armed = false;
+        let mut cache = relock(&self.cache);
+        cache.in_flight = cache.in_flight.saturating_sub(1);
+        match out {
+            Ok(mut subrep) => {
+                self.stats.cache_misses.fetch_add(misses.len(), Ordering::SeqCst);
+                for (j, &i) in misses.iter().enumerate() {
+                    let mut report = subrep.reports[j].clone();
+                    report.dataset = breq.dataset.clone();
+                    let report = Arc::new(report);
+                    if claimed[i] {
+                        cache.map.insert(keys[i].clone(), Flight::Done(report.clone()));
+                        cache.order.push_back(keys[i].clone());
+                    }
+                    done[i] = Some(report);
+                }
+                while cache.order.len() > self.cfg.cache_capacity.max(1) {
+                    if let Some(old) = cache.order.pop_front() {
+                        cache.map.remove(&old);
+                    }
+                }
+                self.cache_cv.notify_all();
+                drop(cache);
+                subrep.dataset = breq.dataset.clone();
+                subrep.reports = done
+                    .into_iter()
+                    .map(|r| (*r.expect("every variant is a hit or a miss")).clone())
+                    .collect();
+                Ok(subrep)
+            }
+            Err(e) => {
+                for (key, &c) in keys.iter().zip(&claimed) {
+                    if c {
+                        cache.map.remove(key);
+                    }
+                }
+                self.cache_cv.notify_all();
+                Err(e)
+            }
         }
     }
 
@@ -662,7 +856,12 @@ impl Inner {
                 return Ok(g.clone());
             }
         }
-        let resolved = Arc::new(resolve_graph(dataset, graph_seed)?);
+        let (outcome, secs) =
+            crate::util::timer::time(|| resolve_graph(dataset, graph_seed));
+        // attribute resolve time (success or failure) separately from
+        // partitioning: this is the cold-path share of request latency
+        relock(&self.stats.resolve).record(secs);
+        let resolved = Arc::new(outcome?);
         let mut graphs = relock(&self.graphs);
         if let Some(g) = graphs.map.get(&key) {
             return Ok(g.clone());
@@ -696,6 +895,12 @@ impl Inner {
             sink.num("computations_in_flight", cache.in_flight as f64);
         }
         sink.num("graphs_resident", relock(&self.graphs).map.len() as f64);
+        {
+            let resolve = *relock(&self.stats.resolve);
+            sink.num("resolve_count", resolve.count as f64);
+            sink.num("resolve_mean_ms", resolve.mean_s() * 1e3);
+            sink.num("resolve_max_ms", resolve.max_s * 1e3);
+        }
         sink.num("shed_queue_full", load(&self.stats.shed_queue_full));
         sink.num("shed_body_too_large", load(&self.stats.shed_body_too_large));
         sink.num("shed_timeout", load(&self.stats.shed_timeout));
@@ -796,6 +1001,18 @@ impl ServeClient {
             return Err(anyhow!("server answered {status}: {msg}").with_kind(kind));
         }
         RunReport::from_json(&body)
+    }
+
+    /// `POST /batch` and parse the batch report. Non-200 answers become
+    /// errors carrying the server's machine-readable kind. Per-variant
+    /// reports come back with owners, bit-identical to local execution.
+    pub fn batch(&mut self, req: &BatchRequest) -> Result<BatchReport> {
+        let (status, body) = self.request("POST", "/batch", req.to_json().as_bytes())?;
+        if status != 200 {
+            let (msg, kind) = parse_error_body(&body);
+            return Err(anyhow!("server answered {status}: {msg}").with_kind(kind));
+        }
+        BatchReport::from_json(&body)
     }
 }
 

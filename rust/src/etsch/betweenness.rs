@@ -61,7 +61,7 @@ impl Algorithm for SigmaPhase {
             if su.sigma == 0.0 || su.dist == UNREACHED {
                 continue;
             }
-            for &(w, _) in sub.neighbors(u) {
+            for &w in sub.neighbor_vertices(u) {
                 if states[w as usize].dist == su.dist + 1 {
                     states[w as usize].partial += su.sigma;
                 }
@@ -129,7 +129,7 @@ impl Algorithm for DeltaPhase {
             if sv.dist == UNREACHED || sv.sigma == 0.0 {
                 continue;
             }
-            for &(u, _) in sub.neighbors(v) {
+            for &u in sub.neighbor_vertices(v) {
                 let su = states[u as usize];
                 if su.dist != UNREACHED
                     && su.dist + 1 == sv.dist
@@ -218,7 +218,7 @@ pub fn brandes_ref(g: &Graph) -> Vec<f64> {
         let mut queue = std::collections::VecDeque::from([s]);
         while let Some(v) = queue.pop_front() {
             stack.push(v);
-            for &(w, _) in g.neighbors(v) {
+            for &w in g.neighbor_vertices(v) {
                 if dist[w as usize] == i64::MAX {
                     dist[w as usize] = dist[v as usize] + 1;
                     queue.push_back(w);

@@ -49,7 +49,7 @@ impl Algorithm for ConnectedComponents {
         while let Some(u) = queue.pop_front() {
             inq[u as usize] = false;
             let su = states[u as usize];
-            for &(w, _) in sub.neighbors(u) {
+            for &w in sub.neighbor_vertices(u) {
                 if su < states[w as usize] {
                     states[w as usize] = su;
                     if !inq[w as usize] {

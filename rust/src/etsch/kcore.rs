@@ -58,7 +58,7 @@ impl Algorithm for KCore {
                 continue;
             }
             let mut deg = 0;
-            for &(w, _) in sub.neighbors(u) {
+            for &w in sub.neighbor_vertices(u) {
                 if states[w as usize].alive {
                     deg += 1;
                 }
@@ -91,7 +91,7 @@ pub fn kcore_ref(g: &Graph, k: u32) -> Vec<bool> {
             continue;
         }
         alive[v as usize] = false;
-        for &(w, _) in g.neighbors(v) {
+        for &w in g.neighbor_vertices(v) {
             if alive[w as usize] {
                 deg[w as usize] -= 1;
                 if deg[w as usize] < k {

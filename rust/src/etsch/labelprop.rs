@@ -45,7 +45,7 @@ impl Algorithm for LabelPropagation {
         let labels: Vec<u32> = states.iter().map(|s| s.label).collect();
         for u in 0..states.len() {
             let mut votes: Vec<(u32, u32)> = Vec::new();
-            for &(w, _) in sub.neighbors(u as u32) {
+            for &w in sub.neighbor_vertices(u as u32) {
                 let l = labels[w as usize];
                 match votes.binary_search_by_key(&l, |&(x, _)| x) {
                     Ok(i) => votes[i].1 += 1,

@@ -94,7 +94,7 @@ impl Algorithm for LubyMis {
         }
         // spread values / set membership across local edges
         for u in 0..states.len() as u32 {
-            for &(w, _) in sub.neighbors(u) {
+            for &w in sub.neighbor_vertices(u) {
                 let sw = states[w as usize];
                 let su = &mut states[u as usize];
                 if sw.status == Status::Undecided {
@@ -144,9 +144,9 @@ pub fn validate_mis(g: &Graph, in_set: &[bool]) -> Result<(), String> {
     for v in 0..g.vertex_count() as u32 {
         if !in_set[v as usize] {
             let ok = g
-                .neighbors(v)
+                .neighbor_vertices(v)
                 .iter()
-                .any(|&(w, _)| in_set[w as usize]);
+                .any(|&w| in_set[w as usize]);
             if !ok && g.degree(v) > 0 {
                 return Err(format!("vertex {v} excluded without set neighbor"));
             }

@@ -61,7 +61,7 @@ impl Algorithm for PageRank {
                 continue;
             }
             let push = su.rank / su.degree as f64;
-            for &(w, _) in sub.neighbors(u) {
+            for &w in sub.neighbor_vertices(u) {
                 states[w as usize].partial += push;
             }
         }
@@ -96,7 +96,7 @@ pub fn pagerank_ref(g: &Graph, damping: f64, iterations: usize) -> Vec<f64> {
                 continue;
             }
             let push = damping * rank[v as usize] / d as f64;
-            for &(w, _) in g.neighbors(v) {
+            for &w in g.neighbor_vertices(v) {
                 next[w as usize] += push;
             }
         }

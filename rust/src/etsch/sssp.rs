@@ -49,7 +49,7 @@ impl Algorithm for Sssp {
             if d > states[u as usize] {
                 continue; // stale entry
             }
-            for &(w, _) in sub.neighbors(u) {
+            for &w in sub.neighbor_vertices(u) {
                 let nd = d + 1;
                 if nd < states[w as usize] {
                     states[w as usize] = nd;

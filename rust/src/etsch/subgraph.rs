@@ -62,7 +62,7 @@ mod tests {
             assert_eq!(total, 2 * s.edge_count);
             // adjacency edge ids belong to this part
             for v in 0..s.vertex_count() as u32 {
-                for &(w, e) in s.neighbors(v) {
+                for (w, e) in s.neighbors(v) {
                     assert_eq!(p.owner[e as usize] as usize, s.part);
                     assert!((w as usize) < s.vertex_count());
                 }

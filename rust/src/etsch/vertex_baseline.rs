@@ -32,7 +32,7 @@ pub fn bsp_sssp(g: &Graph, source: u32) -> BspRun<u32> {
         // message phase: every active vertex sends dist+1 to neighbors
         for &u in &active {
             let du = dist[u as usize];
-            for &(w, _) in g.neighbors(u) {
+            for &w in g.neighbor_vertices(u) {
                 messages += 1;
                 if du + 1 < dist[w as usize] {
                     dist[w as usize] = du + 1;
@@ -66,7 +66,7 @@ pub fn bsp_cc(g: &Graph, seed: u64) -> BspRun<u64> {
         let mut next = Vec::new();
         for &u in &active {
             let lu = label[u as usize];
-            for &(w, _) in g.neighbors(u) {
+            for &w in g.neighbor_vertices(u) {
                 messages += 1;
                 if lu < label[w as usize] {
                     label[w as usize] = lu;

@@ -71,20 +71,41 @@ pub(crate) fn build_csr(n: usize, edges: Vec<(u32, u32)>) -> Graph {
     for i in 1..offsets.len() {
         offsets[i] += offsets[i - 1];
     }
-    let mut adj = vec![(0u32, 0u32); offsets[n] as usize];
+    let slots = offsets[n] as usize;
+    let mut adj_nbr = vec![0u32; slots];
+    let mut adj_eid = vec![0u32; slots];
     let mut cursor = offsets.clone();
     for (e, &(u, v)) in edges.iter().enumerate() {
-        adj[cursor[u as usize] as usize] = (v, e as u32);
+        let cu = cursor[u as usize] as usize;
+        adj_nbr[cu] = v;
+        adj_eid[cu] = e as u32;
         cursor[u as usize] += 1;
-        adj[cursor[v as usize] as usize] = (u, e as u32);
+        let cv = cursor[v as usize] as usize;
+        adj_nbr[cv] = u;
+        adj_eid[cv] = e as u32;
         cursor[v as usize] += 1;
     }
-    // sort each adjacency run by neighbor id for binary-searchable lookups
+    // each adjacency run must be sorted by neighbor id for
+    // binary-searchable lookups; the canonical (sorted) edge order already
+    // yields sorted runs, so this pass verifies and only sorts on the rare
+    // out-of-order run
+    let mut perm: Vec<u32> = Vec::new();
     for v in 0..n {
         let (lo, hi) = (offsets[v] as usize, offsets[v + 1] as usize);
-        adj[lo..hi].sort_unstable();
+        if adj_nbr[lo..hi].windows(2).all(|w| w[0] <= w[1]) {
+            continue;
+        }
+        perm.clear();
+        perm.extend(lo as u32..hi as u32);
+        perm.sort_unstable_by_key(|&i| {
+            (adj_nbr[i as usize], adj_eid[i as usize])
+        });
+        let nbr: Vec<u32> = perm.iter().map(|&i| adj_nbr[i as usize]).collect();
+        let eid: Vec<u32> = perm.iter().map(|&i| adj_eid[i as usize]).collect();
+        adj_nbr[lo..hi].copy_from_slice(&nbr);
+        adj_eid[lo..hi].copy_from_slice(&eid);
     }
-    Graph::from_parts(n, edges, offsets, adj)
+    Graph::from_parts(n, edges, offsets, adj_nbr, adj_eid)
 }
 
 /// Extract the largest connected component, re-compacting vertex ids.
@@ -106,7 +127,7 @@ pub fn largest_component(g: &Graph) -> Graph {
         stack.push(s);
         while let Some(u) = stack.pop() {
             size += 1;
-            for &(w, _) in g.neighbors(u) {
+            for &w in g.neighbor_vertices(u) {
                 if comp[w as usize] == u32::MAX {
                     comp[w as usize] = c;
                     stack.push(w);
@@ -189,7 +210,7 @@ mod tests {
         // every edge appears exactly twice across adjacency lists
         let mut seen = vec![0u32; g.edge_count()];
         for v in 0..g.vertex_count() as u32 {
-            for &(w, e) in g.neighbors(v) {
+            for (w, e) in g.neighbors(v) {
                 assert_eq!(g.other_endpoint(e, v), w);
                 seen[e as usize] += 1;
             }

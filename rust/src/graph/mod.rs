@@ -17,16 +17,34 @@ pub mod stream;
 
 pub use builder::GraphBuilder;
 
+/// Iterator over a vertex's `(neighbor, edge_id)` pairs — a zip over the
+/// two SoA adjacency arrays, yielding pairs by value. Implements
+/// `ExactSizeIterator` and `DoubleEndedIterator` like the slice iterator
+/// it replaced.
+pub type NeighborIter<'a> = std::iter::Zip<
+    std::iter::Copied<std::slice::Iter<'a, u32>>,
+    std::iter::Copied<std::slice::Iter<'a, u32>>,
+>;
+
 /// Immutable simple undirected graph in CSR form with edge ids.
+///
+/// Adjacency is stored struct-of-arrays: neighbor ids and edge ids live
+/// in two parallel `Vec<u32>`s sharing one CSR offset table. Scans that
+/// only need neighbors (degree work, multiplicity counting, label
+/// spreading, HDRF scoring) touch half the bytes an AoS
+/// `Vec<(u32, u32)>` would stream through cache.
 #[derive(Clone, Debug)]
 pub struct Graph {
     n: usize,
     /// Canonical edge list; `edges[e] = (u, v)` with `u < v`.
     edges: Vec<(u32, u32)>,
-    /// CSR offsets, length `n + 1`.
+    /// CSR offsets, length `n + 1` (shared by both adjacency arrays).
     offsets: Vec<u32>,
-    /// Flattened adjacency: `(neighbor, edge_id)` pairs.
-    adj: Vec<(u32, u32)>,
+    /// Flattened neighbor ids (sorted per vertex).
+    adj_nbr: Vec<u32>,
+    /// Edge id of each adjacency slot: `adj_eid[i]` is the edge behind
+    /// `adj_nbr[i]`.
+    adj_eid: Vec<u32>,
 }
 
 impl Graph {
@@ -56,9 +74,36 @@ impl Graph {
 
     /// `(neighbor, edge_id)` pairs incident on `v`, sorted by neighbor id.
     #[inline]
-    pub fn neighbors(&self, v: u32) -> &[(u32, u32)] {
-        &self.adj
-            [self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize]
+    pub fn neighbors(&self, v: u32) -> NeighborIter<'_> {
+        let (lo, hi) = self.adj_range(v);
+        self.adj_nbr[lo..hi]
+            .iter()
+            .copied()
+            .zip(self.adj_eid[lo..hi].iter().copied())
+    }
+
+    /// Neighbor ids of `v` as a slice, sorted ascending — the half the
+    /// neighbor-only scans (and binary-searchable lookups) want.
+    #[inline]
+    pub fn neighbor_vertices(&self, v: u32) -> &[u32] {
+        let (lo, hi) = self.adj_range(v);
+        &self.adj_nbr[lo..hi]
+    }
+
+    /// Edge ids incident on `v` as a slice, parallel to
+    /// [`neighbor_vertices`](Self::neighbor_vertices).
+    #[inline]
+    pub fn neighbor_edges(&self, v: u32) -> &[u32] {
+        let (lo, hi) = self.adj_range(v);
+        &self.adj_eid[lo..hi]
+    }
+
+    #[inline]
+    fn adj_range(&self, v: u32) -> (usize, usize) {
+        (
+            self.offsets[v as usize] as usize,
+            self.offsets[v as usize + 1] as usize,
+        )
     }
 
     /// Iterator over `(edge_id, u, v)`.
@@ -88,14 +133,17 @@ impl Graph {
     }
 
     /// Construct from parts — used by [`GraphBuilder`]; keeps invariants
-    /// (canonical edges, sorted adjacency) by construction.
+    /// (canonical edges, sorted adjacency, parallel SoA arrays) by
+    /// construction.
     pub(crate) fn from_parts(
         n: usize,
         edges: Vec<(u32, u32)>,
         offsets: Vec<u32>,
-        adj: Vec<(u32, u32)>,
+        adj_nbr: Vec<u32>,
+        adj_eid: Vec<u32>,
     ) -> Self {
-        Graph { n, edges, offsets, adj }
+        debug_assert_eq!(adj_nbr.len(), adj_eid.len());
+        Graph { n, edges, offsets, adj_nbr, adj_eid }
     }
 }
 
@@ -125,12 +173,30 @@ mod tests {
     #[test]
     fn neighbors_sorted_with_edge_ids() {
         let g = triangle_plus_tail();
-        let nbrs: Vec<u32> = g.neighbors(2).iter().map(|&(w, _)| w).collect();
+        let nbrs: Vec<u32> = g.neighbors(2).map(|(w, _)| w).collect();
         assert_eq!(nbrs, vec![0, 1, 3]);
-        for &(w, e) in g.neighbors(2) {
+        assert_eq!(g.neighbor_vertices(2), &[0, 1, 3]);
+        for (w, e) in g.neighbors(2) {
             let (a, b) = g.endpoints(e);
             assert!(a == 2 || b == 2);
             assert_eq!(g.other_endpoint(e, 2), w);
+        }
+    }
+
+    #[test]
+    fn soa_slices_are_parallel() {
+        let g = triangle_plus_tail();
+        for v in 0..g.vertex_count() as u32 {
+            let vs = g.neighbor_vertices(v);
+            let es = g.neighbor_edges(v);
+            assert_eq!(vs.len(), es.len());
+            assert_eq!(vs.len(), g.degree(v));
+            let zipped: Vec<(u32, u32)> = g.neighbors(v).collect();
+            assert_eq!(zipped.len(), g.neighbors(v).len());
+            for (i, &(w, e)) in zipped.iter().enumerate() {
+                assert_eq!(vs[i], w);
+                assert_eq!(es[i], e);
+            }
         }
     }
 

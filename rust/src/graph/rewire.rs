@@ -62,12 +62,12 @@ fn creates_triangle(g: &Graph, u: u32, v: u32) -> bool {
     // common neighbor in the *original* adjacency is a good proxy; exact
     // tracking would need incremental adjacency updates and the original
     // road graph has ~no triangles anyway.
-    let nu = g.neighbors(u);
-    let nv = g.neighbors(v);
+    let nu = g.neighbor_vertices(u);
+    let nv = g.neighbor_vertices(v);
     let (mut i, mut j) = (0usize, 0usize);
     while i < nu.len() && j < nv.len() {
         use std::cmp::Ordering::*;
-        match nu[i].0.cmp(&nv[j].0) {
+        match nu[i].cmp(&nv[j]) {
             Less => i += 1,
             Greater => j += 1,
             Equal => return true,

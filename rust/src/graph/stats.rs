@@ -12,7 +12,7 @@ pub fn bfs_distances(g: &Graph, source: u32) -> Vec<u32> {
     queue.push_back(source);
     while let Some(u) = queue.pop_front() {
         let du = dist[u as usize];
-        for &(w, _) in g.neighbors(u) {
+        for &w in g.neighbor_vertices(u) {
             if dist[w as usize] == u32::MAX {
                 dist[w as usize] = du + 1;
                 queue.push_back(w);
@@ -49,7 +49,7 @@ pub fn components(g: &Graph) -> (Vec<u32>, usize) {
         comp[s as usize] = next;
         stack.push(s);
         while let Some(u) = stack.pop() {
-            for &(w, _) in g.neighbors(u) {
+            for &w in g.neighbor_vertices(u) {
                 if comp[w as usize] == u32::MAX {
                     comp[w as usize] = next;
                     stack.push(w);
@@ -109,15 +109,15 @@ fn triangles_and_wedges(g: &Graph) -> (u64, u64, Vec<u64>) {
     for (_, u, v) in g.edge_iter() {
         // count common neighbors of u, v via sorted merge
         let (mut i, mut j) = (0usize, 0usize);
-        let nu = g.neighbors(u);
-        let nv = g.neighbors(v);
+        let nu = g.neighbor_vertices(u);
+        let nv = g.neighbor_vertices(v);
         while i < nu.len() && j < nv.len() {
             use std::cmp::Ordering::*;
-            match nu[i].0.cmp(&nv[j].0) {
+            match nu[i].cmp(&nv[j]) {
                 Less => i += 1,
                 Greater => j += 1,
                 Equal => {
-                    let w = nu[i].0;
+                    let w = nu[i];
                     // each triangle (u,v,w) is counted once per edge, i.e.
                     // 3 times in total across the edge loop
                     triangles += 1;

@@ -10,6 +10,7 @@
 //! Examples:
 //!   repro partition --graph astroph --algo dfep --k 20 --seed 1
 //!   repro partition --graph astroph --algo hdrf:lambda=1.5 --k 32
+//!   repro batch --graph astroph@0.05 --algos dfep,random --ks 16,32 --seeds 1,2
 //!   repro sssp --graph usroads@0.05 --k 8 --source 0
 //!   repro cluster --graph dblp@0.1 --nodes 2,4,8,16
 //!   repro stats --graph wordnet@0.1
@@ -52,6 +53,12 @@ COMMANDS
               --graph SPEC [--algo ALGOSPEC]
               --alg sssp|cc|mis|pagerank|kcore|labelprop|betweenness
               --k N [--core-k N] [--samples N] --seed S
+  batch       run a (algo, k, seed) sweep against one graph through the
+              batched engine: one graph resolve + one shared profile,
+              variants fanned out over pool lanes, reports in variant
+              order bit-identical to sequential runs
+              --graph SPEC [--algos A,B,...] [--ks 2,8] [--seeds 1,2]
+              [--threads N] [--gain-samples N] [--json FILE]
   algos       list every registered partitioner spec and its parameters
   faults      re-simulate the Fig-8 DFEP job under failure injection
               --graph SPEC --k N --nodes N --fail-rate P --seed S
@@ -60,8 +67,9 @@ COMMANDS
   stats       print the Table II/III row for a graph
               --graph SPEC [--seed S]
   serve       partitioning-as-a-service: long-running HTTP/1.1 server
-              answering PartitionRequest JSON on POST /partition, with a
-              single-flight result cache and bounded-load shedding
+              answering PartitionRequest JSON on POST /partition and
+              BatchRequest JSON on POST /batch, with a single-flight
+              result cache and bounded-load shedding
               (see DESIGN.md \"Serving layer\")
               [--addr HOST:PORT] [--workers N] [--max-body BYTES]
               [--max-queue N] [--max-compute N] [--timeout SECS]
@@ -92,6 +100,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
     let args = Args::parse(argv)?;
     match args.command.as_str() {
         "partition" => cmd_partition(&args),
+        "batch" => cmd_batch(&args),
         "stream-partition" => cmd_stream_partition(&args),
         "sssp" => cmd_sssp(&args),
         "etsch" => cmd_etsch(&args),
@@ -164,6 +173,78 @@ fn cmd_partition(args: &Args) -> Result<()> {
     }
     if let Some(out) = args.get("json") {
         std::fs::write(out, res.to_json())
+            .map_err(|e| anyhow!("writing {out}: {e}"))?;
+        println!("  wrote {out}");
+    }
+    Ok(())
+}
+
+fn cmd_batch(args: &Args) -> Result<()> {
+    use dfep::coordinator::batch::{grid, BatchRequest};
+    let graph = args
+        .get("graph")
+        .ok_or_else(|| anyhow!("--graph is required"))?;
+    let algos: Vec<&str> = args.get_or("algos", "dfep").split(',').collect();
+    let ks: Vec<usize> = args
+        .get_or("ks", "20")
+        .split(',')
+        .map(|s| s.parse().map_err(|_| anyhow!("bad k '{s}' in --ks")))
+        .collect::<Result<_>>()?;
+    let seeds: Vec<u64> = args
+        .get_or("seeds", "1")
+        .split(',')
+        .map(|s| s.parse().map_err(|_| anyhow!("bad seed '{s}' in --seeds")))
+        .collect::<Result<_>>()?;
+    let mut req = BatchRequest::new(graph)
+        .graph_seed(args.get_u64("graph-seed", 42)?)
+        .gain_samples(args.get_usize("gain-samples", 0)?);
+    for v in grid(&algos, &ks, &seeds)? {
+        req = req.variant(v);
+    }
+    if args.get("threads").is_some() {
+        req = req.threads(args.get_usize("threads", 1)?);
+    }
+    let rep = req.execute()?;
+    println!(
+        "graph: {} |V|={} |E|={} max-deg {} avg-deg {:.2} \
+         (resolved {:.3}s, profiled {:.3}s)",
+        rep.dataset,
+        rep.vertices,
+        rep.edges,
+        rep.shared.max_degree,
+        rep.shared.avg_degree,
+        rep.resolve_secs,
+        rep.shared_secs
+    );
+    println!(
+        "{} variant(s) over {} lane(s) in {:.3}s ({:.1} variants/s, \
+         scratch peak {} B)",
+        rep.reports.len(),
+        rep.lanes,
+        rep.exec_secs,
+        rep.reports.len() as f64 / rep.exec_secs.max(1e-9),
+        rep.scratch_peak_bytes
+    );
+    println!(
+        "{:<18} {:>4} {:>6} {:>7} {:>8} {:>8} {:>9} {:>8}",
+        "spec", "k", "seed", "rounds", "largest", "nstdev", "messages",
+        "secs"
+    );
+    for r in &rep.reports {
+        println!(
+            "{:<18} {:>4} {:>6} {:>7} {:>8.4} {:>8.4} {:>9} {:>8.3}",
+            r.spec,
+            r.k,
+            r.seed,
+            r.metrics.rounds,
+            r.metrics.largest,
+            r.metrics.nstdev,
+            r.metrics.messages,
+            r.timings.partition_secs
+        );
+    }
+    if let Some(out) = args.get("json") {
+        std::fs::write(out, rep.to_json())
             .map_err(|e| anyhow!("writing {out}: {e}"))?;
         println!("  wrote {out}");
     }
@@ -493,7 +574,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let server = Server::bind(cfg)?;
     println!("repro serve listening on http://{}", server.addr());
-    println!("  POST /partition  GET /healthz  GET /stats  (ctrl-c stops)");
+    println!(
+        "  POST /partition  POST /batch  GET /healthz  GET /stats  \
+         (ctrl-c stops)"
+    );
     server.serve();
     Ok(())
 }

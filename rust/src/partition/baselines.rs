@@ -91,7 +91,7 @@ impl Partitioner for GreedyBfs {
                     let (u, v) = g.endpoints(e);
                     let mut advanced = false;
                     for w in [u, v] {
-                        for &(_, e2) in g.neighbors(w) {
+                        for &e2 in g.neighbor_edges(w) {
                             if owner[e2 as usize] == u32::MAX {
                                 owner[e2 as usize] = i as u32;
                                 frontier[i].push_back(e2);

@@ -249,6 +249,46 @@ impl RoundScratch {
     fn note_peak(&mut self) {
         self.peak_bytes = self.peak_bytes.max(self.current_bytes());
     }
+
+    /// Reshape for a run on a graph with `n` vertices, `m` edges and `k`
+    /// partitions, reusing every buffer (grow-only capacities). After
+    /// this the scratch is observably equivalent to
+    /// `RoundScratch::new(n, k, m)`: the stamp/epoch pair keeps counting
+    /// monotonically (the [`begin_pass`] contract only needs
+    /// `stamp[v] <= epoch`, re-zeroing when `n` changes), `seen_parts`
+    /// and the radix histogram are re-filled at use time, and
+    /// `peak_bytes` deliberately carries across runs — it is the
+    /// high-water mark the batch engine reports per lane.
+    fn reset(&mut self, n: usize, k: usize, m: usize) {
+        self.holder_lists.truncate(k);
+        for l in &mut self.holder_lists {
+            l.clear();
+        }
+        self.holder_lists.resize_with(k, Vec::new);
+        self.shards.clear();
+        // outs1/outs2 entries are cleared at use; keep their capacities
+        self.bids.clear();
+        self.bids_tmp.clear();
+        self.counts.clear();
+        self.counts.resize(m.clamp(1, RADIX), 0);
+        self.groups.clear();
+        self.outs2_used = 0;
+        if self.stamp.len() != n {
+            self.stamp.clear();
+            self.stamp.resize(n, 0);
+            self.epoch = 0;
+        }
+        self.seen_parts.clear();
+        self.seen_parts.resize(k, u32::MAX);
+        for f in &mut self.found {
+            f.clear();
+        }
+        self.frontier_of.truncate(k);
+        for f in &mut self.frontier_of {
+            f.clear();
+        }
+        self.frontier_of.resize_with(k, Vec::new);
+    }
 }
 
 /// Reserve `span` fresh stamp values, returning the base id: vertex `v`
@@ -424,6 +464,56 @@ impl DfepState {
         }
     }
 
+    /// Re-initialize in place for a fresh run, reusing every buffer —
+    /// the ledger, the ownership vector, the degree/holder/frontier
+    /// lists and the whole round scratch keep their allocations
+    /// (grow-only capacities).
+    ///
+    /// The post-state is *observably identical* to
+    /// [`DfepState::new(g, k, initial, rng)`](Self::new) — including the
+    /// `rng` draw sequence (exactly `k` calls to `below(n)`) — which is
+    /// what lets the run loops recycle states unconditionally without
+    /// perturbing the bit-exact trajectory pinned by
+    /// `tests/pool_invariants.rs`. This is the engine half of the batch
+    /// facade's steady-state story: after the first variant on a lane,
+    /// later same-shape variants run their rounds without a single heap
+    /// allocation (`tests/batch.rs`).
+    pub fn reset(&mut self, g: &Graph, k: usize, initial: f64, rng: &mut Rng) {
+        let n = g.vertex_count();
+        let m = g.edge_count();
+        self.k = k;
+        self.money.reset(k, n);
+        self.anchor.clear();
+        self.holders.truncate(k);
+        for h in &mut self.holders {
+            h.clear();
+        }
+        self.holders.resize_with(k, Vec::new);
+        for i in 0..k {
+            let v = rng.below(n);
+            *self.money.cell_mut(i, v) = initial;
+            self.anchor.push(v);
+            self.holders[i].push(v as u32);
+        }
+        self.free_deg.clear();
+        self.free_deg.resize(n, 0);
+        for (_, u, v) in g.edge_iter() {
+            self.free_deg[u as usize] += 1;
+            self.free_deg[v as usize] += 1;
+        }
+        self.live_vertices.clear();
+        self.live_vertices
+            .extend((0..n as u32).filter(|&v| self.free_deg[v as usize] > 0));
+        self.owner.clear();
+        self.owner.resize(m, FREE);
+        self.sizes.clear();
+        self.sizes.resize(k, 0);
+        self.free_edges = m;
+        self.rounds = 0;
+        self.frontier_first = true;
+        self.scratch.reset(n, k, m);
+    }
+
     /// Steps 1 + 2 for one round. `poor`/`rich` enable the DFEPC
     /// dynamic: partitions listed in `poor` may also bid on edges owned by
     /// partitions listed in `rich`, stealing them on a strictly higher bid.
@@ -513,7 +603,7 @@ impl DfepState {
                         let cash = money_i[v as usize];
                         out.eligible.clear();
                         let mut has_buyable = false;
-                        for &(_, e) in g.neighbors(v) {
+                        for &e in g.neighbor_edges(v) {
                             let o = owner[e as usize];
                             let buyable = o == FREE
                                 || (poor_i
@@ -796,7 +886,7 @@ impl DfepState {
                         // cheap adjacent-duplicate filter; exact dedup
                         // happens in the stamped serial merge below
                         let mut last = FREE;
-                        for &(_, e2) in g.neighbors(w) {
+                        for &e2 in g.neighbor_edges(w) {
                             let p = owner[e2 as usize];
                             if p != FREE && p != last {
                                 last = p;
@@ -929,6 +1019,51 @@ impl DfepState {
     }
 }
 
+std::thread_local! {
+    /// Per-thread parking slot for a finished run's [`DfepState`]: the
+    /// run loops park their state here instead of dropping it, and the
+    /// next run on the same thread resurrects it via
+    /// [`DfepState::reset`]. One slot is enough — runs on a thread are
+    /// strictly sequential, and the batch engine's lanes each execute on
+    /// one pool worker, so a lane's variants chain through this slot and
+    /// the big per-run allocations (the `k x n` ledger, the scratch, the
+    /// degree/holder lists) are paid once per lane, not once per variant.
+    static PARKED: std::cell::RefCell<Option<DfepState>> =
+        const { std::cell::RefCell::new(None) };
+}
+
+/// A run-ready state: the thread's parked state reset in place when one
+/// is available, else a freshly allocated [`DfepState::new`]. The two
+/// are observably identical (see [`DfepState::reset`]).
+pub(crate) fn acquire_state(
+    g: &Graph,
+    k: usize,
+    initial: f64,
+    rng: &mut Rng,
+) -> DfepState {
+    match PARKED.with(|c| c.borrow_mut().take()) {
+        Some(mut st) => {
+            st.reset(g, k, initial, rng);
+            st
+        }
+        None => DfepState::new(g, k, initial, rng),
+    }
+}
+
+/// Park `st` for reuse by the next DFEP/DFEPC run on this thread.
+pub(crate) fn park_state(st: DfepState) {
+    PARKED.with(|c| *c.borrow_mut() = Some(st));
+}
+
+/// High-water round-scratch bytes of the state parked on this thread
+/// (0 when none) — how a batch lane reports its reuse footprint after
+/// its variants finish.
+pub fn parked_scratch_peak_bytes() -> usize {
+    PARKED.with(|c| {
+        c.borrow().as_ref().map_or(0, DfepState::scratch_peak_bytes)
+    })
+}
+
 /// Per-partition half of [`DfepState::pool_at_frontier`]: drain the
 /// partition's liquid cash (in holder registration order — the canonical
 /// order that pins the `f64` pool sum) and re-park it on the frontier,
@@ -1041,7 +1176,7 @@ impl Dfep {
         let mut rng = Rng::new(seed);
         let initial =
             self.initial_fraction * g.edge_count() as f64 / k as f64;
-        let mut st = DfepState::new(g, k, initial.max(1.0), &mut rng);
+        let mut st = acquire_state(g, k, initial.max(1.0), &mut rng);
         st.frontier_first = self.frontier_first;
         let mut trace = Vec::new();
         let mut stall = 0usize;
@@ -1072,8 +1207,10 @@ impl Dfep {
                 stall = 0;
             }
         }
-        let owner = finalize(g, st.owner, k);
-        (EdgePartition { k, owner, rounds: st.rounds }, trace)
+        let rounds = st.rounds;
+        let owner = finalize(g, std::mem::take(&mut st.owner), k);
+        park_state(st);
+        (EdgePartition { k, owner, rounds }, trace)
     }
 }
 
@@ -1108,14 +1245,14 @@ pub fn reseed_on_free_edge(g: &Graph, st: &mut DfepState, rng: &mut Rng) {
     let mut orphan: Option<u32> = None;
     'walk: for off in 0..len {
         let w = st.live_vertices[(start + off) % len];
-        for &(_, e) in g.neighbors(w) {
+        for &e in g.neighbor_edges(w) {
             if st.owner[e as usize] != FREE {
                 continue;
             }
             let (u, v) = g.endpoints(e);
             let mut best: Option<(usize, u32)> = None;
             for x in [u, v] {
-                for &(_, e2) in g.neighbors(x) {
+                for &e2 in g.neighbor_edges(x) {
                     let o = st.owner[e2 as usize];
                     if o != FREE {
                         let i = o as usize;
@@ -1172,7 +1309,7 @@ pub(crate) fn finalize(g: &Graph, owner: Vec<u32>, k: usize) -> Vec<u32> {
             // smallest partition among those owning an adjacent edge
             let mut best: Option<u32> = None;
             for w in [u, v] {
-                for &(_, e2) in g.neighbors(w) {
+                for &e2 in g.neighbor_edges(w) {
                     let p = owner[e2 as usize];
                     if p != FREE
                         && best.map(|b| sizes[p as usize] < sizes[b as usize])

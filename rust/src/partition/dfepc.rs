@@ -7,13 +7,16 @@
 //! partition that got boxed in catch up — better balance, at the cost of
 //! the connectedness guarantee.
 //!
-//! The variant reuses the reference engine's [`DfepState`] wholesale —
+//! The variant reuses the reference engine's
+//! [`DfepState`](super::dfep::DfepState) wholesale —
 //! including its persistent round scratch and flat
 //! [`crate::partition::money::MoneyLedger`] — so DFEPC rounds are just
 //! DFEP rounds with the poor/rich raid masks supplied, and inherit the
 //! zero-allocation steady state and thread-count-independent trajectory.
 
-use super::dfep::{finalize, reseed_on_free_edge, DfepState};
+use super::dfep::{
+    acquire_state, finalize, park_state, reseed_on_free_edge,
+};
 use super::{check_k, EdgePartition, Partitioner};
 use crate::bail;
 use crate::graph::Graph;
@@ -84,7 +87,7 @@ impl Partitioner for Dfepc {
         let mut rng = Rng::new(seed);
         let initial =
             self.initial_fraction * g.edge_count() as f64 / k as f64;
-        let mut st = DfepState::new(g, k, initial.max(1.0), &mut rng);
+        let mut st = acquire_state(g, k, initial.max(1.0), &mut rng);
         let mut stall = 0usize;
         let mut poor: Vec<bool> = Vec::with_capacity(k);
         let mut rich: Vec<bool> = Vec::with_capacity(k);
@@ -112,8 +115,10 @@ impl Partitioner for Dfepc {
             st.funding_round(g, Some(&poor), Some(&rich));
             st.coordinator_step(self.funding_cap);
         }
-        let owner = finalize(g, st.owner, k);
-        Ok(EdgePartition { k, owner, rounds: st.rounds })
+        let rounds = st.rounds;
+        let owner = finalize(g, std::mem::take(&mut st.owner), k);
+        park_state(st);
+        Ok(EdgePartition { k, owner, rounds })
     }
 
     fn name(&self) -> &'static str {

@@ -55,7 +55,7 @@ impl JaBeJa {
         let mut temp = self.t0;
         // degree of same-color neighbors, recomputed on the fly
         let same = |color: &[u32], v: u32, c: u32| -> f64 {
-            g.neighbors(v).iter().filter(|&&(w, _)| color[w as usize] == c).count()
+            g.neighbor_vertices(v).iter().filter(|&&w| color[w as usize] == c).count()
                 as f64
         };
         for _ in 0..self.rounds {
@@ -86,7 +86,7 @@ impl JaBeJa {
                         }
                     }
                 };
-                for &(w, _) in g.neighbors(v) {
+                for &w in g.neighbor_vertices(v) {
                     consider(w, &color, &mut best);
                 }
                 for _ in 0..self.sample {

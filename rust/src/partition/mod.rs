@@ -106,7 +106,7 @@ impl EdgePartition {
         // seen[p] == v  <=>  part p already counted for vertex v
         let mut seen = vec![u32::MAX; self.k];
         for v in 0..g.vertex_count() as u32 {
-            for &(_, e) in g.neighbors(v) {
+            for &e in g.neighbor_edges(v) {
                 let p = self.owner[e as usize] as usize;
                 if seen[p] != v {
                     seen[p] = v;

@@ -105,6 +105,17 @@ impl MoneyLedger {
         self.cells.fill(0.0);
     }
 
+    /// Reshape to `k` zeroed rows of `stride` cells, reusing the existing
+    /// allocation (grow-only capacity). Equivalent to
+    /// `*self = MoneyLedger::new(k, stride)` without the fresh heap
+    /// allocation — the reuse hook behind
+    /// [`crate::partition::dfep::DfepState::reset`].
+    pub fn reset(&mut self, k: usize, stride: usize) {
+        self.stride = stride.max(1);
+        self.cells.clear();
+        self.cells.resize(k * self.stride, 0.0);
+    }
+
     /// Pack the ledger into an `f32` buffer of the same layout (the XLA
     /// `funding_step` artifact's money tensor). `out.len()` must equal
     /// `parts() * stride()`.
@@ -150,6 +161,16 @@ mod tests {
         assert_eq!(rows[2][3], 2.5);
         m.clear();
         assert_eq!(m.total(), 0.0);
+    }
+
+    #[test]
+    fn reset_matches_fresh_ledger() {
+        let mut m = MoneyLedger::new(3, 4);
+        *m.cell_mut(2, 3) = 9.0;
+        m.reset(2, 6);
+        assert_eq!(m, MoneyLedger::new(2, 6));
+        m.reset(4, 0);
+        assert_eq!(m, MoneyLedger::new(4, 0));
     }
 
     #[test]

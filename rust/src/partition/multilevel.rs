@@ -62,7 +62,7 @@ fn coarsen(g: &Graph, rng: &mut Rng) -> Option<Level> {
         // first unmatched neighbor (random order would need a shuffle per
         // vertex; first-fit on a shuffled vertex order is standard)
         let mut pick = None;
-        for &(w, _) in g.neighbors(v) {
+        for &w in g.neighbor_vertices(v) {
             if w != v && matched[w as usize] == u32::MAX {
                 pick = Some(w);
                 break;

@@ -16,9 +16,7 @@
 //! in fixed ascending order. The view is bit-identical for every pool
 //! thread count.
 
-use std::collections::HashMap;
-
-use crate::graph::Graph;
+use crate::graph::{Graph, NeighborIter};
 use crate::partition::EdgePartition;
 use crate::util::pool;
 
@@ -27,7 +25,10 @@ use crate::util::pool;
 /// Local ids are assigned in order of first appearance over the part's
 /// edges (ascending edge id), so local vertex 0 is the first endpoint of
 /// the part's lowest-numbered edge. Memory is O(|E_i|) per the paper's
-/// size argument (§II: |V_i| = O(|E_i|)).
+/// size argument (§II: |V_i| = O(|E_i|)). Like [`Graph`], the local
+/// adjacency is struct-of-arrays: neighbor ids and edge ids in two
+/// parallel `Vec<u32>`s, so the ETSCH local phase (which only reads
+/// neighbors) streams half the bytes.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Subgraph {
     /// Which partition this is.
@@ -36,8 +37,11 @@ pub struct Subgraph {
     pub global: Vec<u32>,
     /// Local CSR offsets (length = local vertex count + 1).
     pub offsets: Vec<u32>,
-    /// Local adjacency: (local neighbor, global edge id).
-    pub adj: Vec<(u32, u32)>,
+    /// Local neighbor id per adjacency slot.
+    pub adj_nbr: Vec<u32>,
+    /// Global edge id per adjacency slot (parallel to
+    /// [`adj_nbr`](Self::adj_nbr)).
+    pub adj_eid: Vec<u32>,
     /// Frontier flag per local vertex (replicated in >= 2 partitions).
     pub frontier: Vec<bool>,
     /// Number of edges in this partition.
@@ -53,9 +57,36 @@ impl Subgraph {
 
     /// `(local neighbor, global edge id)` pairs incident on `v_local`.
     #[inline]
-    pub fn neighbors(&self, v_local: u32) -> &[(u32, u32)] {
-        &self.adj[self.offsets[v_local as usize] as usize
-            ..self.offsets[v_local as usize + 1] as usize]
+    pub fn neighbors(&self, v_local: u32) -> NeighborIter<'_> {
+        let (lo, hi) = self.adj_range(v_local);
+        self.adj_nbr[lo..hi]
+            .iter()
+            .copied()
+            .zip(self.adj_eid[lo..hi].iter().copied())
+    }
+
+    /// Local neighbor ids of `v_local` as a slice — what the
+    /// neighbor-only local phases scan.
+    #[inline]
+    pub fn neighbor_vertices(&self, v_local: u32) -> &[u32] {
+        let (lo, hi) = self.adj_range(v_local);
+        &self.adj_nbr[lo..hi]
+    }
+
+    /// Global edge ids incident on `v_local`, parallel to
+    /// [`neighbor_vertices`](Self::neighbor_vertices).
+    #[inline]
+    pub fn neighbor_edges(&self, v_local: u32) -> &[u32] {
+        let (lo, hi) = self.adj_range(v_local);
+        &self.adj_eid[lo..hi]
+    }
+
+    #[inline]
+    fn adj_range(&self, v_local: u32) -> (usize, usize) {
+        (
+            self.offsets[v_local as usize] as usize,
+            self.offsets[v_local as usize + 1] as usize,
+        )
     }
 
     /// Local degree of `v_local`.
@@ -121,7 +152,8 @@ impl PartitionView {
                 part,
                 global: Vec::new(),
                 offsets: vec![0],
-                adj: Vec::new(),
+                adj_nbr: Vec::new(),
+                adj_eid: Vec::new(),
                 frontier: Vec::new(),
                 edge_count: 0,
             })
@@ -248,7 +280,7 @@ impl PartitionView {
                 let mut reached = 1usize;
                 let mut stack = vec![0u32];
                 while let Some(u) = stack.pop() {
-                    for &(w, _) in sub.neighbors(u) {
+                    for &w in sub.neighbor_vertices(u) {
                         if !seen[w as usize] {
                             seen[w as usize] = true;
                             reached += 1;
@@ -269,55 +301,55 @@ impl PartitionView {
     }
 }
 
-/// Per-shard global->local vertex id scratch. Big parts get a dense
-/// array (O(1) loads, O(|V|) init per shard); small parts a hash map
-/// (O(|V_i|) memory, no |V|-sized init). Both are only ever *looked up*,
-/// never iterated, so the built CSR is identical either way.
-enum LocalIds {
-    Dense(Vec<u32>),
-    Sparse(HashMap<u32, u32>),
+/// Per-part global->local vertex id scratch: a stamp array (the PR5
+/// round-engine pattern), replacing the old dense-array / HashMap split.
+/// `stamp[w] == mark` says `local[w]` is valid for the current part;
+/// [`begin_part`](Self::begin_part) retires every entry by bumping the
+/// mark, so reuse across parts costs O(1) instead of an O(|V|) clear or
+/// a HashMap rebuild. Both arrays are allocated zeroed (untouched pages
+/// never materialize) and only ever *looked up*, never iterated, so the
+/// built CSR is identical to what the old scheme produced.
+pub(crate) struct LocalIds {
+    local: Vec<u32>,
+    stamp: Vec<u32>,
+    mark: u32,
 }
 
 impl LocalIds {
-    const EMPTY: u32 = u32::MAX;
+    pub(crate) fn new(vertex_count: usize) -> LocalIds {
+        LocalIds {
+            local: vec![0; vertex_count],
+            stamp: vec![0; vertex_count],
+            mark: 0,
+        }
+    }
 
-    fn for_part(edge_count: usize, vertex_count: usize) -> LocalIds {
-        if edge_count * 8 >= vertex_count {
-            LocalIds::Dense(vec![Self::EMPTY; vertex_count])
-        } else {
-            LocalIds::Sparse(HashMap::with_capacity(edge_count * 2))
+    /// Start assigning ids for a new part: one mark bump invalidates all
+    /// previous entries. On (astronomically unlikely) mark wraparound the
+    /// stamp array is hard-cleared so stale marks can never collide.
+    pub(crate) fn begin_part(&mut self) {
+        self.mark = self.mark.wrapping_add(1);
+        if self.mark == 0 {
+            self.stamp.fill(0);
+            self.mark = 1;
         }
     }
 
     /// Local id of `w`, assigning the next one on first sight.
     fn get_or_insert(&mut self, w: u32, next: u32) -> (u32, bool) {
-        match self {
-            LocalIds::Dense(v) => {
-                if v[w as usize] == Self::EMPTY {
-                    v[w as usize] = next;
-                    (next, true)
-                } else {
-                    (v[w as usize], false)
-                }
-            }
-            LocalIds::Sparse(m) => match m.entry(w) {
-                std::collections::hash_map::Entry::Vacant(slot) => {
-                    slot.insert(next);
-                    (next, true)
-                }
-                std::collections::hash_map::Entry::Occupied(slot) => {
-                    (*slot.get(), false)
-                }
-            },
+        if self.stamp[w as usize] == self.mark {
+            (self.local[w as usize], false)
+        } else {
+            self.stamp[w as usize] = self.mark;
+            self.local[w as usize] = next;
+            (next, true)
         }
     }
 
     #[inline]
     fn get(&self, w: u32) -> u32 {
-        match self {
-            LocalIds::Dense(v) => v[w as usize],
-            LocalIds::Sparse(m) => m[&w],
-        }
+        debug_assert_eq!(self.stamp[w as usize], self.mark);
+        self.local[w as usize]
     }
 }
 
@@ -326,7 +358,8 @@ impl LocalIds {
 /// pre-view `build_subgraphs`, so the result is a pure function of the
 /// edge slice.
 fn build_local_csr(g: &Graph, edges: &[u32], sub: &mut Subgraph) {
-    let mut local_of = LocalIds::for_part(edges.len(), g.vertex_count());
+    let mut local_of = LocalIds::new(g.vertex_count());
+    local_of.begin_part();
     let mut global: Vec<u32> = Vec::new();
     for &e in edges {
         let (u, v) = g.endpoints(e);
@@ -348,19 +381,26 @@ fn build_local_csr(g: &Graph, edges: &[u32], sub: &mut Subgraph) {
     for i in 1..offsets.len() {
         offsets[i] += offsets[i - 1];
     }
-    let mut adj = vec![(0u32, 0u32); offsets[nv] as usize];
+    let slots = offsets[nv] as usize;
+    let mut adj_nbr = vec![0u32; slots];
+    let mut adj_eid = vec![0u32; slots];
     let mut cursor = offsets.clone();
     for &e in edges {
         let (u, v) = g.endpoints(e);
         let (lu, lv) = (local_of.get(u), local_of.get(v));
-        adj[cursor[lu as usize] as usize] = (lv, e);
+        let cu = cursor[lu as usize] as usize;
+        adj_nbr[cu] = lv;
+        adj_eid[cu] = e;
         cursor[lu as usize] += 1;
-        adj[cursor[lv as usize] as usize] = (lu, e);
+        let cv = cursor[lv as usize] as usize;
+        adj_nbr[cv] = lu;
+        adj_eid[cv] = e;
         cursor[lv as usize] += 1;
     }
     sub.global = global;
     sub.offsets = offsets;
-    sub.adj = adj;
+    sub.adj_nbr = adj_nbr;
+    sub.adj_eid = adj_eid;
     sub.frontier = Vec::new(); // filled once multiplicity is known
     sub.edge_count = edges.len();
 }

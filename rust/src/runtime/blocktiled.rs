@@ -46,7 +46,7 @@ impl TiledSubgraph {
         let mut buckets: std::collections::HashMap<(usize, usize), Vec<(usize, usize)>> =
             std::collections::HashMap::new();
         for u in 0..nv as u32 {
-            for &(v, _) in sub.neighbors(u) {
+            for &v in sub.neighbor_vertices(u) {
                 let (r, c) = (u as usize, v as usize);
                 buckets
                     .entry((r / BLOCK, c / BLOCK))
@@ -195,7 +195,7 @@ mod tests {
         dist[0] = 0;
         let mut q = std::collections::VecDeque::from([0u32]);
         while let Some(u) = q.pop_front() {
-            for &(w, _) in sub.neighbors(u) {
+            for &w in sub.neighbor_vertices(u) {
                 if dist[w as usize] == u32::MAX {
                     dist[w as usize] = dist[u as usize] + 1;
                     q.push_back(w);

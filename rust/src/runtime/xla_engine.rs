@@ -233,7 +233,7 @@ fn pool_at_frontier(
             continue;
         }
         for x in [u as usize, w as usize] {
-            for &(_, e2) in g.neighbors(x as u32) {
+            for &e2 in g.neighbor_edges(x as u32) {
                 let p = owner[e2 as usize];
                 if p >= 0 && stamp[x] != p as u32 {
                     stamp[x] = p as u32;

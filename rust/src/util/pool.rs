@@ -82,6 +82,13 @@ pub struct ThreadPool {
 }
 
 impl ThreadPool {
+    /// The shared no-worker pool behind [`with_inline`]: `threads == 1`
+    /// and no channels, so [`run`](Self::run) always takes the inline
+    /// path and shards execute on the caller in index order.
+    fn inline() -> ThreadPool {
+        ThreadPool { senders: Vec::new(), handles: Vec::new(), threads: 1 }
+    }
+
     /// Spawn a pool of `threads` workers (min 1).
     pub fn new(threads: usize) -> ThreadPool {
         let threads = threads.max(1);
@@ -231,6 +238,37 @@ pub fn with_threads<R>(threads: usize, f: impl FnOnce() -> R) -> R {
     f()
 }
 
+static INLINE: OnceLock<Arc<ThreadPool>> = OnceLock::new();
+
+/// Run `f` with the no-worker inline pool installed for the current
+/// thread: every [`run`]/[`run_mut`] inside `f` executes its shards on
+/// the caller in index order, exactly like a 1-thread pool, without
+/// spawning anything.
+///
+/// This is the sanctioned way to nest data-parallel code under an outer
+/// [`run_mut`]: the outer call fans items out across the ambient pool's
+/// workers, each worker wraps its item in `with_inline`, and the inner
+/// `run` calls collapse to sequential loops instead of re-submitting to
+/// the pool the workers themselves belong to (which would deadlock —
+/// see the module docs). Because a 1-thread run is the determinism
+/// baseline, the nested work computes bit-identical results to any
+/// other thread count.
+pub fn with_inline<R>(f: impl FnOnce() -> R) -> R {
+    struct PopGuard;
+    impl Drop for PopGuard {
+        fn drop(&mut self) {
+            OVERRIDE.with(|o| {
+                o.borrow_mut().pop();
+            });
+        }
+    }
+    let pool =
+        Arc::clone(INLINE.get_or_init(|| Arc::new(ThreadPool::inline())));
+    OVERRIDE.with(|o| o.borrow_mut().push(pool));
+    let _guard = PopGuard;
+    f()
+}
+
 fn current_pool() -> Option<Arc<ThreadPool>> {
     OVERRIDE.with(|o| o.borrow().last().cloned())
 }
@@ -304,6 +342,41 @@ mod tests {
             assert_eq!(current_threads(), 3);
             with_threads(1, || assert_eq!(current_threads(), 1));
             assert_eq!(current_threads(), 3);
+        });
+    }
+
+    #[test]
+    fn with_inline_runs_shards_on_caller_in_order() {
+        with_inline(|| {
+            assert_eq!(current_threads(), 1);
+            let caller = std::thread::current().id();
+            let order = std::sync::Mutex::new(Vec::new());
+            run(16, &|i| {
+                assert_eq!(std::thread::current().id(), caller);
+                order.lock().unwrap().push(i);
+            });
+            assert_eq!(*order.lock().unwrap(), (0..16).collect::<Vec<_>>());
+        });
+    }
+
+    #[test]
+    fn with_inline_nests_under_run_mut_without_deadlock() {
+        // the batch engine's shape: outer run_mut over lanes on a real
+        // pool, each lane running inner data-parallel code inline
+        with_threads(4, || {
+            let mut lanes: Vec<u64> = vec![0; 8];
+            run_mut(&mut lanes, &|l, out| {
+                with_inline(|| {
+                    let total = std::sync::atomic::AtomicUsize::new(0);
+                    run(32, &|i| {
+                        total.fetch_add(l * 100 + i, Ordering::SeqCst);
+                    });
+                    *out = total.load(Ordering::SeqCst) as u64;
+                })
+            });
+            for (l, &v) in lanes.iter().enumerate() {
+                assert_eq!(v as usize, l * 3200 + (0..32).sum::<usize>());
+            }
         });
     }
 

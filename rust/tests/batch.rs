@@ -1,0 +1,171 @@
+//! Batch engine equivalence: `BatchRequest::execute_on` must be
+//! *bit-identical* to N sequential `PartitionRequest::execute_on` calls —
+//! for every registry spec, at any pool thread count, in any variant
+//! order. This is the contract that lets the serve layer share one
+//! result cache between `/partition` and `/batch`, and lets the figure
+//! benches swap their sequential loops for the engine without changing a
+//! single reported number.
+
+use dfep::coordinator::batch::{BatchRequest, Variant};
+use dfep::coordinator::runs::{RunReport, Workload};
+use dfep::graph::generators::GraphKind;
+use dfep::graph::Graph;
+use dfep::partition::registry;
+use dfep::util::pool;
+
+fn graph() -> Graph {
+    GraphKind::ErdosRenyi { n: 600, m: 1_800 }.generate(42)
+}
+
+/// Every-field bit comparison (floats by `to_bits`, owners exactly).
+fn assert_bit_identical(a: &RunReport, b: &RunReport, what: &str) {
+    assert_eq!(a.spec, b.spec, "{what}: spec");
+    assert_eq!(a.k, b.k, "{what}: k");
+    assert_eq!(a.seed, b.seed, "{what}: seed");
+    assert_eq!(a.vertices, b.vertices, "{what}: vertices");
+    assert_eq!(a.edges, b.edges, "{what}: edges");
+    assert_eq!(a.partition.owner, b.partition.owner, "{what}: owners");
+    assert_eq!(a.partition.rounds, b.partition.rounds, "{what}: rounds");
+    assert_eq!(
+        a.metrics.largest.to_bits(),
+        b.metrics.largest.to_bits(),
+        "{what}: largest"
+    );
+    assert_eq!(
+        a.metrics.nstdev.to_bits(),
+        b.metrics.nstdev.to_bits(),
+        "{what}: nstdev"
+    );
+    assert_eq!(a.metrics.messages, b.metrics.messages, "{what}: messages");
+    assert_eq!(
+        a.metrics.disconnected.to_bits(),
+        b.metrics.disconnected.to_bits(),
+        "{what}: disconnected"
+    );
+    assert_eq!(
+        a.gain.map(f64::to_bits),
+        b.gain.map(f64::to_bits),
+        "{what}: gain"
+    );
+}
+
+/// One variant per (registry spec, k) pair — the full surface the
+/// engine must reproduce.
+fn registry_variants() -> Vec<Variant> {
+    let mut out = Vec::new();
+    for entry in registry::all() {
+        for k in [2usize, 8] {
+            out.push(Variant::new(entry.name, k, 7).unwrap());
+        }
+    }
+    out
+}
+
+fn batch_of(variants: Vec<Variant>) -> BatchRequest {
+    let mut b = BatchRequest::new("");
+    b.variants = variants;
+    b
+}
+
+#[test]
+fn batch_matches_sequential_for_every_registry_spec_at_any_width() {
+    let g = graph();
+    let breq = batch_of(registry_variants());
+    // the baseline: the exact sequential facade loop, one pool thread
+    let baseline: Vec<RunReport> = pool::with_threads(1, || {
+        breq.variants
+            .iter()
+            .map(|v| breq.request_for(v).execute_on(&g).unwrap())
+            .collect()
+    });
+    for threads in [1usize, 2, 8] {
+        let rep =
+            pool::with_threads(threads, || breq.execute_on(&g)).unwrap();
+        assert_eq!(rep.reports.len(), baseline.len());
+        assert_eq!(rep.lanes, threads.min(breq.variants.len()));
+        for (got, want) in rep.reports.iter().zip(&baseline) {
+            assert_bit_identical(
+                got,
+                want,
+                &format!("{}@k={} ({} threads)", want.spec, want.k, threads),
+            );
+        }
+    }
+}
+
+#[test]
+fn variant_order_never_reaches_the_reports() {
+    let g = graph();
+    let forward = registry_variants();
+    // two deterministic reorderings: reversed, and rotated by a third
+    let mut shuffles = Vec::new();
+    let mut reversed = forward.clone();
+    reversed.reverse();
+    shuffles.push(reversed);
+    let mut rotated = forward.clone();
+    rotated.rotate_left(forward.len() / 3);
+    shuffles.push(rotated);
+
+    let base = batch_of(forward);
+    let baseline: Vec<RunReport> = pool::with_threads(1, || {
+        base.variants
+            .iter()
+            .map(|v| base.request_for(v).execute_on(&g).unwrap())
+            .collect()
+    });
+    for shuffled in shuffles {
+        let breq = batch_of(shuffled);
+        let rep = pool::with_threads(4, || breq.execute_on(&g)).unwrap();
+        for (i, got) in rep.reports.iter().enumerate() {
+            let v = &breq.variants[i];
+            let want = baseline
+                .iter()
+                .find(|b| {
+                    b.spec == v.spec.canonical()
+                        && b.k == v.k
+                        && b.seed == v.seed
+                })
+                .expect("every shuffled variant exists in the baseline");
+            assert_bit_identical(
+                got,
+                want,
+                &format!("shuffled slot {i} = {}@k={}", v.spec, v.k),
+            );
+        }
+    }
+}
+
+#[test]
+fn gain_and_workload_paths_stay_bit_identical() {
+    let g = graph();
+    let mut breq = batch_of(vec![
+        Variant::new("dfep", 4, 1).unwrap(),
+        Variant::new("dfep", 4, 2).unwrap(),
+        Variant::new("hdrf", 4, 1).unwrap(),
+        Variant::new("dfepc", 8, 3).unwrap(),
+    ]);
+    breq = breq.gain_samples(2).workload(Workload::Sssp { source: 0 });
+    let baseline: Vec<RunReport> = pool::with_threads(1, || {
+        breq.variants
+            .iter()
+            .map(|v| breq.request_for(v).execute_on(&g).unwrap())
+            .collect()
+    });
+    for threads in [2usize, 8] {
+        let rep =
+            pool::with_threads(threads, || breq.execute_on(&g)).unwrap();
+        for (got, want) in rep.reports.iter().zip(&baseline) {
+            assert_bit_identical(
+                got,
+                want,
+                &format!("gain+workload {}@seed={}", want.spec, want.seed),
+            );
+            let (gw, ww) = (got.workload.as_ref(), want.workload.as_ref());
+            assert_eq!(
+                gw.map(|w| w.rounds),
+                ww.map(|w| w.rounds),
+                "workload rounds"
+            );
+        }
+    }
+}

@@ -1,0 +1,136 @@
+//! Allocation budget for batched variant execution: after a warm-up
+//! variant has grown every DFEP buffer to its high-water capacity,
+//! recycling the state for the next variant (`DfepState::reset`, the
+//! exact path batch lanes take through the parked-state pool) must
+//! perform **zero** heap allocations — reset through every funding
+//! round.
+//!
+//! Same counting-`#[global_allocator]` pattern as `tests/alloc_budget.rs`
+//! (and the same single-test-per-binary rule, so no concurrent test
+//! thread perturbs the counter). The engine runs on a single-thread pool
+//! so the count reflects the engine, not pool transport.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use dfep::graph::generators::GraphKind;
+use dfep::partition::dfep::{reseed_on_free_edge, DfepState};
+use dfep::util::pool;
+use dfep::util::rng::Rng;
+
+struct CountingAlloc;
+
+static ALLOCATIONS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc(layout) }
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.alloc_zeroed(layout) }
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCATIONS.fetch_add(1, Ordering::Relaxed);
+        unsafe { System.realloc(ptr, layout, new_size) }
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        unsafe { System.dealloc(ptr, layout) }
+    }
+}
+
+#[cfg(not(miri))]
+#[global_allocator]
+static GLOBAL_COUNTER: CountingAlloc = CountingAlloc;
+
+fn alloc_count() -> u64 {
+    ALLOCATIONS.load(Ordering::Relaxed)
+}
+
+/// Drive one full DFEP run on a recycled-or-fresh state; returns when
+/// the partition converged (panics if it stalls past the round cap).
+fn run_to_completion(g: &dfep::graph::Graph, st: &mut DfepState, rng: &mut Rng) {
+    let mut stall = 0usize;
+    while st.free_edges > 0 && st.rounds < 1_000 {
+        let before_free = st.free_edges;
+        st.funding_round(g, None, None);
+        st.coordinator_step(10.0);
+        if st.free_edges == before_free {
+            stall += 1;
+            if stall >= 3 {
+                reseed_on_free_edge(g, st, rng);
+                stall = 0;
+            }
+        } else {
+            stall = 0;
+        }
+    }
+    assert_eq!(st.free_edges, 0, "engine did not converge");
+}
+
+#[test]
+#[cfg_attr(miri, ignore = "the counting allocator is disabled under miri")]
+fn recycled_variant_allocates_zero_after_warmup() {
+    pool::with_threads(1, || {
+        let g = GraphKind::ErdosRenyi { n: 2_000, m: 12_000 }.generate(42);
+        let k = 8usize;
+        let initial = (g.edge_count() as f64 / k as f64).max(1.0);
+        // warm-up variant: grows every buffer to its high-water capacity
+        let mut rng = Rng::new(1);
+        let mut st = DfepState::new(&g, k, initial, &mut rng);
+        run_to_completion(&g, &mut st, &mut rng);
+        // identical next variant: the trajectory revisits exactly the
+        // warm-up's buffer sizes, so reset + every round must stay
+        // within retained capacity — strictly zero allocations
+        let mut rng2 = Rng::new(1);
+        let a0 = alloc_count();
+        st.reset(&g, k, initial, &mut rng2);
+        run_to_completion(&g, &mut st, &mut rng2);
+        let same_seed_delta = alloc_count() - a0;
+        assert_eq!(
+            same_seed_delta, 0,
+            "recycling a parked state for an identical variant allocated"
+        );
+        // different-seed variant: early rounds may grow a buffer past
+        // the warm-up high-water, but the steady-state tail must be
+        // allocation-free, exactly like a fresh state's tail
+        let mut rng3 = Rng::new(99);
+        st.reset(&g, k, initial, &mut rng3);
+        let mut deltas: Vec<u64> = Vec::with_capacity(1_100);
+        let mut stall = 0usize;
+        while st.free_edges > 0 && st.rounds < 1_000 {
+            let before_free = st.free_edges;
+            let a0 = alloc_count();
+            st.funding_round(&g, None, None);
+            st.coordinator_step(10.0);
+            if st.free_edges == before_free {
+                stall += 1;
+                if stall >= 3 {
+                    reseed_on_free_edge(&g, &mut st, &mut rng3);
+                    stall = 0;
+                }
+            } else {
+                stall = 0;
+            }
+            deltas.push(alloc_count() - a0);
+        }
+        assert_eq!(st.free_edges, 0, "engine did not converge");
+        let tail = (deltas.len() / 4).max(5).min(deltas.len());
+        let suffix = &deltas[deltas.len() - tail..];
+        assert!(
+            suffix.iter().all(|&d| d == 0),
+            "steady-state rounds on a recycled state still allocate: last \
+             {tail} of {} round deltas = {suffix:?}",
+            deltas.len()
+        );
+    });
+}

@@ -111,7 +111,7 @@ fn xla_local_phase_agrees_with_subgraph_bfs() {
         dist[0] = 0;
         let mut q = std::collections::VecDeque::from([0u32]);
         while let Some(u) = q.pop_front() {
-            for &(w, _) in sub.neighbors(u) {
+            for &w in sub.neighbor_vertices(u) {
                 if dist[w as usize] == u32::MAX {
                     dist[w as usize] = dist[u as usize] + 1;
                     q.push_back(w);

@@ -28,7 +28,12 @@ fn graph_io_roundtrip_reproduces_identical_csr() {
     assert_eq!(g.edges(), g2.edges());
     // identical CSR adjacency (neighbors + edge ids, in order)
     for v in 0..g.vertex_count() as u32 {
-        assert_eq!(g.neighbors(v), g2.neighbors(v), "vertex {v}");
+        assert_eq!(
+            g.neighbor_vertices(v),
+            g2.neighbor_vertices(v),
+            "vertex {v}"
+        );
+        assert_eq!(g.neighbor_edges(v), g2.neighbor_edges(v), "vertex {v}");
     }
 }
 

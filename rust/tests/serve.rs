@@ -12,6 +12,7 @@
 //! - every documented error class answers its documented status code
 //!   and machine-readable kind.
 
+use dfep::coordinator::batch::{BatchRequest, Variant};
 use dfep::coordinator::runs::PartitionRequest;
 use dfep::coordinator::serve::{ServeClient, ServeConfig, Server};
 use dfep::util::error::ErrorKind;
@@ -163,6 +164,71 @@ fn spelling_variants_share_one_cache_entry() {
     // a real parameter change is a different key
     let _ = run(&mut c, "hdrf:lambda=1.5");
     assert_eq!(stat(&mut c, "computations"), 2.0);
+}
+
+#[test]
+fn batch_endpoint_shares_the_result_cache_with_partition() {
+    let server = spawn();
+    let mut c = ServeClient::connect(server.addr());
+    // warm one variant through the single-run endpoint
+    let warm =
+        PartitionRequest::new("dfep").unwrap().dataset("er:n=300,m=900").k(4).seed(1);
+    let direct = c.partition(&warm, true).unwrap();
+    assert_eq!(stat(&mut c, "computations"), 1.0);
+    // a batch where exactly one variant is already cached
+    let breq = BatchRequest::new("er:n=300,m=900")
+        .variant(Variant::new("dfep", 4, 1).unwrap())
+        .variant(Variant::new("dfep", 4, 2).unwrap())
+        .variant(Variant::new("random", 4, 1).unwrap());
+    let rep = c.batch(&breq).unwrap();
+    assert_eq!(rep.reports.len(), 3);
+    assert_eq!(rep.dataset, "er:n=300,m=900");
+    // the cached variant came back bit-identical to the direct run
+    assert_eq!(rep.reports[0].partition.owner, direct.partition.owner);
+    assert_eq!(
+        rep.reports[0].metrics.nstdev.to_bits(),
+        direct.metrics.nstdev.to_bits()
+    );
+    // only the two misses computed, and the hit was counted
+    assert_eq!(stat(&mut c, "computations"), 3.0);
+    assert!(stat(&mut c, "cache_hits") >= 1.0);
+    // the batch published its misses: a follow-up /partition is a hit
+    let follow = breq.request_for(&breq.variants[1]);
+    let served = c.partition(&follow, true).unwrap();
+    assert_eq!(served.partition.owner, rep.reports[1].partition.owner);
+    assert_eq!(stat(&mut c, "computations"), 3.0);
+    // an all-hit repeat computes nothing
+    let again = c.batch(&breq).unwrap();
+    assert_eq!(again.reports.len(), 3);
+    assert_eq!(again.reports[2].partition.owner, rep.reports[2].partition.owner);
+    assert_eq!(stat(&mut c, "computations"), 3.0);
+    // resolve attribution: the graph was built exactly once, and its
+    // cost is visible separately from partitioning
+    assert_eq!(stat(&mut c, "resolve_count"), 1.0);
+    assert!(stat(&mut c, "resolve_max_ms") >= 0.0);
+}
+
+#[test]
+fn batch_endpoint_rejects_bad_requests_with_documented_kinds() {
+    let server = spawn();
+    let mut c = ServeClient::connect(server.addr());
+    // empty variant list -> 400 invalid_request
+    let empty = BatchRequest::new("er:n=100,m=300");
+    let (status, body) =
+        c.request("POST", "/batch", empty.to_json().as_bytes()).unwrap();
+    assert_eq!(status, 400, "{body}");
+    assert_eq!(kind_of(&body), "invalid_request");
+    // unknown dataset -> 404 dataset_not_found (typed through the SDK)
+    let missing = BatchRequest::new("nosuchgraph")
+        .variant(Variant::new("dfep", 2, 1).unwrap());
+    let err = c.batch(&missing).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::DatasetNotFound);
+    // wrong method on the endpoint -> 405
+    let (status, body) = c.request("GET", "/batch", b"").unwrap();
+    assert_eq!(status, 405);
+    assert_eq!(kind_of(&body), "invalid_request");
+    // nothing above ever computed
+    assert_eq!(stat(&mut c, "computations"), 0.0);
 }
 
 #[test]
