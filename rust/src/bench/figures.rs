@@ -782,6 +782,47 @@ pub fn hotpath_with(quick: bool) {
         );
     }
 
+    // refine series: the local-search post-pass (partition::refine) —
+    // an HDRF base built once outside the loop, then RefineEngine
+    // construction + a 4-round run per sample, reporting accepted
+    // changes/sec and the replication-factor delta the pass buys
+    // (tests/refine.rs pins delta >= 0, tests/refine_alloc.rs pins the
+    // steady-state allocation budget)
+    {
+        use crate::partition::refine::RefineEngine;
+        let base = spec("hdrf")
+            .build()
+            .partition_graph(&g, 8, 1)
+            .expect("bench hdrf base");
+        let nverts = g.vertex_count() as f64;
+        let rf_before =
+            PartitionView::build(&g, &base).replica_total() as f64 / nverts;
+        let mut moved = 0usize;
+        let mut rf_after = rf_before;
+        let times = crate::util::timer::time_n(warmup, n, || {
+            let mut eng = RefineEngine::new(&g, &base, 0.05);
+            moved = eng.run(&g, 4);
+            rf_after = eng.total_replicas() as f64 / nverts;
+        });
+        let s = Summary::of(&times);
+        t.row(&[
+            format!("refine 4 rounds ({moved} changes)"),
+            fmt_f(s.mean),
+            fmt_f(s.p95),
+            fmt_f(g.edge_count() as f64 / s.mean / 1e6),
+        ]);
+        println!(
+            "refine: {} changes/s, RF {} -> {} (delta {})",
+            fmt_f(moved as f64 / s.mean),
+            fmt_f(rf_before),
+            fmt_f(rf_after),
+            fmt_f(rf_before - rf_after)
+        );
+        sink.num("refine_mean_s", s.mean);
+        sink.num("refine_moves_per_s", moved as f64 / s.mean.max(1e-12));
+        sink.num("refine_rf_delta", rf_before - rf_after);
+    }
+
     // batch series: the multi-(seed,k) engine vs the sequential facade
     // loop it replaces. Acceptance target: >= 2x on an 8-variant sweep
     // at 8 pool threads, with (tests/batch.rs) bit-identical reports.

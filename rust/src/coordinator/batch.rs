@@ -3,7 +3,9 @@
 //! `POST /batch` and the figure benches' parameter sweeps.
 //!
 //! A [`BatchRequest`] names the dataset **once** and a list of
-//! [`Variant`]s to run against it. [`BatchRequest::execute`] resolves
+//! [`Variant`]s to run against it. Variant specs are ordinary registry
+//! specs, so `refine:base=<spec>` sweeps (refined vs unrefined cells)
+//! batch like any other variant. [`BatchRequest::execute`] resolves
 //! the graph once, profiles it once ([`SharedPrep`] — the degree array
 //! and stream-order hints every variant would otherwise re-derive), and
 //! then fans the variants out over the ambient

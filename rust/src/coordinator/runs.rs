@@ -4,7 +4,10 @@
 //!
 //! A request names a partitioner by [`PartitionerSpec`], a dataset by
 //! graph-spec string, `k`, the run seed, an optional pool-thread override
-//! and an optional ETSCH [`Workload`]; [`PartitionRequest::execute`]
+//! and an optional ETSCH [`Workload`]. Any registry spec works here —
+//! including the composable `refine:base=<spec>` local-search meta-spec
+//! ([`crate::partition::refine`]), which needs no facade support of its
+//! own. [`PartitionRequest::execute`]
 //! resolves the graph, partitions it through the unified
 //! [`Partitioner`](crate::partition::Partitioner) trait, derives the §V-A
 //! metrics off one shared [`PartitionView`] build, optionally runs the

@@ -81,6 +81,9 @@ COMMANDS
 
 ALGO SPECS (see `repro algos` for parameters and defaults)
   name[:key=val,...]   e.g. dfep | hdrf:lambda=1.5 | jabeja:temp=2,rounds=50
+  refine:base=SPEC     local-search post-pass over any base spec; the
+                       nested spec writes its commas as '+', e.g.
+                       refine:base=hdrf:lambda=1.5+group=512,rounds=4
 
 GRAPH SPECS
   astroph | email-enron | usroads | wordnet | dblp | youtube | amazon

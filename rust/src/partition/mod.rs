@@ -20,6 +20,10 @@
 //! partitioners run streaming-native and graph partitioners materialize,
 //! behind the same interface. Partitioners are constructed by name and
 //! parameters through [`spec::PartitionerSpec`] and the [`registry`].
+//!
+//! The output of *any* of them can be post-processed by the
+//! [`refine`] local-search pass (`refine:base=<spec>`), which strictly
+//! never worsens the replication factor.
 
 pub mod baselines;
 pub mod dfep;
@@ -29,6 +33,7 @@ pub mod jabeja;
 pub mod money;
 pub mod multilevel;
 pub mod metrics;
+pub mod refine;
 pub mod registry;
 pub mod spec;
 pub mod streaming;

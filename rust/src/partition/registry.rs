@@ -15,6 +15,8 @@ use super::dfepc::Dfepc;
 use super::fennel::StreamingGreedy;
 use super::jabeja::JaBeJa;
 use super::multilevel::Multilevel;
+use super::refine::Refine;
+use super::spec::PartitionerSpec;
 use super::streaming::{Dbh, Hdrf, Restream};
 use super::Partitioner;
 
@@ -27,6 +29,10 @@ pub enum ParamKind {
     Int,
     /// A `bool` (`shuffle=false`; accepts `true`/`false`/`1`/`0`).
     Bool,
+    /// A whole nested partitioner spec (`base=hdrf:lambda=1.5+group=512`
+    /// — the nested spec writes its commas as `+`; see the nested-specs
+    /// section of [`super::spec`]).
+    Spec,
 }
 
 impl ParamKind {
@@ -36,6 +42,7 @@ impl ParamKind {
             ParamKind::Float => "a float",
             ParamKind::Int => "an integer",
             ParamKind::Bool => "a bool (true|false|1|0)",
+            ParamKind::Spec => "a partitioner spec",
         }
     }
 }
@@ -96,6 +103,13 @@ impl<'a> Resolved<'a> {
     /// The resolved `bool` value of `key`.
     pub fn bool(&self, key: &str) -> bool {
         parse_bool(self.raw(key)).expect("validated at parse time")
+    }
+
+    /// The resolved nested-spec value of `key` (stored `+`-separated;
+    /// see [`ParamKind::Spec`]).
+    pub fn spec(&self, key: &str) -> PartitionerSpec {
+        PartitionerSpec::parse(&self.raw(key).replace('+', ","))
+            .expect("validated at parse time")
     }
 }
 
@@ -206,6 +220,12 @@ static RESTREAM_PARAMS: &[ParamSpec] = &[
     p!("passes", Int, "1", 1.0, "refinement replays after the initial pass"),
     p!("group", Int, "1024", 1.0, "scoring-group size (HDRF pass and replays)"),
     p!("chunk", Int, "4096", 1.0, "edges per ingestion fill"),
+];
+
+static REFINE_PARAMS: &[ParamSpec] = &[
+    p!("base", Spec, "hdrf", NO_MIN, "initial partitioner to refine"),
+    p!("rounds", Int, "4", 1.0, "max local-search rounds (early-stops)"),
+    p!("eps", Float, "0.05", 0.0, "balance slack over the ideal part size"),
 ];
 
 static ENTRIES: &[AlgoEntry] = &[
@@ -361,6 +381,21 @@ static ENTRIES: &[AlgoEntry] = &[
             })
         },
     },
+    AlgoEntry {
+        name: "refine",
+        aliases: &["local-search"],
+        summary: "local-search edge-move/swap refinement of any base spec",
+        citation: "Guo et al. 2021",
+        params: REFINE_PARAMS,
+        streaming_native: false,
+        factory: |r| {
+            Box::new(Refine {
+                base: r.spec("base"),
+                rounds: r.usize("rounds"),
+                eps: r.f64("eps"),
+            })
+        },
+    },
 ];
 
 /// Every registered partitioner, in display order (the ablation sweep and
@@ -418,6 +453,19 @@ mod tests {
                     ParamKind::Bool => {
                         parse_bool(p.default).unwrap();
                     }
+                    ParamKind::Spec => {
+                        let inner = PartitionerSpec::parse(
+                            &p.default.replace('+', ","),
+                        )
+                        .unwrap();
+                        assert_ne!(
+                            inner.name(),
+                            e.name,
+                            "{}:{} defaults to itself",
+                            e.name,
+                            p.key
+                        );
+                    }
                 }
             }
         }
@@ -450,6 +498,7 @@ mod tests {
                 "hdrf" => Box::new(Hdrf::default()),
                 "dbh" => Box::new(Dbh::default()),
                 "restream" => Box::new(Restream::default()),
+                "refine" => Box::new(Refine::default()),
                 other => panic!("entry {other} missing a reference default"),
             };
             let b = reference.partition_graph(&g, 4, 9).unwrap();

@@ -24,6 +24,24 @@
 //! assert!("nosuch".parse::<PartitionerSpec>().is_err());
 //! ```
 //!
+//! ## Nested specs
+//!
+//! A [`registry::ParamKind::Spec`] parameter takes a whole partitioner
+//! spec as its value. The nested spec keeps its own `:` but writes its
+//! comma separators as `+` (the outer comma would otherwise end the
+//! parameter), so
+//!
+//! ```text
+//! refine:base=hdrf:lambda=1.5+group=512,rounds=2
+//! ```
+//!
+//! nests `hdrf:lambda=1.5,group=512` under `refine`'s `base` key. The
+//! nested value is parsed and validated recursively at parse time (and
+//! re-canonicalized inside [`PartitionerSpec::canonical`], so
+//! `refine:base=hdrf` and `refine:base=hdrf:lambda=1.1` share a cache
+//! key); a spec may not nest its own entry (`refine:base=refine` is
+//! rejected).
+//!
 //! ## Documented errors
 //!
 //! - unknown algorithm: `unknown partitioner 'nosuch' (known: dfep, ...)`
@@ -34,6 +52,10 @@
 //! - out-of-range value: `hdrf: parameter 'group' must be >= 1 (got 0)`
 //! - malformed pair: `hdrf: bad parameter 'lambda' (expected key=value)`
 //! - duplicate key: `hdrf: duplicate parameter 'lambda'`
+//! - bad nested spec: `refine: parameter 'base': unknown partitioner
+//!   'nosuch' (known: dfep, ...)` — the inner parse error, prefixed
+//! - self-nesting: `refine: parameter 'base' must not name 'refine'
+//!   itself`
 
 use std::fmt;
 use std::str::FromStr;
@@ -145,17 +167,30 @@ impl PartitionerSpec {
             .params
             .iter()
             .map(|p| {
-                let v = self
-                    .overrides
-                    .iter()
-                    .find(|(k, _)| k == p.key)
-                    .map(|(_, v)| v.clone())
-                    .unwrap_or_else(|| canonical_default(p));
+                let v = match self.overrides.iter().find(|(k, _)| k == p.key)
+                {
+                    // nested specs re-canonicalize recursively, so the
+                    // default-elided and default-explicit spellings of
+                    // the inner spec collide too
+                    Some((_, v)) if p.kind == ParamKind::Spec => {
+                        canonical_spec_value(v)
+                    }
+                    Some((_, v)) => v.clone(),
+                    None => canonical_default(p),
+                };
                 format!("{}={v}", p.key)
             })
             .collect();
         format!("{}:{}", entry.name, cells.join(","))
     }
+}
+
+/// The fully-elaborated canonical form of a stored nested-spec value
+/// (`+`-separated), rendered back in the `+`-separated embedding.
+fn canonical_spec_value(stored: &str) -> String {
+    let inner = PartitionerSpec::parse(&stored.replace('+', ","))
+        .expect("stored nested spec re-parses");
+    inner.canonical().replace(',', "+")
 }
 
 /// Render a parameter's default through the same canonicalization as
@@ -176,6 +211,7 @@ fn canonical_default(p: &super::registry::ParamSpec) -> String {
                 .expect("registry default parses");
             format!("{v}")
         }
+        ParamKind::Spec => canonical_spec_value(p.default),
     }
 }
 
@@ -257,6 +293,28 @@ fn check_value(
             let v = super::registry::parse_bool(value).ok_or_else(bad)?;
             Ok(format!("{v}"))
         }
+        ParamKind::Spec => {
+            // the nested spec writes its commas as '+'; recurse through
+            // the full parser so every inner error surfaces, prefixed
+            let inner = PartitionerSpec::parse(&value.replace('+', ","))
+                .map_err(|e| {
+                    anyhow!(
+                        "{}: parameter '{}': {e}",
+                        entry.name,
+                        spec.key
+                    )
+                })?;
+            if inner.name() == entry.name {
+                return Err(anyhow!(
+                    "{}: parameter '{}' must not name '{}' itself",
+                    entry.name,
+                    spec.key,
+                    entry.name
+                ));
+            }
+            // store in the embedded ('+'-separated) rendering
+            Ok(inner.to_string().replace(',', "+"))
+        }
     }
 }
 
@@ -334,6 +392,62 @@ mod tests {
             "fennel: parameter 'shuffle': expected a bool (true|false|1|0), \
              got 'maybe'"
         );
+        // nested-spec errors: the inner parse error, prefixed
+        assert!(
+            err("refine:base=nosuch").starts_with(
+                "refine: parameter 'base': unknown partitioner 'nosuch' \
+                 (known: dfep,"
+            ),
+            "{}",
+            err("refine:base=nosuch")
+        );
+        assert_eq!(
+            err("refine:base=hdrf:lambda=abc"),
+            "refine: parameter 'base': hdrf: parameter 'lambda': \
+             expected a float, got 'abc'"
+        );
+        assert_eq!(
+            err("refine:base=refine"),
+            "refine: parameter 'base' must not name 'refine' itself"
+        );
+        assert_eq!(
+            err("refine:rounds=0"),
+            "refine: parameter 'rounds' must be >= 1 (got 0)"
+        );
+    }
+
+    #[test]
+    fn nested_specs_round_trip_and_canonicalize() {
+        // the inner spec keeps its ':' and writes its commas as '+'
+        let s = PartitionerSpec::parse(
+            "refine:base=hdrf:lambda=1.50+group=512,rounds=2",
+        )
+        .unwrap();
+        assert_eq!(
+            s.to_string(),
+            "refine:base=hdrf:lambda=1.5+group=512,rounds=2"
+        );
+        let again: PartitionerSpec = s.to_string().parse().unwrap();
+        assert_eq!(s, again);
+        // inner default-elided / default-explicit spellings share a
+        // cache key: the nested value re-canonicalizes recursively
+        let bare = PartitionerSpec::parse("refine").unwrap();
+        let explicit =
+            PartitionerSpec::parse("refine:base=hdrf:lambda=1.1").unwrap();
+        assert_eq!(bare.canonical(), explicit.canonical());
+        assert_eq!(
+            bare.canonical(),
+            "refine:base=hdrf:lambda=1.1+epsilon=1+group=1024+chunk=4096,\
+             rounds=4,eps=0.05"
+        );
+        // a genuinely tuned inner spec gets its own cache key
+        let tuned =
+            PartitionerSpec::parse("refine:base=hdrf:lambda=1.5").unwrap();
+        assert_ne!(tuned.canonical(), bare.canonical());
+        // a parameterless inner spec stays bare
+        let s = PartitionerSpec::parse("refine:base=random").unwrap();
+        assert_eq!(s.to_string(), "refine:base=random");
+        assert_eq!(s, s.to_string().parse().unwrap());
     }
 
     #[test]

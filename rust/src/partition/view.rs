@@ -257,6 +257,13 @@ impl PartitionView {
         self.frontier_total
     }
 
+    /// Total replica count Σ_v |{parts containing v}| — the replication
+    /// factor's numerator (RF = this / |V|). The quantity the
+    /// [`crate::partition::refine`] pass strictly decreases.
+    pub fn replica_total(&self) -> usize {
+        self.replicas.len()
+    }
+
     /// Fraction of nonempty parts whose induced subgraph is disconnected
     /// (Fig 6e), computed on the per-part local CSRs — no per-part hash
     /// adjacency. Parallel over parts; the verdict per part is a pure

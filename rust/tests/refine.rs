@@ -1,0 +1,202 @@
+//! The refinement contract (DESIGN.md "Refinement pass"): for **every**
+//! registry base spec, `refine:base=<spec>` (1) never worsens the total
+//! replica count — the replication-factor numerator, (2) never pushes a
+//! part past `max(cap, base max)` where `cap = ⌊(1+eps)·⌈m/k⌉⌋`, (3) is
+//! bit-identical across 1/2/8 pool threads, and (4) leaves a valid
+//! complete partition after every round. Pinned on a power-law and a
+//! road-network generator at k ∈ {2, 8, 32}.
+
+use dfep::graph::generators::GraphKind;
+use dfep::graph::Graph;
+use dfep::partition::refine::RefineEngine;
+use dfep::partition::spec::PartitionerSpec;
+use dfep::partition::view::PartitionView;
+use dfep::partition::{registry, EdgePartition};
+use dfep::util::pool;
+
+const SEED: u64 = 11;
+const EPS: f64 = 0.05;
+
+fn graphs() -> Vec<(&'static str, Graph)> {
+    vec![
+        (
+            "plc",
+            GraphKind::PowerlawCluster { n: 300, m: 3, p: 0.3 }.generate(7),
+        ),
+        (
+            "road",
+            GraphKind::RoadNetwork {
+                rows: 12,
+                cols: 12,
+                drop: 0.1,
+                subdiv: 2,
+                shortcuts: 8,
+            }
+            .generate(7),
+        ),
+    ]
+}
+
+/// Every registry entry as a base spec (capped rounds for the slow
+/// annealer), excluding `refine` itself — self-nesting is rejected by
+/// the grammar.
+fn base_specs() -> Vec<String> {
+    registry::all()
+        .iter()
+        .filter(|e| e.name != "refine")
+        .map(|e| {
+            if e.name == "jabeja" {
+                "jabeja:rounds=10".to_string()
+            } else {
+                e.name.to_string()
+            }
+        })
+        .collect()
+}
+
+/// The refine meta-spec wrapping `base` (inner commas become `+`).
+fn refine_spec(base: &str) -> String {
+    format!("refine:base={},rounds=4,eps={EPS}", base.replace(',', "+"))
+}
+
+fn run(g: &Graph, spec: &str, k: usize) -> EdgePartition {
+    PartitionerSpec::parse(spec)
+        .unwrap()
+        .build()
+        .partition_graph(g, k, SEED)
+        .unwrap()
+}
+
+fn replica_total(g: &Graph, p: &EdgePartition) -> usize {
+    PartitionView::build(g, p).replica_total()
+}
+
+fn max_size(p: &EdgePartition) -> usize {
+    p.sizes().into_iter().max().unwrap_or(0)
+}
+
+/// `⌊(1+eps)·⌈m/k⌉⌋` — the engine's balance cap.
+fn cap(m: usize, k: usize) -> usize {
+    let ideal = m.div_ceil(k);
+    let c = ((1.0 + EPS) * ideal as f64) as usize;
+    c.min(m)
+}
+
+#[test]
+fn refinement_never_worsens_rf_and_keeps_eps_balance() {
+    for (gname, g) in graphs() {
+        let m = g.edge_count();
+        for base in base_specs() {
+            for k in [2usize, 8, 32] {
+                let before = run(&g, &base, k);
+                let after = run(&g, &refine_spec(&base), k);
+                let what = format!("{gname}/{base}/k={k}");
+                after.validate(&g).unwrap();
+                assert_eq!(after.owner.len(), m, "{what}: owner len");
+                assert!(
+                    replica_total(&g, &after) <= replica_total(&g, &before),
+                    "{what}: refinement worsened the replica total \
+                     ({} -> {})",
+                    replica_total(&g, &before),
+                    replica_total(&g, &after)
+                );
+                // refinement never *creates* imbalance: parts stay within
+                // the eps cap, except where the base already exceeded it
+                assert!(
+                    max_size(&after) <= cap(m, k).max(max_size(&before)),
+                    "{what}: max part {} > cap {} (base max {})",
+                    max_size(&after),
+                    cap(m, k),
+                    max_size(&before)
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn refined_owners_bit_identical_across_pool_widths() {
+    for (gname, g) in graphs() {
+        for base in base_specs() {
+            for k in [2usize, 8, 32] {
+                let spec = refine_spec(&base);
+                let reference =
+                    pool::with_threads(1, || run(&g, &spec, k));
+                for threads in [2usize, 8] {
+                    let got =
+                        pool::with_threads(threads, || run(&g, &spec, k));
+                    assert_eq!(
+                        reference.owner, got.owner,
+                        "{gname}/{base}/k={k}: owners differ at \
+                         {threads} threads"
+                    );
+                    assert_eq!(
+                        reference.rounds, got.rounds,
+                        "{gname}/{base}/k={k}: rounds differ at \
+                         {threads} threads"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn engine_rounds_keep_every_ledger_consistent() {
+    let g = graphs().remove(0).1;
+    let g = &g;
+    let base = run(g, "random", 8);
+    let mut eng = RefineEngine::new(g, &base, EPS);
+    let mut last = eng.total_replicas();
+    for _ in 0..16 {
+        let applied = eng.round(g);
+        // the owner array is a valid complete partition after *every*
+        // round, and the engine's replica ledger matches a from-scratch
+        // recount of it
+        let part = EdgePartition {
+            k: 8,
+            owner: eng.owner().to_vec(),
+            rounds: 0,
+        };
+        part.validate(g).unwrap();
+        assert_eq!(
+            replica_total(g, &part),
+            eng.total_replicas(),
+            "replica ledger drifted from the recount"
+        );
+        assert!(eng.total_replicas() <= last, "replica total increased");
+        assert!(
+            max_size(&part) <= eng.cap().max(max_size(&base)),
+            "round broke the balance cap"
+        );
+        last = eng.total_replicas();
+        if applied == 0 {
+            break;
+        }
+    }
+    // a random base leaves obvious local moves: refinement must have
+    // found some (this also guards against a silently no-op engine)
+    assert!(
+        eng.total_replicas() < replica_total(g, &base),
+        "local search found nothing to improve on a random partition"
+    );
+    assert!(eng.moves_applied + eng.swaps_applied > 0);
+    // fixed point: once a round applies nothing, further rounds don't
+    // either, and owners stay put
+    let settled = eng.owner().to_vec();
+    assert_eq!(eng.round(g), 0);
+    assert_eq!(eng.owner(), &settled[..]);
+}
+
+#[test]
+fn refine_composes_with_tuned_base_parameters() {
+    let g = graphs().remove(0).1;
+    let g = &g;
+    // a parameterized inner spec through the full grammar: inner commas
+    // written as '+', inner colon kept
+    let spec = "refine:base=hdrf:lambda=1.5+group=512,rounds=2,eps=0.1";
+    let refined = run(g, spec, 8);
+    refined.validate(g).unwrap();
+    let base = run(g, "hdrf:lambda=1.5,group=512", 8);
+    assert!(replica_total(g, &refined) <= replica_total(g, &base));
+}

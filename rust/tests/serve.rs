@@ -13,7 +13,7 @@
 //!   and machine-readable kind.
 
 use dfep::coordinator::batch::{BatchRequest, Variant};
-use dfep::coordinator::runs::PartitionRequest;
+use dfep::coordinator::runs::{PartitionRequest, RunReport};
 use dfep::coordinator::serve::{ServeClient, ServeConfig, Server};
 use dfep::util::error::ErrorKind;
 
@@ -256,4 +256,94 @@ fn error_codes_follow_the_documented_kind_table() {
     assert_eq!(err.kind(), ErrorKind::DatasetNotFound);
     // nothing above ever computed
     assert_eq!(stat(&mut c, "computations"), 0.0);
+}
+
+#[test]
+fn wire_json_negative_paths_are_typed() {
+    // requests parse STRICTLY: an unknown field is a typed reject with
+    // the documented message, not a silently-defaulted experiment
+    let err = PartitionRequest::from_json(
+        r#"{"v":1,"spec":"dfep","dataset":"er:n=100,m=300","kay":2}"#,
+    )
+    .unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::InvalidRequest);
+    assert!(
+        err.to_string()
+            .starts_with("unknown request field 'kay' (known: v,"),
+        "{err}"
+    );
+    // any version other than (a missing) 1 is rejected
+    let err = PartitionRequest::from_json(
+        r#"{"v":2,"spec":"dfep","dataset":"er:n=100,m=300"}"#,
+    )
+    .unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::InvalidRequest);
+    assert_eq!(
+        err.to_string(),
+        "unsupported wire version (this crate speaks v=1)"
+    );
+    // a bad spec inside an otherwise-valid request is InvalidSpec, not
+    // InvalidRequest — the serve layer's 400 sub-kinds stay distinct
+    let err = PartitionRequest::from_json(
+        r#"{"v":1,"spec":"refine:base=nosuch","dataset":"er:n=100,m=300"}"#,
+    )
+    .unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::InvalidSpec);
+    // reports parse LENIENTLY: a field added by a future server is
+    // ignored, everything this client knows still round-trips
+    let req = PartitionRequest::new("dfep")
+        .unwrap()
+        .dataset("er:n=100,m=300")
+        .k(2)
+        .seed(1);
+    let report = req.execute().unwrap();
+    let extra = report
+        .to_json_with_owners()
+        .replacen('{', "{\"future_field\": \"yes\", ", 1);
+    let parsed = RunReport::from_json(&extra).unwrap();
+    assert_eq!(parsed.partition.owner, report.partition.owner);
+    assert_eq!(parsed.spec, report.spec);
+    assert_eq!(parsed.edges, report.edges);
+    assert_eq!(
+        parsed.metrics.nstdev.to_bits(),
+        report.metrics.nstdev.to_bits()
+    );
+}
+
+#[test]
+fn malformed_refine_specs_answer_invalid_spec_through_the_wire() {
+    let server = spawn();
+    let mut c = ServeClient::connect(server.addr());
+    let post = |c: &mut ServeClient, body: &str| {
+        let (status, body) =
+            c.request("POST", "/partition", body.as_bytes()).unwrap();
+        (status, kind_of(&body))
+    };
+    let req = PartitionRequest::new("dfep")
+        .unwrap()
+        .dataset("er:n=100,m=300")
+        .k(2);
+    // every documented refine grammar error maps to 400 invalid_spec:
+    // unknown inner name, self-nesting, out-of-range parameter
+    for bad in ["refine:base=nosuch", "refine:base=refine", "refine:rounds=0"]
+    {
+        let body =
+            req.to_json().replace("\"dfep\"", &format!("\"{bad}\""));
+        assert_eq!(
+            post(&mut c, &body),
+            (400, "invalid_spec".to_string()),
+            "{bad}"
+        );
+    }
+    assert_eq!(stat(&mut c, "computations"), 0.0);
+    // and a well-formed composed spec (parameterized nested base) runs
+    // end-to-end over the wire
+    let ok = PartitionRequest::new("refine:base=hdrf:lambda=1.5,rounds=2")
+        .unwrap()
+        .dataset("er:n=200,m=600")
+        .k(4)
+        .seed(7);
+    let rep = c.partition(&ok, true).unwrap();
+    assert_eq!(rep.partition.owner.len(), 600);
+    assert_eq!(stat(&mut c, "computations"), 1.0);
 }

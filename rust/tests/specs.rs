@@ -73,6 +73,83 @@ fn malformed_specs_fail_with_documented_messages() {
         err("restream:passes=0"),
         "restream: parameter 'passes' must be >= 1 (got 0)"
     );
+    // nested-spec rows (the refine meta-spec): inner errors surface
+    // prefixed, self-nesting and range violations are documented too
+    let e = err("refine:base=nosuch");
+    assert!(
+        e.starts_with(
+            "refine: parameter 'base': unknown partitioner 'nosuch' (known: "
+        ),
+        "{e}"
+    );
+    assert_eq!(
+        err("refine:base=hdrf:lambda=abc"),
+        "refine: parameter 'base': hdrf: parameter 'lambda': expected a \
+         float, got 'abc'"
+    );
+    assert_eq!(
+        err("refine:base=refine"),
+        "refine: parameter 'base' must not name 'refine' itself"
+    );
+    assert_eq!(
+        err("refine:rounds=0"),
+        "refine: parameter 'rounds' must be >= 1 (got 0)"
+    );
+}
+
+/// The refine meta-spec's composed grammar: a parameterized nested spec
+/// round-trips through `Display`, and the canonical (cache-key) form
+/// elaborates the nested spec recursively, so every spelling of one
+/// configuration shares a serve-cache entry.
+#[test]
+fn refine_nested_specs_round_trip_and_share_cache_keys() {
+    let s: PartitionerSpec = "refine:base=hdrf:lambda=1.50+group=512,rounds=2"
+        .parse()
+        .unwrap();
+    assert_eq!(
+        s.to_string(),
+        "refine:base=hdrf:lambda=1.5+group=512,rounds=2"
+    );
+    assert_eq!(s, s.to_string().parse().unwrap());
+    // bare name, alias, and inner-default spellings all collide
+    let bare: PartitionerSpec = "refine".parse().unwrap();
+    let alias: PartitionerSpec = "local-search".parse().unwrap();
+    let inner_default: PartitionerSpec =
+        "refine:base=hdrf:lambda=1.1".parse().unwrap();
+    assert_eq!(bare.canonical(), alias.canonical());
+    assert_eq!(bare.canonical(), inner_default.canonical());
+    // a tuned inner spec is a different key
+    let tuned: PartitionerSpec =
+        "refine:base=hdrf:lambda=1.5".parse().unwrap();
+    assert_ne!(tuned.canonical(), bare.canonical());
+}
+
+/// The DESIGN.md registry table (also diffed row-by-row by a unit test
+/// in `partition::registry`) must carry the refine entry: catching a
+/// drifted or missing row at the integration tier too keeps the docs
+/// honest when only tier-1 runs.
+#[test]
+fn design_md_registry_table_includes_every_entry() {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("../DESIGN.md");
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("cannot read {}: {e}", path.display()));
+    for e in registry::all() {
+        let row = format!("| `{}` | ", e.name);
+        assert!(
+            text.contains(&row),
+            "DESIGN.md registry table has no row for '{}'",
+            e.name
+        );
+        for p in e.params {
+            let cell = format!("`{}={}`", p.key, p.default);
+            assert!(
+                text.contains(&cell),
+                "DESIGN.md registry table missing {} cell {cell}",
+                e.name
+            );
+        }
+    }
 }
 
 #[test]
