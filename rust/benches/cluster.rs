@@ -1,0 +1,14 @@
+//! Distributed-runtime bench — see bench::cluster_load: a real
+//! coordinator + in-process workers over loopback TCP, reporting round
+//! latency, measured-vs-predicted wire bytes per phase, and
+//! kill-and-recover wall-clock into BENCH_cluster.json (override:
+//! DFEP_CLUSTER_OUT).
+//!
+//! `--quick` (or DFEP_QUICK=1) is the CI smoke mode: a smaller graph,
+//! same artifact shape. Other flags (cargo bench passes `--bench`) are
+//! ignored.
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick")
+        || std::env::var("DFEP_QUICK").map(|v| v == "1").unwrap_or(false);
+    dfep::bench::cluster_load::cluster_load_with(quick);
+}

@@ -1,0 +1,132 @@
+//! `cluster_load`: end-to-end bench of the distributed runtime.
+//!
+//! Runs the real coordinator + in-process workers (threads over
+//! loopback TCP — a bench binary must not respawn itself) through a
+//! clean partitioning + SSSP run, then through a kill-and-recover run,
+//! reporting round latency, wire bytes per phase (measured vs the
+//! [`WireModel`](crate::cluster::cost::WireModel) prediction), and
+//! recovery wall-clock. Emits `BENCH_cluster.json` (override with
+//! `DFEP_CLUSTER_OUT`), the artifact CI uploads and diffs run over run.
+
+use crate::bench::harness::JsonSink;
+use crate::bench::{fmt_f, Table};
+use crate::cluster::runtime::{
+    run_cluster, ClusterConfig, FailMode, FailureInjection,
+};
+
+/// Nearest-rank percentile of an ascending-sorted sample.
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+/// Run the cluster bench; `quick` is the CI smoke shape.
+pub fn cluster_load_with(quick: bool) {
+    let dataset = if quick {
+        "plc:n=400,m=4,p=0.3"
+    } else {
+        "plc:n=2000,m=8,p=0.3"
+    };
+    let cfg = ClusterConfig {
+        workers: 3,
+        k: 8,
+        seed: 1,
+        dataset: dataset.into(),
+        checkpoint_every: 4,
+        sssp_source: Some(0),
+        in_process: true,
+        ..ClusterConfig::default()
+    };
+    println!(
+        "cluster_load: {} workers on {dataset}, k={}, checkpoint every {} \
+         rounds",
+        cfg.workers, cfg.k, cfg.checkpoint_every
+    );
+
+    let rep = run_cluster(&cfg).expect("clean cluster run");
+    assert_eq!(rep.recoveries, 0, "clean run must not recover");
+    let mut round_ms = rep.round_ms.clone();
+    round_ms.sort_by(f64::total_cmp);
+    let rounds = rep.partition.rounds as f64;
+    let total_bytes = rep.measured.total() as f64;
+    println!(
+        "clean: {} rounds, round p50 {} ms / p99 {} ms, {} B/round",
+        rep.partition.rounds,
+        fmt_f(percentile(&round_ms, 0.50)),
+        fmt_f(percentile(&round_ms, 0.99)),
+        fmt_f(total_bytes / rounds.max(1.0))
+    );
+
+    let mut t = Table::new(&["phase", "measured_B", "predicted_B", "ratio"]);
+    let phases = [
+        ("load", rep.measured.load, rep.predicted.load),
+        ("control", rep.measured.control, rep.predicted.control),
+        ("bids_up", rep.measured.bids_up, rep.predicted.bids_up),
+        ("bids_down", rep.measured.bids_down, rep.predicted.bids_down),
+        ("checkpoint", rep.measured.checkpoint, rep.predicted.checkpoint),
+        ("merge", rep.measured.merge, rep.predicted.merge),
+        ("sssp", rep.measured.sssp, rep.predicted.sssp),
+    ];
+    for (name, m, p) in phases {
+        t.row(&[
+            name.to_string(),
+            (m as f64).to_string(),
+            fmt_f(p),
+            fmt_f(m as f64 / p.max(1.0)),
+        ]);
+    }
+
+    // the recovery path: kill one worker mid-run, time the rollback
+    let fail_cfg = ClusterConfig {
+        fail: Some(FailureInjection {
+            rank: 1,
+            round: 4,
+            mode: FailMode::Kill,
+        }),
+        ..cfg.clone()
+    };
+    let frep = run_cluster(&fail_cfg).expect("recovered cluster run");
+    assert_eq!(frep.recoveries, 1, "the injected kill must be recovered");
+    assert_eq!(
+        frep.partition.owner, rep.partition.owner,
+        "recovery must reproduce the clean owners bit-for-bit"
+    );
+    let recovery_ms: f64 = frep.recovery_ms.iter().sum();
+    println!(
+        "recovery: {} ms respawn+rollback, {} B recovery traffic, owners \
+         reproduced",
+        fmt_f(recovery_ms),
+        frep.measured.recovery
+    );
+
+    let mut sink = JsonSink::new();
+    sink.text("bench", "cluster_load");
+    sink.num("quick", if quick { 1.0 } else { 0.0 });
+    sink.text("dataset", dataset);
+    sink.num("workers", cfg.workers as f64);
+    sink.num("k", cfg.k as f64);
+    sink.num("rounds", rounds);
+    sink.num("round_p50_ms", percentile(&round_ms, 0.50));
+    sink.num("round_p99_ms", percentile(&round_ms, 0.99));
+    sink.num("bytes_total", total_bytes);
+    sink.num("bytes_per_round", total_bytes / rounds.max(1.0));
+    for (name, m, p) in phases {
+        sink.num(&format!("bytes_{name}"), m as f64);
+        sink.num(&format!("predicted_{name}"), p);
+    }
+    sink.num("predicted_total", rep.predicted.total());
+    sink.num("recovery_count", frep.recoveries as f64);
+    sink.num("recovery_ms", recovery_ms);
+    sink.num("recovery_bytes", frep.measured.recovery as f64);
+
+    let out = std::env::var("DFEP_CLUSTER_OUT")
+        .unwrap_or_else(|_| "BENCH_cluster.json".to_string());
+    let out_path = std::path::Path::new(&out);
+    match sink.write(out_path) {
+        Ok(()) => println!("\nwrote {}", out_path.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", out_path.display()),
+    }
+}

@@ -2,6 +2,7 @@
 //! aggregation over seeds and paper-style table printing shared by the
 //! `rust/benches/*` targets.
 
+pub mod cluster_load;
 pub mod figures;
 pub mod harness;
 pub mod serve_load;

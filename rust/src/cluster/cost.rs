@@ -94,9 +94,305 @@ impl CostModel {
     }
 }
 
+/// Measured wire traffic of a `cluster::runtime` run, by protocol phase,
+/// in bytes as framed on the wire (payload + the 4-byte frame prefix).
+/// The coordinator sits at the center of the star topology, so counting
+/// its sends and receives captures every byte the cluster moves.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WireBytes {
+    /// `Init` bootstrap messages (dataset shipping).
+    pub load: u64,
+    /// `Ready`, `StartRound`, `RoundDone` and `Shutdown` round-control
+    /// messages.
+    pub control: u64,
+    /// Worker → coordinator bid lists.
+    pub bids_up: u64,
+    /// Coordinator → worker stitched global bid broadcasts.
+    pub bids_down: u64,
+    /// `Snapshot` requests and checkpoint blobs.
+    pub checkpoint: u64,
+    /// `FetchOwners` / `Owners` result collection.
+    pub merge: u64,
+    /// ETSCH SSSP phase (`SsspStart`/`SsspStep`/`SsspDelta`).
+    pub sssp: u64,
+    /// Failure recovery (`Restore`, `Barrier`/`BarrierAck`, respawn
+    /// `Init`s). Zero on a clean run; not predicted by [`WireModel`].
+    pub recovery: u64,
+}
+
+impl WireBytes {
+    /// Sum over every phase.
+    pub fn total(&self) -> u64 {
+        self.load
+            + self.control
+            + self.bids_up
+            + self.bids_down
+            + self.checkpoint
+            + self.merge
+            + self.sssp
+            + self.recovery
+    }
+}
+
+/// Protocol event counts of one cluster run — the workload statistics
+/// [`WireModel::predict`] turns into byte predictions. Recorded by the
+/// coordinator as the run executes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ClusterShape {
+    /// Worker count.
+    pub workers: usize,
+    /// Graph vertices.
+    pub n: usize,
+    /// Graph edges.
+    pub m: usize,
+    /// Partitions.
+    pub k: usize,
+    /// `StartRound` broadcasts (equals DFEP rounds on a clean run;
+    /// includes replayed rounds after a recovery).
+    pub rounds: u64,
+    /// Total stitched global bids over all rounds (each bid travels up
+    /// exactly once and down `workers` times).
+    pub total_bids: u64,
+    /// Partition-phase checkpoint barriers completed.
+    pub checkpoints: u64,
+    /// SSSP-phase checkpoints (0 or 1: one at phase entry).
+    pub sssp_checkpoints: u64,
+    /// SSSP supersteps executed.
+    pub sssp_steps: u64,
+    /// Total `(vertex, dist)` pairs broadcast down over all supersteps.
+    pub sssp_updates: u64,
+    /// Total `(vertex, dist)` pairs received up over all supersteps.
+    pub sssp_deltas: u64,
+}
+
+/// Predicted wire bytes per phase (same phase meanings as [`WireBytes`];
+/// `recovery` is intentionally absent — failures are not a modeled cost).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WirePrediction {
+    /// Predicted [`WireBytes::load`].
+    pub load: f64,
+    /// Predicted [`WireBytes::control`].
+    pub control: f64,
+    /// Predicted [`WireBytes::bids_up`].
+    pub bids_up: f64,
+    /// Predicted [`WireBytes::bids_down`].
+    pub bids_down: f64,
+    /// Predicted [`WireBytes::checkpoint`] (structural part only — the
+    /// sparse ledger section of a blob is state-dependent, see
+    /// [`WireModel`]).
+    pub checkpoint: f64,
+    /// Predicted [`WireBytes::merge`].
+    pub merge: f64,
+    /// Predicted [`WireBytes::sssp`].
+    pub sssp: f64,
+}
+
+impl WirePrediction {
+    /// Sum over every phase.
+    pub fn total(&self) -> f64 {
+        self.load
+            + self.control
+            + self.bids_up
+            + self.bids_down
+            + self.checkpoint
+            + self.merge
+            + self.sssp
+    }
+}
+
+/// Per-message byte constants of the `cluster::proto` schema — the wire
+/// cost model validated against measured [`WireBytes`] by
+/// `tests/cluster.rs`.
+///
+/// Constants mirror the documented encoding (DESIGN.md "Distributed
+/// runtime"): every message costs `frame_overhead` (4-byte frame prefix +
+/// 2-byte version + 1-byte tag) plus its fixed fields plus its
+/// variable-length payload. All phases except `checkpoint` are exact by
+/// construction; a checkpoint blob additionally carries the sparse
+/// ledger section (holder lists + money cells, `4 + 12` bytes per
+/// holding vertex), which depends on run state and is deliberately *not*
+/// modeled — the validation test brackets it with an asymmetric
+/// tolerance instead (measured ≥ structural prediction, and within the
+/// documented factor of it).
+#[derive(Clone, Debug)]
+pub struct WireModel {
+    /// Frame prefix + version + tag, paid by every message.
+    pub frame_overhead: f64,
+    /// One encoded bid (`u32` edge, `u32` partition, 2 × `f64`).
+    pub bid_bytes: f64,
+    /// One edge in the `Init` edge list (2 × `u32`).
+    pub edge_bytes: f64,
+    /// One owner entry (`u32`).
+    pub owner_bytes: f64,
+    /// One SSSP `(vertex, dist)` pair (2 × `u32`).
+    pub update_bytes: f64,
+    /// `Init` fixed fields (rank/workers/k/seed/tunables/failure
+    /// plan/n/edge count).
+    pub init_fixed: f64,
+    /// `Ready` fixed fields.
+    pub ready_fixed: f64,
+    /// `StartRound` fixed fields.
+    pub start_round_fixed: f64,
+    /// `RoundDone` fixed fields.
+    pub round_done_fixed: f64,
+    /// `Bids` fixed fields (round + count), either direction.
+    pub bids_fixed: f64,
+    /// `Snapshot` request fixed fields.
+    pub snapshot_req_fixed: f64,
+    /// `Snapshot` reply fixed fields (round + blob length).
+    pub snapshot_reply_fixed: f64,
+    /// Partition-phase blob structural header (version, phase, round,
+    /// free edges, rng state, k/n/m, owned-partition count).
+    pub snap_fixed: f64,
+    /// Per-partition *replicated* blob bytes (`u64` size + `u64` anchor),
+    /// carried by every worker's blob.
+    pub snap_replicated_bytes: f64,
+    /// Per-partition owned-section header (id + holder count + cell
+    /// count), carried once per partition cluster-wide.
+    pub snap_part_bytes: f64,
+    /// SSSP-phase blob fixed bytes (version, phase, source, owner count).
+    pub sssp_snap_fixed: f64,
+}
+
+impl Default for WireModel {
+    fn default() -> Self {
+        WireModel {
+            frame_overhead: 7.0,
+            bid_bytes: 24.0,
+            edge_bytes: 8.0,
+            owner_bytes: 4.0,
+            update_bytes: 8.0,
+            init_fixed: 61.0,
+            ready_fixed: 4.0,
+            start_round_fixed: 9.0,
+            round_done_fixed: 24.0,
+            bids_fixed: 12.0,
+            snapshot_req_fixed: 8.0,
+            snapshot_reply_fixed: 12.0,
+            snap_fixed: 51.0,
+            snap_replicated_bytes: 16.0,
+            snap_part_bytes: 12.0,
+            sssp_snap_fixed: 11.0,
+        }
+    }
+}
+
+impl WireModel {
+    /// Predict per-phase wire bytes for a run of the given shape.
+    pub fn predict(&self, s: &ClusterShape) -> WirePrediction {
+        let w = s.workers as f64;
+        let (n, m, k) = (s.n as f64, s.m as f64, s.k as f64);
+        let rounds = s.rounds as f64;
+        let bids = s.total_bids as f64;
+        let fo = self.frame_overhead;
+        let load = w * (fo + self.init_fixed + self.edge_bytes * m);
+        let control = w * (fo + self.ready_fixed)
+            + rounds
+                * w
+                * (2.0 * fo
+                    + self.start_round_fixed
+                    + self.round_done_fixed)
+            + w * fo; // one Shutdown per worker
+        let bids_up =
+            rounds * w * (fo + self.bids_fixed) + self.bid_bytes * bids;
+        let bids_down = rounds * w * (fo + self.bids_fixed)
+            + self.bid_bytes * bids * w;
+        // one checkpoint barrier = W snapshot requests + W blob replies;
+        // a blob's structural part: fixed header + the replicated
+        // owner/free_deg/sizes/anchor vectors on every worker + one
+        // owned-section header per partition (each partition appears in
+        // exactly one worker's owned section)
+        let per_ckpt = w
+            * (2.0 * fo
+                + self.snapshot_req_fixed
+                + self.snapshot_reply_fixed
+                + self.snap_fixed
+                + self.owner_bytes * m
+                + self.owner_bytes * n
+                + self.snap_replicated_bytes * k)
+            + k * self.snap_part_bytes;
+        let sssp_ckpt = s.sssp_checkpoints as f64
+            * w
+            * (2.0 * fo
+                + self.snapshot_req_fixed
+                + self.snapshot_reply_fixed
+                + self.sssp_snap_fixed
+                + self.owner_bytes * m);
+        let checkpoint = s.checkpoints as f64 * per_ckpt + sssp_ckpt;
+        let merge = fo + (fo + 4.0 + self.owner_bytes * m);
+        let steps = s.sssp_steps as f64;
+        let sssp = if steps > 0.0 || s.sssp_updates > 0 {
+            w * (fo + 4.0 + 4.0 + self.owner_bytes * m) // SsspStart
+                + steps * w * 2.0 * (fo + self.bids_fixed)
+                + self.update_bytes * s.sssp_updates as f64 * w
+                + self.update_bytes * s.sssp_deltas as f64
+        } else {
+            0.0
+        };
+        WirePrediction {
+            load,
+            control,
+            bids_up,
+            bids_down,
+            checkpoint,
+            merge,
+            sssp,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn wire_model_hand_computed_shape() {
+        // 2 workers, 3 rounds, 10 global bids, no checkpoints/sssp
+        let s = ClusterShape {
+            workers: 2,
+            n: 5,
+            m: 6,
+            k: 4,
+            rounds: 3,
+            total_bids: 10,
+            ..ClusterShape::default()
+        };
+        let p = WireModel::default().predict(&s);
+        // load: 2 * (7 + 61 + 8*6) = 232
+        assert_eq!(p.load, 232.0);
+        // control: 2*(7+4) + 3*2*(14 + 9 + 24) + 2*7 = 22 + 282 + 14
+        assert_eq!(p.control, 318.0);
+        // bids_up: 3*2*(7+12) + 24*10 = 114 + 240 = 354
+        assert_eq!(p.bids_up, 354.0);
+        // bids_down: 114 + 240*2 = 594
+        assert_eq!(p.bids_down, 594.0);
+        assert_eq!(p.checkpoint, 0.0);
+        // merge: 7 + (7 + 4 + 4*6) = 42
+        assert_eq!(p.merge, 42.0);
+        assert_eq!(p.sssp, 0.0);
+        assert!((p.total() - (232.0 + 318.0 + 354.0 + 594.0 + 42.0)).abs()
+            < 1e-9);
+        // one checkpoint barrier on the same shape:
+        // 2*(14 + 8 + 12 + 51 + 4*6 + 4*5 + 16*4) + 4*12 = 2*193 + 48
+        let s2 = ClusterShape { checkpoints: 1, ..s };
+        let p2 = WireModel::default().predict(&s2);
+        assert_eq!(p2.checkpoint, 434.0);
+    }
+
+    #[test]
+    fn wire_bytes_total_sums_phases() {
+        let b = WireBytes {
+            load: 1,
+            control: 2,
+            bids_up: 3,
+            bids_down: 4,
+            checkpoint: 5,
+            merge: 6,
+            sssp: 7,
+            recovery: 8,
+        };
+        assert_eq!(b.total(), 36);
+    }
 
     #[test]
     fn more_nodes_is_faster_until_overhead() {

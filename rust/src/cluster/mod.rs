@@ -1,7 +1,17 @@
-//! Simulated Hadoop/EC2 cluster — the Section V-D substitute.
+//! Cluster execution: the real distributed runtime plus the simulated
+//! Hadoop/EC2 model (the Section V-D substitute).
+//!
+//! [`runtime`] runs actual multi-worker partitioning over localhost
+//! sockets (`repro cluster` / `repro worker`), with checkpoints,
+//! failure injection, and measured wire bytes validated against the
+//! [`cost`] model. The remaining modules simulate a MapReduce cluster
+//! analytically for the paper's Figures 8–9 (`repro cluster
+//! --simulate`).
 
 pub mod cost;
 pub mod dfep_mr;
 pub mod etsch_mr;
 pub mod failures;
 pub mod mapreduce;
+pub(crate) mod proto;
+pub mod runtime;

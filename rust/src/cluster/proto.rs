@@ -1,0 +1,587 @@
+//! Versioned binary message schema for the distributed runtime.
+//!
+//! Every message is one `util::frame` payload:
+//!
+//! ```text
+//! payload := version:u16  tag:u8  fields...      (all integers LE)
+//! ```
+//!
+//! Encoding is hand-rolled (the vendored crate set has no serde): each
+//! message variant has a fixed tag and a fixed field order, documented in
+//! DESIGN.md "Distributed runtime". `f64` fields travel as raw IEEE-754
+//! bits (`to_le_bytes`), so bid values round-trip bit-exactly — a
+//! requirement for the owners-bit-identical determinism guarantee.
+//!
+//! Versioning: the `u16` prefix is checked on decode; a peer speaking a
+//! different schema version is rejected with [`ErrorKind::Transport`]
+//! before any field is interpreted. Bump [`PROTO_VERSION`] on any schema
+//! change — coordinator and workers are always the same binary, so a
+//! mismatch means a stale worker process from a previous build.
+
+use crate::partition::dfep::Bid;
+use crate::util::error::{Error, ErrorKind, Result};
+
+/// Wire schema version (see module docs for the bump policy).
+pub(crate) const PROTO_VERSION: u16 = 1;
+
+/// Wire bytes of one encoded bid: edge `u32` + partition `u32` +
+/// offer `f64` + from-lo `f64`.
+pub(crate) const BID_WIRE_BYTES: usize = 24;
+
+fn terr(msg: String) -> Error {
+    Error::msg(msg).with_kind(ErrorKind::Transport)
+}
+
+/// Append-only little-endian encoder.
+#[derive(Default)]
+pub(crate) struct Enc {
+    pub buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn message(tag: u8) -> Enc {
+        let mut e = Enc::default();
+        e.u16(PROTO_VERSION);
+        e.u8(tag);
+        e
+    }
+
+    pub fn u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+
+    pub fn u16(&mut self, x: u16) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn i64(&mut self, x: i64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, x: f64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    pub fn vec_u32(&mut self, xs: &[u32]) {
+        self.u32(xs.len() as u32);
+        for &x in xs {
+            self.u32(x);
+        }
+    }
+
+    pub fn pairs_u32(&mut self, xs: &[(u32, u32)]) {
+        self.u32(xs.len() as u32);
+        for &(a, b) in xs {
+            self.u32(a);
+            self.u32(b);
+        }
+    }
+
+    pub fn bids(&mut self, xs: &[Bid]) {
+        self.u32(xs.len() as u32);
+        for &(e, p, offer, from_lo) in xs {
+            self.u32(e);
+            self.u32(p);
+            self.f64(offer);
+            self.f64(from_lo);
+        }
+    }
+}
+
+/// Checked little-endian decoder over a borrowed payload.
+pub(crate) struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    /// Read and check the version prefix, returning the message tag.
+    pub fn message(buf: &'a [u8]) -> Result<(u8, Dec<'a>)> {
+        let mut d = Dec::new(buf);
+        let v = d.u16()?;
+        if v != PROTO_VERSION {
+            return Err(terr(format!(
+                "protocol version mismatch: got {v}, want {PROTO_VERSION}"
+            )));
+        }
+        let tag = d.u8()?;
+        Ok((tag, d))
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            return Err(terr(format!(
+                "truncated message: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Length-prefixed count with a sanity cap against corrupt frames:
+    /// each element needs at least `elem_bytes` more bytes in the buffer.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+        let len = self.u32()? as usize;
+        if len * elem_bytes > self.buf.len() - self.pos {
+            return Err(terr(format!(
+                "corrupt length {len}: exceeds remaining payload"
+            )));
+        }
+        Ok(len)
+    }
+
+    pub fn vec_u32(&mut self) -> Result<Vec<u32>> {
+        let len = self.count(4)?;
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push(self.u32()?);
+        }
+        Ok(out)
+    }
+
+    pub fn pairs_u32(&mut self) -> Result<Vec<(u32, u32)>> {
+        let len = self.count(8)?;
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push((self.u32()?, self.u32()?));
+        }
+        Ok(out)
+    }
+
+    pub fn bids(&mut self) -> Result<Vec<Bid>> {
+        let len = self.count(BID_WIRE_BYTES)?;
+        let mut out = Vec::with_capacity(len);
+        for _ in 0..len {
+            out.push((self.u32()?, self.u32()?, self.f64()?, self.f64()?));
+        }
+        Ok(out)
+    }
+
+    /// Assert the payload was fully consumed (schema drift tripwire).
+    pub fn done(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(terr(format!(
+                "{} trailing bytes after message",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Worker bootstrap: everything a (re)spawned worker needs to rebuild
+/// the graph and its replica of the run state.
+#[derive(Clone, Debug, PartialEq)]
+pub(crate) struct InitMsg {
+    /// This worker's rank in `0..workers` (owns partitions `i % workers
+    /// == rank`).
+    pub rank: u32,
+    /// Total worker count.
+    pub workers: u32,
+    /// Partition count.
+    pub k: u32,
+    /// DFEP run seed (every replica seeds the same rng stream).
+    pub seed: u64,
+    /// `Dfep::funding_cap`.
+    pub cap: f64,
+    /// `Dfep::initial_fraction`.
+    pub init_frac: f64,
+    /// `Dfep::frontier_first`.
+    pub frontier_first: bool,
+    /// Failure injection: round at which to die, `-1` = never.
+    pub fail_round: i64,
+    /// Stall this long before dying (`0` = drop the connection at once).
+    pub fail_stall_ms: u64,
+    /// Vertex count (the edge list alone loses trailing isolated ids).
+    pub n: u32,
+    /// Canonical (sorted, deduplicated, `u < v`) edge list — rebuilding
+    /// through `GraphBuilder` reproduces identical edge ids.
+    pub edges: Vec<(u32, u32)>,
+}
+
+/// Coordinator → worker messages.
+#[derive(Clone, Debug, PartialEq)]
+pub(crate) enum CoordMsg {
+    /// Bootstrap (tag 1).
+    Init(InitMsg),
+    /// Begin round `round`; run the stall reseed first when `reseed`
+    /// (tag 2).
+    StartRound { round: u64, reseed: bool },
+    /// The stitched global bid list for round `round` (tag 3).
+    Bids { round: u64, bids: Vec<Bid> },
+    /// Request a checkpoint blob of the current state (tag 4).
+    Snapshot { round: u64 },
+    /// Overwrite state from a checkpoint blob (tag 5).
+    Restore { blob: Vec<u8> },
+    /// Flush stale in-flight replies; worker echoes the token (tag 6).
+    Barrier { token: u64 },
+    /// Request the pre-finalize ownership vector (tag 7).
+    FetchOwners,
+    /// Enter the ETSCH SSSP phase on the finalized partition (tag 8).
+    SsspStart { source: u32, owner: Vec<u32> },
+    /// One SSSP superstep: globally-improved `(vertex, dist)` pairs
+    /// (tag 9).
+    SsspStep { step: u64, updates: Vec<(u32, u32)> },
+    /// Clean shutdown (tag 10).
+    Shutdown,
+}
+
+/// Worker → coordinator messages.
+#[derive(Clone, Debug, PartialEq)]
+pub(crate) enum WorkerMsg {
+    /// Bootstrap complete (tag 1).
+    Ready { rank: u32 },
+    /// Bids from this worker's owned partitions, canonical partition-major
+    /// order (tag 2).
+    Bids { round: u64, bids: Vec<Bid> },
+    /// Round complete; `owner_hash` is an FNV-1a digest of the replicated
+    /// ownership vector, used as a replica-divergence tripwire (tag 3).
+    RoundDone { round: u64, free_edges: u64, owner_hash: u64 },
+    /// Checkpoint blob (tag 4).
+    Snapshot { round: u64, blob: Vec<u8> },
+    /// Echo of [`CoordMsg::Barrier`] (tag 5).
+    BarrierAck { token: u64 },
+    /// Pre-finalize ownership vector (tag 6).
+    Owners { owner: Vec<u32> },
+    /// Locally-improved `(vertex, dist)` pairs from one SSSP superstep
+    /// (tag 7).
+    SsspDelta { step: u64, updates: Vec<(u32, u32)> },
+}
+
+impl CoordMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            CoordMsg::Init(m) => {
+                let mut e = Enc::message(1);
+                e.u32(m.rank);
+                e.u32(m.workers);
+                e.u32(m.k);
+                e.u64(m.seed);
+                e.f64(m.cap);
+                e.f64(m.init_frac);
+                e.u8(m.frontier_first as u8);
+                e.i64(m.fail_round);
+                e.u64(m.fail_stall_ms);
+                e.u32(m.n);
+                e.pairs_u32(&m.edges);
+                e.buf
+            }
+            CoordMsg::StartRound { round, reseed } => {
+                let mut e = Enc::message(2);
+                e.u64(*round);
+                e.u8(*reseed as u8);
+                e.buf
+            }
+            CoordMsg::Bids { round, bids } => {
+                let mut e = Enc::message(3);
+                e.u64(*round);
+                e.bids(bids);
+                e.buf
+            }
+            CoordMsg::Snapshot { round } => {
+                let mut e = Enc::message(4);
+                e.u64(*round);
+                e.buf
+            }
+            CoordMsg::Restore { blob } => {
+                let mut e = Enc::message(5);
+                e.u32(blob.len() as u32);
+                e.buf.extend_from_slice(blob);
+                e.buf
+            }
+            CoordMsg::Barrier { token } => {
+                let mut e = Enc::message(6);
+                e.u64(*token);
+                e.buf
+            }
+            CoordMsg::FetchOwners => Enc::message(7).buf,
+            CoordMsg::SsspStart { source, owner } => {
+                let mut e = Enc::message(8);
+                e.u32(*source);
+                e.vec_u32(owner);
+                e.buf
+            }
+            CoordMsg::SsspStep { step, updates } => {
+                let mut e = Enc::message(9);
+                e.u64(*step);
+                e.pairs_u32(updates);
+                e.buf
+            }
+            CoordMsg::Shutdown => Enc::message(10).buf,
+        }
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<CoordMsg> {
+        let (tag, mut d) = Dec::message(buf)?;
+        let msg = match tag {
+            1 => CoordMsg::Init(InitMsg {
+                rank: d.u32()?,
+                workers: d.u32()?,
+                k: d.u32()?,
+                seed: d.u64()?,
+                cap: d.f64()?,
+                init_frac: d.f64()?,
+                frontier_first: d.u8()? != 0,
+                fail_round: d.i64()?,
+                fail_stall_ms: d.u64()?,
+                n: d.u32()?,
+                edges: d.pairs_u32()?,
+            }),
+            2 => CoordMsg::StartRound {
+                round: d.u64()?,
+                reseed: d.u8()? != 0,
+            },
+            3 => CoordMsg::Bids { round: d.u64()?, bids: d.bids()? },
+            4 => CoordMsg::Snapshot { round: d.u64()? },
+            5 => {
+                let len = d.count(1)?;
+                CoordMsg::Restore { blob: d.take(len)?.to_vec() }
+            }
+            6 => CoordMsg::Barrier { token: d.u64()? },
+            7 => CoordMsg::FetchOwners,
+            8 => CoordMsg::SsspStart {
+                source: d.u32()?,
+                owner: d.vec_u32()?,
+            },
+            9 => CoordMsg::SsspStep {
+                step: d.u64()?,
+                updates: d.pairs_u32()?,
+            },
+            10 => CoordMsg::Shutdown,
+            t => return Err(terr(format!("unknown coordinator tag {t}"))),
+        };
+        d.done()?;
+        Ok(msg)
+    }
+}
+
+impl WorkerMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            WorkerMsg::Ready { rank } => {
+                let mut e = Enc::message(1);
+                e.u32(*rank);
+                e.buf
+            }
+            WorkerMsg::Bids { round, bids } => {
+                let mut e = Enc::message(2);
+                e.u64(*round);
+                e.bids(bids);
+                e.buf
+            }
+            WorkerMsg::RoundDone { round, free_edges, owner_hash } => {
+                let mut e = Enc::message(3);
+                e.u64(*round);
+                e.u64(*free_edges);
+                e.u64(*owner_hash);
+                e.buf
+            }
+            WorkerMsg::Snapshot { round, blob } => {
+                let mut e = Enc::message(4);
+                e.u64(*round);
+                e.u32(blob.len() as u32);
+                e.buf.extend_from_slice(blob);
+                e.buf
+            }
+            WorkerMsg::BarrierAck { token } => {
+                let mut e = Enc::message(5);
+                e.u64(*token);
+                e.buf
+            }
+            WorkerMsg::Owners { owner } => {
+                let mut e = Enc::message(6);
+                e.vec_u32(owner);
+                e.buf
+            }
+            WorkerMsg::SsspDelta { step, updates } => {
+                let mut e = Enc::message(7);
+                e.u64(*step);
+                e.pairs_u32(updates);
+                e.buf
+            }
+        }
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<WorkerMsg> {
+        let (tag, mut d) = Dec::message(buf)?;
+        let msg = match tag {
+            1 => WorkerMsg::Ready { rank: d.u32()? },
+            2 => WorkerMsg::Bids { round: d.u64()?, bids: d.bids()? },
+            3 => WorkerMsg::RoundDone {
+                round: d.u64()?,
+                free_edges: d.u64()?,
+                owner_hash: d.u64()?,
+            },
+            4 => {
+                let round = d.u64()?;
+                let len = d.count(1)?;
+                WorkerMsg::Snapshot { round, blob: d.take(len)?.to_vec() }
+            }
+            5 => WorkerMsg::BarrierAck { token: d.u64()? },
+            6 => WorkerMsg::Owners { owner: d.vec_u32()? },
+            7 => WorkerMsg::SsspDelta {
+                step: d.u64()?,
+                updates: d.pairs_u32()?,
+            },
+            t => return Err(terr(format!("unknown worker tag {t}"))),
+        };
+        d.done()?;
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_coord(m: CoordMsg) {
+        let buf = m.encode();
+        assert_eq!(CoordMsg::decode(&buf).unwrap(), m);
+    }
+
+    fn roundtrip_worker(m: WorkerMsg) {
+        let buf = m.encode();
+        assert_eq!(WorkerMsg::decode(&buf).unwrap(), m);
+    }
+
+    #[test]
+    fn every_message_roundtrips() {
+        roundtrip_coord(CoordMsg::Init(InitMsg {
+            rank: 2,
+            workers: 3,
+            k: 8,
+            seed: 42,
+            cap: 10.0,
+            init_frac: 1.0,
+            frontier_first: true,
+            fail_round: -1,
+            fail_stall_ms: 0,
+            n: 5,
+            edges: vec![(0, 1), (1, 2), (3, 4)],
+        }));
+        roundtrip_coord(CoordMsg::StartRound { round: 7, reseed: true });
+        roundtrip_coord(CoordMsg::Bids {
+            round: 7,
+            bids: vec![(3, 1, 2.5, 1.25), (9, 0, 0.1, 0.0)],
+        });
+        roundtrip_coord(CoordMsg::Snapshot { round: 4 });
+        roundtrip_coord(CoordMsg::Restore { blob: vec![1, 2, 3, 0, 255] });
+        roundtrip_coord(CoordMsg::Barrier { token: 99 });
+        roundtrip_coord(CoordMsg::FetchOwners);
+        roundtrip_coord(CoordMsg::SsspStart {
+            source: 3,
+            owner: vec![0, 1, 2, 1],
+        });
+        roundtrip_coord(CoordMsg::SsspStep {
+            step: 2,
+            updates: vec![(4, 1), (7, 2)],
+        });
+        roundtrip_coord(CoordMsg::Shutdown);
+        roundtrip_worker(WorkerMsg::Ready { rank: 1 });
+        roundtrip_worker(WorkerMsg::Bids {
+            round: 3,
+            bids: vec![(0, 0, 1.0, 0.5)],
+        });
+        roundtrip_worker(WorkerMsg::RoundDone {
+            round: 3,
+            free_edges: 17,
+            owner_hash: 0xDEADBEEF,
+        });
+        roundtrip_worker(WorkerMsg::Snapshot { round: 4, blob: vec![9; 40] });
+        roundtrip_worker(WorkerMsg::BarrierAck { token: 99 });
+        roundtrip_worker(WorkerMsg::Owners { owner: vec![1, 1, 0] });
+        roundtrip_worker(WorkerMsg::SsspDelta {
+            step: 5,
+            updates: vec![(2, 3)],
+        });
+    }
+
+    #[test]
+    fn bids_roundtrip_bit_exactly() {
+        // adversarial f64 values: subnormal, negative zero, huge
+        let bids = vec![
+            (1u32, 2u32, f64::MIN_POSITIVE / 2.0, -0.0),
+            (2, 3, 1e300, 1.0 / 3.0),
+        ];
+        let m = CoordMsg::Bids { round: 1, bids: bids.clone() };
+        let CoordMsg::Bids { bids: got, .. } =
+            CoordMsg::decode(&m.encode()).unwrap()
+        else {
+            panic!("wrong variant");
+        };
+        for (a, b) in bids.iter().zip(&got) {
+            assert_eq!(a.2.to_bits(), b.2.to_bits());
+            assert_eq!(a.3.to_bits(), b.3.to_bits());
+        }
+    }
+
+    #[test]
+    fn version_and_corruption_are_transport_errors() {
+        use crate::util::error::ErrorKind;
+        let mut buf = CoordMsg::Shutdown.encode();
+        buf[0] = 0xFF; // mangle the version
+        let e = CoordMsg::decode(&buf).unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::Transport);
+        // truncation
+        let buf = CoordMsg::Barrier { token: 1 }.encode();
+        let e = CoordMsg::decode(&buf[..buf.len() - 1]).unwrap_err();
+        assert_eq!(e.kind(), ErrorKind::Transport);
+        // trailing garbage
+        let mut buf = CoordMsg::FetchOwners.encode();
+        buf.push(0);
+        assert_eq!(
+            CoordMsg::decode(&buf).unwrap_err().kind(),
+            ErrorKind::Transport
+        );
+        // unknown tag
+        let mut buf = CoordMsg::Shutdown.encode();
+        buf[2] = 200;
+        assert_eq!(
+            CoordMsg::decode(&buf).unwrap_err().kind(),
+            ErrorKind::Transport
+        );
+        // corrupt length prefix larger than the payload
+        let mut e = Enc::message(6);
+        e.u32(u32::MAX); // Barrier expects a u64 token; claim a huge body
+        assert!(CoordMsg::decode(&e.buf).is_err());
+    }
+}

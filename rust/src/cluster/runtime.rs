@@ -1,0 +1,1545 @@
+//! Real multi-worker distributed partitioning over localhost sockets.
+//!
+//! This is the subsystem the rest of `cluster/` simulates: a `repro
+//! cluster` coordinator drives `W` workers (child processes of the same
+//! binary, or in-process threads for tests — both speak real TCP through
+//! the same [`util::frame`](crate::util::frame) codec) through the DFEP
+//! funding-round loop, then optionally through an ETSCH SSSP phase on
+//! the finalized partition.
+//!
+//! # Decomposition and determinism
+//!
+//! Partition `i` is *owned* by worker `i % W`. Every worker holds the
+//! full graph plus a full [`DfepState`] replica: the replicated fields
+//! (`owner`, `sizes`, `free_edges`, `free_deg`, `anchor`, the rng) are
+//! advanced identically everywhere by redundantly applying the same
+//! deterministic auction, while each ledger row is authoritative on
+//! exactly one worker (the masked phases of
+//! [`partition::dfep`](crate::partition::dfep)). One round:
+//!
+//! 1. coordinator broadcasts `StartRound` (with the pending stall
+//!    reseed flag);
+//! 2. each worker runs step 1 on its owned partitions and sends its
+//!    bids up (canonical partition-major order);
+//! 3. the coordinator stitches the global bid list — partition `i`'s
+//!    contiguous run taken from worker `i % W` — and broadcasts it;
+//! 4. each worker runs the auction + coordinator step on the stitched
+//!    list and replies `RoundDone` with `free_edges` and an FNV-1a hash
+//!    of its ownership vector (replica-divergence tripwire).
+//!
+//! The stitched list reproduces the single-process bid order bit-for-bit
+//! (bids travel as raw IEEE-754 bits), so the final owners are
+//! bit-identical to the [`PartitionRequest`](crate::coordinator::runs)
+//! facade at any worker count.
+//!
+//! # Checkpoints and recovery
+//!
+//! The coordinator snapshots every worker's state at round 0, every
+//! [`ClusterConfig::checkpoint_every`] rounds, and once at SSSP entry.
+//! A blob is replayable state: round counter, rng stream position,
+//! replicated vectors, and the owned sparse ledger (holder lists +
+//! cells). Blobs are held in coordinator memory (and optionally written
+//! via [`graph::io::write_blob`](crate::graph::io::write_blob)); a
+//! checkpoint replaces the previous one only after every blob has
+//! arrived, so a failure mid-checkpoint cannot corrupt the floor.
+//!
+//! On a worker failure — dropped connection or read timeout (a stall) —
+//! the coordinator respawns the rank, re-runs `Init` with the failure
+//! plan disabled, restores *all* workers from the last checkpoint
+//! (global rollback), and flushes stale in-flight frames with a
+//! `Barrier` token round-trip. Deterministic replay from the checkpoint
+//! then reproduces the exact same run, so a recovered run's owners are
+//! bit-identical to an undisturbed one.
+//!
+//! # Measured wire bytes
+//!
+//! The coordinator sits at the center of the star topology, so counting
+//! its sends and receives captures every byte the cluster moves. Each
+//! message is classified into a [`WireBytes`] phase and compared against
+//! the [`WireModel`] prediction in the final [`ClusterReport`]. On a
+//! clean run every phase except `checkpoint` is exact by construction
+//! (the blob's sparse ledger section is state-dependent and deliberately
+//! unmodeled); `recovery` bytes are measured but never predicted.
+
+use std::io::{BufReader, BufWriter};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+use std::time::{Duration, Instant};
+
+use crate::cluster::cost::{
+    ClusterShape, WireBytes, WireModel, WirePrediction,
+};
+use crate::cluster::proto::{CoordMsg, Dec, Enc, InitMsg, WorkerMsg};
+use crate::coordinator::runs::resolve_graph;
+use crate::graph::{Graph, GraphBuilder};
+use crate::partition::dfep::{self, Bid, Dfep, DfepState};
+use crate::partition::registry::Resolved;
+use crate::partition::spec::PartitionerSpec;
+use crate::partition::{check_k, EdgePartition};
+use crate::util::error::{Error, ErrorKind, Result};
+use crate::util::frame;
+use crate::util::rng::Rng;
+use crate::{anyhow, bail};
+
+/// Checkpoint blob schema version (independent of the message schema).
+const SNAP_VERSION: u16 = 1;
+/// Blob phase tag: mid-partitioning state.
+const SNAP_PHASE_PARTITION: u8 = 0;
+/// Blob phase tag: SSSP phase entered (partition finalized).
+const SNAP_PHASE_SSSP: u8 = 1;
+/// How long the coordinator waits for a (re)spawned worker to connect.
+const BOOT_TIMEOUT: Duration = Duration::from_secs(30);
+/// Stale-frame drain cap per worker during a barrier (protocol-bug
+/// tripwire, not a real limit — one failure strands at most a few
+/// frames per worker).
+const DRAIN_LIMIT: usize = 10_000;
+
+fn terr(msg: String) -> Error {
+    Error::msg(msg).with_kind(ErrorKind::Transport)
+}
+
+fn invalid(msg: String) -> Error {
+    Error::msg(msg).with_kind(ErrorKind::InvalidRequest)
+}
+
+/// FNV-1a over the little-endian bytes of an ownership vector — the
+/// per-round replica-divergence tripwire carried by `RoundDone`.
+pub(crate) fn fnv1a64(owner: &[u32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &x in owner {
+        for b in x.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// How an injected failure manifests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailMode {
+    /// Drop the connection at the start of the round (process death —
+    /// the coordinator sees EOF).
+    Kill,
+    /// Go silent for this many milliseconds, then die (hung worker —
+    /// the coordinator's read timeout is the failure detector, the real
+    /// analogue of `failures::FaultModel::detection_latency_s`).
+    Stall(u64),
+}
+
+/// One scripted worker failure, injected inside the worker's
+/// `StartRound` handler — mid-round, after the round has begun on the
+/// other workers.
+#[derive(Clone, Copy, Debug)]
+pub struct FailureInjection {
+    /// Which worker dies.
+    pub rank: usize,
+    /// The round at whose start it dies.
+    pub round: u64,
+    /// How it dies.
+    pub mode: FailMode,
+}
+
+/// Configuration of one distributed run.
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Worker count (`>= 1`; `1` degenerates to a remote single
+    /// process).
+    pub workers: usize,
+    /// Partition count.
+    pub k: usize,
+    /// Partitioning seed (same meaning as the facade's `seed`).
+    pub seed: u64,
+    /// Partitioner spec string — must resolve to the `dfep` algorithm
+    /// (overrides like `dfep:cap=5` are honored).
+    pub spec: String,
+    /// Graph source, any [`resolve_graph`] spec (named dataset or
+    /// generator).
+    pub dataset: String,
+    /// Seed for graph generation / scaling.
+    pub graph_seed: u64,
+    /// Snapshot every N completed rounds (`0` = only the mandatory
+    /// round-0 and SSSP-entry checkpoints).
+    pub checkpoint_every: u64,
+    /// Also persist each checkpoint's blobs to this directory
+    /// (`ckpt_r<round>_w<rank>.bin`, written atomically).
+    pub checkpoint_dir: Option<PathBuf>,
+    /// Run the distributed ETSCH SSSP phase from this source vertex
+    /// after partitioning.
+    pub sssp_source: Option<u32>,
+    /// Scripted failure, if any.
+    pub fail: Option<FailureInjection>,
+    /// Coordinator read timeout per worker reply — the stall detector.
+    pub worker_timeout_ms: u64,
+    /// Run workers as in-process threads over real loopback sockets
+    /// instead of spawned child processes (required inside test
+    /// binaries, where respawning `current_exe` would re-run the test
+    /// harness).
+    pub in_process: bool,
+    /// Abort after this many recoveries (guards against a failure the
+    /// rollback cannot clear).
+    pub max_recoveries: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            workers: 3,
+            k: 8,
+            seed: 1,
+            spec: "dfep".into(),
+            dataset: "plc:n=600,m=4,p=0.3".into(),
+            graph_seed: 1,
+            checkpoint_every: 8,
+            checkpoint_dir: None,
+            sssp_source: None,
+            fail: None,
+            worker_timeout_ms: 10_000,
+            in_process: false,
+            max_recoveries: 2,
+        }
+    }
+}
+
+/// Everything a finished distributed run reports.
+pub struct ClusterReport {
+    /// The finalized partition — bit-identical to the single-process
+    /// facade for the same `(dataset, spec, k, seed)`.
+    pub partition: EdgePartition,
+    /// Worker count the run used.
+    pub workers: usize,
+    /// Failures recovered from (0 on a clean run).
+    pub recoveries: usize,
+    /// Measured wire traffic by protocol phase.
+    pub measured: WireBytes,
+    /// [`WireModel`] prediction for the run's [`ClusterShape`].
+    pub predicted: WirePrediction,
+    /// Protocol event counts the prediction was computed from.
+    pub shape: ClusterShape,
+    /// SSSP distances, when [`ClusterConfig::sssp_source`] was set —
+    /// equal to single-process `Etsch` on the same partition.
+    pub sssp_dist: Option<Vec<u32>>,
+    /// Wall-clock per completed round, milliseconds.
+    pub round_ms: Vec<f64>,
+    /// Wall-clock per recovery (respawn + rollback + drain),
+    /// milliseconds.
+    pub recovery_ms: Vec<f64>,
+}
+
+// ---------------------------------------------------------------------
+// worker side
+// ---------------------------------------------------------------------
+
+/// Entry point of `repro worker --connect HOST:PORT`: dial the
+/// coordinator and serve its messages until `Shutdown` or EOF.
+pub fn worker_main(connect: &str) -> Result<()> {
+    let stream = TcpStream::connect(connect)
+        .map_err(|e| terr(format!("connect to coordinator {connect}: {e}")))?;
+    serve_worker(stream)
+}
+
+/// SSSP-phase replica: the finalized owner vector plus this worker's
+/// view of the distance array (edges with `owner % W == rank` are
+/// relaxed here).
+struct SsspReplica {
+    source: u32,
+    owner: Vec<u32>,
+    dist: Vec<u32>,
+}
+
+/// What a handled message asks the serve loop to do.
+enum Action {
+    Reply(WorkerMsg),
+    Silent,
+    Die { stall_ms: u64 },
+}
+
+struct WorkerState {
+    rank: usize,
+    workers: usize,
+    k: usize,
+    cap: f64,
+    g: Graph,
+    st: DfepState,
+    rng: Rng,
+    owned: Vec<bool>,
+    fail_round: i64,
+    fail_stall_ms: u64,
+    sssp: Option<SsspReplica>,
+}
+
+/// Serve one coordinator connection. EOF is a clean exit (the
+/// coordinator is gone); anything else unexpected is an error that
+/// drops the connection, which the coordinator treats as a failure.
+fn serve_worker(stream: TcpStream) -> Result<()> {
+    stream
+        .set_nodelay(true)
+        .map_err(|e| terr(format!("set_nodelay: {e}")))?;
+    let mut reader = BufReader::new(
+        stream.try_clone().map_err(|e| terr(format!("clone stream: {e}")))?,
+    );
+    let mut writer = BufWriter::new(stream);
+    let mut wk: Option<WorkerState> = None;
+    loop {
+        let payload = match frame::read_frame(&mut reader) {
+            Ok(p) => p,
+            Err(e) if e.is_eof() => return Ok(()),
+            Err(e) => return Err(terr(format!("read from coordinator: {e}"))),
+        };
+        match CoordMsg::decode(&payload)? {
+            CoordMsg::Init(init) => {
+                let ready = WorkerMsg::Ready { rank: init.rank };
+                wk = Some(WorkerState::boot(init)?);
+                send_to_coord(&mut writer, &ready)?;
+            }
+            CoordMsg::Shutdown => return Ok(()),
+            other => {
+                let Some(w) = wk.as_mut() else {
+                    return Err(terr("message before Init".into()));
+                };
+                match w.handle(other)? {
+                    Action::Reply(msg) => send_to_coord(&mut writer, &msg)?,
+                    Action::Silent => {}
+                    Action::Die { stall_ms } => {
+                        if stall_ms > 0 {
+                            std::thread::sleep(Duration::from_millis(
+                                stall_ms,
+                            ));
+                        }
+                        return Ok(()); // drop the connection mid-round
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn send_to_coord(
+    w: &mut BufWriter<TcpStream>,
+    msg: &WorkerMsg,
+) -> Result<()> {
+    frame::write_frame(w, &msg.encode())
+        .map_err(|e| terr(format!("reply to coordinator: {e}")))
+}
+
+impl WorkerState {
+    /// Rebuild the graph from the shipped canonical edge list and
+    /// initialize a state replica exactly as the single-process
+    /// `run_inner` does (same rng stream, same initial funding), so the
+    /// replicated fields start bit-identical on every worker.
+    fn boot(init: InitMsg) -> Result<WorkerState> {
+        let mut b = GraphBuilder::new();
+        if init.n > 0 {
+            b.touch_vertex(init.n - 1);
+        }
+        for &(u, v) in &init.edges {
+            b.push_edge(u, v);
+        }
+        let g = b.build();
+        if g.vertex_count() != init.n as usize
+            || g.edge_count() != init.edges.len()
+        {
+            return Err(terr(format!(
+                "graph reconstruction mismatch: got |V|={} |E|={}, \
+                 want |V|={} |E|={}",
+                g.vertex_count(),
+                g.edge_count(),
+                init.n,
+                init.edges.len()
+            )));
+        }
+        let k = init.k as usize;
+        let workers = init.workers as usize;
+        if workers == 0 || k == 0 || init.rank as usize >= workers {
+            return Err(terr(format!(
+                "bad init: rank {} of {workers} workers, k={k}",
+                init.rank
+            )));
+        }
+        let mut rng = Rng::new(init.seed);
+        let initial =
+            init.init_frac * g.edge_count() as f64 / k as f64;
+        let mut st = DfepState::new(&g, k, initial.max(1.0), &mut rng);
+        st.frontier_first = init.frontier_first;
+        let rank = init.rank as usize;
+        let owned = (0..k).map(|i| i % workers == rank).collect();
+        Ok(WorkerState {
+            rank,
+            workers,
+            k,
+            cap: init.cap,
+            g,
+            st,
+            rng,
+            owned,
+            fail_round: init.fail_round,
+            fail_stall_ms: init.fail_stall_ms,
+            sssp: None,
+        })
+    }
+
+    fn handle(&mut self, msg: CoordMsg) -> Result<Action> {
+        match msg {
+            CoordMsg::StartRound { round, reseed } => {
+                if self.fail_round >= 0 && round == self.fail_round as u64 {
+                    self.fail_round = -1;
+                    return Ok(Action::Die {
+                        stall_ms: self.fail_stall_ms,
+                    });
+                }
+                if self.sssp.is_some() {
+                    return Err(terr("StartRound in SSSP phase".into()));
+                }
+                if self.st.rounds as u64 != round {
+                    return Err(terr(format!(
+                        "round desync: replica at {}, coordinator at {round}",
+                        self.st.rounds
+                    )));
+                }
+                if reseed {
+                    dfep::reseed_on_free_edge_masked(
+                        &self.g,
+                        &mut self.st,
+                        &mut self.rng,
+                        Some(&self.owned),
+                    );
+                }
+                self.st.round_bids(&self.g, None, None, Some(&self.owned));
+                Ok(Action::Reply(WorkerMsg::Bids {
+                    round,
+                    bids: self.st.pending_bids().to_vec(),
+                }))
+            }
+            CoordMsg::Bids { round, bids } => {
+                if self.st.rounds as u64 != round {
+                    return Err(terr(format!(
+                        "auction desync: replica at {}, coordinator at \
+                         {round}",
+                        self.st.rounds
+                    )));
+                }
+                self.st.set_pending_bids(&bids);
+                self.st.round_auction(&self.g, None, None, Some(&self.owned));
+                self.st.coordinator_step_masked(self.cap, Some(&self.owned));
+                Ok(Action::Reply(WorkerMsg::RoundDone {
+                    round,
+                    free_edges: self.st.free_edges as u64,
+                    owner_hash: fnv1a64(&self.st.owner),
+                }))
+            }
+            CoordMsg::Snapshot { round } => Ok(Action::Reply(
+                WorkerMsg::Snapshot { round, blob: self.snapshot() },
+            )),
+            CoordMsg::Restore { blob } => {
+                self.restore(&blob)?;
+                Ok(Action::Silent)
+            }
+            CoordMsg::Barrier { token } => {
+                Ok(Action::Reply(WorkerMsg::BarrierAck { token }))
+            }
+            CoordMsg::FetchOwners => Ok(Action::Reply(WorkerMsg::Owners {
+                owner: self.st.owner.clone(),
+            })),
+            CoordMsg::SsspStart { source, owner } => {
+                if owner.len() != self.g.edge_count() {
+                    return Err(terr("SsspStart: bad owner length".into()));
+                }
+                self.sssp = Some(SsspReplica {
+                    source,
+                    owner,
+                    dist: vec![u32::MAX; self.g.vertex_count()],
+                });
+                Ok(Action::Silent)
+            }
+            CoordMsg::SsspStep { step, updates } => {
+                let g = &self.g;
+                let (workers, rank) = (self.workers, self.rank);
+                let Some(s) = self.sssp.as_mut() else {
+                    return Err(terr("SsspStep before SsspStart".into()));
+                };
+                let n = s.dist.len();
+                // apply the globally-improved distances, then relax the
+                // edges this worker owns around each improved vertex
+                let mut changed: Vec<u32> = Vec::new();
+                for &(v, d) in &updates {
+                    if (v as usize) >= n {
+                        return Err(terr("SsspStep: vertex out of range"
+                            .into()));
+                    }
+                    if d < s.dist[v as usize] {
+                        s.dist[v as usize] = d;
+                        changed.push(v);
+                    }
+                }
+                let mut out: Vec<(u32, u32)> = Vec::new();
+                for &v in &changed {
+                    let nd = s.dist[v as usize] + 1;
+                    for &e in g.neighbor_edges(v) {
+                        if s.owner[e as usize] as usize % workers != rank {
+                            continue;
+                        }
+                        let u = g.other_endpoint(e, v);
+                        if nd < s.dist[u as usize] {
+                            s.dist[u as usize] = nd;
+                            out.push((u, nd));
+                        }
+                    }
+                }
+                Ok(Action::Reply(WorkerMsg::SsspDelta {
+                    step,
+                    updates: out,
+                }))
+            }
+            CoordMsg::Init(_) | CoordMsg::Shutdown => {
+                Err(terr("unexpected control message".into()))
+            }
+        }
+    }
+
+    /// Serialize replayable state. Partition phase: round/rng position,
+    /// the replicated vectors, and — for owned partitions only — the
+    /// holder lists plus one `(vertex, value)` ledger cell per holder
+    /// entry (every positive cell's vertex is in its holder list, an
+    /// invariant of `credit` and the frontier pool, so this is lossless;
+    /// duplicate holder entries re-assign the same value, which is
+    /// idempotent). SSSP phase: source + finalized owners (distances are
+    /// recomputed from superstep 0 on restore).
+    fn snapshot(&self) -> Vec<u8> {
+        let mut e = Enc::default();
+        e.u16(SNAP_VERSION);
+        if let Some(s) = &self.sssp {
+            e.u8(SNAP_PHASE_SSSP);
+            e.u32(s.source);
+            e.vec_u32(&s.owner);
+            return e.buf;
+        }
+        e.u8(SNAP_PHASE_PARTITION);
+        e.u64(self.st.rounds as u64);
+        e.u64(self.st.free_edges as u64);
+        let (rs, ri) = self.rng.state();
+        e.u64(rs);
+        e.u64(ri);
+        e.u32(self.k as u32);
+        e.u32(self.g.vertex_count() as u32);
+        e.u32(self.g.edge_count() as u32);
+        for &s in &self.st.sizes {
+            e.u64(s as u64);
+        }
+        for &a in &self.st.anchor {
+            e.u64(a as u64);
+        }
+        for &o in &self.st.owner {
+            e.u32(o);
+        }
+        for &d in &self.st.free_deg {
+            e.u32(d);
+        }
+        let owned: Vec<usize> =
+            (0..self.k).filter(|&i| self.owned[i]).collect();
+        e.u32(owned.len() as u32);
+        for &i in &owned {
+            e.u32(i as u32);
+            e.vec_u32(&self.st.holders[i]);
+            let row = self.st.money.part(i);
+            e.u32(self.st.holders[i].len() as u32);
+            for &v in &self.st.holders[i] {
+                e.u32(v);
+                e.f64(row[v as usize]);
+            }
+        }
+        e.buf
+    }
+
+    /// Overwrite state from a checkpoint blob (the exact inverse of
+    /// [`snapshot`](Self::snapshot)).
+    fn restore(&mut self, blob: &[u8]) -> Result<()> {
+        let n = self.g.vertex_count();
+        let m = self.g.edge_count();
+        let mut d = Dec::new(blob);
+        let ver = d.u16()?;
+        if ver != SNAP_VERSION {
+            return Err(terr(format!("checkpoint version {ver}")));
+        }
+        match d.u8()? {
+            SNAP_PHASE_SSSP => {
+                let source = d.u32()?;
+                let owner = d.vec_u32()?;
+                d.done()?;
+                if owner.len() != m {
+                    return Err(terr("restore: bad owner length".into()));
+                }
+                self.sssp = Some(SsspReplica {
+                    source,
+                    owner,
+                    dist: vec![u32::MAX; n],
+                });
+                Ok(())
+            }
+            SNAP_PHASE_PARTITION => {
+                let rounds = d.u64()? as usize;
+                let free_edges = d.u64()? as usize;
+                let (rs, ri) = (d.u64()?, d.u64()?);
+                let (bk, bn, bm) =
+                    (d.u32()? as usize, d.u32()? as usize, d.u32()? as usize);
+                if bk != self.k || bn != n || bm != m {
+                    return Err(terr(format!(
+                        "restore shape mismatch: blob k/n/m = \
+                         {bk}/{bn}/{bm}, replica {}/{n}/{m}",
+                        self.k
+                    )));
+                }
+                for s in self.st.sizes.iter_mut() {
+                    *s = d.u64()? as usize;
+                }
+                for a in self.st.anchor.iter_mut() {
+                    *a = d.u64()? as usize;
+                }
+                for o in self.st.owner.iter_mut() {
+                    *o = d.u32()?;
+                }
+                for f in self.st.free_deg.iter_mut() {
+                    *f = d.u32()?;
+                }
+                let parts = d.u32()? as usize;
+                // the blob's sparse section fully replaces the owned
+                // ledger rows: zero them first, cells only cover holders
+                for i in 0..self.k {
+                    if self.owned[i] {
+                        for c in self.st.money.part_mut(i) {
+                            *c = 0.0;
+                        }
+                        self.st.holders[i].clear();
+                    }
+                }
+                for _ in 0..parts {
+                    let i = d.u32()? as usize;
+                    if i >= self.k || !self.owned[i] {
+                        return Err(terr(format!(
+                            "restore: partition {i} not owned here"
+                        )));
+                    }
+                    let holders = d.vec_u32()?;
+                    let cells = d.u32()? as usize;
+                    if cells != holders.len() {
+                        return Err(terr(
+                            "restore: cell/holder count mismatch".into(),
+                        ));
+                    }
+                    for _ in 0..cells {
+                        let v = d.u32()? as usize;
+                        let val = d.f64()?;
+                        if v >= n {
+                            return Err(terr(
+                                "restore: holder out of range".into(),
+                            ));
+                        }
+                        *self.st.money.cell_mut(i, v) = val;
+                    }
+                    self.st.holders[i] = holders;
+                }
+                d.done()?;
+                self.st.rounds = rounds;
+                self.st.free_edges = free_edges;
+                self.rng = Rng::from_state(rs, ri);
+                self.st.rebuild_live();
+                self.sssp = None;
+                Ok(())
+            }
+            p => Err(terr(format!("unknown checkpoint phase {p}"))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// coordinator side
+// ---------------------------------------------------------------------
+
+/// Which [`WireBytes`] phase a message is accounted under (classified
+/// by protocol context, not message type: a respawn `Init` is recovery
+/// traffic, the boot `Init`s are load).
+#[derive(Clone, Copy)]
+enum Phase {
+    Load,
+    Control,
+    BidsUp,
+    BidsDown,
+    Checkpoint,
+    Merge,
+    Sssp,
+    Recovery,
+}
+
+/// Coordinator-internal error split: a worker failure names the rank
+/// (recoverable by rollback), everything else is fatal.
+enum RunErr {
+    Worker { rank: usize, err: Error },
+    Fatal(Error),
+}
+
+fn fatal<T>(e: Error) -> Result<T, RunErr> {
+    Err(RunErr::Fatal(e))
+}
+
+/// Collapse a [`RunErr`] where recovery is not applicable (boot,
+/// inside recovery itself).
+fn plain<T>(r: Result<T, RunErr>) -> Result<T> {
+    r.map_err(|e| match e {
+        RunErr::Worker { err, .. } => err,
+        RunErr::Fatal(err) => err,
+    })
+}
+
+/// One worker connection (+ the child process handle in spawn mode).
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    child: Option<Child>,
+}
+
+/// Launch a worker: an in-process thread dialing back over loopback,
+/// or a `repro worker --connect` child of the current executable.
+fn spawn_worker(addr: SocketAddr, in_process: bool) -> Result<Option<Child>> {
+    if in_process {
+        std::thread::spawn(move || {
+            if let Ok(stream) = TcpStream::connect(addr) {
+                let _ = serve_worker(stream);
+            }
+        });
+        return Ok(None);
+    }
+    let exe = std::env::current_exe()
+        .map_err(|e| terr(format!("locate worker executable: {e}")))?;
+    let child = Command::new(exe)
+        .arg("worker")
+        .arg("--connect")
+        .arg(addr.to_string())
+        .stdin(Stdio::null())
+        .spawn()
+        .map_err(|e| terr(format!("spawn worker process: {e}")))?;
+    Ok(Some(child))
+}
+
+/// Accept the next worker connection, polling so a worker that never
+/// dials (failed spawn) times out instead of hanging the coordinator.
+fn accept_worker(
+    listener: &TcpListener,
+    read_timeout: Duration,
+    child: Option<Child>,
+) -> Result<Conn> {
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| terr(format!("listener nonblocking: {e}")))?;
+    let deadline = Instant::now() + BOOT_TIMEOUT;
+    let stream = loop {
+        match listener.accept() {
+            Ok((s, _)) => break s,
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if Instant::now() > deadline {
+                    return Err(terr(
+                        "worker did not connect within the boot timeout"
+                            .into(),
+                    ));
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(e) => return Err(terr(format!("accept worker: {e}"))),
+        }
+    };
+    let _ = listener.set_nonblocking(false);
+    stream
+        .set_nonblocking(false)
+        .map_err(|e| terr(format!("stream blocking: {e}")))?;
+    stream
+        .set_nodelay(true)
+        .map_err(|e| terr(format!("set_nodelay: {e}")))?;
+    stream
+        .set_read_timeout(Some(read_timeout))
+        .map_err(|e| terr(format!("set_read_timeout: {e}")))?;
+    let reader = BufReader::new(
+        stream.try_clone().map_err(|e| terr(format!("clone stream: {e}")))?,
+    );
+    Ok(Conn { reader, writer: BufWriter::new(stream), child })
+}
+
+/// Recovery floor metadata, mirrored coordinator-side alongside the
+/// blobs so the round loop can resume its control variables.
+#[derive(Clone, Copy)]
+enum CkptMeta {
+    Partition { round: u64, free_edges: u64, stall: u32, reseed_next: bool },
+    Sssp,
+}
+
+struct Coordinator<'a> {
+    cfg: &'a ClusterConfig,
+    tune: Dfep,
+    g: &'a Graph,
+    listener: TcpListener,
+    addr: SocketAddr,
+    conns: Vec<Conn>,
+    bytes: WireBytes,
+    shape: ClusterShape,
+    ckpt_blobs: Vec<Vec<u8>>,
+    ckpt_meta: CkptMeta,
+    recoveries: usize,
+    barrier_token: u64,
+    round_ms: Vec<f64>,
+    recovery_ms: Vec<f64>,
+}
+
+impl<'a> Coordinator<'a> {
+    fn account(&mut self, phase: Phase, bytes: usize) {
+        let n = bytes as u64;
+        let b = &mut self.bytes;
+        match phase {
+            Phase::Load => b.load += n,
+            Phase::Control => b.control += n,
+            Phase::BidsUp => b.bids_up += n,
+            Phase::BidsDown => b.bids_down += n,
+            Phase::Checkpoint => b.checkpoint += n,
+            Phase::Merge => b.merge += n,
+            Phase::Sssp => b.sssp += n,
+            Phase::Recovery => b.recovery += n,
+        }
+    }
+
+    fn send(
+        &mut self,
+        rank: usize,
+        msg: &CoordMsg,
+        phase: Phase,
+    ) -> Result<(), RunErr> {
+        let payload = msg.encode();
+        self.account(phase, frame::wire_len(payload.len()));
+        frame::write_frame(&mut self.conns[rank].writer, &payload).map_err(
+            |e| RunErr::Worker {
+                rank,
+                err: terr(format!("send to worker {rank}: {e}")),
+            },
+        )
+    }
+
+    fn recv(&mut self, rank: usize, phase: Phase) -> Result<WorkerMsg, RunErr> {
+        let payload = frame::read_frame(&mut self.conns[rank].reader)
+            .map_err(|e| {
+                let what = if e.is_timeout() {
+                    "timed out waiting for"
+                } else if e.is_eof() {
+                    "lost connection to"
+                } else {
+                    "read error from"
+                };
+                RunErr::Worker {
+                    rank,
+                    err: terr(format!("{what} worker {rank}: {e}")),
+                }
+            })?;
+        self.account(phase, frame::wire_len(payload.len()));
+        WorkerMsg::decode(&payload)
+            .map_err(|err| RunErr::Worker { rank, err })
+    }
+
+    fn init_msg(&self, rank: usize, allow_fail: bool) -> InitMsg {
+        let (fail_round, fail_stall_ms) = match &self.cfg.fail {
+            Some(f) if allow_fail && f.rank == rank => (
+                f.round as i64,
+                match f.mode {
+                    FailMode::Kill => 0,
+                    FailMode::Stall(ms) => ms.max(1),
+                },
+            ),
+            _ => (-1, 0),
+        };
+        InitMsg {
+            rank: rank as u32,
+            workers: self.cfg.workers as u32,
+            k: self.cfg.k as u32,
+            seed: self.cfg.seed,
+            cap: self.tune.funding_cap,
+            init_frac: self.tune.initial_fraction,
+            frontier_first: self.tune.frontier_first,
+            fail_round,
+            fail_stall_ms,
+            n: self.g.vertex_count() as u32,
+            edges: self.g.edges().to_vec(),
+        }
+    }
+
+    /// Spawn + init every worker, then take the round-0 checkpoint —
+    /// the recovery floor, so even a first-round failure has a rollback
+    /// target.
+    fn boot(&mut self) -> Result<()> {
+        let timeout =
+            Duration::from_millis(self.cfg.worker_timeout_ms.max(1));
+        for _ in 0..self.cfg.workers {
+            let child = spawn_worker(self.addr, self.cfg.in_process)?;
+            let conn = accept_worker(&self.listener, timeout, child)?;
+            self.conns.push(conn);
+        }
+        for rank in 0..self.cfg.workers {
+            let init = CoordMsg::Init(self.init_msg(rank, true));
+            plain(self.send(rank, &init, Phase::Load))?;
+        }
+        for rank in 0..self.cfg.workers {
+            match plain(self.recv(rank, Phase::Control))? {
+                WorkerMsg::Ready { rank: r } if r as usize == rank => {}
+                other => bail!("worker {rank}: expected Ready, got {other:?}"),
+            }
+        }
+        plain(self.checkpoint(CkptMeta::Partition {
+            round: 0,
+            free_edges: self.g.edge_count() as u64,
+            stall: 0,
+            reseed_next: false,
+        }))?;
+        Ok(())
+    }
+
+    /// One checkpoint barrier: collect a blob from every worker, then
+    /// atomically replace the in-memory floor (and optionally persist).
+    fn checkpoint(&mut self, meta: CkptMeta) -> Result<(), RunErr> {
+        let round = match meta {
+            CkptMeta::Partition { round, .. } => round,
+            CkptMeta::Sssp => u64::MAX,
+        };
+        let w = self.conns.len();
+        let req = CoordMsg::Snapshot { round };
+        for rank in 0..w {
+            self.send(rank, &req, Phase::Checkpoint)?;
+        }
+        let mut blobs = vec![Vec::new(); w];
+        for (rank, slot) in blobs.iter_mut().enumerate() {
+            match self.recv(rank, Phase::Checkpoint)? {
+                WorkerMsg::Snapshot { round: r, blob } if r == round => {
+                    *slot = blob;
+                }
+                other => {
+                    return fatal(anyhow!(
+                        "worker {rank}: expected Snapshot, got {other:?}"
+                    ))
+                }
+            }
+        }
+        if let Some(dir) = &self.cfg.checkpoint_dir {
+            std::fs::create_dir_all(dir).map_err(|e| {
+                RunErr::Fatal(
+                    Error::msg(format!(
+                        "create checkpoint dir {}: {e}",
+                        dir.display()
+                    ))
+                    .with_kind(ErrorKind::Io),
+                )
+            })?;
+            for (rank, blob) in blobs.iter().enumerate() {
+                let path = dir.join(format!("ckpt_r{round}_w{rank}.bin"));
+                crate::graph::io::write_blob(&path, blob)
+                    .map_err(RunErr::Fatal)?;
+            }
+        }
+        self.ckpt_blobs = blobs;
+        self.ckpt_meta = meta;
+        match meta {
+            CkptMeta::Partition { .. } => self.shape.checkpoints += 1,
+            CkptMeta::Sssp => self.shape.sssp_checkpoints += 1,
+        }
+        Ok(())
+    }
+
+    /// Respawn a failed rank, restore every worker from the last
+    /// checkpoint (global rollback), and drain stale in-flight frames
+    /// with a barrier token. After this, deterministic replay continues
+    /// from the checkpoint's control state.
+    fn recover(&mut self, dead: usize, err: Error) -> Result<()> {
+        self.recoveries += 1;
+        if self.recoveries > self.cfg.max_recoveries {
+            return Err(terr(format!(
+                "recovery budget exhausted ({} failures, budget {}): {err}",
+                self.recoveries, self.cfg.max_recoveries
+            )));
+        }
+        let t0 = Instant::now();
+        if let Some(child) = self.conns[dead].child.as_mut() {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+        let child = spawn_worker(self.addr, self.cfg.in_process)?;
+        let timeout =
+            Duration::from_millis(self.cfg.worker_timeout_ms.max(1));
+        // replacing the Conn drops the dead streams; a stalled-but-alive
+        // worker hits a broken pipe when it wakes and exits on its own
+        self.conns[dead] = accept_worker(&self.listener, timeout, child)?;
+        let init = CoordMsg::Init(self.init_msg(dead, false));
+        plain(self.send(dead, &init, Phase::Recovery))?;
+        match plain(self.recv(dead, Phase::Recovery))? {
+            WorkerMsg::Ready { rank } if rank as usize == dead => {}
+            other => bail!(
+                "respawned worker {dead}: expected Ready, got {other:?}"
+            ),
+        }
+        self.barrier_token += 1;
+        let token = self.barrier_token;
+        for rank in 0..self.conns.len() {
+            let restore =
+                CoordMsg::Restore { blob: self.ckpt_blobs[rank].clone() };
+            plain(self.send(rank, &restore, Phase::Recovery))?;
+            plain(self.send(
+                rank,
+                &CoordMsg::Barrier { token },
+                Phase::Recovery,
+            ))?;
+        }
+        for rank in 0..self.conns.len() {
+            let mut drained = 0usize;
+            loop {
+                match plain(self.recv(rank, Phase::Recovery))? {
+                    WorkerMsg::BarrierAck { token: t } if t == token => break,
+                    _stale => {
+                        drained += 1;
+                        if drained > DRAIN_LIMIT {
+                            bail!(
+                                "worker {rank}: barrier {token} never \
+                                 acknowledged"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+        self.recovery_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+        Ok(())
+    }
+}
+
+impl<'a> Coordinator<'a> {
+    /// Drive funding rounds from the last checkpoint's control state to
+    /// completion, then fetch the pre-finalize owners. Re-entrant: a
+    /// worker failure unwinds to the caller, which recovers and calls
+    /// again; the control variables always resume from the checkpoint.
+    fn partition_phase(&mut self) -> Result<(u64, Vec<u32>), RunErr> {
+        let CkptMeta::Partition { round, free_edges, stall, reseed_next } =
+            self.ckpt_meta
+        else {
+            return fatal(anyhow!("partition phase re-entered after SSSP"));
+        };
+        let (mut round, mut free, mut stall, mut reseed_next) =
+            (round, free_edges, stall, reseed_next);
+        let max_rounds = self.tune.max_rounds as u64;
+        // the exact run_inner control flow: stall counting on unchanged
+        // free_edges, reseed applied at the start of the *next* round
+        // (deferred-reseed equivalence: the rng draw order is identical)
+        while free > 0 && round < max_rounds {
+            let t0 = Instant::now();
+            let reseed = reseed_next;
+            reseed_next = false;
+            let new_free = self.one_round(round, reseed)?;
+            round += 1;
+            if new_free == free {
+                stall += 1;
+                if stall >= 3 {
+                    reseed_next = true;
+                    stall = 0;
+                }
+            } else {
+                stall = 0;
+            }
+            free = new_free;
+            self.round_ms.push(t0.elapsed().as_secs_f64() * 1e3);
+            if self.cfg.checkpoint_every > 0
+                && round % self.cfg.checkpoint_every == 0
+                && free > 0
+            {
+                self.checkpoint(CkptMeta::Partition {
+                    round,
+                    free_edges: free,
+                    stall,
+                    reseed_next,
+                })?;
+            }
+        }
+        let owner = self.collect_owners()?;
+        Ok((round, owner))
+    }
+
+    /// One funding round: bids up, stitch, bids down, RoundDone barrier
+    /// with the replica-divergence check.
+    fn one_round(&mut self, round: u64, reseed: bool) -> Result<u64, RunErr> {
+        let w = self.conns.len();
+        let start = CoordMsg::StartRound { round, reseed };
+        for rank in 0..w {
+            self.send(rank, &start, Phase::Control)?;
+        }
+        let mut per_worker: Vec<Vec<Bid>> = Vec::with_capacity(w);
+        for rank in 0..w {
+            match self.recv(rank, Phase::BidsUp)? {
+                WorkerMsg::Bids { round: r, bids } if r == round => {
+                    per_worker.push(bids);
+                }
+                other => {
+                    return fatal(anyhow!(
+                        "worker {rank}: expected Bids for round {round}, \
+                         got {other:?}"
+                    ))
+                }
+            }
+        }
+        let merged = stitch_bids(self.cfg.k, w, &per_worker)
+            .map_err(RunErr::Fatal)?;
+        self.shape.rounds += 1;
+        self.shape.total_bids += merged.len() as u64;
+        let down = CoordMsg::Bids { round, bids: merged };
+        for rank in 0..w {
+            self.send(rank, &down, Phase::BidsDown)?;
+        }
+        let (mut free, mut hash) = (None, None);
+        for rank in 0..w {
+            match self.recv(rank, Phase::Control)? {
+                WorkerMsg::RoundDone { round: r, free_edges, owner_hash }
+                    if r == round =>
+                {
+                    if *hash.get_or_insert(owner_hash) != owner_hash
+                        || *free.get_or_insert(free_edges) != free_edges
+                    {
+                        return fatal(anyhow!(
+                            "replica divergence at round {round}: worker \
+                             {rank} disagrees on owner hash or free edges"
+                        ));
+                    }
+                }
+                other => {
+                    return fatal(anyhow!(
+                        "worker {rank}: expected RoundDone for round \
+                         {round}, got {other:?}"
+                    ))
+                }
+            }
+        }
+        Ok(free.expect("at least one worker"))
+    }
+
+    /// Fetch the pre-finalize owners from rank 0 only — the per-round
+    /// hash checks already proved every replica identical.
+    fn collect_owners(&mut self) -> Result<Vec<u32>, RunErr> {
+        self.send(0, &CoordMsg::FetchOwners, Phase::Merge)?;
+        match self.recv(0, Phase::Merge)? {
+            WorkerMsg::Owners { owner }
+                if owner.len() == self.g.edge_count() =>
+            {
+                Ok(owner)
+            }
+            other => fatal(anyhow!(
+                "worker 0: expected Owners of length {}, got {other:?}",
+                self.g.edge_count()
+            )),
+        }
+    }
+
+    /// Distributed ETSCH SSSP on the finalized partition, with the same
+    /// recover-and-replay loop as partitioning (the phase-entry
+    /// checkpoint is the rollback floor; supersteps restart from 0).
+    fn run_sssp(&mut self, source: u32, owner: &[u32]) -> Result<Vec<u32>> {
+        loop {
+            match self.sssp_phase(source, owner) {
+                Ok(dist) => return Ok(dist),
+                Err(RunErr::Worker { rank, err }) => self.recover(rank, err)?,
+                Err(RunErr::Fatal(e)) => return Err(e),
+            }
+        }
+    }
+
+    fn sssp_phase(
+        &mut self,
+        source: u32,
+        owner: &[u32],
+    ) -> Result<Vec<u32>, RunErr> {
+        let w = self.conns.len();
+        if !matches!(self.ckpt_meta, CkptMeta::Sssp) {
+            // first entry (or retry of a failure before the SSSP
+            // checkpoint landed): broadcast the finalized owners and
+            // take the phase-entry checkpoint
+            let start = CoordMsg::SsspStart {
+                source,
+                owner: owner.to_vec(),
+            };
+            for rank in 0..w {
+                self.send(rank, &start, Phase::Sssp)?;
+            }
+            self.checkpoint(CkptMeta::Sssp)?;
+        }
+        // replicated frontier relaxation: the coordinator min-merges
+        // worker deltas (order-independent), so the result equals the
+        // single-process Etsch run — unit-weight BFS distances
+        let n = self.g.vertex_count();
+        let mut dist = vec![u32::MAX; n];
+        dist[source as usize] = 0;
+        let mut pending = vec![(source, 0u32)];
+        let mut step = 0u64;
+        while !pending.is_empty() {
+            self.shape.sssp_steps += 1;
+            self.shape.sssp_updates += pending.len() as u64;
+            let msg = CoordMsg::SsspStep { step, updates: pending };
+            for rank in 0..w {
+                self.send(rank, &msg, Phase::Sssp)?;
+            }
+            let mut next: Vec<(u32, u32)> = Vec::new();
+            for rank in 0..w {
+                match self.recv(rank, Phase::Sssp)? {
+                    WorkerMsg::SsspDelta { step: s, updates } if s == step => {
+                        self.shape.sssp_deltas += updates.len() as u64;
+                        for (v, d) in updates {
+                            if (v as usize) < n && d < dist[v as usize] {
+                                dist[v as usize] = d;
+                                next.push((v, d));
+                            }
+                        }
+                    }
+                    other => {
+                        return fatal(anyhow!(
+                            "worker {rank}: expected SsspDelta for step \
+                             {step}, got {other:?}"
+                        ))
+                    }
+                }
+            }
+            pending = next;
+            step += 1;
+        }
+        Ok(dist)
+    }
+
+    /// Full run: boot, partition (with recovery), finalize, optional
+    /// SSSP (with recovery).
+    fn execute(&mut self) -> Result<(EdgePartition, Option<Vec<u32>>)> {
+        self.boot()?;
+        let (rounds, owner_raw) = loop {
+            match self.partition_phase() {
+                Ok(out) => break out,
+                Err(RunErr::Worker { rank, err }) => self.recover(rank, err)?,
+                Err(RunErr::Fatal(e)) => return Err(e),
+            }
+        };
+        let owner = dfep::finalize(self.g, owner_raw, self.cfg.k);
+        let partition = EdgePartition {
+            k: self.cfg.k,
+            owner,
+            rounds: rounds as usize,
+        };
+        let sssp_dist = match self.cfg.sssp_source {
+            Some(src) => Some(self.run_sssp(src, &partition.owner)?),
+            None => None,
+        };
+        Ok((partition, sssp_dist))
+    }
+
+    /// Best-effort clean teardown: `Shutdown` to every worker, then
+    /// reap children (kill stragglers after a grace period).
+    fn shutdown(&mut self) {
+        for rank in 0..self.conns.len() {
+            let _ = self.send(rank, &CoordMsg::Shutdown, Phase::Control);
+        }
+        for conn in &mut self.conns {
+            if let Some(child) = conn.child.as_mut() {
+                let deadline = Instant::now() + Duration::from_secs(5);
+                loop {
+                    match child.try_wait() {
+                        Ok(Some(_)) => break,
+                        Ok(None) if Instant::now() < deadline => {
+                            std::thread::sleep(Duration::from_millis(10));
+                        }
+                        _ => {
+                            let _ = child.kill();
+                            let _ = child.wait();
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Stitch per-worker bid lists into the canonical global order:
+/// partition `i`'s contiguous run, taken from worker `i % workers`, in
+/// ascending partition order — exactly the order the single-process
+/// `round_bids` emits. Validates that every bid sits in its owner's
+/// list and that runs are contiguous (each a transport-corruption
+/// tripwire).
+fn stitch_bids(
+    k: usize,
+    workers: usize,
+    per_worker: &[Vec<Bid>],
+) -> Result<Vec<Bid>> {
+    let mut runs: Vec<(u32, u32)> = vec![(0, 0); k];
+    let mut have = vec![false; k];
+    let mut total = 0usize;
+    for (w, bids) in per_worker.iter().enumerate() {
+        total += bids.len();
+        let mut lo = 0usize;
+        while lo < bids.len() {
+            let p = bids[lo].1 as usize;
+            if p >= k || p % workers != w {
+                return Err(terr(format!(
+                    "worker {w} sent a bid for foreign partition {p}"
+                )));
+            }
+            if have[p] {
+                return Err(terr(format!(
+                    "worker {w}: partition {p} bids split across runs"
+                )));
+            }
+            let mut hi = lo + 1;
+            while hi < bids.len() && bids[hi].1 as usize == p {
+                hi += 1;
+            }
+            have[p] = true;
+            runs[p] = (lo as u32, hi as u32);
+            lo = hi;
+        }
+    }
+    let mut merged = Vec::with_capacity(total);
+    for (p, &(lo, hi)) in runs.iter().enumerate() {
+        if have[p] {
+            merged.extend_from_slice(
+                &per_worker[p % workers][lo as usize..hi as usize],
+            );
+        }
+    }
+    Ok(merged)
+}
+
+/// Run a full distributed partitioning (and optional SSSP) according to
+/// `cfg`, returning the partition plus the measured-vs-predicted wire
+/// cost report. The coordinator binds an ephemeral loopback port,
+/// spawns the workers itself, and tears everything down before
+/// returning.
+pub fn run_cluster(cfg: &ClusterConfig) -> Result<ClusterReport> {
+    check_k(cfg.k)?;
+    if cfg.workers == 0 {
+        return Err(invalid("cluster needs at least one worker".into()));
+    }
+    if let Some(f) = &cfg.fail {
+        if f.rank >= cfg.workers {
+            return Err(invalid(format!(
+                "failure rank {} out of range (workers {})",
+                f.rank, cfg.workers
+            )));
+        }
+    }
+    let spec = PartitionerSpec::parse(&cfg.spec)?;
+    if spec.name() != "dfep" {
+        return Err(Error::msg(format!(
+            "the cluster runtime drives the dfep algorithm only (got \
+             '{}')",
+            spec.name()
+        ))
+        .with_kind(ErrorKind::InvalidSpec));
+    }
+    let r = Resolved::of(&spec);
+    let tune = Dfep {
+        funding_cap: r.f64("cap"),
+        initial_fraction: r.f64("init"),
+        max_rounds: r.usize("max_rounds"),
+        frontier_first: r.bool("frontier_first"),
+    };
+    let g = resolve_graph(&cfg.dataset, cfg.graph_seed)?;
+    if g.edge_count() == 0 {
+        return Err(invalid(format!(
+            "graph '{}' has no edges",
+            cfg.dataset
+        )));
+    }
+    if let Some(src) = cfg.sssp_source {
+        if src as usize >= g.vertex_count() {
+            return Err(invalid(format!(
+                "sssp source {src} out of range (|V| = {})",
+                g.vertex_count()
+            )));
+        }
+    }
+    let listener = TcpListener::bind(("127.0.0.1", 0)).map_err(|e| {
+        Error::msg(format!("bind coordinator listener: {e}"))
+            .with_kind(ErrorKind::Io)
+    })?;
+    let addr = listener.local_addr().map_err(|e| {
+        Error::msg(format!("coordinator address: {e}"))
+            .with_kind(ErrorKind::Io)
+    })?;
+    let m = g.edge_count();
+    let mut co = Coordinator {
+        cfg,
+        tune,
+        g: &g,
+        listener,
+        addr,
+        conns: Vec::new(),
+        bytes: WireBytes::default(),
+        shape: ClusterShape {
+            workers: cfg.workers,
+            n: g.vertex_count(),
+            m,
+            k: cfg.k,
+            ..ClusterShape::default()
+        },
+        ckpt_blobs: Vec::new(),
+        ckpt_meta: CkptMeta::Partition {
+            round: 0,
+            free_edges: m as u64,
+            stall: 0,
+            reseed_next: false,
+        },
+        recoveries: 0,
+        barrier_token: 0,
+        round_ms: Vec::new(),
+        recovery_ms: Vec::new(),
+    };
+    let result = co.execute();
+    co.shutdown();
+    let (partition, sssp_dist) = result?;
+    let predicted = WireModel::default().predict(&co.shape);
+    Ok(ClusterReport {
+        partition,
+        workers: cfg.workers,
+        recoveries: co.recoveries,
+        measured: co.bytes,
+        predicted,
+        shape: co.shape,
+        sssp_dist,
+        round_ms: co.round_ms,
+        recovery_ms: co.recovery_ms,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv1a64_is_stable_and_distinguishes() {
+        let a = fnv1a64(&[0, 1, 2, 3]);
+        assert_eq!(a, fnv1a64(&[0, 1, 2, 3]));
+        assert_ne!(a, fnv1a64(&[0, 1, 3, 2]));
+        assert_ne!(a, fnv1a64(&[0, 1, 2]));
+        assert_ne!(fnv1a64(&[]), fnv1a64(&[0]));
+    }
+
+    #[test]
+    fn stitch_bids_reassembles_partition_major_order() {
+        // k=4, 2 workers: worker 0 owns partitions 0 and 2, worker 1
+        // owns 1 and 3; each list holds contiguous per-partition runs
+        let b = |e: u32, p: u32| (e, p, 1.0, 2.0);
+        let per_worker = vec![
+            vec![b(10, 0), b(11, 0), b(12, 2)],
+            vec![b(20, 1), b(21, 3), b(22, 3)],
+        ];
+        let merged = stitch_bids(4, 2, &per_worker).unwrap();
+        assert_eq!(
+            merged,
+            vec![
+                b(10, 0),
+                b(11, 0),
+                b(20, 1),
+                b(12, 2),
+                b(21, 3),
+                b(22, 3),
+            ]
+        );
+        // a partition with no bids this round is simply absent
+        let sparse = vec![vec![b(12, 2)], vec![]];
+        assert_eq!(stitch_bids(4, 2, &sparse).unwrap(), vec![b(12, 2)]);
+    }
+
+    #[test]
+    fn stitch_bids_rejects_foreign_and_split_runs() {
+        let b = |e: u32, p: u32| (e, p, 1.0, 2.0);
+        // worker 0 must not bid for partition 1 (owned by worker 1)
+        let foreign = vec![vec![b(10, 1)], vec![]];
+        assert!(stitch_bids(4, 2, &foreign).is_err());
+        // out-of-range partition id
+        let oob = vec![vec![b(10, 4)], vec![]];
+        assert!(stitch_bids(4, 2, &oob).is_err());
+        // non-contiguous run for one partition
+        let split = vec![vec![b(10, 0), b(12, 2), b(11, 0)], vec![]];
+        assert!(stitch_bids(4, 2, &split).is_err());
+    }
+
+    fn test_init(rank: u32, workers: u32) -> InitMsg {
+        // a 3x3 grid-ish graph: enough structure for non-trivial state
+        let edges = vec![
+            (0, 1),
+            (0, 3),
+            (1, 2),
+            (1, 4),
+            (2, 5),
+            (3, 4),
+            (4, 5),
+            (5, 6),
+            (6, 7),
+            (7, 8),
+        ];
+        InitMsg {
+            rank,
+            workers,
+            k: 4,
+            seed: 7,
+            cap: 10.0,
+            init_frac: 1.0,
+            frontier_first: true,
+            fail_round: -1,
+            fail_stall_ms: 0,
+            n: 9,
+            edges,
+        }
+    }
+
+    #[test]
+    fn snapshot_restore_roundtrip_is_lossless() {
+        let mut wk = WorkerState::boot(test_init(1, 2)).unwrap();
+        // advance a few rounds through the real masked phases so the
+        // ledger/holders are in an organic mid-run shape
+        for round in 0..3u64 {
+            wk.handle(CoordMsg::StartRound { round, reseed: false })
+                .unwrap();
+            let bids = wk.st.pending_bids().to_vec();
+            wk.handle(CoordMsg::Bids { round, bids }).unwrap();
+        }
+        let blob = wk.snapshot();
+        // corrupt every restorable field, then restore
+        wk.st.owner[0] = 99;
+        wk.st.sizes[0] += 17;
+        wk.st.free_edges = 0;
+        wk.st.rounds = 1000;
+        wk.st.free_deg[0] = 42;
+        wk.st.anchor[1] = 3;
+        let _ = wk.rng.next_u64();
+        for i in 0..wk.k {
+            if wk.owned[i] {
+                wk.st.holders[i].clear();
+            }
+        }
+        wk.restore(&blob).unwrap();
+        assert_eq!(wk.snapshot(), blob);
+        assert_eq!(wk.st.rounds, 3);
+    }
+
+    #[test]
+    fn restore_rejects_garbage() {
+        let mut wk = WorkerState::boot(test_init(0, 1)).unwrap();
+        assert!(wk.restore(b"").is_err());
+        assert!(wk.restore(&[0xff; 40]).is_err());
+        let mut blob = wk.snapshot();
+        blob.truncate(blob.len() - 1);
+        assert!(wk.restore(&blob).is_err());
+    }
+
+    #[test]
+    fn sssp_snapshot_roundtrip() {
+        let mut wk = WorkerState::boot(test_init(0, 2)).unwrap();
+        let owner: Vec<u32> = (0..10).map(|e| e % 4).collect();
+        wk.handle(CoordMsg::SsspStart { source: 0, owner }).unwrap();
+        let blob = wk.snapshot();
+        wk.sssp = None;
+        wk.restore(&blob).unwrap();
+        assert_eq!(wk.snapshot(), blob);
+        let s = wk.sssp.as_ref().unwrap();
+        assert_eq!(s.source, 0);
+        assert_eq!(s.owner.len(), 10);
+    }
+}

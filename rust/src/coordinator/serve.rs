@@ -88,6 +88,7 @@ pub fn status_for(kind: ErrorKind) -> u16 {
         ErrorKind::Busy => 429,
         ErrorKind::Overloaded => 503,
         ErrorKind::Io => 500,
+        ErrorKind::Transport => 503,
         ErrorKind::Internal => 500,
     }
 }
@@ -1047,6 +1048,7 @@ mod tests {
             (ErrorKind::Busy, 429),
             (ErrorKind::Overloaded, 503),
             (ErrorKind::Io, 500),
+            (ErrorKind::Transport, 503),
             (ErrorKind::Internal, 500),
         ];
         assert_eq!(documented.len(), ErrorKind::ALL.len());

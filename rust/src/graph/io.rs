@@ -98,9 +98,45 @@ pub fn write_partition(owner: &[u32], path: &Path) -> Result<()> {
     Ok(())
 }
 
+/// Atomically persist an opaque binary blob (cluster checkpoints): write
+/// to `<path>.tmp`, then rename over `path`, so a crash mid-write never
+/// leaves a truncated checkpoint where a valid one stood.
+pub fn write_blob(path: &Path, blob: &[u8]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    {
+        let file = std::fs::File::create(&tmp)
+            .with_context(|| format!("create {}", tmp.display()))?;
+        let mut w = BufWriter::new(file);
+        w.write_all(blob)?;
+        w.flush()?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename into {}", path.display()))?;
+    Ok(())
+}
+
+/// Read back a blob written by [`write_blob`].
+pub fn read_blob(path: &Path) -> Result<Vec<u8>> {
+    std::fs::read(path).with_context(|| format!("read {}", path.display()))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn blob_roundtrip_is_atomic() {
+        let dir = std::env::temp_dir().join("dfep_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.bin");
+        let blob: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        write_blob(&path, &blob).unwrap();
+        assert_eq!(read_blob(&path).unwrap(), blob);
+        // overwrite leaves no tmp residue
+        write_blob(&path, b"second").unwrap();
+        assert_eq!(read_blob(&path).unwrap(), b"second");
+        assert!(!path.with_extension("tmp").exists());
+    }
 
     #[test]
     fn roundtrip() {

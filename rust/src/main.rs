@@ -12,7 +12,8 @@
 //!   repro partition --graph astroph --algo hdrf:lambda=1.5 --k 32
 //!   repro batch --graph astroph@0.05 --algos dfep,random --ks 16,32 --seeds 1,2
 //!   repro sssp --graph usroads@0.05 --k 8 --source 0
-//!   repro cluster --graph dblp@0.1 --nodes 2,4,8,16
+//!   repro cluster --graph dblp@0.1 --k 16 --workers 3 --verify
+//!   repro cluster --simulate --graph dblp@0.1 --nodes 2,4,8,16
 //!   repro stats --graph wordnet@0.1
 //!   repro serve --addr 127.0.0.1:7411 --workers 4
 //!   repro xla-info
@@ -62,8 +63,22 @@ COMMANDS
   algos       list every registered partitioner spec and its parameters
   faults      re-simulate the Fig-8 DFEP job under failure injection
               --graph SPEC --k N --nodes N --fail-rate P --seed S
-  cluster     simulate the Hadoop/EC2 experiments (Figs 8-9)
+  cluster     real distributed partitioning: a coordinator drives W
+              worker processes of this binary over localhost TCP, with
+              periodic checkpoints, optional failure injection, and
+              measured-vs-predicted wire bytes (see DESIGN.md
+              \"Distributed runtime\")
+              --graph SPEC [--algo ALGOSPEC] --k N --seed S
+              [--workers W] [--in-process] [--checkpoint-every N]
+              [--checkpoint-dir DIR] [--sssp-source V] [--verify]
+              [--fail-rank R --fail-round N [--fail-stall-ms MS]]
+              [--timeout-ms MS] [--max-recoveries N]
+              --quick: canned 3-worker smoke run, verified against the
+              single-process facade
+              --simulate: legacy analytic Hadoop/EC2 model (Figs 8-9)
               --graph SPEC --k N --nodes 2,4,8,16 --seed S
+  worker      internal: one cluster worker (spawned by `repro cluster`)
+              --connect HOST:PORT
   stats       print the Table II/III row for a graph
               --graph SPEC [--seed S]
   serve       partitioning-as-a-service: long-running HTTP/1.1 server
@@ -110,6 +125,7 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         "algos" => cmd_algos(),
         "faults" => cmd_faults(&args),
         "cluster" => cmd_cluster(&args),
+        "worker" => cmd_worker(&args),
         "stats" => cmd_stats(&args),
         "serve" => cmd_serve(&args),
         "xla-info" => cmd_xla_info(&args),
@@ -508,7 +524,133 @@ fn cmd_faults(args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_worker(args: &Args) -> Result<()> {
+    let connect = args
+        .get("connect")
+        .ok_or_else(|| anyhow!("--connect HOST:PORT is required"))?;
+    dfep::cluster::runtime::worker_main(connect)
+}
+
 fn cmd_cluster(args: &Args) -> Result<()> {
+    use dfep::cluster::runtime::{
+        run_cluster, ClusterConfig, FailMode, FailureInjection,
+    };
+    if args.flag("simulate") {
+        return cmd_cluster_simulate(args);
+    }
+    let d = ClusterConfig::default();
+    let quick = args.flag("quick");
+    let dataset = match args.get("graph") {
+        Some(s) => s.to_string(),
+        None if quick => d.dataset.clone(),
+        None => return Err(anyhow!("--graph is required (or --quick)")),
+    };
+    let fail = if args.get("fail-rank").is_some() {
+        Some(FailureInjection {
+            rank: args.get_usize("fail-rank", 0)?,
+            round: args.get_u64("fail-round", 2)?,
+            mode: match args.get_u64("fail-stall-ms", 0)? {
+                0 => FailMode::Kill,
+                ms => FailMode::Stall(ms),
+            },
+        })
+    } else {
+        None
+    };
+    let cfg = ClusterConfig {
+        workers: args.get_usize("workers", d.workers)?,
+        k: args.get_usize("k", d.k)?,
+        seed: args.get_u64("seed", d.seed)?,
+        spec: args.get_or("algo", "dfep").to_string(),
+        dataset,
+        graph_seed: args.get_u64("graph-seed", 42)?,
+        checkpoint_every: args.get_u64(
+            "checkpoint-every",
+            if quick { 4 } else { d.checkpoint_every },
+        )?,
+        checkpoint_dir: args.get("checkpoint-dir").map(std::path::PathBuf::from),
+        sssp_source: if args.get("sssp-source").is_some() {
+            Some(args.get_usize("sssp-source", 0)? as u32)
+        } else if quick {
+            Some(0)
+        } else {
+            None
+        },
+        fail,
+        worker_timeout_ms: args.get_u64("timeout-ms", d.worker_timeout_ms)?,
+        in_process: args.flag("in-process"),
+        max_recoveries: args.get_usize("max-recoveries", d.max_recoveries)?,
+    };
+    let (rep, secs) = dfep::util::timer::time(|| run_cluster(&cfg));
+    let rep = rep?;
+    println!(
+        "cluster: {} worker(s), |V|={} |E|={} k={} ({})",
+        rep.workers, rep.shape.n, rep.shape.m, rep.partition.k, cfg.dataset
+    );
+    let avg_round = if rep.round_ms.is_empty() {
+        0.0
+    } else {
+        rep.round_ms.iter().sum::<f64>() / rep.round_ms.len() as f64
+    };
+    println!(
+        "  rounds      {} ({:.2} ms/round avg, {:.3}s total)",
+        rep.partition.rounds, avg_round, secs
+    );
+    if rep.recoveries > 0 {
+        let t: f64 = rep.recovery_ms.iter().sum();
+        println!(
+            "  recoveries  {} ({:.1} ms respawn+rollback total)",
+            rep.recoveries, t
+        );
+    }
+    if let Some(dist) = &rep.sssp_dist {
+        let reached = dist.iter().filter(|&&x| x != u32::MAX).count();
+        println!("  sssp        {reached} vertices reached");
+    }
+    println!("  wire bytes       measured    predicted");
+    let rows = [
+        ("load", rep.measured.load, rep.predicted.load),
+        ("control", rep.measured.control, rep.predicted.control),
+        ("bids_up", rep.measured.bids_up, rep.predicted.bids_up),
+        ("bids_down", rep.measured.bids_down, rep.predicted.bids_down),
+        ("checkpoint", rep.measured.checkpoint, rep.predicted.checkpoint),
+        ("merge", rep.measured.merge, rep.predicted.merge),
+        ("sssp", rep.measured.sssp, rep.predicted.sssp),
+    ];
+    for (name, m, p) in rows {
+        println!("    {name:<12} {m:>10} {p:>12.0}");
+    }
+    println!(
+        "    {:<12} {:>10}   (unmodeled)",
+        "recovery", rep.measured.recovery
+    );
+    println!(
+        "    {:<12} {:>10} {:>12.0}",
+        "total",
+        rep.measured.total(),
+        rep.predicted.total()
+    );
+    if quick || args.flag("verify") {
+        let facade = PartitionRequest::new(&cfg.spec)?
+            .dataset(&cfg.dataset)
+            .k(cfg.k)
+            .seed(cfg.seed)
+            .graph_seed(cfg.graph_seed)
+            .execute()?;
+        if facade.partition.owner != rep.partition.owner {
+            return Err(anyhow!(
+                "cluster owners diverge from the single-process facade"
+            ));
+        }
+        println!(
+            "  verify      owners bit-identical to the single-process \
+             facade"
+        );
+    }
+    Ok(())
+}
+
+fn cmd_cluster_simulate(args: &Args) -> Result<()> {
     let g = graph_arg(args)?;
     let k = args.get_usize("k", 20)?;
     let seed = args.get_u64("seed", 1)?;

@@ -527,25 +527,59 @@ impl DfepState {
     /// is bit-identical to the sequential execution for any thread count.
     /// All buffers come from the persistent `RoundScratch`; steady-state
     /// rounds allocate nothing.
+    ///
+    /// Implemented as [`round_bids`](Self::round_bids) (step 1) followed
+    /// by [`round_auction`](Self::round_auction) (step 2) with no
+    /// ownership mask — the distributed runtime calls the two halves
+    /// separately, exchanging the bid list between them.
     pub fn funding_round(
         &mut self,
         g: &Graph,
         poor: Option<&[bool]>,
         rich: Option<&[bool]>,
     ) {
+        self.round_bids(g, poor, rich, None);
+        self.round_auction(g, poor, rich, None);
+    }
+
+    /// Step 1 of one round: emit bids from every partition the caller
+    /// owns, leaving them (pre-sort, in the canonical partition-major
+    /// order) in the internal bid buffer exposed by
+    /// [`pending_bids`](Self::pending_bids).
+    ///
+    /// `owned` masks the computation to a subset of partitions: a
+    /// distributed worker passes its ownership mask (partition `i` owned
+    /// by worker `i % W`) so only its partitions' holder lists, ledger
+    /// rows and bids are touched; `None` means "owns everything" and is
+    /// byte-identical to the historical single-process step 1. The
+    /// replicated read-only inputs (`owner`, `free_deg`) are the same on
+    /// every worker, so the union of all workers' masked bid lists,
+    /// stitched in partition order, equals the unmasked list exactly.
+    pub fn round_bids(
+        &mut self,
+        g: &Graph,
+        poor: Option<&[bool]>,
+        rich: Option<&[bool]>,
+        owned: Option<&[bool]>,
+    ) {
         let k = self.k;
         // Step 1 canonicalization: stamp-dedup each partition's holder
         // list, keeping only vertices that still hold cash, in
         // registration order (the documented canonical holder order).
+        // Non-owned partitions get an empty list (their holders/ledger
+        // live on another worker) and therefore produce no shards below.
         {
             let RoundScratch { holder_lists, stamp, epoch, .. } =
                 &mut self.scratch;
             let base = begin_pass(stamp.as_mut_slice(), epoch, k as u32);
             for i in 0..k {
                 let tag = base + i as u32;
-                let row = self.money.part(i);
                 let hl = &mut holder_lists[i];
                 hl.clear();
+                if !owned.map(|o| o[i]).unwrap_or(true) {
+                    continue;
+                }
+                let row = self.money.part(i);
                 for &v in &self.holders[i] {
                     let vu = v as usize;
                     if row[vu] > 0.0 && stamp[vu] != tag {
@@ -657,7 +691,28 @@ impl DfepState {
                 bids.append(&mut out.bids);
             }
         }
+    }
 
+    /// Step 2 of one round: auction the bids currently in the internal
+    /// bid buffer (either left there by [`round_bids`](Self::round_bids)
+    /// or installed via [`set_pending_bids`](Self::set_pending_bids)),
+    /// then run the frontier pool and advance the round counter.
+    ///
+    /// The auction itself is a pure function of the replicated state
+    /// (`owner`, bid list), so under a mask every worker computes
+    /// identical sales and applies identical updates to the replicated
+    /// fields (`owner`, `sizes`, `free_edges`, `free_deg`, `anchor`).
+    /// Only the ledger writes — credits and the frontier pool — are
+    /// masked to owned partitions, because those rows are authoritative
+    /// on exactly one worker. With `owned = None` this is byte-identical
+    /// to the historical single-process step 2.
+    pub fn round_auction(
+        &mut self,
+        g: &Graph,
+        poor: Option<&[bool]>,
+        rich: Option<&[bool]>,
+        owned: Option<&[bool]>,
+    ) {
         // Step 2: auction — only over edges that received bids. Order the
         // per-(edge, partition) contributions with the stable radix sort
         // (canonical order documented there), then compute every edge's
@@ -812,7 +867,9 @@ impl DfepState {
                     for &(i, w, amount) in &out.credits
                         [credit_idx..credit_idx + n_credits as usize]
                     {
-                        self.credit(i as usize, w as usize, amount);
+                        if owned.map(|o| o[i as usize]).unwrap_or(true) {
+                            self.credit(i as usize, w as usize, amount);
+                        }
                     }
                     credit_idx += n_credits as usize;
                 }
@@ -820,10 +877,41 @@ impl DfepState {
             self.scratch.outs2 = outs2;
         }
         if self.frontier_first {
-            self.pool_at_frontier(g);
+            self.pool_at_frontier(g, owned);
         }
         self.rounds += 1;
         self.scratch.note_peak();
+    }
+
+    /// The bids emitted by the last [`round_bids`](Self::round_bids)
+    /// call, pre-sort, in canonical partition-major order (ascending
+    /// partition id; holder registration order within a partition). The
+    /// distributed runtime ships these to the coordinator.
+    pub(crate) fn pending_bids(&self) -> &[Bid] {
+        &self.scratch.bids
+    }
+
+    /// Install a bid list (the coordinator's stitched global list) to be
+    /// auctioned by the next [`round_auction`](Self::round_auction) call.
+    /// Must be in the same canonical order `round_bids` produces — the
+    /// stable radix sort then reproduces the exact single-process auction
+    /// input order.
+    pub(crate) fn set_pending_bids(&mut self, bids: &[Bid]) {
+        self.scratch.bids.clear();
+        self.scratch.bids.extend_from_slice(bids);
+    }
+
+    /// Rebuild the live-vertex list from `free_deg` after a checkpoint
+    /// restore. Equivalent to the incrementally-maintained list at any
+    /// consumer: the list starts as the ascending `free_deg > 0` filter
+    /// and is only ever `retain`ed (free degrees never grow), and every
+    /// consumer re-applies the retain before reading — so rebuilding the
+    /// ascending filter restores the exact observable sequence.
+    pub(crate) fn rebuild_live(&mut self) {
+        let n = self.free_deg.len();
+        self.live_vertices.clear();
+        self.live_vertices
+            .extend((0..n as u32).filter(|&v| self.free_deg[v as usize] > 0));
     }
 
     /// Add funds to (partition, vertex), registering the holder.
@@ -850,7 +938,11 @@ impl DfepState {
     /// (Alg. 4 splits across owned edges) and the end-game livelocks with
     /// frontier offers stuck below 1 unit. Disabled in the literal-Alg.4
     /// ablation (`frontier_first = false`).
-    fn pool_at_frontier(&mut self, g: &Graph) {
+    ///
+    /// `owned` restricts the per-partition ledger redistribution to the
+    /// caller's partitions (distributed mode); the frontier *discovery*
+    /// scan reads only replicated state and runs unmasked everywhere.
+    fn pool_at_frontier(&mut self, g: &Graph, owned: Option<&[bool]>) {
         // Each partition's TRUE frontier: region vertices (incident to an
         // owned edge) that also touch a free edge. Cash must be routed
         // there even if the partition's refunds parked it elsewhere in the
@@ -937,6 +1029,9 @@ impl DfepState {
         };
         let free_deg = &self.free_deg;
         crate::util::pool::run(self.k, &|i| {
+            if !owned.map(|o| o[i]).unwrap_or(true) {
+                return; // this partition's ledger lives on another worker
+            }
             // SAFETY: see `Dist` — every dereference is indexed by the
             // shard's own partition id, so the borrows are disjoint.
             let money_i = unsafe {
@@ -955,11 +1050,26 @@ impl DfepState {
     /// proportional to current size, spread across the vertices where the
     /// partition already has a presence.
     pub fn coordinator_step(&mut self, cap: f64) {
+        self.coordinator_step_masked(cap, None);
+    }
+
+    /// [`coordinator_step`](Self::coordinator_step) restricted to owned
+    /// partitions (distributed mode). The injection amounts depend only
+    /// on the replicated `sizes`/`anchor`, so each worker funding its own
+    /// partitions reproduces the single-process ledger writes exactly.
+    pub(crate) fn coordinator_step_masked(
+        &mut self,
+        cap: f64,
+        owned: Option<&[bool]>,
+    ) {
         let avg = self.sizes.iter().sum::<usize>() as f64 / self.k as f64;
         let k = self.k;
         let RoundScratch { stamp, epoch, .. } = &mut self.scratch;
         let base = begin_pass(stamp.as_mut_slice(), epoch, k as u32);
         for i in 0..k {
+            if !owned.map(|o| o[i]).unwrap_or(true) {
+                continue;
+            }
             let size = self.sizes[i] as f64;
             // inversely proportional to size, plus one base unit per round
             // so end-game purchases (1-unit edges at exhausted frontiers)
@@ -1230,6 +1340,20 @@ impl Dfep {
 /// invocation (injecting per free edge would counterfeit money and wreck
 /// balance).
 pub fn reseed_on_free_edge(g: &Graph, st: &mut DfepState, rng: &mut Rng) {
+    reseed_on_free_edge_masked(g, st, rng, None);
+}
+
+/// [`reseed_on_free_edge`] with the distributed ownership mask: the walk
+/// and the `rng` draws run identically on every worker (they read only
+/// replicated state and keep the streams in lockstep); the final credit
+/// lands in the ledger only on the worker that owns the granted
+/// partition.
+pub(crate) fn reseed_on_free_edge_masked(
+    g: &Graph,
+    st: &mut DfepState,
+    rng: &mut Rng,
+    owned: Option<&[bool]>,
+) {
     // prune stale live entries here too: the literal-Alg4 ablation skips
     // pool_at_frontier, which otherwise maintains the list
     {
@@ -1273,7 +1397,9 @@ pub fn reseed_on_free_edge(g: &Graph, st: &mut DfepState, rng: &mut Rng) {
         }
     }
     if let Some((i, x)) = grant {
-        st.credit(i, x as usize, 2.0);
+        if owned.map(|o| o[i]).unwrap_or(true) {
+            st.credit(i, x as usize, 2.0);
+        }
         return;
     }
     if let Some(e) = orphan {
@@ -1284,7 +1410,9 @@ pub fn reseed_on_free_edge(g: &Graph, st: &mut DfepState, rng: &mut Rng) {
         let smallest = (0..st.k).min_by_key(|&i| st.sizes[i]).unwrap();
         let (u, v) = g.endpoints(e);
         let x = if rng.chance(0.5) { u } else { v };
-        st.credit(smallest, x as usize, 2.0);
+        if owned.map(|o| o[smallest]).unwrap_or(true) {
+            st.credit(smallest, x as usize, 2.0);
+        }
     }
 }
 
@@ -1448,6 +1576,75 @@ mod tests {
                 break;
             }
         }
+    }
+
+    /// The distributed decomposition: per-worker masked `round_bids`,
+    /// bids stitched in partition order, redundant masked `round_auction`
+    /// + `coordinator_step_masked` on every replica — must reproduce the
+    /// single-process trajectory bit-exactly, including every owned
+    /// ledger row. This is the in-memory half of the `cluster::runtime`
+    /// determinism story (tests/cluster.rs pins the socket half).
+    #[test]
+    fn masked_phases_compose_to_single_process() {
+        let g = small_world();
+        let k = 5usize;
+        let workers = 2usize;
+        let initial = g.edge_count() as f64 / k as f64;
+        let mut rng_ref = Rng::new(9);
+        let mut reference = DfepState::new(&g, k, initial, &mut rng_ref);
+        let mut rngs: Vec<Rng> = (0..workers).map(|_| Rng::new(9)).collect();
+        let mut reps: Vec<DfepState> = rngs
+            .iter_mut()
+            .map(|r| DfepState::new(&g, k, initial, r))
+            .collect();
+        let masks: Vec<Vec<bool>> = (0..workers)
+            .map(|w| (0..k).map(|i| i % workers == w).collect())
+            .collect();
+        for _ in 0..120 {
+            reference.funding_round(&g, None, None);
+            reference.coordinator_step(10.0);
+            // workers bid on their own partitions only; the stitched
+            // global list is partition-major, like the unmasked one
+            let mut per_part: Vec<Vec<Bid>> = vec![Vec::new(); k];
+            for (w, rep) in reps.iter_mut().enumerate() {
+                rep.round_bids(&g, None, None, Some(&masks[w]));
+                for &b in rep.pending_bids() {
+                    assert_eq!(b.1 as usize % workers, w, "foreign bid");
+                    per_part[b.1 as usize].push(b);
+                }
+            }
+            let merged: Vec<Bid> = per_part.into_iter().flatten().collect();
+            for (w, rep) in reps.iter_mut().enumerate() {
+                rep.set_pending_bids(&merged);
+                rep.round_auction(&g, None, None, Some(&masks[w]));
+                rep.coordinator_step_masked(10.0, Some(&masks[w]));
+            }
+            for rep in &reps {
+                assert_eq!(rep.owner, reference.owner);
+                assert_eq!(rep.free_edges, reference.free_edges);
+                assert_eq!(rep.sizes, reference.sizes);
+                assert_eq!(rep.free_deg, reference.free_deg);
+                assert_eq!(rep.anchor, reference.anchor);
+            }
+            for (w, rep) in reps.iter().enumerate() {
+                for i in 0..k {
+                    if i % workers == w {
+                        assert_eq!(
+                            rep.money.part(i),
+                            reference.money.part(i),
+                            "round {} part {i} ledger row diverged",
+                            reference.rounds
+                        );
+                    }
+                }
+            }
+            if reference.free_edges == 0 {
+                break;
+            }
+        }
+        // no reseeds in this loop, so a late-run stall is possible on an
+        // unlucky graph; substantial progress is what the test needs
+        assert!(reference.free_edges < g.edge_count() / 2);
     }
 
     #[test]

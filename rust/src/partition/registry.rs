@@ -73,6 +73,13 @@ pub struct Resolved<'a> {
 }
 
 impl<'a> Resolved<'a> {
+    /// Resolved view over an already-parsed spec, for callers that need
+    /// parameter values without building the boxed partitioner (the
+    /// cluster runtime drives the DFEP phases directly).
+    pub(crate) fn of(spec: &'a super::spec::PartitionerSpec) -> Resolved<'a> {
+        Resolved { entry: spec.algo(), overrides: spec.overrides() }
+    }
+
     fn raw(&self, key: &str) -> &str {
         self.overrides
             .iter()

@@ -36,19 +36,25 @@ pub enum ErrorKind {
     Overloaded,
     /// An operating-system I/O failure (bind, accept, read, write).
     Io,
+    /// A cluster worker became unreachable mid-conversation: frame codec
+    /// failure, dropped connection, read timeout, or a respawn that did
+    /// not come back. Maps to 503 (service unavailable) at the serving
+    /// layer — the cluster is temporarily degraded, a retry may succeed.
+    Transport,
     /// Anything unclassified — the default for plain `anyhow!` errors.
     Internal,
 }
 
 impl ErrorKind {
     /// Every kind, in declaration order (for exhaustive table tests).
-    pub const ALL: [ErrorKind; 7] = [
+    pub const ALL: [ErrorKind; 8] = [
         ErrorKind::InvalidSpec,
         ErrorKind::InvalidRequest,
         ErrorKind::DatasetNotFound,
         ErrorKind::Busy,
         ErrorKind::Overloaded,
         ErrorKind::Io,
+        ErrorKind::Transport,
         ErrorKind::Internal,
     ];
 
@@ -67,6 +73,7 @@ impl ErrorKind {
             ErrorKind::Busy => "busy",
             ErrorKind::Overloaded => "overloaded",
             ErrorKind::Io => "io",
+            ErrorKind::Transport => "transport",
             ErrorKind::Internal => "internal",
         }
     }

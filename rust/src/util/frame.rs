@@ -1,0 +1,157 @@
+//! Length-prefixed binary frame codec for the cluster runtime.
+//!
+//! Sibling of [`crate::util::http`]: where `http` frames text requests for
+//! the serving surface, `frame` moves opaque binary payloads between the
+//! `repro cluster` coordinator and its workers over localhost TCP.
+//!
+//! Grammar (all integers little-endian):
+//!
+//! ```text
+//! frame   := len payload
+//! len     := u32            -- byte length of payload, <= MAX_FRAME_BYTES
+//! payload := len * u8       -- opaque (cluster::proto encodes messages here)
+//! ```
+//!
+//! The 4-byte prefix is the only framing overhead; message typing and
+//! versioning live inside the payload (`cluster::proto`). Oversized frames
+//! are rejected on both ends so a corrupted length prefix cannot trigger a
+//! multi-gigabyte allocation.
+
+use std::io::{Read, Write};
+
+/// Hard cap on a single frame payload (64 MiB). Large enough for an edge
+/// list shipped at init on any graph we generate in tests or CI, small
+/// enough to catch a corrupted length prefix immediately.
+pub const MAX_FRAME_BYTES: usize = 64 * 1024 * 1024;
+
+/// Bytes added on the wire per frame (the `u32` length prefix).
+pub const FRAME_HEADER_BYTES: usize = 4;
+
+/// Total wire bytes for a payload of `payload_len` bytes.
+pub fn wire_len(payload_len: usize) -> usize {
+    payload_len + FRAME_HEADER_BYTES
+}
+
+/// Errors while reading or writing a frame.
+#[derive(Debug)]
+pub enum FrameError {
+    /// Frame length exceeds [`MAX_FRAME_BYTES`] (corrupt prefix or abuse).
+    TooLarge(usize),
+    /// Underlying socket/file error (includes EOF and read timeouts).
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FrameError::TooLarge(n) => {
+                write!(f, "frame of {n} bytes exceeds cap {MAX_FRAME_BYTES}")
+            }
+            FrameError::Io(e) => write!(f, "frame io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+impl From<std::io::Error> for FrameError {
+    fn from(e: std::io::Error) -> Self {
+        FrameError::Io(e)
+    }
+}
+
+impl FrameError {
+    /// True when the peer closed the connection cleanly (EOF mid-prefix).
+    pub fn is_eof(&self) -> bool {
+        matches!(self, FrameError::Io(e)
+            if e.kind() == std::io::ErrorKind::UnexpectedEof)
+    }
+
+    /// True when a configured read timeout expired (stalled peer).
+    pub fn is_timeout(&self) -> bool {
+        matches!(self, FrameError::Io(e)
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ))
+    }
+}
+
+/// Write one frame (length prefix + payload) and flush.
+pub fn write_frame<W: Write>(
+    w: &mut W,
+    payload: &[u8],
+) -> Result<(), FrameError> {
+    if payload.len() > MAX_FRAME_BYTES {
+        return Err(FrameError::TooLarge(payload.len()));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame, returning its payload.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>, FrameError> {
+    let mut prefix = [0u8; 4];
+    r.read_exact(&mut prefix)?;
+    let len = u32::from_le_bytes(prefix) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(FrameError::TooLarge(len));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok(payload)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn roundtrip_preserves_payload() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        write_frame(&mut buf, &[0xFFu8; 1000]).unwrap();
+        let mut c = Cursor::new(buf);
+        assert_eq!(read_frame(&mut c).unwrap(), b"hello");
+        assert_eq!(read_frame(&mut c).unwrap(), b"");
+        assert_eq!(read_frame(&mut c).unwrap(), vec![0xFFu8; 1000]);
+        assert_eq!(wire_len(5), 9);
+    }
+
+    #[test]
+    fn truncated_stream_is_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"payload").unwrap();
+        buf.truncate(6); // cut mid-payload
+        let mut c = Cursor::new(buf);
+        let err = read_frame(&mut c).unwrap_err();
+        assert!(err.is_eof(), "expected EOF error, got {err}");
+        // clean EOF at a frame boundary also reports is_eof
+        let mut empty = Cursor::new(Vec::new());
+        assert!(read_frame(&mut empty).unwrap_err().is_eof());
+    }
+
+    #[test]
+    fn oversized_frames_rejected_both_ways() {
+        let mut buf = Vec::new();
+        // corrupt prefix claiming 2 GiB — reader must refuse to allocate
+        buf.extend_from_slice(&(2u32 << 30).to_le_bytes());
+        let mut c = Cursor::new(buf);
+        assert!(matches!(
+            read_frame(&mut c),
+            Err(FrameError::TooLarge(_))
+        ));
+        // writer refuses equally (exercised via a tiny fake cap check)
+        let huge = vec![0u8; MAX_FRAME_BYTES + 1];
+        let mut sink = Vec::new();
+        assert!(matches!(
+            write_frame(&mut sink, &huge),
+            Err(FrameError::TooLarge(_))
+        ));
+        assert!(sink.is_empty());
+    }
+}

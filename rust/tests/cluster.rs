@@ -1,0 +1,194 @@
+//! Distributed runtime contract: `cluster::runtime` must produce owners
+//! *bit-identical* to the single-process `PartitionRequest` facade — at
+//! any worker count, and after recovering from an injected mid-round
+//! failure (kill or stall) via checkpoint rollback. The measured wire
+//! bytes must match the `cost::WireModel` prediction phase by phase.
+//!
+//! All runs here use `in_process: true`: workers are threads dialing
+//! real loopback TCP sockets through the real frame codec, because
+//! spawning `current_exe` from inside a test binary would re-run the
+//! test harness instead of `repro worker`.
+
+use dfep::cluster::runtime::{
+    run_cluster, ClusterConfig, FailMode, FailureInjection,
+};
+use dfep::coordinator::runs::{resolve_graph, PartitionRequest};
+use dfep::etsch::{sssp::Sssp, Etsch};
+
+const DATASET: &str = "plc:n=400,m=4,p=0.3";
+const K: usize = 8;
+const SEED: u64 = 3;
+const GRAPH_SEED: u64 = 7;
+
+fn base_cfg() -> ClusterConfig {
+    ClusterConfig {
+        workers: 3,
+        k: K,
+        seed: SEED,
+        spec: "dfep".into(),
+        dataset: DATASET.into(),
+        graph_seed: GRAPH_SEED,
+        checkpoint_every: 4,
+        in_process: true,
+        ..ClusterConfig::default()
+    }
+}
+
+/// The single-process reference owners for the same (dataset, spec, k,
+/// seed) tuple.
+fn facade_owner() -> Vec<u32> {
+    PartitionRequest::new("dfep")
+        .unwrap()
+        .dataset(DATASET)
+        .k(K)
+        .seed(SEED)
+        .graph_seed(GRAPH_SEED)
+        .execute()
+        .unwrap()
+        .partition
+        .owner
+}
+
+#[test]
+fn owners_bit_identical_at_any_worker_count() {
+    let reference = facade_owner();
+    for workers in [1usize, 2, 4] {
+        let cfg = ClusterConfig { workers, ..base_cfg() };
+        let rep = run_cluster(&cfg).unwrap();
+        assert_eq!(rep.recoveries, 0);
+        assert_eq!(rep.workers, workers);
+        assert_eq!(
+            rep.partition.owner, reference,
+            "{workers}-worker owners diverge from the facade"
+        );
+    }
+}
+
+#[test]
+fn killed_worker_recovers_to_identical_owners() {
+    let reference = facade_owner();
+    let cfg = ClusterConfig {
+        fail: Some(FailureInjection {
+            rank: 1,
+            round: 6,
+            mode: FailMode::Kill,
+        }),
+        ..base_cfg()
+    };
+    let rep = run_cluster(&cfg).unwrap();
+    assert_eq!(rep.recoveries, 1, "the injected kill must be recovered");
+    assert_eq!(rep.recovery_ms.len(), 1);
+    assert_eq!(
+        rep.partition.owner, reference,
+        "post-recovery owners diverge from the facade"
+    );
+    assert!(
+        rep.measured.recovery > 0,
+        "recovery traffic must be measured"
+    );
+}
+
+#[test]
+fn stalled_worker_times_out_and_recovers() {
+    let reference = facade_owner();
+    let cfg = ClusterConfig {
+        fail: Some(FailureInjection {
+            rank: 2,
+            round: 3,
+            // stalls far longer than the detector's patience
+            mode: FailMode::Stall(30_000),
+        }),
+        worker_timeout_ms: 1_000,
+        ..base_cfg()
+    };
+    let rep = run_cluster(&cfg).unwrap();
+    assert_eq!(rep.recoveries, 1, "the stall must trip the read timeout");
+    assert_eq!(rep.partition.owner, reference);
+}
+
+#[test]
+fn distributed_sssp_matches_single_process_etsch() {
+    let cfg = ClusterConfig { sssp_source: Some(0), ..base_cfg() };
+    let rep = run_cluster(&cfg).unwrap();
+    let dist = rep.sssp_dist.expect("sssp phase ran");
+    let g = resolve_graph(DATASET, GRAPH_SEED).unwrap();
+    let expected = Etsch::new(&g, &rep.partition).run(&mut Sssp::new(0));
+    assert_eq!(dist, expected);
+}
+
+#[test]
+fn wire_model_predicts_measured_bytes() {
+    let cfg = ClusterConfig { sssp_source: Some(0), ..base_cfg() };
+    let rep = run_cluster(&cfg).unwrap();
+    assert_eq!(rep.measured.recovery, 0, "clean run");
+    // every byte-exact phase within 10% (they should be exact; the
+    // slack keeps the test about the model, not the codec)
+    let exact = [
+        ("load", rep.measured.load, rep.predicted.load),
+        ("control", rep.measured.control, rep.predicted.control),
+        ("bids_up", rep.measured.bids_up, rep.predicted.bids_up),
+        ("bids_down", rep.measured.bids_down, rep.predicted.bids_down),
+        ("merge", rep.measured.merge, rep.predicted.merge),
+        ("sssp", rep.measured.sssp, rep.predicted.sssp),
+    ];
+    for (name, measured, predicted) in exact {
+        let m = measured as f64;
+        assert!(
+            (m - predicted).abs() <= 0.10 * predicted.max(1.0),
+            "{name}: measured {measured} vs predicted {predicted:.0}"
+        );
+    }
+    // the checkpoint blob's sparse ledger section is state-dependent
+    // and deliberately unmodeled: the prediction is a floor, and the
+    // holder entries stay within ~60% of it on this workload
+    let (m, p) = (rep.measured.checkpoint as f64, rep.predicted.checkpoint);
+    assert!(
+        m >= p,
+        "checkpoint: measured {m:.0} below the modeled floor {p:.0}"
+    );
+    assert!(
+        m <= 1.6 * p,
+        "checkpoint: measured {m:.0} exceeds 1.6x the floor {p:.0}"
+    );
+}
+
+#[test]
+fn persisted_checkpoints_land_on_disk() {
+    let dir = std::env::temp_dir().join("dfep_cluster_ckpt_test");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = ClusterConfig {
+        checkpoint_dir: Some(dir.clone()),
+        ..base_cfg()
+    };
+    let rep = run_cluster(&cfg).unwrap();
+    // round-0 blobs always exist, one per worker
+    for rank in 0..cfg.workers {
+        let p = dir.join(format!("ckpt_r0_w{rank}.bin"));
+        assert!(p.exists(), "missing {}", p.display());
+        assert!(std::fs::metadata(&p).unwrap().len() > 0);
+    }
+    assert!(rep.shape.checkpoints >= 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn config_validation_rejects_nonsense() {
+    let bad_workers = ClusterConfig { workers: 0, ..base_cfg() };
+    assert!(run_cluster(&bad_workers).is_err());
+    let bad_rank = ClusterConfig {
+        fail: Some(FailureInjection {
+            rank: 9,
+            round: 1,
+            mode: FailMode::Kill,
+        }),
+        ..base_cfg()
+    };
+    assert!(run_cluster(&bad_rank).is_err());
+    let bad_algo = ClusterConfig { spec: "hdrf".into(), ..base_cfg() };
+    assert!(run_cluster(&bad_algo).is_err());
+    let bad_source = ClusterConfig {
+        sssp_source: Some(1_000_000),
+        ..base_cfg()
+    };
+    assert!(run_cluster(&bad_source).is_err());
+}
