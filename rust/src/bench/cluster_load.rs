@@ -2,7 +2,9 @@
 //!
 //! Runs the real coordinator + in-process workers (threads over
 //! loopback TCP — a bench binary must not respawn itself) through a
-//! clean partitioning + SSSP run, then through a kill-and-recover run,
+//! clean partitioning + SSSP run, a kill-and-recover run, and a
+//! seeded chaos run under a wire fault plan (owners must reproduce
+//! the clean run bit-for-bit in all three),
 //! reporting round latency, wire bytes per phase (measured vs the
 //! [`WireModel`](crate::cluster::cost::WireModel) prediction), and
 //! recovery wall-clock. Emits `BENCH_cluster.json` (override with
@@ -13,6 +15,7 @@ use crate::bench::{fmt_f, Table};
 use crate::cluster::runtime::{
     run_cluster, ClusterConfig, FailMode, FailureInjection,
 };
+use crate::util::fault::FaultPlan;
 
 /// Nearest-rank percentile of an ascending-sorted sample.
 fn percentile(sorted: &[f64], q: f64) -> f64 {
@@ -102,6 +105,34 @@ pub fn cluster_load_with(quick: bool) {
         frep.measured.recovery
     );
 
+    // the chaos path: the same run under a seeded wire fault plan —
+    // the owners must still come out bit-identical to the clean run
+    let plan = FaultPlan::parse(
+        "fault:seed=17,drop=0.005,corrupt=0.003,short_read=0.003",
+    )
+    .expect("chaos plan");
+    let chaos_cfg = ClusterConfig {
+        fault: Some(plan),
+        checkpoint_every: 2,
+        max_recoveries: 64,
+        ..cfg.clone()
+    };
+    let crep = run_cluster(&chaos_cfg).expect("chaos cluster run");
+    assert_eq!(
+        crep.partition.owner, rep.partition.owner,
+        "chaos run must reproduce the clean owners bit-for-bit"
+    );
+    let injected = crep.faults;
+    println!(
+        "chaos: {} faults absorbed ({} drops, {} corruptions, {} short \
+         reads), {} recoveries, owners reproduced",
+        injected.total(),
+        injected.drops,
+        injected.corruptions,
+        injected.short_reads,
+        crep.recoveries
+    );
+
     let mut sink = JsonSink::new();
     sink.text("bench", "cluster_load");
     sink.num("quick", if quick { 1.0 } else { 0.0 });
@@ -121,6 +152,17 @@ pub fn cluster_load_with(quick: bool) {
     sink.num("recovery_count", frep.recoveries as f64);
     sink.num("recovery_ms", recovery_ms);
     sink.num("recovery_bytes", frep.measured.recovery as f64);
+    sink.num("chaos_faults_total", injected.total() as f64);
+    sink.num("chaos_drops", injected.drops as f64);
+    sink.num("chaos_delays", injected.delays as f64);
+    sink.num("chaos_corruptions", injected.corruptions as f64);
+    sink.num("chaos_short_reads", injected.short_reads as f64);
+    sink.num("chaos_torn_writes", injected.torn_writes as f64);
+    sink.num("chaos_recoveries", crep.recoveries as f64);
+    sink.num(
+        "chaos_recovery_ms",
+        crep.recovery_ms.iter().sum::<f64>(),
+    );
 
     let out = std::env::var("DFEP_CLUSTER_OUT")
         .unwrap_or_else(|_| "BENCH_cluster.json".to_string());

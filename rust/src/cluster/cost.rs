@@ -95,7 +95,8 @@ impl CostModel {
 }
 
 /// Measured wire traffic of a `cluster::runtime` run, by protocol phase,
-/// in bytes as framed on the wire (payload + the 4-byte frame prefix).
+/// in bytes as framed on the wire (payload + the 16-byte v2 frame
+/// header: magic, length, checksum).
 /// The coordinator sits at the center of the star topology, so counting
 /// its sends and receives captures every byte the cluster moves.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -205,8 +206,8 @@ impl WirePrediction {
 /// `tests/cluster.rs`.
 ///
 /// Constants mirror the documented encoding (DESIGN.md "Distributed
-/// runtime"): every message costs `frame_overhead` (4-byte frame prefix +
-/// 2-byte version + 1-byte tag) plus its fixed fields plus its
+/// runtime"): every message costs `frame_overhead` (16-byte v2 frame
+/// header + 2-byte version + 1-byte tag) plus its fixed fields plus its
 /// variable-length payload. All phases except `checkpoint` are exact by
 /// construction; a checkpoint blob additionally carries the sparse
 /// ledger section (holder lists + money cells, `4 + 12` bytes per
@@ -216,7 +217,8 @@ impl WirePrediction {
 /// documented factor of it).
 #[derive(Clone, Debug)]
 pub struct WireModel {
-    /// Frame prefix + version + tag, paid by every message.
+    /// Frame header (magic + length + checksum) + version + tag, paid
+    /// by every message.
     pub frame_overhead: f64,
     /// One encoded bid (`u32` edge, `u32` partition, 2 × `f64`).
     pub bid_bytes: f64,
@@ -257,7 +259,7 @@ pub struct WireModel {
 impl Default for WireModel {
     fn default() -> Self {
         WireModel {
-            frame_overhead: 7.0,
+            frame_overhead: 19.0,
             bid_bytes: 24.0,
             edge_bytes: 8.0,
             owner_bytes: 4.0,
@@ -358,25 +360,25 @@ mod tests {
             ..ClusterShape::default()
         };
         let p = WireModel::default().predict(&s);
-        // load: 2 * (7 + 61 + 8*6) = 232
-        assert_eq!(p.load, 232.0);
-        // control: 2*(7+4) + 3*2*(14 + 9 + 24) + 2*7 = 22 + 282 + 14
-        assert_eq!(p.control, 318.0);
-        // bids_up: 3*2*(7+12) + 24*10 = 114 + 240 = 354
-        assert_eq!(p.bids_up, 354.0);
-        // bids_down: 114 + 240*2 = 594
-        assert_eq!(p.bids_down, 594.0);
+        // load: 2 * (19 + 61 + 8*6) = 256
+        assert_eq!(p.load, 256.0);
+        // control: 2*(19+4) + 3*2*(38 + 9 + 24) + 2*19 = 46 + 426 + 38
+        assert_eq!(p.control, 510.0);
+        // bids_up: 3*2*(19+12) + 24*10 = 186 + 240 = 426
+        assert_eq!(p.bids_up, 426.0);
+        // bids_down: 186 + 240*2 = 666
+        assert_eq!(p.bids_down, 666.0);
         assert_eq!(p.checkpoint, 0.0);
-        // merge: 7 + (7 + 4 + 4*6) = 42
-        assert_eq!(p.merge, 42.0);
+        // merge: 19 + (19 + 4 + 4*6) = 66
+        assert_eq!(p.merge, 66.0);
         assert_eq!(p.sssp, 0.0);
-        assert!((p.total() - (232.0 + 318.0 + 354.0 + 594.0 + 42.0)).abs()
+        assert!((p.total() - (256.0 + 510.0 + 426.0 + 666.0 + 66.0)).abs()
             < 1e-9);
         // one checkpoint barrier on the same shape:
-        // 2*(14 + 8 + 12 + 51 + 4*6 + 4*5 + 16*4) + 4*12 = 2*193 + 48
+        // 2*(38 + 8 + 12 + 51 + 4*6 + 4*5 + 16*4) + 4*12 = 2*217 + 48
         let s2 = ClusterShape { checkpoints: 1, ..s };
         let p2 = WireModel::default().predict(&s2);
-        assert_eq!(p2.checkpoint, 434.0);
+        assert_eq!(p2.checkpoint, 482.0);
     }
 
     #[test]

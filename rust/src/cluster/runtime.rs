@@ -38,18 +38,41 @@
 //! [`ClusterConfig::checkpoint_every`] rounds, and once at SSSP entry.
 //! A blob is replayable state: round counter, rng stream position,
 //! replicated vectors, and the owned sparse ledger (holder lists +
-//! cells). Blobs are held in coordinator memory (and optionally written
-//! via [`graph::io::write_blob`](crate::graph::io::write_blob)); a
-//! checkpoint replaces the previous one only after every blob has
-//! arrived, so a failure mid-checkpoint cannot corrupt the floor.
+//! cells). Blobs are held in coordinator memory (and optionally
+//! persisted as checksummed
+//! [checked blobs](crate::graph::io::write_blob_checked) plus a
+//! `ckpt_r<N>_meta.bin` metadata file, written last); a checkpoint
+//! replaces the previous one only after every blob has arrived, so a
+//! failure mid-checkpoint cannot corrupt the floor. Persistence is
+//! best-effort — a failed disk write is logged and the run continues
+//! on the in-memory floor. With [`ClusterConfig::resume`], boot scans
+//! the checkpoint directory and rolls back to the newest round whose
+//! metadata *and* every rank blob verify, skipping torn or bit-rotted
+//! rounds instead of failing on them.
 //!
-//! On a worker failure — dropped connection or read timeout (a stall) —
-//! the coordinator respawns the rank, re-runs `Init` with the failure
-//! plan disabled, restores *all* workers from the last checkpoint
-//! (global rollback), and flushes stale in-flight frames with a
-//! `Barrier` token round-trip. Deterministic replay from the checkpoint
-//! then reproduces the exact same run, so a recovered run's owners are
-//! bit-identical to an undisturbed one.
+//! On a worker failure — dropped connection, read timeout (a stall),
+//! or a corrupt frame (checksum/magic mismatch) — the coordinator
+//! respawns the rank, re-runs `Init` with the failure plan disabled,
+//! restores *all* workers from the last checkpoint (global rollback),
+//! and flushes stale in-flight frames with a `Barrier` token
+//! round-trip. A further failure mid-recovery restarts recovery
+//! against the same [`ClusterConfig::max_recoveries`] budget.
+//! Deterministic replay from the checkpoint then reproduces the exact
+//! same run, so a recovered run's owners are bit-identical to an
+//! undisturbed one.
+//!
+//! # Fault plane
+//!
+//! [`ClusterConfig::fault`] arms a seeded
+//! [`FaultPlan`](crate::util::fault::FaultPlan) at the coordinator's
+//! two I/O chokepoints: every connection's frame reads/writes (tagged
+//! `rank | incarnation << 32`, so a respawned rank draws a fresh but
+//! still seed-determined fault stream) and the checkpoint disk sink.
+//! Arms attach only *after* the round-0 checkpoint lands, so every
+//! injected failure has a rollback floor; the same seed replays the
+//! same fault sequence, and the final owners remain bit-identical to a
+//! fault-free run (or the run ends in a typed error — never a wrong
+//! answer).
 //!
 //! # Measured wire bytes
 //!
@@ -63,8 +86,9 @@
 
 use std::io::{BufReader, BufWriter};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::cluster::cost::{
@@ -72,12 +96,16 @@ use crate::cluster::cost::{
 };
 use crate::cluster::proto::{CoordMsg, Dec, Enc, InitMsg, WorkerMsg};
 use crate::coordinator::runs::resolve_graph;
+use crate::graph::io::{read_blob_checked, write_blob_checked_with};
 use crate::graph::{Graph, GraphBuilder};
 use crate::partition::dfep::{self, Bid, Dfep, DfepState};
 use crate::partition::registry::Resolved;
 use crate::partition::spec::PartitionerSpec;
 use crate::partition::{check_k, EdgePartition};
 use crate::util::error::{Error, ErrorKind, Result};
+use crate::util::fault::{
+    FaultArm, FaultCounters, FaultPlan, FaultSnapshot, RetryPolicy,
+};
 use crate::util::frame;
 use crate::util::rng::Rng;
 use crate::{anyhow, bail};
@@ -88,8 +116,9 @@ const SNAP_VERSION: u16 = 1;
 const SNAP_PHASE_PARTITION: u8 = 0;
 /// Blob phase tag: SSSP phase entered (partition finalized).
 const SNAP_PHASE_SSSP: u8 = 1;
-/// How long the coordinator waits for a (re)spawned worker to connect.
-const BOOT_TIMEOUT: Duration = Duration::from_secs(30);
+/// Fault-arm tag for the checkpoint disk sink (connection arms are
+/// tagged `rank | incarnation << 32`, which never collides with this).
+const DISK_ARM_TAG: u64 = u64::MAX;
 /// Stale-frame drain cap per worker during a barrier (protocol-bug
 /// tripwire, not a real limit — one failure strands at most a few
 /// frames per worker).
@@ -169,7 +198,17 @@ pub struct ClusterConfig {
     pub sssp_source: Option<u32>,
     /// Scripted failure, if any.
     pub fail: Option<FailureInjection>,
-    /// Coordinator read timeout per worker reply — the stall detector.
+    /// Seeded fault plan injected coordinator-side at the frame and
+    /// checkpoint-disk chokepoints (`None` = zero-overhead clean run).
+    /// Arms attach only after the round-0 checkpoint, so every injected
+    /// failure has a rollback floor.
+    pub fault: Option<FaultPlan>,
+    /// Scan [`checkpoint_dir`](Self::checkpoint_dir) at boot and resume
+    /// from the newest intact persisted checkpoint, skipping corrupt or
+    /// torn rounds.
+    pub resume: bool,
+    /// Coordinator read timeout per worker reply — the stall detector;
+    /// every other deadline derives from it (must be `>= 1`).
     pub worker_timeout_ms: u64,
     /// Run workers as in-process threads over real loopback sockets
     /// instead of spawned child processes (required inside test
@@ -194,10 +233,69 @@ impl Default for ClusterConfig {
             checkpoint_dir: None,
             sssp_source: None,
             fail: None,
+            fault: None,
+            resume: false,
             worker_timeout_ms: 10_000,
             in_process: false,
             max_recoveries: 2,
         }
+    }
+}
+
+impl ClusterConfig {
+    /// The stall detector as a [`Duration`]: the coordinator's read
+    /// timeout per worker reply.
+    pub fn worker_timeout(&self) -> Duration {
+        Duration::from_millis(self.worker_timeout_ms.max(1))
+    }
+
+    /// How long a (re)spawned worker gets to dial back: 3x the stall
+    /// detector, floored at one second (spawning a process is slower
+    /// than answering a frame).
+    pub fn boot_timeout(&self) -> Duration {
+        (self.worker_timeout() * 3).max(Duration::from_secs(1))
+    }
+
+    /// Grace period for children to exit after `Shutdown` before they
+    /// are killed: half the stall detector, floored at 100ms.
+    pub fn shutdown_grace(&self) -> Duration {
+        (self.worker_timeout() / 2).max(Duration::from_millis(100))
+    }
+
+    /// Validate everything checkable without resolving the graph:
+    /// partition count, worker count, the timeout every deadline
+    /// derives from, the failure script, and the partitioner spec.
+    pub fn validate(&self) -> Result<()> {
+        check_k(self.k)?;
+        if self.workers == 0 {
+            return Err(invalid("cluster needs at least one worker".into()));
+        }
+        if self.worker_timeout_ms == 0 {
+            return Err(invalid(
+                "worker_timeout_ms must be >= 1: it is the failure \
+                 detector, and the boot and shutdown deadlines derive \
+                 from it"
+                    .into(),
+            ));
+        }
+        if let Some(f) = &self.fail {
+            if f.rank >= self.workers {
+                return Err(invalid(format!(
+                    "failure rank {} out of range (workers {})",
+                    f.rank, self.workers
+                )));
+            }
+        }
+        let spec = PartitionerSpec::parse(&self.spec)?;
+        if spec.name() != "dfep" {
+            return Err(Error::msg(format!(
+                "the cluster runtime drives the dfep algorithm only \
+                 (got '{}')",
+                spec.name()
+            ))
+            .with_kind(ErrorKind::InvalidSpec));
+        }
+        Ok(())
     }
 }
 
@@ -224,6 +322,15 @@ pub struct ClusterReport {
     /// Wall-clock per recovery (respawn + rollback + drain),
     /// milliseconds.
     pub recovery_ms: Vec<f64>,
+    /// Injected faults that actually fired, by kind (all zero when
+    /// [`ClusterConfig::fault`] is `None`).
+    pub faults: FaultSnapshot,
+    /// Round the run rolled back to when [`ClusterConfig::resume`]
+    /// found an intact persisted checkpoint.
+    pub resumed_round: Option<u64>,
+    /// Persisted checkpoint rounds the resume scan rejected as corrupt,
+    /// torn, or shape-incompatible.
+    pub skipped_checkpoints: usize,
 }
 
 // ---------------------------------------------------------------------
@@ -231,11 +338,29 @@ pub struct ClusterReport {
 // ---------------------------------------------------------------------
 
 /// Entry point of `repro worker --connect HOST:PORT`: dial the
-/// coordinator and serve its messages until `Shutdown` or EOF.
+/// coordinator — with bounded, deterministically-jittered retries,
+/// since a respawned worker can race the coordinator's accept loop —
+/// then serve its messages until `Shutdown` or EOF.
 pub fn worker_main(connect: &str) -> Result<()> {
-    let stream = TcpStream::connect(connect)
-        .map_err(|e| terr(format!("connect to coordinator {connect}: {e}")))?;
-    serve_worker(stream)
+    let policy = RetryPolicy::default();
+    let mut rng = Rng::new(
+        frame::fnv1a64(connect.as_bytes()) ^ std::process::id() as u64,
+    );
+    let mut last = String::from("no attempt made");
+    for attempt in 0..policy.attempts {
+        match TcpStream::connect(connect) {
+            Ok(stream) => return serve_worker(stream),
+            Err(e) => last = e.to_string(),
+        }
+        if attempt + 1 < policy.attempts {
+            std::thread::sleep(policy.delay(attempt, &mut rng));
+        }
+    }
+    Err(terr(format!(
+        "connect to coordinator {connect}: {last} (gave up after {} \
+         attempts)",
+        policy.attempts
+    )))
 }
 
 /// SSSP-phase replica: the finalized owner vector plus this worker's
@@ -689,11 +814,13 @@ fn plain<T>(r: Result<T, RunErr>) -> Result<T> {
     })
 }
 
-/// One worker connection (+ the child process handle in spawn mode).
+/// One worker connection (+ the child process handle in spawn mode,
+/// + this connection's fault-injection arm when a plan is active).
 struct Conn {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
     child: Option<Child>,
+    arm: Option<FaultArm>,
 }
 
 /// Launch a worker: an in-process thread dialing back over loopback,
@@ -721,44 +848,54 @@ fn spawn_worker(addr: SocketAddr, in_process: bool) -> Result<Option<Child>> {
 
 /// Accept the next worker connection, polling so a worker that never
 /// dials (failed spawn) times out instead of hanging the coordinator.
+/// Every error names the rank and the protocol phase (`"boot"` /
+/// `"recovery"`) so a failed accept is attributable.
 fn accept_worker(
     listener: &TcpListener,
     read_timeout: Duration,
+    boot_timeout: Duration,
     child: Option<Child>,
+    rank: usize,
+    phase: &str,
 ) -> Result<Conn> {
     listener
         .set_nonblocking(true)
         .map_err(|e| terr(format!("listener nonblocking: {e}")))?;
-    let deadline = Instant::now() + BOOT_TIMEOUT;
+    let deadline = Instant::now() + boot_timeout;
     let stream = loop {
         match listener.accept() {
             Ok((s, _)) => break s,
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                 if Instant::now() > deadline {
-                    return Err(terr(
-                        "worker did not connect within the boot timeout"
-                            .into(),
-                    ));
+                    return Err(terr(format!(
+                        "worker {rank} did not connect within the boot \
+                         timeout ({phase}, {:.1}s)",
+                        boot_timeout.as_secs_f64()
+                    )));
                 }
                 std::thread::sleep(Duration::from_millis(2));
             }
-            Err(e) => return Err(terr(format!("accept worker: {e}"))),
+            Err(e) => {
+                return Err(terr(format!(
+                    "accept worker {rank} ({phase}): {e}"
+                )))
+            }
         }
     };
     let _ = listener.set_nonblocking(false);
     stream
         .set_nonblocking(false)
-        .map_err(|e| terr(format!("stream blocking: {e}")))?;
+        .map_err(|e| terr(format!("worker {rank} stream blocking: {e}")))?;
     stream
         .set_nodelay(true)
-        .map_err(|e| terr(format!("set_nodelay: {e}")))?;
+        .map_err(|e| terr(format!("worker {rank} set_nodelay: {e}")))?;
     stream
         .set_read_timeout(Some(read_timeout))
-        .map_err(|e| terr(format!("set_read_timeout: {e}")))?;
-    let reader = BufReader::new(
-        stream.try_clone().map_err(|e| terr(format!("clone stream: {e}")))?,
-    );
-    Ok(Conn { reader, writer: BufWriter::new(stream), child })
+        .map_err(|e| terr(format!("worker {rank} set_read_timeout: {e}")))?;
+    let reader = BufReader::new(stream.try_clone().map_err(|e| {
+        terr(format!("worker {rank} clone stream: {e}"))
+    })?);
+    Ok(Conn { reader, writer: BufWriter::new(stream), child, arm: None })
 }
 
 /// Recovery floor metadata, mirrored coordinator-side alongside the
@@ -769,6 +906,74 @@ enum CkptMeta {
     Sssp,
 }
 
+/// Persisted-checkpoint metadata codec version.
+const META_VERSION: u16 = 1;
+
+/// Encode coordinator-side checkpoint metadata for persistence,
+/// alongside the run shape a resume must match. SSSP checkpoints
+/// return `None`: resume targets the partition phase only (re-running
+/// SSSP from the finalized owners is cheaper than a meta schema for
+/// it).
+fn encode_meta(
+    meta: &CkptMeta,
+    workers: usize,
+    k: usize,
+    n: usize,
+    m: usize,
+) -> Option<Vec<u8>> {
+    let CkptMeta::Partition { round, free_edges, stall, reseed_next } = meta
+    else {
+        return None;
+    };
+    let mut e = Enc::default();
+    e.u16(META_VERSION);
+    e.u64(*round);
+    e.u64(*free_edges);
+    e.u32(*stall);
+    e.u8(*reseed_next as u8);
+    e.u32(workers as u32);
+    e.u32(k as u32);
+    e.u32(n as u32);
+    e.u32(m as u32);
+    Some(e.buf)
+}
+
+/// Decoded persisted-checkpoint metadata plus the shape it was taken
+/// under.
+struct DiskMeta {
+    meta: CkptMeta,
+    workers: usize,
+    k: usize,
+    n: usize,
+    m: usize,
+}
+
+/// Inverse of [`encode_meta`]; truncation, trailing bytes, and version
+/// skew are all errors (the resume scan skips the round).
+fn decode_meta(buf: &[u8]) -> Result<DiskMeta> {
+    let mut d = Dec::new(buf);
+    let ver = d.u16()?;
+    if ver != META_VERSION {
+        bail!("checkpoint meta version {ver} (want {META_VERSION})");
+    }
+    let round = d.u64()?;
+    let free_edges = d.u64()?;
+    let stall = d.u32()?;
+    let reseed_next = d.u8()? != 0;
+    let workers = d.u32()? as usize;
+    let k = d.u32()? as usize;
+    let n = d.u32()? as usize;
+    let m = d.u32()? as usize;
+    d.done()?;
+    Ok(DiskMeta {
+        meta: CkptMeta::Partition { round, free_edges, stall, reseed_next },
+        workers,
+        k,
+        n,
+        m,
+    })
+}
+
 struct Coordinator<'a> {
     cfg: &'a ClusterConfig,
     tune: Dfep,
@@ -776,6 +981,12 @@ struct Coordinator<'a> {
     listener: TcpListener,
     addr: SocketAddr,
     conns: Vec<Conn>,
+    /// Per-rank respawn count; fault-arm tags mix it in so a respawned
+    /// connection draws a fresh (still seed-determined) fault stream.
+    incarnations: Vec<u64>,
+    fault_counters: Arc<FaultCounters>,
+    /// Fault arm over the checkpoint disk sink.
+    disk_arm: Option<FaultArm>,
     bytes: WireBytes,
     shape: ClusterShape,
     ckpt_blobs: Vec<Vec<u8>>,
@@ -784,6 +995,8 @@ struct Coordinator<'a> {
     barrier_token: u64,
     round_ms: Vec<f64>,
     recovery_ms: Vec<f64>,
+    resumed_round: Option<u64>,
+    skipped_checkpoints: usize,
 }
 
 impl<'a> Coordinator<'a> {
@@ -802,6 +1015,18 @@ impl<'a> Coordinator<'a> {
         }
     }
 
+    /// (Re)arm a connection's deterministic fault stream and bump its
+    /// incarnation. No-op (beyond the bump) when no plan is configured.
+    fn arm_conn(&mut self, rank: usize) {
+        let inc = self.incarnations[rank];
+        self.incarnations[rank] += 1;
+        if let Some(plan) = &self.cfg.fault {
+            let tag = (inc << 32) | rank as u64;
+            self.conns[rank].arm =
+                Some(plan.arm(tag, Arc::clone(&self.fault_counters)));
+        }
+    }
+
     fn send(
         &mut self,
         rank: usize,
@@ -810,29 +1035,33 @@ impl<'a> Coordinator<'a> {
     ) -> Result<(), RunErr> {
         let payload = msg.encode();
         self.account(phase, frame::wire_len(payload.len()));
-        frame::write_frame(&mut self.conns[rank].writer, &payload).map_err(
-            |e| RunErr::Worker {
+        let conn = &mut self.conns[rank];
+        frame::write_frame_with(&mut conn.writer, &payload, conn.arm.as_mut())
+            .map_err(|e| RunErr::Worker {
                 rank,
                 err: terr(format!("send to worker {rank}: {e}")),
-            },
-        )
+            })
     }
 
     fn recv(&mut self, rank: usize, phase: Phase) -> Result<WorkerMsg, RunErr> {
-        let payload = frame::read_frame(&mut self.conns[rank].reader)
-            .map_err(|e| {
-                let what = if e.is_timeout() {
-                    "timed out waiting for"
-                } else if e.is_eof() {
-                    "lost connection to"
-                } else {
-                    "read error from"
-                };
-                RunErr::Worker {
-                    rank,
-                    err: terr(format!("{what} worker {rank}: {e}")),
-                }
-            })?;
+        let conn = &mut self.conns[rank];
+        let payload =
+            frame::read_frame_with(&mut conn.reader, conn.arm.as_mut())
+                .map_err(|e| {
+                    let what = if e.is_timeout() {
+                        "timed out waiting for"
+                    } else if e.is_eof() {
+                        "lost connection to"
+                    } else if e.is_corrupt() {
+                        "corrupt frame from"
+                    } else {
+                        "read error from"
+                    };
+                    RunErr::Worker {
+                        rank,
+                        err: terr(format!("{what} worker {rank}: {e}")),
+                    }
+                })?;
         self.account(phase, frame::wire_len(payload.len()));
         WorkerMsg::decode(&payload)
             .map_err(|err| RunErr::Worker { rank, err })
@@ -868,11 +1097,16 @@ impl<'a> Coordinator<'a> {
     /// the recovery floor, so even a first-round failure has a rollback
     /// target.
     fn boot(&mut self) -> Result<()> {
-        let timeout =
-            Duration::from_millis(self.cfg.worker_timeout_ms.max(1));
-        for _ in 0..self.cfg.workers {
+        for rank in 0..self.cfg.workers {
             let child = spawn_worker(self.addr, self.cfg.in_process)?;
-            let conn = accept_worker(&self.listener, timeout, child)?;
+            let conn = accept_worker(
+                &self.listener,
+                self.cfg.worker_timeout(),
+                self.cfg.boot_timeout(),
+                child,
+                rank,
+                "boot",
+            )?;
             self.conns.push(conn);
         }
         for rank in 0..self.cfg.workers {
@@ -891,6 +1125,11 @@ impl<'a> Coordinator<'a> {
             stall: 0,
             reseed_next: false,
         }))?;
+        // arm the fault plan only now: everything injected from here on
+        // has (at least) the round-0 floor to roll back to
+        for rank in 0..self.cfg.workers {
+            self.arm_conn(rank);
+        }
         Ok(())
     }
 
@@ -919,20 +1158,18 @@ impl<'a> Coordinator<'a> {
                 }
             }
         }
-        if let Some(dir) = &self.cfg.checkpoint_dir {
-            std::fs::create_dir_all(dir).map_err(|e| {
-                RunErr::Fatal(
-                    Error::msg(format!(
-                        "create checkpoint dir {}: {e}",
-                        dir.display()
-                    ))
-                    .with_kind(ErrorKind::Io),
-                )
-            })?;
-            for (rank, blob) in blobs.iter().enumerate() {
-                let path = dir.join(format!("ckpt_r{round}_w{rank}.bin"));
-                crate::graph::io::write_blob(&path, blob)
-                    .map_err(RunErr::Fatal)?;
+        if let Some(dir) = self.cfg.checkpoint_dir.clone() {
+            if let Err(e) =
+                self.persist_checkpoint(&dir, round, &blobs, &meta)
+            {
+                // best-effort: recovery runs off the in-memory floor;
+                // losing the on-disk copy only narrows what a later
+                // --resume can find
+                eprintln!(
+                    "checkpoint r{round}: persist to {} failed \
+                     (continuing on the in-memory floor): {e}",
+                    dir.display()
+                );
             }
         }
         self.ckpt_blobs = blobs;
@@ -944,67 +1181,138 @@ impl<'a> Coordinator<'a> {
         Ok(())
     }
 
+    /// Write one checkpoint round to disk: a checksummed framed blob
+    /// per rank, then the metadata file *last* — a resume trusts a
+    /// round only when the meta and every rank blob verify.
+    fn persist_checkpoint(
+        &mut self,
+        dir: &Path,
+        round: u64,
+        blobs: &[Vec<u8>],
+        meta: &CkptMeta,
+    ) -> Result<()> {
+        std::fs::create_dir_all(dir).map_err(|e| {
+            Error::msg(format!(
+                "create checkpoint dir {}: {e}",
+                dir.display()
+            ))
+            .with_kind(ErrorKind::Io)
+        })?;
+        for (rank, blob) in blobs.iter().enumerate() {
+            let path = dir.join(format!("ckpt_r{round}_w{rank}.bin"));
+            write_blob_checked_with(&path, blob, self.disk_arm.as_mut())?;
+        }
+        if let Some(bytes) = encode_meta(
+            meta,
+            self.cfg.workers,
+            self.cfg.k,
+            self.g.vertex_count(),
+            self.g.edge_count(),
+        ) {
+            let path = dir.join(format!("ckpt_r{round}_meta.bin"));
+            write_blob_checked_with(&path, &bytes, self.disk_arm.as_mut())?;
+        }
+        Ok(())
+    }
+
     /// Respawn a failed rank, restore every worker from the last
     /// checkpoint (global rollback), and drain stale in-flight frames
-    /// with a barrier token. After this, deterministic replay continues
-    /// from the checkpoint's control state.
+    /// with a barrier token. A *further* worker failure mid-recovery —
+    /// another dead rank, or an injected fault on the restore traffic —
+    /// restarts recovery against the same budget instead of aborting
+    /// the run. After this, deterministic replay continues from the
+    /// checkpoint's control state.
     fn recover(&mut self, dead: usize, err: Error) -> Result<()> {
-        self.recoveries += 1;
-        if self.recoveries > self.cfg.max_recoveries {
-            return Err(terr(format!(
-                "recovery budget exhausted ({} failures, budget {}): {err}",
-                self.recoveries, self.cfg.max_recoveries
-            )));
+        let (mut dead, mut err) = (dead, err);
+        loop {
+            self.recoveries += 1;
+            if self.recoveries > self.cfg.max_recoveries {
+                return Err(terr(format!(
+                    "recovery budget exhausted ({} failures, budget \
+                     {}): {err}",
+                    self.recoveries, self.cfg.max_recoveries
+                )));
+            }
+            let t0 = Instant::now();
+            match self.recover_once(dead) {
+                Ok(()) => {
+                    self.recovery_ms
+                        .push(t0.elapsed().as_secs_f64() * 1e3);
+                    return Ok(());
+                }
+                Err(RunErr::Worker { rank, err: e }) => {
+                    dead = rank;
+                    err = e;
+                }
+                Err(RunErr::Fatal(e)) => return Err(e),
+            }
         }
-        let t0 = Instant::now();
+    }
+
+    /// One recovery attempt: kill + respawn `dead`, re-init it, then
+    /// roll every worker back to the floor. Worker failures along the
+    /// way surface as `RunErr::Worker` so [`recover`](Self::recover)
+    /// can retry.
+    fn recover_once(&mut self, dead: usize) -> Result<(), RunErr> {
         if let Some(child) = self.conns[dead].child.as_mut() {
             let _ = child.kill();
             let _ = child.wait();
         }
-        let child = spawn_worker(self.addr, self.cfg.in_process)?;
-        let timeout =
-            Duration::from_millis(self.cfg.worker_timeout_ms.max(1));
+        let child = spawn_worker(self.addr, self.cfg.in_process)
+            .map_err(RunErr::Fatal)?;
         // replacing the Conn drops the dead streams; a stalled-but-alive
         // worker hits a broken pipe when it wakes and exits on its own
-        self.conns[dead] = accept_worker(&self.listener, timeout, child)?;
+        self.conns[dead] = accept_worker(
+            &self.listener,
+            self.cfg.worker_timeout(),
+            self.cfg.boot_timeout(),
+            child,
+            dead,
+            "recovery",
+        )
+        .map_err(|err| RunErr::Worker { rank: dead, err })?;
+        self.arm_conn(dead);
         let init = CoordMsg::Init(self.init_msg(dead, false));
-        plain(self.send(dead, &init, Phase::Recovery))?;
-        match plain(self.recv(dead, Phase::Recovery))? {
+        self.send(dead, &init, Phase::Recovery)?;
+        match self.recv(dead, Phase::Recovery)? {
             WorkerMsg::Ready { rank } if rank as usize == dead => {}
-            other => bail!(
-                "respawned worker {dead}: expected Ready, got {other:?}"
-            ),
+            other => {
+                return fatal(anyhow!(
+                    "respawned worker {dead}: expected Ready, got {other:?}"
+                ))
+            }
         }
+        self.rollback_all(Phase::Recovery)
+    }
+
+    /// Restore every worker from the in-memory floor, then flush stale
+    /// in-flight frames with a fresh barrier token round-trip.
+    fn rollback_all(&mut self, phase: Phase) -> Result<(), RunErr> {
         self.barrier_token += 1;
         let token = self.barrier_token;
         for rank in 0..self.conns.len() {
             let restore =
                 CoordMsg::Restore { blob: self.ckpt_blobs[rank].clone() };
-            plain(self.send(rank, &restore, Phase::Recovery))?;
-            plain(self.send(
-                rank,
-                &CoordMsg::Barrier { token },
-                Phase::Recovery,
-            ))?;
+            self.send(rank, &restore, phase)?;
+            self.send(rank, &CoordMsg::Barrier { token }, phase)?;
         }
         for rank in 0..self.conns.len() {
             let mut drained = 0usize;
             loop {
-                match plain(self.recv(rank, Phase::Recovery))? {
+                match self.recv(rank, phase)? {
                     WorkerMsg::BarrierAck { token: t } if t == token => break,
                     _stale => {
                         drained += 1;
                         if drained > DRAIN_LIMIT {
-                            bail!(
+                            return fatal(anyhow!(
                                 "worker {rank}: barrier {token} never \
                                  acknowledged"
-                            );
+                            ));
                         }
                     }
                 }
             }
         }
-        self.recovery_ms.push(t0.elapsed().as_secs_f64() * 1e3);
         Ok(())
     }
 }
@@ -1205,10 +1513,110 @@ impl<'a> Coordinator<'a> {
         Ok(dist)
     }
 
-    /// Full run: boot, partition (with recovery), finalize, optional
-    /// SSSP (with recovery).
+    /// Scan the checkpoint directory for the newest intact persisted
+    /// checkpoint — meta and *every* rank blob verifying — and roll the
+    /// booted cluster back to it. Corrupt, torn, or shape-incompatible
+    /// rounds are skipped with a note; if nothing survives, the run
+    /// simply starts fresh from round 0.
+    fn resume_from_disk(&mut self, dir: &Path) -> Result<()> {
+        let entries = match std::fs::read_dir(dir) {
+            Ok(e) => e,
+            Err(_) => return Ok(()), // no directory: nothing to resume
+        };
+        let mut rounds: Vec<u64> = Vec::new();
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(r) = name
+                .strip_prefix("ckpt_r")
+                .and_then(|s| s.strip_suffix("_meta.bin"))
+                .and_then(|s| s.parse::<u64>().ok())
+            {
+                rounds.push(r);
+            }
+        }
+        rounds.sort_unstable();
+        rounds.dedup();
+        for &round in rounds.iter().rev() {
+            match self.load_checkpoint(dir, round) {
+                Ok((meta, blobs)) => {
+                    self.ckpt_meta = meta;
+                    self.ckpt_blobs = blobs;
+                    match self.rollback_all(Phase::Recovery) {
+                        Ok(()) => {}
+                        Err(RunErr::Worker { rank, err }) => {
+                            self.recover(rank, err)?;
+                        }
+                        Err(RunErr::Fatal(e)) => return Err(e),
+                    }
+                    self.resumed_round = Some(round);
+                    return Ok(());
+                }
+                Err(e) => {
+                    self.skipped_checkpoints += 1;
+                    eprintln!(
+                        "resume: skipping persisted checkpoint \
+                         r{round}: {e}"
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Read and verify one persisted checkpoint round end-to-end:
+    /// checksummed meta, shape match against this run, then every rank
+    /// blob's checksum.
+    fn load_checkpoint(
+        &self,
+        dir: &Path,
+        round: u64,
+    ) -> Result<(CkptMeta, Vec<Vec<u8>>)> {
+        let meta_bytes = read_blob_checked(
+            &dir.join(format!("ckpt_r{round}_meta.bin")),
+        )?;
+        let dm = decode_meta(&meta_bytes)?;
+        let CkptMeta::Partition { round: meta_round, .. } = dm.meta else {
+            bail!("meta is not a partition-phase checkpoint");
+        };
+        if meta_round != round {
+            bail!("meta says round {meta_round}, filename says {round}");
+        }
+        let (n, m) = (self.g.vertex_count(), self.g.edge_count());
+        if dm.workers != self.cfg.workers
+            || dm.k != self.cfg.k
+            || dm.n != n
+            || dm.m != m
+        {
+            bail!(
+                "shape mismatch: checkpoint has workers/k/n/m = \
+                 {}/{}/{}/{}, this run has {}/{}/{n}/{m}",
+                dm.workers,
+                dm.k,
+                dm.n,
+                dm.m,
+                self.cfg.workers,
+                self.cfg.k
+            );
+        }
+        let mut blobs = Vec::with_capacity(dm.workers);
+        for rank in 0..dm.workers {
+            blobs.push(read_blob_checked(
+                &dir.join(format!("ckpt_r{round}_w{rank}.bin")),
+            )?);
+        }
+        Ok((dm.meta, blobs))
+    }
+
+    /// Full run: boot, optional resume-from-disk, partition (with
+    /// recovery), finalize, optional SSSP (with recovery).
     fn execute(&mut self) -> Result<(EdgePartition, Option<Vec<u32>>)> {
         self.boot()?;
+        if self.cfg.resume {
+            if let Some(dir) = self.cfg.checkpoint_dir.clone() {
+                self.resume_from_disk(&dir)?;
+            }
+        }
         let (rounds, owner_raw) = loop {
             match self.partition_phase() {
                 Ok(out) => break out,
@@ -1235,9 +1643,10 @@ impl<'a> Coordinator<'a> {
         for rank in 0..self.conns.len() {
             let _ = self.send(rank, &CoordMsg::Shutdown, Phase::Control);
         }
+        let grace = self.cfg.shutdown_grace();
         for conn in &mut self.conns {
             if let Some(child) = conn.child.as_mut() {
-                let deadline = Instant::now() + Duration::from_secs(5);
+                let deadline = Instant::now() + grace;
                 loop {
                     match child.try_wait() {
                         Ok(Some(_)) => break,
@@ -1311,27 +1720,8 @@ fn stitch_bids(
 /// spawns the workers itself, and tears everything down before
 /// returning.
 pub fn run_cluster(cfg: &ClusterConfig) -> Result<ClusterReport> {
-    check_k(cfg.k)?;
-    if cfg.workers == 0 {
-        return Err(invalid("cluster needs at least one worker".into()));
-    }
-    if let Some(f) = &cfg.fail {
-        if f.rank >= cfg.workers {
-            return Err(invalid(format!(
-                "failure rank {} out of range (workers {})",
-                f.rank, cfg.workers
-            )));
-        }
-    }
+    cfg.validate()?;
     let spec = PartitionerSpec::parse(&cfg.spec)?;
-    if spec.name() != "dfep" {
-        return Err(Error::msg(format!(
-            "the cluster runtime drives the dfep algorithm only (got \
-             '{}')",
-            spec.name()
-        ))
-        .with_kind(ErrorKind::InvalidSpec));
-    }
     let r = Resolved::of(&spec);
     let tune = Dfep {
         funding_cap: r.f64("cap"),
@@ -1363,6 +1753,11 @@ pub fn run_cluster(cfg: &ClusterConfig) -> Result<ClusterReport> {
             .with_kind(ErrorKind::Io)
     })?;
     let m = g.edge_count();
+    let fault_counters = FaultCounters::shared();
+    let disk_arm = cfg
+        .fault
+        .as_ref()
+        .map(|p| p.arm(DISK_ARM_TAG, Arc::clone(&fault_counters)));
     let mut co = Coordinator {
         cfg,
         tune,
@@ -1370,6 +1765,9 @@ pub fn run_cluster(cfg: &ClusterConfig) -> Result<ClusterReport> {
         listener,
         addr,
         conns: Vec::new(),
+        incarnations: vec![0; cfg.workers],
+        fault_counters,
+        disk_arm,
         bytes: WireBytes::default(),
         shape: ClusterShape {
             workers: cfg.workers,
@@ -1389,6 +1787,8 @@ pub fn run_cluster(cfg: &ClusterConfig) -> Result<ClusterReport> {
         barrier_token: 0,
         round_ms: Vec::new(),
         recovery_ms: Vec::new(),
+        resumed_round: None,
+        skipped_checkpoints: 0,
     };
     let result = co.execute();
     co.shutdown();
@@ -1404,6 +1804,9 @@ pub fn run_cluster(cfg: &ClusterConfig) -> Result<ClusterReport> {
         sssp_dist,
         round_ms: co.round_ms,
         recovery_ms: co.recovery_ms,
+        faults: co.fault_counters.snapshot(),
+        resumed_round: co.resumed_round,
+        skipped_checkpoints: co.skipped_checkpoints,
     })
 }
 
@@ -1527,6 +1930,82 @@ mod tests {
         let mut blob = wk.snapshot();
         blob.truncate(blob.len() - 1);
         assert!(wk.restore(&blob).is_err());
+    }
+
+    #[test]
+    fn config_validation_and_derived_deadlines() {
+        let ok = ClusterConfig { in_process: true, ..Default::default() };
+        ok.validate().unwrap();
+        // the stall detector is the root of every deadline; zero is out
+        let bad = ClusterConfig { worker_timeout_ms: 0, ..ok.clone() };
+        assert_eq!(
+            bad.validate().unwrap_err().kind(),
+            ErrorKind::InvalidRequest
+        );
+        // derived deadlines scale with it, with sane floors
+        let fast = ClusterConfig { worker_timeout_ms: 100, ..ok.clone() };
+        fast.validate().unwrap();
+        assert_eq!(fast.boot_timeout(), Duration::from_secs(1));
+        assert_eq!(fast.shutdown_grace(), Duration::from_millis(100));
+        let slow = ClusterConfig { worker_timeout_ms: 60_000, ..ok };
+        assert_eq!(slow.boot_timeout(), Duration::from_secs(180));
+        assert_eq!(slow.shutdown_grace(), Duration::from_secs(30));
+        // the defaults reproduce the previously hard-coded constants
+        let d = ClusterConfig { in_process: true, ..Default::default() };
+        assert_eq!(d.boot_timeout(), Duration::from_secs(30));
+        assert_eq!(d.shutdown_grace(), Duration::from_secs(5));
+    }
+
+    #[test]
+    fn disk_meta_roundtrips_and_rejects_corruption() {
+        let meta = CkptMeta::Partition {
+            round: 12,
+            free_edges: 345,
+            stall: 2,
+            reseed_next: true,
+        };
+        let bytes = encode_meta(&meta, 3, 8, 400, 1600).unwrap();
+        let dm = decode_meta(&bytes).unwrap();
+        assert_eq!((dm.workers, dm.k, dm.n, dm.m), (3, 8, 400, 1600));
+        let CkptMeta::Partition { round, free_edges, stall, reseed_next } =
+            dm.meta
+        else {
+            panic!("partition meta expected");
+        };
+        assert_eq!(
+            (round, free_edges, stall, reseed_next),
+            (12, 345, 2, true)
+        );
+        // SSSP checkpoints are deliberately not resumable
+        assert!(encode_meta(&CkptMeta::Sssp, 3, 8, 400, 1600).is_none());
+        // truncation, trailing bytes and version skew all fail loudly
+        assert!(decode_meta(&bytes[..bytes.len() - 1]).is_err());
+        let mut longer = bytes.clone();
+        longer.push(0);
+        assert!(decode_meta(&longer).is_err());
+        let mut wrong_ver = bytes.clone();
+        wrong_ver[0] = 99;
+        assert!(decode_meta(&wrong_ver).is_err());
+    }
+
+    #[test]
+    fn accept_timeout_error_names_rank_phase_and_kind() {
+        // nobody ever dials: the accept must time out with a typed
+        // Transport error attributing the rank and the protocol phase
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let err = accept_worker(
+            &listener,
+            Duration::from_millis(50),
+            Duration::from_millis(50),
+            None,
+            3,
+            "recovery",
+        )
+        .unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Transport);
+        let msg = err.to_string();
+        assert!(msg.contains("worker 3"), "{msg}");
+        assert!(msg.contains("recovery"), "{msg}");
     }
 
     #[test]

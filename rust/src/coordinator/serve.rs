@@ -58,12 +58,26 @@
 //! execution fans out through the ambient global pool. Nesting `run` on
 //! one pool deadlocks (see `util::pool`), so the two pools must stay
 //! distinct.
+//!
+//! ## Fault plane
+//!
+//! [`ServeConfig::fault`] arms a seeded
+//! [`FaultPlan`](crate::util::fault::FaultPlan) per accepted
+//! connection (tagged in dequeue order) over the server-side HTTP
+//! read/write paths. A corrupt request body (digest mismatch) answers
+//! 503 with kind [`ErrorKind::Transport`] and closes; injected read
+//! and write failures drop the connection. [`ServeClient`] retries
+//! transport-level failures — and 503 responses carrying kind
+//! `transport` — with deterministic jittered exponential backoff
+//! ([`RetryPolicy`]), while shed signals (`overloaded`, `busy`) pass
+//! through untouched. Fired-fault and corrupt-request counters ride on
+//! `/stats` (`fault_*`, `transport_corrupt`).
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
@@ -73,8 +87,10 @@ use crate::coordinator::batch::{BatchReport, BatchRequest, SharedPrep};
 use crate::coordinator::runs::{resolve_graph, PartitionRequest, RunReport};
 use crate::graph::Graph;
 use crate::util::error::{ErrorKind, Result};
+use crate::util::fault::{FaultArm, FaultCounters, FaultPlan, RetryPolicy};
 use crate::util::http::{self, Request, WireError};
 use crate::util::pool::ThreadPool;
+use crate::util::rng::Rng;
 use crate::util::timer::LatencyStat;
 
 /// The documented [`ErrorKind`] → HTTP status mapping (DESIGN.md
@@ -135,6 +151,9 @@ pub struct ServeConfig {
     pub cache_capacity: usize,
     /// Resolved-graph cache capacity in entries (FIFO eviction beyond).
     pub graph_capacity: usize,
+    /// Seeded fault plan armed per accepted connection over the HTTP
+    /// read/write paths (`None` = zero-overhead clean serving).
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for ServeConfig {
@@ -148,6 +167,7 @@ impl Default for ServeConfig {
             request_timeout_s: 30.0,
             cache_capacity: 256,
             graph_capacity: 8,
+            fault: None,
         }
     }
 }
@@ -188,6 +208,10 @@ struct Counters {
     shed_body_too_large: AtomicUsize,
     shed_timeout: AtomicUsize,
     shed_busy: AtomicUsize,
+    /// Requests rejected because the body digest did not verify
+    /// (real corruption or an injected fault) — answered 503
+    /// `transport`, which well-behaved clients retry.
+    transport_corrupt: AtomicUsize,
     responses_4xx: AtomicUsize,
     responses_5xx: AtomicUsize,
     latency: Mutex<[LatencyStat; ENDPOINTS.len()]>,
@@ -230,6 +254,11 @@ struct Inner {
     cache_cv: Condvar,
     graphs: Mutex<GraphCache>,
     stats: Counters,
+    /// Fired-fault tallies across every connection arm.
+    fault_counters: Arc<FaultCounters>,
+    /// Connection dequeue counter — the fault-arm tag, so each
+    /// connection draws its own deterministic fault stream.
+    conn_seq: AtomicU64,
 }
 
 /// The `repro serve` server. Cheap to clone (shared state behind an
@@ -265,6 +294,8 @@ impl Server {
                 cache_cv: Condvar::new(),
                 graphs: Mutex::new(GraphCache::default()),
                 stats: Counters::default(),
+                fault_counters: FaultCounters::shared(),
+                conn_seq: AtomicU64::new(0),
             }),
         })
     }
@@ -413,6 +444,10 @@ impl Inner {
         let Ok(read_half) = stream.try_clone() else {
             return;
         };
+        let mut arm = self.cfg.fault.as_ref().map(|p| {
+            let tag = self.conn_seq.fetch_add(1, Ordering::SeqCst);
+            p.arm(tag, Arc::clone(&self.fault_counters))
+        });
         let mut reader = BufReader::new(read_half);
         let mut writer = stream;
         let per_read = Duration::from_secs_f64(self.cfg.request_timeout_s.max(0.05));
@@ -441,12 +476,16 @@ impl Inner {
             // bytes are waiting: switch to the real per-read budget for
             // the span of this request
             let _ = reader.get_ref().set_read_timeout(Some(per_read));
-            let outcome = http::read_request(&mut reader, self.cfg.max_body_bytes);
+            let outcome = http::read_request_with(
+                &mut reader,
+                self.cfg.max_body_bytes,
+                arm.as_mut(),
+            );
             let _ = reader.get_ref().set_read_timeout(Some(POLL));
             match outcome {
                 Ok(None) => return,
                 Ok(Some(req)) => {
-                    if !self.respond(&req, &mut writer) {
+                    if !self.respond(&req, &mut writer, arm.as_mut()) {
                         return;
                     }
                     if !req.keep_alive || self.stop.load(Ordering::SeqCst) {
@@ -482,6 +521,19 @@ impl Inner {
                     let _ = http::write_response(&mut writer, 400, body.as_bytes(), false);
                     return;
                 }
+                Err(WireError::Corrupt(msg)) => {
+                    // the bytes parsed but the body digest did not
+                    // verify: the stream cannot be trusted past this
+                    // request, so answer 503 transport (retryable) and
+                    // close
+                    self.stats.transport_corrupt.fetch_add(1, Ordering::SeqCst);
+                    let body = error_body(
+                        &format!("corrupt request body: {msg}"),
+                        ErrorKind::Transport,
+                    );
+                    let _ = http::write_response(&mut writer, 503, body.as_bytes(), false);
+                    return;
+                }
                 Err(WireError::Io(_)) => return,
             }
         }
@@ -489,7 +541,12 @@ impl Inner {
 
     /// Route, execute and answer one parsed request; false when the
     /// response could not be written (connection is dead).
-    fn respond(&self, req: &Request, writer: &mut TcpStream) -> bool {
+    fn respond(
+        &self,
+        req: &Request,
+        writer: &mut TcpStream,
+        arm: Option<&mut FaultArm>,
+    ) -> bool {
         self.stats.requests.fetch_add(1, Ordering::SeqCst);
         self.stats.in_flight.fetch_add(1, Ordering::SeqCst);
         let t0 = Instant::now();
@@ -507,7 +564,8 @@ impl Inner {
         } else if status >= 400 {
             self.stats.responses_4xx.fetch_add(1, Ordering::SeqCst);
         }
-        http::write_response(writer, status, body.as_bytes(), req.keep_alive).is_ok()
+        http::write_response_with(writer, status, body.as_bytes(), req.keep_alive, arm)
+            .is_ok()
     }
 
     fn route(&self, req: &Request) -> (u16, String) {
@@ -906,6 +964,14 @@ impl Inner {
         sink.num("shed_body_too_large", load(&self.stats.shed_body_too_large));
         sink.num("shed_timeout", load(&self.stats.shed_timeout));
         sink.num("shed_busy", load(&self.stats.shed_busy));
+        sink.num("transport_corrupt", load(&self.stats.transport_corrupt));
+        sink.num("fault_active", self.cfg.fault.is_some() as u8 as f64);
+        let f = self.fault_counters.snapshot();
+        sink.num("fault_drops", f.drops as f64);
+        sink.num("fault_delays", f.delays as f64);
+        sink.num("fault_corruptions", f.corruptions as f64);
+        sink.num("fault_short_reads", f.short_reads as f64);
+        sink.num("fault_torn_writes", f.torn_writes as f64);
         sink.num("responses_4xx", load(&self.stats.responses_4xx));
         sink.num("responses_5xx", load(&self.stats.responses_5xx));
         let lat = *relock(&self.stats.latency);
@@ -926,12 +992,18 @@ fn error_body(msg: &str, kind: ErrorKind) -> String {
     sink.render()
 }
 
-/// A tiny blocking SDK client for a [`Server`]: keep-alive with one
-/// transparent reconnect (idle connections may be dropped by the server
-/// between requests).
+/// A tiny blocking SDK client for a [`Server`]: keep-alive, with
+/// bounded deterministically-jittered retries ([`RetryPolicy`]) over
+/// transport-level failures — dead connections, garbled exchanges, and
+/// 503 responses whose machine-readable kind is `transport`. Shed
+/// signals (`overloaded`, `busy`) are *not* retried here; they pass
+/// through so callers can apply their own admission policy.
 pub struct ServeClient {
     addr: SocketAddr,
     conn: Option<BufReader<TcpStream>>,
+    policy: RetryPolicy,
+    rng: Rng,
+    retries: u64,
 }
 
 /// Largest response body the client accepts (owners arrays scale with
@@ -940,37 +1012,84 @@ const CLIENT_MAX_BODY: usize = 256 << 20;
 
 impl ServeClient {
     /// A client for the server at `addr`. Connects lazily on the first
-    /// request.
+    /// request. Backoff jitter is seeded from the address, so a given
+    /// client's retry schedule is reproducible.
     pub fn connect(addr: SocketAddr) -> ServeClient {
-        ServeClient { addr, conn: None }
+        let seed =
+            crate::util::frame::fnv1a64(addr.to_string().as_bytes());
+        ServeClient {
+            addr,
+            conn: None,
+            policy: RetryPolicy::default(),
+            rng: Rng::new(seed),
+            retries: 0,
+        }
     }
 
-    /// One request/response exchange: `(status, body)`. Reconnects and
-    /// retries once if the pooled connection died.
+    /// Replace the retry policy (`attempts = 1` disables retries).
+    pub fn with_retry(mut self, policy: RetryPolicy) -> ServeClient {
+        self.policy = policy;
+        self
+    }
+
+    /// How many retry attempts (sleeps) this client has performed —
+    /// zero on an undisturbed connection.
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    /// One request/response exchange: `(status, body)`. Transport
+    /// failures retry on a fresh connection with jittered exponential
+    /// backoff, up to the policy's attempt budget; what comes back
+    /// after that is a typed [`ErrorKind::Transport`] error.
     pub fn request(&mut self, method: &str, target: &str, body: &[u8]) -> Result<(u16, String)> {
-        let mut last_err: Option<String> = None;
-        for _attempt in 0..2 {
+        let attempts = self.policy.attempts.max(1);
+        let mut last_err = String::from("no attempt made");
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                self.retries += 1;
+                std::thread::sleep(self.policy.delay(attempt - 1, &mut self.rng));
+            }
             if self.conn.is_none() {
-                let stream = TcpStream::connect(self.addr).map_err(|e| {
-                    anyhow!("connect {}: {e}", self.addr).with_kind(ErrorKind::Io)
-                })?;
-                let _ = stream.set_nodelay(true);
-                self.conn = Some(BufReader::new(stream));
+                match TcpStream::connect(self.addr) {
+                    Ok(stream) => {
+                        let _ = stream.set_nodelay(true);
+                        self.conn = Some(BufReader::new(stream));
+                    }
+                    Err(e) => {
+                        last_err = format!("connect {}: {e}", self.addr);
+                        continue;
+                    }
+                }
             }
             match self.exchange(method, target, body) {
-                Ok(out) => return Ok(out),
+                Ok((status, text)) => {
+                    if status == 503 {
+                        // 503 is retry-worthy only when the server says
+                        // the *exchange* was damaged (kind transport);
+                        // overloaded-shed 503s pass through untouched
+                        let (msg, kind) = parse_error_body(&text);
+                        if kind == ErrorKind::Transport {
+                            self.conn = None;
+                            last_err =
+                                format!("server answered 503 transport: {msg}");
+                            continue;
+                        }
+                    }
+                    return Ok((status, text));
+                }
                 Err(e) => {
-                    // drop the dead connection; retry once on a fresh one
+                    // drop the dead connection; retry on a fresh one
                     self.conn = None;
-                    last_err = Some(e);
+                    last_err = e;
                 }
             }
         }
         Err(anyhow!(
-            "request {method} {target} failed: {}",
-            last_err.unwrap_or_default()
+            "request {method} {target} failed after {attempts} \
+             attempts: {last_err}"
         )
-        .with_kind(ErrorKind::Io))
+        .with_kind(ErrorKind::Transport))
     }
 
     fn exchange(

@@ -14,7 +14,9 @@
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
 
-use crate::util::error::{Context, Result};
+use crate::util::error::{Context, ErrorKind, Result};
+use crate::util::fault::{FaultArm, WriteFault};
+use crate::util::frame::fnv1a64;
 
 use super::{Graph, GraphBuilder};
 
@@ -99,8 +101,8 @@ pub fn write_partition(owner: &[u32], path: &Path) -> Result<()> {
 }
 
 /// Atomically persist an opaque binary blob (cluster checkpoints): write
-/// to `<path>.tmp`, then rename over `path`, so a crash mid-write never
-/// leaves a truncated checkpoint where a valid one stood.
+/// to `<path>.tmp`, fsync, then rename over `path`, so a crash mid-write
+/// never leaves a truncated checkpoint where a valid one stood.
 pub fn write_blob(path: &Path, blob: &[u8]) -> Result<()> {
     let tmp = path.with_extension("tmp");
     {
@@ -109,6 +111,9 @@ pub fn write_blob(path: &Path, blob: &[u8]) -> Result<()> {
         let mut w = BufWriter::new(file);
         w.write_all(blob)?;
         w.flush()?;
+        w.get_ref()
+            .sync_all()
+            .with_context(|| format!("fsync {}", tmp.display()))?;
     }
     std::fs::rename(&tmp, path)
         .with_context(|| format!("rename into {}", path.display()))?;
@@ -118,6 +123,102 @@ pub fn write_blob(path: &Path, blob: &[u8]) -> Result<()> {
 /// Read back a blob written by [`write_blob`].
 pub fn read_blob(path: &Path) -> Result<Vec<u8>> {
     std::fs::read(path).with_context(|| format!("read {}", path.display()))
+}
+
+/// Magic tag leading every checked blob: ASCII `"BLB1"`, little-endian.
+pub const BLOB_MAGIC: u32 = u32::from_le_bytes(*b"BLB1");
+
+/// Header bytes of a checked blob (magic `u32` + length `u64` +
+/// fnv1a64 checksum `u64`, all little-endian).
+pub const BLOB_HEADER_BYTES: usize = 20;
+
+/// Persist a payload wrapped in a checked header ([`BLOB_MAGIC`],
+/// length, fnv1a64) via the atomic [`write_blob`] protocol, so
+/// [`read_blob_checked`] can tell an intact checkpoint from a torn or
+/// bit-rotted one.
+pub fn write_blob_checked(path: &Path, payload: &[u8]) -> Result<()> {
+    write_blob_checked_with(path, payload, None)
+}
+
+/// [`write_blob_checked`] with an optional fault-injection arm.
+///
+/// A firing `drop` fails the write (typed [`ErrorKind::Io`]) with the
+/// previous file, if any, left untouched. A firing `torn_write` models
+/// a *lying fsync*: a prefix of the framed blob lands at the final
+/// path and the call still reports success — exactly the
+/// crash-consistency hole the checked header exists to catch on
+/// restore.
+pub fn write_blob_checked_with(
+    path: &Path,
+    payload: &[u8],
+    arm: Option<&mut FaultArm>,
+) -> Result<()> {
+    let mut framed = Vec::with_capacity(payload.len() + BLOB_HEADER_BYTES);
+    framed.extend_from_slice(&BLOB_MAGIC.to_le_bytes());
+    framed.extend_from_slice(&(payload.len() as u64).to_le_bytes());
+    framed.extend_from_slice(&fnv1a64(payload).to_le_bytes());
+    framed.extend_from_slice(payload);
+    if let Some(arm) = arm {
+        match arm.on_write() {
+            WriteFault::Pass => {}
+            WriteFault::Drop => {
+                return Err(crate::anyhow!(
+                    "injected blob write failure: {}",
+                    path.display()
+                )
+                .with_kind(ErrorKind::Io));
+            }
+            WriteFault::Torn => {
+                let cut = framed.len() / 2;
+                std::fs::write(path, &framed[..cut]).with_context(|| {
+                    format!("torn write {}", path.display())
+                })?;
+                return Ok(());
+            }
+        }
+    }
+    write_blob(path, &framed)
+}
+
+/// Read and verify a blob written by [`write_blob_checked`], returning
+/// the payload. Short files, wrong magic, length mismatches and
+/// checksum failures are all errors — the caller (checkpoint restore)
+/// skips such a file and falls back to an older intact one.
+pub fn read_blob_checked(path: &Path) -> Result<Vec<u8>> {
+    let framed = read_blob(path)?;
+    if framed.len() < BLOB_HEADER_BYTES {
+        return Err(crate::anyhow!(
+            "checked blob {}: {} bytes is shorter than the header",
+            path.display(),
+            framed.len()
+        ));
+    }
+    let magic = u32::from_le_bytes(framed[0..4].try_into().unwrap());
+    if magic != BLOB_MAGIC {
+        return Err(crate::anyhow!(
+            "checked blob {}: bad magic {magic:#010x}",
+            path.display()
+        ));
+    }
+    let len = u64::from_le_bytes(framed[4..12].try_into().unwrap()) as usize;
+    let body = &framed[BLOB_HEADER_BYTES..];
+    if body.len() != len {
+        return Err(crate::anyhow!(
+            "checked blob {}: header claims {len} bytes, file carries {}",
+            path.display(),
+            body.len()
+        ));
+    }
+    let crc = u64::from_le_bytes(framed[12..20].try_into().unwrap());
+    let actual = fnv1a64(body);
+    if actual != crc {
+        return Err(crate::anyhow!(
+            "checked blob {}: checksum mismatch (header {crc:#018x}, \
+             payload {actual:#018x})",
+            path.display()
+        ));
+    }
+    Ok(body.to_vec())
 }
 
 #[cfg(test)]
@@ -136,6 +237,57 @@ mod tests {
         write_blob(&path, b"second").unwrap();
         assert_eq!(read_blob(&path).unwrap(), b"second");
         assert!(!path.with_extension("tmp").exists());
+    }
+
+    #[test]
+    fn checked_blob_detects_every_corruption_mode() {
+        let dir = std::env::temp_dir().join("dfep_io_checked_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.bin");
+        let payload: Vec<u8> = (0..=255u8).cycle().take(5_000).collect();
+        write_blob_checked(&path, &payload).unwrap();
+        assert_eq!(read_blob_checked(&path).unwrap(), payload);
+        // flip one payload byte on disk
+        let mut raw = read_blob(&path).unwrap();
+        raw[BLOB_HEADER_BYTES + 100] ^= 0x01;
+        std::fs::write(&path, &raw).unwrap();
+        let err = read_blob_checked(&path).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        // truncate the file (a torn write)
+        write_blob_checked(&path, &payload).unwrap();
+        let raw = read_blob(&path).unwrap();
+        std::fs::write(&path, &raw[..raw.len() / 2]).unwrap();
+        assert!(read_blob_checked(&path).is_err());
+        // an unchecked blob has no magic
+        write_blob(&path, b"just bytes, no header").unwrap();
+        let err = read_blob_checked(&path).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+        // shorter than the header
+        std::fs::write(&path, b"tiny").unwrap();
+        assert!(read_blob_checked(&path).is_err());
+    }
+
+    #[test]
+    fn torn_write_fault_persists_a_detectable_wreck() {
+        use crate::util::fault::{FaultCounters, FaultPlan};
+        let dir = std::env::temp_dir().join("dfep_io_torn_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ckpt.bin");
+        let payload = vec![0xABu8; 4_000];
+        // a torn write "succeeds" but restore must reject the file
+        let plan = FaultPlan { torn_write: 1.0, ..FaultPlan::default() };
+        let mut arm = plan.arm(0, FaultCounters::shared());
+        write_blob_checked_with(&path, &payload, Some(&mut arm)).unwrap();
+        assert!(path.exists());
+        assert!(read_blob_checked(&path).is_err());
+        // a dropped write fails typed and leaves the file untouched
+        write_blob_checked(&path, &payload).unwrap();
+        let plan = FaultPlan { drop: 1.0, ..FaultPlan::default() };
+        let mut arm = plan.arm(0, FaultCounters::shared());
+        let err = write_blob_checked_with(&path, b"new", Some(&mut arm))
+            .unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Io);
+        assert_eq!(read_blob_checked(&path).unwrap(), payload);
     }
 
     #[test]

@@ -70,9 +70,10 @@ COMMANDS
               \"Distributed runtime\")
               --graph SPEC [--algo ALGOSPEC] --k N --seed S
               [--workers W] [--in-process] [--checkpoint-every N]
-              [--checkpoint-dir DIR] [--sssp-source V] [--verify]
+              [--checkpoint-dir DIR] [--resume] [--sssp-source V]
+              [--verify]
               [--fail-rank R --fail-round N [--fail-stall-ms MS]]
-              [--timeout-ms MS] [--max-recoveries N]
+              [--fault FAULTSPEC] [--timeout-ms MS] [--max-recoveries N]
               --quick: canned 3-worker smoke run, verified against the
               single-process facade
               --simulate: legacy analytic Hadoop/EC2 model (Figs 8-9)
@@ -88,7 +89,7 @@ COMMANDS
               (see DESIGN.md \"Serving layer\")
               [--addr HOST:PORT] [--workers N] [--max-body BYTES]
               [--max-queue N] [--max-compute N] [--timeout SECS]
-              [--cache N] [--graphs N]
+              [--cache N] [--graphs N] [--fault FAULTSPEC]
   xla-info    show the PJRT platform and the AOT artifact manifest
   xla-partition  run DFEP with XLA-offloaded funding rounds
               --graph SPEC --k N --seed S [--artifacts DIR]
@@ -104,6 +105,12 @@ GRAPH SPECS
   astroph | email-enron | usroads | wordnet | dblp | youtube | amazon
   name@FRAC     scaled instance, e.g. usroads@0.05
   er:n=..,m=..  plc:n=..,m=..,p=..  ba:n=..,m=..  road:n=..
+
+FAULT SPECS (deterministic chaos; see DESIGN.md \"Fault plane\")
+  fault:seed=S[,drop=P][,delay_ms=LO..HI][,corrupt=P]
+        [,short_read=P][,torn_write=P]
+  `--fault` on cluster/serve, or the DFEP_FAULT env var when the flag
+  is absent; same seed replays the same fault sequence
 ";
 
 fn main() {
@@ -136,6 +143,17 @@ fn dispatch(argv: Vec<String>) -> Result<()> {
         }
         other => Err(anyhow!("unknown command '{other}' (try `repro help`)")),
     }
+}
+
+/// `--fault SPEC`, falling back to the `DFEP_FAULT` env var (so CI can
+/// turn chaos on without rewriting command lines). `None` when neither
+/// is present; a malformed spec is a hard error either way.
+fn fault_arg(args: &Args) -> Result<Option<dfep::util::fault::FaultPlan>> {
+    let spec = match args.get("fault") {
+        Some(s) => Some(s.to_string()),
+        None => std::env::var("DFEP_FAULT").ok().filter(|s| !s.is_empty()),
+    };
+    spec.map(|s| dfep::util::fault::FaultPlan::parse(&s)).transpose()
 }
 
 fn graph_arg(args: &Args) -> Result<dfep::graph::Graph> {
@@ -577,10 +595,15 @@ fn cmd_cluster(args: &Args) -> Result<()> {
             None
         },
         fail,
+        fault: fault_arg(args)?,
+        resume: args.flag("resume"),
         worker_timeout_ms: args.get_u64("timeout-ms", d.worker_timeout_ms)?,
         in_process: args.flag("in-process"),
         max_recoveries: args.get_usize("max-recoveries", d.max_recoveries)?,
     };
+    if let Some(plan) = &cfg.fault {
+        println!("fault plane: {plan}");
+    }
     let (rep, secs) = dfep::util::timer::time(|| run_cluster(&cfg));
     let rep = rep?;
     println!(
@@ -601,6 +624,26 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         println!(
             "  recoveries  {} ({:.1} ms respawn+rollback total)",
             rep.recoveries, t
+        );
+    }
+    if let Some(round) = rep.resumed_round {
+        println!(
+            "  resumed     from on-disk checkpoint r{round} \
+             ({} corrupt round(s) skipped)",
+            rep.skipped_checkpoints
+        );
+    }
+    if rep.faults.total() > 0 {
+        let f = &rep.faults;
+        println!(
+            "  faults      {} injected ({} drops, {} delays, {} corruptions, \
+             {} short reads, {} torn writes)",
+            f.total(),
+            f.drops,
+            f.delays,
+            f.corruptions,
+            f.short_reads,
+            f.torn_writes
         );
     }
     if let Some(dist) = &rep.sssp_dist {
@@ -716,7 +759,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         request_timeout_s: args.get_f64("timeout", d.request_timeout_s)?,
         cache_capacity: args.get_usize("cache", d.cache_capacity)?,
         graph_capacity: args.get_usize("graphs", d.graph_capacity)?,
+        fault: fault_arg(args)?,
     };
+    if let Some(plan) = &cfg.fault {
+        println!("fault plane: {plan}");
+    }
     let server = Server::bind(cfg)?;
     println!("repro serve listening on http://{}", server.addr());
     println!(

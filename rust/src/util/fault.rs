@@ -1,0 +1,596 @@
+//! Deterministic, seed-driven fault injection and retry/backoff policy.
+//!
+//! The chaos plane for the cluster and serving layers: a [`FaultPlan`]
+//! parsed from a spec string describes *what* to inject (drops, delays,
+//! byte corruption, short reads, torn writes) and a seed makes every
+//! chaos run replayable bit-for-bit. The plan itself is inert config;
+//! each wire connection or file sink gets its own [`FaultArm`] — a
+//! forked deterministic RNG stream plus shared [`FaultCounters`] — so
+//! decisions depend only on `(plan seed, arm tag, operation index)`,
+//! never on wall-clock or thread scheduling.
+//!
+//! Spec grammar (comma-separated `key=value`, optional `fault:` prefix):
+//!
+//! ```text
+//! spec     := ["fault:"] kv ("," kv)*
+//! kv       := "seed=" u64        -- RNG seed (default 0)
+//!           | "drop=" prob       -- P(op fails as a dead connection)
+//!           | "delay_ms=" range  -- uniform sleep per op, "lo..hi" or "n"
+//!           | "corrupt=" prob    -- P(one payload byte is flipped on read)
+//!           | "short_read=" prob -- P(read ends in premature EOF)
+//!           | "torn_write=" prob -- P(write persists only a prefix)
+//! prob     := f64 in [0, 1]
+//! range    := u64 | u64 ".." u64
+//! ```
+//!
+//! Example: `fault:seed=7,drop=0.01,delay_ms=0..50,corrupt=0.001`.
+//!
+//! Injection sites live next to the I/O they wrap:
+//! [`crate::util::frame`] (cluster frames), [`crate::util::http`]
+//! (serve requests/responses) and [`crate::graph::io`] (checkpoint
+//! blobs). A `None` arm is a no-op, so the disabled path costs one
+//! branch per operation.
+//!
+//! The module also hosts [`RetryPolicy`], the bounded
+//! deterministic-jitter exponential backoff used by `ServeClient` and
+//! the cluster worker connect path.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::util::error::{Error, ErrorKind, Result};
+use crate::util::rng::Rng;
+
+/// Golden-ratio mixing constant (same idiom as [`Rng::fork`]) used to
+/// derive per-arm seeds from the plan seed and an arm tag.
+const TAG_MIX: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// A parsed fault-injection plan: pure configuration, no state.
+///
+/// Build one with [`FaultPlan::parse`] (or literally, for tests), then
+/// hand out per-connection [`FaultArm`]s via [`FaultPlan::arm`]. The
+/// default plan injects nothing ([`is_noop`](FaultPlan::is_noop)).
+#[derive(Clone, Debug, PartialEq)]
+pub struct FaultPlan {
+    /// Seed for every arm's decision stream; same seed ⇒ same faults.
+    pub seed: u64,
+    /// Per-operation probability the op fails as a dead connection.
+    pub drop: f64,
+    /// Uniform per-operation sleep range in milliseconds `[lo, hi]`.
+    pub delay_ms: (u64, u64),
+    /// Per-read probability one payload byte is flipped (pre-checksum).
+    pub corrupt: f64,
+    /// Per-read probability of a premature EOF.
+    pub short_read: f64,
+    /// Per-write probability only a prefix of the payload lands.
+    pub torn_write: f64,
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            seed: 0,
+            drop: 0.0,
+            delay_ms: (0, 0),
+            corrupt: 0.0,
+            short_read: 0.0,
+            torn_write: 0.0,
+        }
+    }
+}
+
+fn spec_err(msg: String) -> Error {
+    Error::msg(msg).with_kind(ErrorKind::InvalidSpec)
+}
+
+fn parse_prob(key: &str, val: &str) -> Result<f64> {
+    let p: f64 = val.trim().parse().map_err(|_| {
+        spec_err(format!("fault spec: {key}={val} is not a number"))
+    })?;
+    if !(0.0..=1.0).contains(&p) {
+        return Err(spec_err(format!(
+            "fault spec: {key}={val} must be a probability in [0, 1]"
+        )));
+    }
+    Ok(p)
+}
+
+fn parse_range(val: &str) -> Result<(u64, u64)> {
+    let val = val.trim();
+    let parse_one = |s: &str| -> Result<u64> {
+        s.trim().parse().map_err(|_| {
+            spec_err(format!("fault spec: delay_ms bound `{s}` is not a u64"))
+        })
+    };
+    let (lo, hi) = match val.split_once("..") {
+        Some((lo, hi)) => (parse_one(lo)?, parse_one(hi)?),
+        None => {
+            let n = parse_one(val)?;
+            (n, n)
+        }
+    };
+    if lo > hi {
+        return Err(spec_err(format!(
+            "fault spec: delay_ms range {lo}..{hi} is inverted"
+        )));
+    }
+    Ok((lo, hi))
+}
+
+impl FaultPlan {
+    /// Parse a plan from its spec string (grammar in the module docs).
+    ///
+    /// Unknown keys, malformed values, probabilities outside `[0, 1]`
+    /// and inverted delay ranges are all
+    /// [`ErrorKind::InvalidSpec`] errors. An empty spec (or a bare
+    /// `fault:` prefix) parses to the no-op default plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let body = spec.strip_prefix("fault:").unwrap_or(spec).trim();
+        let mut plan = FaultPlan::default();
+        if body.is_empty() {
+            return Ok(plan);
+        }
+        for part in body.split(',') {
+            let (key, val) = part.split_once('=').ok_or_else(|| {
+                spec_err(format!(
+                    "fault spec: field `{part}` is not key=value"
+                ))
+            })?;
+            match key.trim() {
+                "seed" => {
+                    plan.seed = val.trim().parse().map_err(|_| {
+                        spec_err(format!(
+                            "fault spec: seed={val} is not a u64"
+                        ))
+                    })?;
+                }
+                "drop" => plan.drop = parse_prob("drop", val)?,
+                "delay_ms" => plan.delay_ms = parse_range(val)?,
+                "corrupt" => plan.corrupt = parse_prob("corrupt", val)?,
+                "short_read" => {
+                    plan.short_read = parse_prob("short_read", val)?
+                }
+                "torn_write" => {
+                    plan.torn_write = parse_prob("torn_write", val)?
+                }
+                other => {
+                    return Err(spec_err(format!(
+                        "fault spec: unknown key `{other}` (expected seed, \
+                         drop, delay_ms, corrupt, short_read, torn_write)"
+                    )));
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// True when the plan injects nothing (all rates zero, no delay).
+    pub fn is_noop(&self) -> bool {
+        self.drop == 0.0
+            && self.corrupt == 0.0
+            && self.short_read == 0.0
+            && self.torn_write == 0.0
+            && self.delay_ms.1 == 0
+    }
+
+    /// Fork a decision stream for one connection or sink.
+    ///
+    /// `tag` must be stable across replays of the same run (the cluster
+    /// uses `rank` + incarnation, serve uses the accept-order index);
+    /// two arms with the same `(seed, tag)` make identical decisions.
+    /// Fired faults are tallied into the shared `counters`.
+    pub fn arm(
+        &self,
+        tag: u64,
+        counters: Arc<FaultCounters>,
+    ) -> FaultArm {
+        FaultArm {
+            drop: self.drop,
+            delay_ms: self.delay_ms,
+            corrupt: self.corrupt,
+            short_read: self.short_read,
+            torn_write: self.torn_write,
+            rng: Rng::new(self.seed ^ tag.wrapping_mul(TAG_MIX)),
+            counters,
+        }
+    }
+}
+
+impl fmt::Display for FaultPlan {
+    /// Canonical spec round-trip: `fault:seed=...` plus non-zero knobs.
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "fault:seed={}", self.seed)?;
+        if self.drop > 0.0 {
+            write!(f, ",drop={}", self.drop)?;
+        }
+        if self.delay_ms.1 > 0 {
+            write!(f, ",delay_ms={}..{}", self.delay_ms.0, self.delay_ms.1)?;
+        }
+        if self.corrupt > 0.0 {
+            write!(f, ",corrupt={}", self.corrupt)?;
+        }
+        if self.short_read > 0.0 {
+            write!(f, ",short_read={}", self.short_read)?;
+        }
+        if self.torn_write > 0.0 {
+            write!(f, ",torn_write={}", self.torn_write)?;
+        }
+        Ok(())
+    }
+}
+
+/// Shared tally of faults actually fired, one counter per knob.
+///
+/// Lives in an `Arc` shared by every [`FaultArm`] of a deployment so
+/// the serve `/stats` endpoint and [`ClusterReport`] can surface how
+/// much chaos a run absorbed — and so the soak tests can assert that
+/// the same seed replays the same fault sequence.
+///
+/// [`ClusterReport`]: crate::cluster::runtime::ClusterReport
+#[derive(Debug, Default)]
+pub struct FaultCounters {
+    /// Operations failed as a dead connection.
+    pub drops: AtomicU64,
+    /// Operations delayed by a non-zero injected sleep.
+    pub delays: AtomicU64,
+    /// Reads with one payload byte flipped.
+    pub corruptions: AtomicU64,
+    /// Reads cut short with a premature EOF.
+    pub short_reads: AtomicU64,
+    /// Writes that persisted only a prefix.
+    pub torn_writes: AtomicU64,
+}
+
+impl FaultCounters {
+    /// A fresh zeroed tally behind an `Arc`, ready to share across arms.
+    pub fn shared() -> Arc<FaultCounters> {
+        Arc::new(FaultCounters::default())
+    }
+
+    /// A consistent point-in-time copy of all counters.
+    pub fn snapshot(&self) -> FaultSnapshot {
+        FaultSnapshot {
+            drops: self.drops.load(Ordering::Relaxed),
+            delays: self.delays.load(Ordering::Relaxed),
+            corruptions: self.corruptions.load(Ordering::Relaxed),
+            short_reads: self.short_reads.load(Ordering::Relaxed),
+            torn_writes: self.torn_writes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-value copy of [`FaultCounters`] for reports and JSON sinks.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultSnapshot {
+    /// Operations failed as a dead connection.
+    pub drops: u64,
+    /// Operations delayed by a non-zero injected sleep.
+    pub delays: u64,
+    /// Reads with one payload byte flipped.
+    pub corruptions: u64,
+    /// Reads cut short with a premature EOF.
+    pub short_reads: u64,
+    /// Writes that persisted only a prefix.
+    pub torn_writes: u64,
+}
+
+impl FaultSnapshot {
+    /// Sum of every counter (delays included).
+    pub fn total(&self) -> u64 {
+        self.drops
+            + self.delays
+            + self.corruptions
+            + self.short_reads
+            + self.torn_writes
+    }
+}
+
+/// Verdict for one outbound operation (frame, response, or blob).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WriteFault {
+    /// Perform the write normally.
+    Pass,
+    /// Fail the write as a dead connection; nothing is written.
+    Drop,
+    /// Persist only a prefix of the payload, then fail (wire) or
+    /// silently "succeed" (disk — modeling a lying fsync).
+    Torn,
+}
+
+/// Verdict for one inbound operation, decided after its bytes arrived.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadFault {
+    /// Deliver the payload untouched.
+    Pass,
+    /// Fail the read as a reset connection.
+    Drop,
+    /// Flip the payload byte at this index before any checksum check.
+    CorruptAt(usize),
+    /// Fail the read with a premature EOF.
+    Short,
+}
+
+/// One connection's (or sink's) fault decision stream.
+///
+/// Created by [`FaultPlan::arm`]; never cloned or shared — each wire
+/// connection and each file sink owns exactly one arm so the decision
+/// sequence is a pure function of `(plan seed, tag, op index)`.
+///
+/// Draw order is fixed and documented (it is part of the replay
+/// contract): every operation first draws the delay (when the plan has
+/// one) and sleeps it, then draws the remaining knobs in the order
+/// listed on [`on_write`](FaultArm::on_write) /
+/// [`on_read`](FaultArm::on_read), stopping at the first knob that
+/// fires. Draws are only made for knobs the plan enables, so a given
+/// plan always consumes the same stream positions.
+#[derive(Debug)]
+pub struct FaultArm {
+    drop: f64,
+    delay_ms: (u64, u64),
+    corrupt: f64,
+    short_read: f64,
+    torn_write: f64,
+    rng: Rng,
+    counters: Arc<FaultCounters>,
+}
+
+impl FaultArm {
+    /// Draw (and sleep) the injected delay for one operation.
+    fn delay(&mut self) {
+        let (lo, hi) = self.delay_ms;
+        if hi == 0 {
+            return;
+        }
+        let span = hi.max(lo) - lo;
+        let d = lo + self.rng.below(span as usize + 1) as u64;
+        if d > 0 {
+            self.counters.delays.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_millis(d));
+        }
+    }
+
+    /// Decide the fate of one outbound operation.
+    ///
+    /// Draw order: delay (slept here), then `drop`, then `torn_write`.
+    pub fn on_write(&mut self) -> WriteFault {
+        self.delay();
+        if self.drop > 0.0 && self.rng.chance(self.drop) {
+            self.counters.drops.fetch_add(1, Ordering::Relaxed);
+            return WriteFault::Drop;
+        }
+        if self.torn_write > 0.0 && self.rng.chance(self.torn_write) {
+            self.counters.torn_writes.fetch_add(1, Ordering::Relaxed);
+            return WriteFault::Torn;
+        }
+        WriteFault::Pass
+    }
+
+    /// Decide the fate of one inbound operation whose payload is
+    /// `len` bytes long.
+    ///
+    /// Draw order: delay (slept here), then `drop`, then `corrupt`
+    /// (the flipped byte index is drawn only when corruption fires and
+    /// `len > 0`; an empty payload passes untouched), then
+    /// `short_read`.
+    pub fn on_read(&mut self, len: usize) -> ReadFault {
+        self.delay();
+        if self.drop > 0.0 && self.rng.chance(self.drop) {
+            self.counters.drops.fetch_add(1, Ordering::Relaxed);
+            return ReadFault::Drop;
+        }
+        if self.corrupt > 0.0 && self.rng.chance(self.corrupt) && len > 0 {
+            self.counters.corruptions.fetch_add(1, Ordering::Relaxed);
+            return ReadFault::CorruptAt(self.rng.below(len));
+        }
+        if self.short_read > 0.0 && self.rng.chance(self.short_read) {
+            self.counters.short_reads.fetch_add(1, Ordering::Relaxed);
+            return ReadFault::Short;
+        }
+        ReadFault::Pass
+    }
+}
+
+/// Bounded retries with deterministic-jitter exponential backoff.
+///
+/// Attempt `i` (0-based) sleeps
+/// `min(max_ms, base_ms · 2^i) · (0.5 + 0.5·u)` milliseconds where `u`
+/// is drawn from a caller-owned deterministic [`Rng`] — so two clients
+/// seeded differently decorrelate (no thundering herd) yet any single
+/// run replays exactly. Used by `ServeClient` and the cluster worker
+/// connect path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts (first try included); `1` disables retries.
+    pub attempts: u32,
+    /// Backoff base for the first retry, in milliseconds.
+    pub base_ms: u64,
+    /// Ceiling on a single backoff sleep, in milliseconds.
+    pub max_ms: u64,
+}
+
+impl Default for RetryPolicy {
+    /// Four attempts, 10 ms base, 500 ms cap — tuned for loopback.
+    fn default() -> Self {
+        RetryPolicy { attempts: 4, base_ms: 10, max_ms: 500 }
+    }
+}
+
+impl RetryPolicy {
+    /// The jittered backoff to sleep after failed attempt `attempt`
+    /// (0-based). Deterministic given the `rng` stream position.
+    pub fn delay(&self, attempt: u32, rng: &mut Rng) -> Duration {
+        let exp = self.base_ms.saturating_mul(1u64 << attempt.min(20));
+        let capped = exp.min(self.max_ms);
+        let jittered = (capped as f64) * (0.5 + 0.5 * rng.f64());
+        Duration::from_millis(jittered as u64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec_and_defaults() {
+        let p = FaultPlan::parse(
+            "fault:seed=7,drop=0.01,delay_ms=0..50,corrupt=0.001,\
+             short_read=0.01,torn_write=0.005",
+        )
+        .unwrap();
+        assert_eq!(p.seed, 7);
+        assert_eq!(p.drop, 0.01);
+        assert_eq!(p.delay_ms, (0, 50));
+        assert_eq!(p.corrupt, 0.001);
+        assert_eq!(p.short_read, 0.01);
+        assert_eq!(p.torn_write, 0.005);
+        assert!(!p.is_noop());
+        // prefix optional, empty spec is the no-op default
+        assert_eq!(FaultPlan::parse("seed=3").unwrap().seed, 3);
+        assert!(FaultPlan::parse("").unwrap().is_noop());
+        assert!(FaultPlan::parse("fault:").unwrap().is_noop());
+        // single-value delay range
+        assert_eq!(
+            FaultPlan::parse("delay_ms=5").unwrap().delay_ms,
+            (5, 5)
+        );
+    }
+
+    #[test]
+    fn parse_rejects_nonsense_with_invalid_spec_kind() {
+        for bad in [
+            "fault:drop=2.0",
+            "fault:drop=-0.1",
+            "fault:drop=abc",
+            "fault:delay_ms=9..3",
+            "fault:delay_ms=x..3",
+            "fault:seed=notanum",
+            "fault:warp=0.5",
+            "fault:dropless",
+        ] {
+            let err = FaultPlan::parse(bad).unwrap_err();
+            assert_eq!(
+                err.kind(),
+                ErrorKind::InvalidSpec,
+                "{bad}: {err}"
+            );
+        }
+    }
+
+    #[test]
+    fn display_round_trips_through_parse() {
+        let p = FaultPlan::parse(
+            "fault:seed=9,drop=0.25,delay_ms=1..4,torn_write=0.5",
+        )
+        .unwrap();
+        assert_eq!(FaultPlan::parse(&p.to_string()).unwrap(), p);
+        assert_eq!(FaultPlan::default().to_string(), "fault:seed=0");
+    }
+
+    #[test]
+    fn same_seed_and_tag_replays_identical_decisions() {
+        let plan = FaultPlan::parse(
+            "fault:seed=11,drop=0.2,corrupt=0.2,short_read=0.2,\
+             torn_write=0.2",
+        )
+        .unwrap();
+        let run = |tag: u64| {
+            let c = FaultCounters::shared();
+            let mut arm = plan.arm(tag, c.clone());
+            let reads: Vec<ReadFault> =
+                (0..64).map(|_| arm.on_read(100)).collect();
+            let writes: Vec<WriteFault> =
+                (0..64).map(|_| arm.on_write()).collect();
+            (reads, writes, c.snapshot())
+        };
+        let a = run(1);
+        let b = run(1);
+        assert_eq!(a, b, "same (seed, tag) must replay identically");
+        let c = run(2);
+        assert_ne!(a.0, c.0, "different tags must decorrelate");
+    }
+
+    #[test]
+    fn noop_plan_never_fires_and_counts_nothing() {
+        let c = FaultCounters::shared();
+        let mut arm = FaultPlan::default().arm(0, c.clone());
+        for _ in 0..100 {
+            assert_eq!(arm.on_read(64), ReadFault::Pass);
+            assert_eq!(arm.on_write(), WriteFault::Pass);
+        }
+        assert_eq!(c.snapshot().total(), 0);
+    }
+
+    #[test]
+    fn certain_faults_fire_and_tally() {
+        let plan =
+            FaultPlan { drop: 1.0, ..FaultPlan::default() };
+        let c = FaultCounters::shared();
+        let mut arm = plan.arm(0, c.clone());
+        assert_eq!(arm.on_read(8), ReadFault::Drop);
+        assert_eq!(arm.on_write(), WriteFault::Drop);
+        assert_eq!(c.snapshot().drops, 2);
+
+        let plan = FaultPlan {
+            corrupt: 1.0,
+            torn_write: 1.0,
+            ..FaultPlan::default()
+        };
+        let c = FaultCounters::shared();
+        let mut arm = plan.arm(0, c.clone());
+        match arm.on_read(16) {
+            ReadFault::CorruptAt(i) => assert!(i < 16),
+            other => panic!("expected corruption, got {other:?}"),
+        }
+        // an empty payload cannot be corrupted — passes untouched
+        assert_eq!(arm.on_read(0), ReadFault::Pass);
+        assert_eq!(arm.on_write(), WriteFault::Torn);
+        let snap = c.snapshot();
+        assert_eq!((snap.corruptions, snap.torn_writes), (1, 1));
+
+        let plan =
+            FaultPlan { short_read: 1.0, ..FaultPlan::default() };
+        let c = FaultCounters::shared();
+        let mut arm = plan.arm(0, c.clone());
+        assert_eq!(arm.on_read(8), ReadFault::Short);
+        assert_eq!(c.snapshot().short_reads, 1);
+    }
+
+    #[test]
+    fn delay_sleeps_and_counts() {
+        let plan = FaultPlan {
+            delay_ms: (1, 2),
+            ..FaultPlan::default()
+        };
+        let c = FaultCounters::shared();
+        let mut arm = plan.arm(0, c.clone());
+        let t0 = std::time::Instant::now();
+        for _ in 0..4 {
+            arm.on_read(8);
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+        assert_eq!(c.snapshot().delays, 4);
+    }
+
+    #[test]
+    fn retry_backoff_is_bounded_and_deterministic() {
+        let pol = RetryPolicy::default();
+        let mut a = Rng::new(5);
+        let mut b = Rng::new(5);
+        for i in 0..6 {
+            let da = pol.delay(i, &mut a);
+            let db = pol.delay(i, &mut b);
+            assert_eq!(da, db, "same rng stream must replay");
+            let cap = pol.base_ms.saturating_mul(1 << i).min(pol.max_ms);
+            assert!(da <= Duration::from_millis(cap), "attempt {i}: {da:?}");
+            assert!(
+                da >= Duration::from_millis(cap / 2 - 1),
+                "attempt {i}: {da:?} under half-floor"
+            );
+        }
+        // the cap holds even for absurd attempt numbers
+        let d = pol.delay(63, &mut a);
+        assert!(d <= Duration::from_millis(pol.max_ms));
+    }
+}

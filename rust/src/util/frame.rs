@@ -1,4 +1,5 @@
-//! Length-prefixed binary frame codec for the cluster runtime.
+//! Checksummed, length-prefixed binary frame codec (v2) for the
+//! cluster runtime.
 //!
 //! Sibling of [`crate::util::http`]: where `http` frames text requests for
 //! the serving surface, `frame` moves opaque binary payloads between the
@@ -7,36 +8,67 @@
 //! Grammar (all integers little-endian):
 //!
 //! ```text
-//! frame   := len payload
+//! frame   := magic len crc payload
+//! magic   := u32            -- codec tag "FRM2" (0x324D5246)
 //! len     := u32            -- byte length of payload, <= MAX_FRAME_BYTES
+//! crc     := u64            -- fnv1a64 of payload
 //! payload := len * u8       -- opaque (cluster::proto encodes messages here)
 //! ```
 //!
-//! The 4-byte prefix is the only framing overhead; message typing and
-//! versioning live inside the payload (`cluster::proto`). Oversized frames
-//! are rejected on both ends so a corrupted length prefix cannot trigger a
-//! multi-gigabyte allocation.
+//! The 16-byte header is the only framing overhead; message typing and
+//! versioning live inside the payload (`cluster::proto`). The magic tag
+//! versions the codec itself, so a v1 capture (bare 4-byte length
+//! prefix) fails loudly as [`FrameError::Corrupt`] instead of being
+//! misparsed; the checksum turns any in-flight bit flip into the same
+//! typed error. Oversized frames are rejected on both ends so a
+//! corrupted length field cannot trigger a multi-gigabyte allocation.
+//!
+//! The `_with` variants accept an optional [`FaultArm`] so the chaos
+//! plane ([`crate::util::fault`]) can drop, delay, corrupt, shorten or
+//! tear individual frames; `None` is a single-branch no-op.
 
 use std::io::{Read, Write};
 
+use crate::util::error::{Error, ErrorKind};
+use crate::util::fault::{FaultArm, ReadFault, WriteFault};
+
 /// Hard cap on a single frame payload (64 MiB). Large enough for an edge
 /// list shipped at init on any graph we generate in tests or CI, small
-/// enough to catch a corrupted length prefix immediately.
+/// enough to catch a corrupted length field immediately.
 pub const MAX_FRAME_BYTES: usize = 64 * 1024 * 1024;
 
-/// Bytes added on the wire per frame (the `u32` length prefix).
-pub const FRAME_HEADER_BYTES: usize = 4;
+/// Codec tag leading every frame: ASCII `"FRM2"`, little-endian.
+pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"FRM2");
+
+/// Bytes added on the wire per frame (magic + length + checksum).
+pub const FRAME_HEADER_BYTES: usize = 16;
 
 /// Total wire bytes for a payload of `payload_len` bytes.
 pub fn wire_len(payload_len: usize) -> usize {
     payload_len + FRAME_HEADER_BYTES
 }
 
+/// FNV-1a 64-bit over a byte stream — the checksum used by frames,
+/// HTTP body digests and checkpoint blobs. Not cryptographic; it
+/// detects accidental corruption, not adversaries.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 /// Errors while reading or writing a frame.
 #[derive(Debug)]
 pub enum FrameError {
-    /// Frame length exceeds [`MAX_FRAME_BYTES`] (corrupt prefix or abuse).
+    /// Frame length exceeds [`MAX_FRAME_BYTES`] (corrupt header or abuse).
     TooLarge(usize),
+    /// The frame failed integrity checks: wrong magic (a v1 capture or
+    /// desynchronized stream) or a checksum mismatch (bit rot in
+    /// flight). The connection is unusable past this point.
+    Corrupt(String),
     /// Underlying socket/file error (includes EOF and read timeouts).
     Io(std::io::Error),
 }
@@ -47,6 +79,7 @@ impl std::fmt::Display for FrameError {
             FrameError::TooLarge(n) => {
                 write!(f, "frame of {n} bytes exceeds cap {MAX_FRAME_BYTES}")
             }
+            FrameError::Corrupt(m) => write!(f, "corrupt frame: {m}"),
             FrameError::Io(e) => write!(f, "frame io: {e}"),
         }
     }
@@ -61,7 +94,7 @@ impl From<std::io::Error> for FrameError {
 }
 
 impl FrameError {
-    /// True when the peer closed the connection cleanly (EOF mid-prefix).
+    /// True when the peer closed the connection cleanly (EOF mid-header).
     pub fn is_eof(&self) -> bool {
         matches!(self, FrameError::Io(e)
             if e.kind() == std::io::ErrorKind::UnexpectedEof)
@@ -75,39 +108,146 @@ impl FrameError {
                 std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
             ))
     }
+
+    /// True when the frame failed an integrity check (magic or crc).
+    pub fn is_corrupt(&self) -> bool {
+        matches!(self, FrameError::Corrupt(_))
+    }
+
+    /// Convert into the crate [`Error`], tagged
+    /// [`ErrorKind::Transport`] with the given context prefix. (An
+    /// inherent method rather than a `From` impl: the blanket
+    /// `std::error::Error` conversion in `util::error` would collide,
+    /// and it tags `Internal` — frame failures are transport facts.)
+    pub fn into_error(self, context: &str) -> Error {
+        Error::msg(format!("{context}: {self}"))
+            .with_kind(ErrorKind::Transport)
+    }
 }
 
-/// Write one frame (length prefix + payload) and flush.
+fn injected(kind: std::io::ErrorKind, what: &str) -> FrameError {
+    FrameError::Io(std::io::Error::new(kind, format!("injected {what}")))
+}
+
+/// Write one frame (header + payload) and flush.
 pub fn write_frame<W: Write>(
     w: &mut W,
     payload: &[u8],
 ) -> Result<(), FrameError> {
+    write_frame_with(w, payload, None)
+}
+
+/// [`write_frame`] with an optional fault-injection arm.
+///
+/// A firing `drop` fails before any byte lands; a firing `torn_write`
+/// puts the header and half the payload on the wire, then fails — the
+/// peer sees a frame that never completes (timeout or EOF).
+pub fn write_frame_with<W: Write>(
+    w: &mut W,
+    payload: &[u8],
+    arm: Option<&mut FaultArm>,
+) -> Result<(), FrameError> {
     if payload.len() > MAX_FRAME_BYTES {
         return Err(FrameError::TooLarge(payload.len()));
     }
-    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    let mut header = [0u8; FRAME_HEADER_BYTES];
+    header[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+    header[4..8].copy_from_slice(&(payload.len() as u32).to_le_bytes());
+    header[8..16].copy_from_slice(&fnv1a64(payload).to_le_bytes());
+    if let Some(arm) = arm {
+        match arm.on_write() {
+            WriteFault::Pass => {}
+            WriteFault::Drop => {
+                return Err(injected(
+                    std::io::ErrorKind::BrokenPipe,
+                    "connection drop",
+                ));
+            }
+            WriteFault::Torn => {
+                w.write_all(&header)?;
+                w.write_all(&payload[..payload.len() / 2])?;
+                let _ = w.flush();
+                return Err(injected(
+                    std::io::ErrorKind::BrokenPipe,
+                    "torn write",
+                ));
+            }
+        }
+    }
+    w.write_all(&header)?;
     w.write_all(payload)?;
     w.flush()?;
     Ok(())
 }
 
-/// Read one frame, returning its payload.
+/// Read one frame, returning its verified payload.
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Vec<u8>, FrameError> {
-    let mut prefix = [0u8; 4];
-    r.read_exact(&mut prefix)?;
-    let len = u32::from_le_bytes(prefix) as usize;
+    read_frame_with(r, None)
+}
+
+/// [`read_frame`] with an optional fault-injection arm.
+///
+/// Injected corruption flips one payload byte *before* checksum
+/// verification, so the chaos plane exercises the real integrity
+/// check rather than bypassing it.
+pub fn read_frame_with<R: Read>(
+    r: &mut R,
+    arm: Option<&mut FaultArm>,
+) -> Result<Vec<u8>, FrameError> {
+    let mut header = [0u8; FRAME_HEADER_BYTES];
+    r.read_exact(&mut header)?;
+    let magic = u32::from_le_bytes(header[0..4].try_into().unwrap());
+    if magic != FRAME_MAGIC {
+        return Err(FrameError::Corrupt(format!(
+            "bad magic {magic:#010x} (expected {FRAME_MAGIC:#010x}; a v1 \
+             capture or desynchronized stream)"
+        )));
+    }
+    let len = u32::from_le_bytes(header[4..8].try_into().unwrap()) as usize;
     if len > MAX_FRAME_BYTES {
         return Err(FrameError::TooLarge(len));
     }
+    let crc = u64::from_le_bytes(header[8..16].try_into().unwrap());
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload)?;
+    if let Some(arm) = arm {
+        match arm.on_read(payload.len()) {
+            ReadFault::Pass => {}
+            ReadFault::Drop => {
+                return Err(injected(
+                    std::io::ErrorKind::ConnectionReset,
+                    "connection drop",
+                ));
+            }
+            ReadFault::CorruptAt(i) => payload[i] ^= 0xA5,
+            ReadFault::Short => {
+                return Err(injected(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "short read",
+                ));
+            }
+        }
+    }
+    let actual = fnv1a64(&payload);
+    if actual != crc {
+        return Err(FrameError::Corrupt(format!(
+            "checksum mismatch: header {crc:#018x}, payload {actual:#018x}"
+        )));
+    }
     Ok(payload)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::fault::{FaultCounters, FaultPlan};
     use std::io::Cursor;
+
+    #[test]
+    fn fnv1a64_matches_published_vectors() {
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+    }
 
     #[test]
     fn roundtrip_preserves_payload() {
@@ -119,17 +259,56 @@ mod tests {
         assert_eq!(read_frame(&mut c).unwrap(), b"hello");
         assert_eq!(read_frame(&mut c).unwrap(), b"");
         assert_eq!(read_frame(&mut c).unwrap(), vec![0xFFu8; 1000]);
-        assert_eq!(wire_len(5), 9);
+        assert_eq!(wire_len(5), 21);
+    }
+
+    #[test]
+    fn bit_flips_are_detected_as_corrupt() {
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"payload bytes").unwrap();
+        // flip one payload byte
+        let mut flipped = wire.clone();
+        flipped[FRAME_HEADER_BYTES + 3] ^= 0x01;
+        let err = read_frame(&mut Cursor::new(flipped)).unwrap_err();
+        assert!(err.is_corrupt(), "payload flip: {err}");
+        // flip one checksum byte
+        let mut flipped = wire.clone();
+        flipped[9] ^= 0x80;
+        let err = read_frame(&mut Cursor::new(flipped)).unwrap_err();
+        assert!(err.is_corrupt(), "crc flip: {err}");
+        // the typed mapping: corrupt frames become ErrorKind::Transport
+        let e = err.into_error("read from worker 3");
+        assert_eq!(
+            e.kind(),
+            crate::util::error::ErrorKind::Transport
+        );
+        assert!(e.to_string().starts_with("read from worker 3: "));
+    }
+
+    #[test]
+    fn v1_captures_fail_loudly_on_magic() {
+        // a v1 frame: bare u32 length prefix, no magic, no checksum
+        let mut v1 = Vec::new();
+        v1.extend_from_slice(&100u32.to_le_bytes());
+        v1.extend_from_slice(&[7u8; 100]);
+        let err = read_frame(&mut Cursor::new(v1)).unwrap_err();
+        assert!(err.is_corrupt(), "v1 capture must not be misparsed: {err}");
+        assert!(err.to_string().contains("magic"), "{err}");
     }
 
     #[test]
     fn truncated_stream_is_eof() {
         let mut buf = Vec::new();
         write_frame(&mut buf, b"payload").unwrap();
-        buf.truncate(6); // cut mid-payload
+        buf.truncate(FRAME_HEADER_BYTES + 4); // cut mid-payload
         let mut c = Cursor::new(buf);
         let err = read_frame(&mut c).unwrap_err();
         assert!(err.is_eof(), "expected EOF error, got {err}");
+        // a cut mid-header also reports is_eof
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"payload").unwrap();
+        buf.truncate(6);
+        assert!(read_frame(&mut Cursor::new(buf)).unwrap_err().is_eof());
         // clean EOF at a frame boundary also reports is_eof
         let mut empty = Cursor::new(Vec::new());
         assert!(read_frame(&mut empty).unwrap_err().is_eof());
@@ -137,15 +316,18 @@ mod tests {
 
     #[test]
     fn oversized_frames_rejected_both_ways() {
+        // valid magic but a length claiming 2 GiB — reader must refuse
+        // to allocate
         let mut buf = Vec::new();
-        // corrupt prefix claiming 2 GiB — reader must refuse to allocate
+        buf.extend_from_slice(&FRAME_MAGIC.to_le_bytes());
         buf.extend_from_slice(&(2u32 << 30).to_le_bytes());
+        buf.extend_from_slice(&0u64.to_le_bytes());
         let mut c = Cursor::new(buf);
         assert!(matches!(
             read_frame(&mut c),
             Err(FrameError::TooLarge(_))
         ));
-        // writer refuses equally (exercised via a tiny fake cap check)
+        // writer refuses equally
         let huge = vec![0u8; MAX_FRAME_BYTES + 1];
         let mut sink = Vec::new();
         assert!(matches!(
@@ -153,5 +335,44 @@ mod tests {
             Err(FrameError::TooLarge(_))
         ));
         assert!(sink.is_empty());
+    }
+
+    #[test]
+    fn fault_arm_injects_typed_failures() {
+        let plan = FaultPlan { drop: 1.0, ..FaultPlan::default() };
+        let mut arm = plan.arm(0, FaultCounters::shared());
+        let mut sink = Vec::new();
+        let err =
+            write_frame_with(&mut sink, b"x", Some(&mut arm)).unwrap_err();
+        assert!(!err.is_eof() && !err.is_corrupt(), "{err}");
+        assert!(sink.is_empty(), "a dropped write must land nothing");
+
+        // injected corruption trips the real checksum check
+        let plan = FaultPlan { corrupt: 1.0, ..FaultPlan::default() };
+        let mut arm = plan.arm(0, FaultCounters::shared());
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"some payload").unwrap();
+        let err = read_frame_with(&mut Cursor::new(wire), Some(&mut arm))
+            .unwrap_err();
+        assert!(err.is_corrupt(), "{err}");
+
+        // injected short read surfaces as EOF
+        let plan = FaultPlan { short_read: 1.0, ..FaultPlan::default() };
+        let mut arm = plan.arm(0, FaultCounters::shared());
+        let mut wire = Vec::new();
+        write_frame(&mut wire, b"some payload").unwrap();
+        let err = read_frame_with(&mut Cursor::new(wire), Some(&mut arm))
+            .unwrap_err();
+        assert!(err.is_eof(), "{err}");
+
+        // a torn write leaves a frame the reader can never complete
+        let plan = FaultPlan { torn_write: 1.0, ..FaultPlan::default() };
+        let mut arm = plan.arm(0, FaultCounters::shared());
+        let mut wire = Vec::new();
+        let err = write_frame_with(&mut wire, b"0123456789", Some(&mut arm))
+            .unwrap_err();
+        assert!(!err.is_eof(), "{err}");
+        assert_eq!(wire.len(), FRAME_HEADER_BYTES + 5);
+        assert!(read_frame(&mut Cursor::new(wire)).unwrap_err().is_eof());
     }
 }

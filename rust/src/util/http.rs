@@ -13,12 +13,29 @@
 //! rejected *before* any body byte is read ([`WireError::TooLarge`] —
 //! the server answers 413 and closes the connection, since the unread
 //! body would garble the next request).
+//!
+//! Integrity: both write paths stamp an [`X-Body-Fnv`](BODY_DIGEST)
+//! header carrying the fnv1a64 of the body; both read paths verify it
+//! when present (and stay compatible with peers that omit it). A
+//! mismatch is [`WireError::Corrupt`] — the server answers 503
+//! (`transport`) and closes, the client treats it as retryable. The
+//! server-side `_with` variants additionally accept a
+//! [`FaultArm`](crate::util::fault::FaultArm) so the chaos plane can
+//! drop, delay, corrupt or tear individual requests/responses;
+//! injected corruption flips a body byte *before* digest verification
+//! so it exercises the real check.
 
 use std::fmt;
 use std::io::{BufRead, Read, Write};
 
+use crate::util::fault::{FaultArm, ReadFault, WriteFault};
+use crate::util::frame::fnv1a64;
+
 /// Upper bound on request line + headers, total bytes.
 pub const MAX_HEAD_BYTES: usize = 8 * 1024;
+
+/// Header carrying the fnv1a64 body digest, 16 lowercase hex digits.
+pub const BODY_DIGEST: &str = "X-Body-Fnv";
 
 /// One parsed request: method, split target, framed body.
 #[derive(Clone, Debug)]
@@ -59,6 +76,10 @@ pub enum WireError {
     /// The bytes are not the HTTP subset this module speaks. The server
     /// answers 400 and closes.
     Malformed(String),
+    /// The body arrived but failed its [`BODY_DIGEST`] check — bit rot
+    /// in flight. The server answers 503 (`transport`) and closes; the
+    /// client treats it as retryable.
+    Corrupt(String),
     /// The underlying transport failed (includes read timeouts). The
     /// server drops the connection silently.
     Io(std::io::Error),
@@ -69,9 +90,61 @@ impl fmt::Display for WireError {
         match self {
             WireError::TooLarge => f.write_str("request too large"),
             WireError::Malformed(m) => write!(f, "malformed request: {m}"),
+            WireError::Corrupt(m) => write!(f, "corrupt body: {m}"),
             WireError::Io(e) => write!(f, "io error: {e}"),
         }
     }
+}
+
+/// Parse a [`BODY_DIGEST`] header value (16 hex digits).
+fn parse_digest(value: &str) -> Result<u64, WireError> {
+    u64::from_str_radix(value.trim(), 16).map_err(|_| {
+        WireError::Malformed(format!("bad {BODY_DIGEST} '{value}'"))
+    })
+}
+
+/// Verify a body against a digest parsed from the head (if any).
+fn check_digest(
+    body: &[u8],
+    expected: Option<u64>,
+) -> Result<(), WireError> {
+    if let Some(want) = expected {
+        let got = fnv1a64(body);
+        if got != want {
+            return Err(WireError::Corrupt(format!(
+                "{BODY_DIGEST} mismatch: header {want:016x}, body \
+                 {got:016x}"
+            )));
+        }
+    }
+    Ok(())
+}
+
+/// Apply an inbound fault verdict to a freshly read body. Runs before
+/// digest verification so injected corruption trips the real check.
+fn apply_read_fault(
+    body: &mut [u8],
+    arm: Option<&mut FaultArm>,
+) -> Result<(), WireError> {
+    if let Some(arm) = arm {
+        match arm.on_read(body.len()) {
+            ReadFault::Pass => {}
+            ReadFault::Drop => {
+                return Err(WireError::Io(std::io::Error::new(
+                    std::io::ErrorKind::ConnectionReset,
+                    "injected connection drop",
+                )));
+            }
+            ReadFault::CorruptAt(i) => body[i] ^= 0xA5,
+            ReadFault::Short => {
+                return Err(WireError::Io(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "injected short read",
+                )));
+            }
+        }
+    }
+    Ok(())
 }
 
 impl From<std::io::Error> for WireError {
@@ -110,6 +183,16 @@ pub fn read_request(
     r: &mut impl BufRead,
     max_body: usize,
 ) -> Result<Option<Request>, WireError> {
+    read_request_with(r, max_body, None)
+}
+
+/// [`read_request`] with an optional fault-injection arm (one decision
+/// per request, drawn after the body arrives).
+pub fn read_request_with(
+    r: &mut impl BufRead,
+    max_body: usize,
+    arm: Option<&mut FaultArm>,
+) -> Result<Option<Request>, WireError> {
     let mut budget = MAX_HEAD_BYTES;
     let Some(start) = read_line(r, &mut budget)? else {
         return Ok(None);
@@ -131,6 +214,7 @@ pub fn read_request(
     }
     let mut keep_alive = version != "HTTP/1.0";
     let mut content_length = 0usize;
+    let mut digest = None;
     loop {
         let Some(line) = read_line(r, &mut budget)? else {
             return Err(WireError::Malformed("eof in headers".into()));
@@ -159,6 +243,7 @@ pub fn read_request(
                     keep_alive = true;
                 }
             }
+            "x-body-fnv" => digest = Some(parse_digest(value)?),
             // transfer-encoding (chunked bodies) is out of scope; a
             // client using it would declare no content-length and the
             // chunk header would fail the next request-line parse
@@ -171,6 +256,8 @@ pub fn read_request(
     let mut body = vec![0u8; content_length];
     r.read_exact(&mut body)
         .map_err(|_| WireError::Malformed("eof in body".into()))?;
+    apply_read_fault(&mut body, arm)?;
+    check_digest(&body, digest)?;
     let (path, query) = match target.split_once('?') {
         Some((p, q)) => (p.to_string(), q.to_string()),
         None => (target.to_string(), String::new()),
@@ -206,13 +293,49 @@ pub fn write_response(
     body: &[u8],
     keep_alive: bool,
 ) -> std::io::Result<()> {
+    write_response_with(w, status, body, keep_alive, None)
+}
+
+/// [`write_response`] with an optional fault-injection arm. A firing
+/// `drop` fails before any byte lands; a firing `torn_write` puts the
+/// head and half the body on the wire, then fails — the client sees a
+/// response that never completes.
+pub fn write_response_with(
+    w: &mut impl Write,
+    status: u16,
+    body: &[u8],
+    keep_alive: bool,
+    arm: Option<&mut FaultArm>,
+) -> std::io::Result<()> {
     let head = format!(
         "HTTP/1.1 {status} {}\r\nContent-Type: application/json\r\n\
-         Content-Length: {}\r\nConnection: {}\r\n\r\n",
+         Content-Length: {}\r\n{BODY_DIGEST}: {:016x}\r\n\
+         Connection: {}\r\n\r\n",
         status_text(status),
         body.len(),
+        fnv1a64(body),
         if keep_alive { "keep-alive" } else { "close" },
     );
+    if let Some(arm) = arm {
+        match arm.on_write() {
+            WriteFault::Pass => {}
+            WriteFault::Drop => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::BrokenPipe,
+                    "injected connection drop",
+                ));
+            }
+            WriteFault::Torn => {
+                w.write_all(head.as_bytes())?;
+                w.write_all(&body[..body.len() / 2])?;
+                let _ = w.flush();
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::BrokenPipe,
+                    "injected torn write",
+                ));
+            }
+        }
+    }
     w.write_all(head.as_bytes())?;
     w.write_all(body)?;
     w.flush()
@@ -227,8 +350,10 @@ pub fn write_request(
 ) -> std::io::Result<()> {
     let head = format!(
         "{method} {target} HTTP/1.1\r\nHost: repro\r\n\
-         Content-Length: {}\r\nConnection: keep-alive\r\n\r\n",
+         Content-Length: {}\r\n{BODY_DIGEST}: {:016x}\r\n\
+         Connection: keep-alive\r\n\r\n",
         body.len(),
+        fnv1a64(body),
     );
     w.write_all(head.as_bytes())?;
     w.write_all(body)?;
@@ -259,6 +384,7 @@ pub fn read_response(
         }
     };
     let mut content_length = 0usize;
+    let mut digest = None;
     loop {
         let Some(line) = read_line(r, &mut budget)? else {
             return Err(WireError::Malformed("eof in headers".into()));
@@ -274,6 +400,8 @@ pub fn read_response(
                         value.trim()
                     ))
                 })?;
+            } else if name.trim().eq_ignore_ascii_case(BODY_DIGEST) {
+                digest = Some(parse_digest(value)?);
             }
         }
     }
@@ -283,6 +411,7 @@ pub fn read_response(
     let mut body = vec![0u8; content_length];
     r.read_exact(&mut body)
         .map_err(|_| WireError::Malformed("eof in body".into()))?;
+    check_digest(&body, digest)?;
     Ok((status, body))
 }
 
@@ -400,5 +529,82 @@ mod tests {
         assert_eq!(a.path, "/stats");
         assert_eq!(b.path, "/healthz");
         assert!(read_request(&mut cur, 1024).unwrap().is_none());
+    }
+
+    #[test]
+    fn body_digest_detects_corruption_both_directions() {
+        // response: flip one body byte after framing
+        let mut wire = Vec::new();
+        write_response(&mut wire, 200, b"{\"ok\": true}", true).unwrap();
+        let n = wire.len();
+        wire[n - 3] ^= 0x01;
+        assert!(matches!(
+            read_response(&mut Cursor::new(wire), 1024),
+            Err(WireError::Corrupt(_))
+        ));
+        // request likewise
+        let mut wire = Vec::new();
+        write_request(&mut wire, "POST", "/partition", b"{\"k\": 4}")
+            .unwrap();
+        let n = wire.len();
+        wire[n - 2] ^= 0x01;
+        assert!(matches!(
+            read_request(&mut Cursor::new(wire), 1024),
+            Err(WireError::Corrupt(_))
+        ));
+        // a garbled digest header is malformed, not corrupt
+        assert!(matches!(
+            req("GET / HTTP/1.1\r\nX-Body-Fnv: zz\r\n\r\n"),
+            Err(WireError::Malformed(_))
+        ));
+        // peers that omit the digest still parse (legacy compatibility)
+        let r = req("POST / HTTP/1.1\r\nContent-Length: 4\r\n\r\nabcd")
+            .unwrap()
+            .unwrap();
+        assert_eq!(r.body, b"abcd");
+    }
+
+    #[test]
+    fn fault_arms_inject_on_server_paths() {
+        use crate::util::fault::{FaultCounters, FaultPlan};
+        // injected corruption trips the real digest check
+        let plan = FaultPlan { corrupt: 1.0, ..FaultPlan::default() };
+        let mut arm = plan.arm(0, FaultCounters::shared());
+        let mut wire = Vec::new();
+        write_request(&mut wire, "POST", "/x", b"body bytes").unwrap();
+        let err =
+            read_request_with(&mut Cursor::new(wire), 1024, Some(&mut arm))
+                .unwrap_err();
+        assert!(matches!(err, WireError::Corrupt(_)), "{err}");
+        // a torn response leaves a body the client can never finish
+        let plan = FaultPlan { torn_write: 1.0, ..FaultPlan::default() };
+        let mut arm = plan.arm(0, FaultCounters::shared());
+        let mut wire = Vec::new();
+        let err = write_response_with(
+            &mut wire,
+            200,
+            b"0123456789",
+            true,
+            Some(&mut arm),
+        )
+        .unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::BrokenPipe);
+        assert!(matches!(
+            read_response(&mut Cursor::new(wire), 1024),
+            Err(WireError::Malformed(_))
+        ));
+        // a dropped write lands nothing on the wire
+        let plan = FaultPlan { drop: 1.0, ..FaultPlan::default() };
+        let mut arm = plan.arm(0, FaultCounters::shared());
+        let mut sink = Vec::new();
+        assert!(write_response_with(
+            &mut sink,
+            200,
+            b"x",
+            true,
+            Some(&mut arm)
+        )
+        .is_err());
+        assert!(sink.is_empty());
     }
 }

@@ -4,6 +4,7 @@
 //! stats helpers).
 
 pub mod error;
+pub mod fault;
 pub mod frame;
 pub mod http;
 pub mod json;

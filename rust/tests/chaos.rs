@@ -1,0 +1,316 @@
+//! Chaos soak: the deterministic fault plane (`util::fault`) against
+//! the real cluster runtime and the real serve stack.
+//!
+//! The contract under test, from DESIGN.md "Fault plane": with a
+//! seeded plan injecting drops, delays, corruption, short reads and
+//! torn writes at the wire and disk chokepoints, a run must end in one
+//! of exactly two states — owners *bit-identical* to the fault-free
+//! single-process facade, or a typed `ErrorKind::Transport` error.
+//! Never a wrong answer, never a hang, never a panic. And because
+//! every arm's decision stream derives from the plan seed, the same
+//! configuration must replay the same fault sequence bit-for-bit.
+//!
+//! Like `tests/cluster.rs`, all cluster runs use `in_process: true`.
+
+use dfep::cluster::runtime::{run_cluster, ClusterConfig};
+use dfep::coordinator::runs::PartitionRequest;
+use dfep::coordinator::serve::{ServeClient, ServeConfig, Server};
+use dfep::util::error::ErrorKind;
+use dfep::util::fault::{FaultPlan, RetryPolicy};
+
+const DATASET: &str = "plc:n=400,m=4,p=0.3";
+const K: usize = 8;
+const SEED: u64 = 3;
+const GRAPH_SEED: u64 = 7;
+
+/// The fault-free single-process reference owners.
+fn facade_owner() -> Vec<u32> {
+    PartitionRequest::new("dfep")
+        .unwrap()
+        .dataset(DATASET)
+        .k(K)
+        .seed(SEED)
+        .graph_seed(GRAPH_SEED)
+        .execute()
+        .unwrap()
+        .partition
+        .owner
+}
+
+/// A cluster config under a given plan: frequent checkpoints (cheap
+/// rollback floors) and a generous recovery budget, so the soak
+/// usually completes — and when the dice exhaust the budget anyway,
+/// the typed-error arm of the contract is what gets exercised.
+fn chaos_cfg(workers: usize, plan: FaultPlan) -> ClusterConfig {
+    ClusterConfig {
+        workers,
+        k: K,
+        seed: SEED,
+        spec: "dfep".into(),
+        dataset: DATASET.into(),
+        graph_seed: GRAPH_SEED,
+        checkpoint_every: 2,
+        fault: Some(plan),
+        worker_timeout_ms: 5_000,
+        in_process: true,
+        max_recoveries: 64,
+        ..ClusterConfig::default()
+    }
+}
+
+/// The soak plan: every wire knob on at rates that fire dozens of
+/// times over a run without (usually) exhausting the budget.
+fn soak_plan() -> FaultPlan {
+    FaultPlan::parse(
+        "fault:seed=42,drop=0.01,delay_ms=0..2,corrupt=0.005,\
+         short_read=0.005,torn_write=0.005",
+    )
+    .unwrap()
+}
+
+#[test]
+fn cluster_chaos_is_exact_or_typed_at_any_worker_count() {
+    let reference = facade_owner();
+    for workers in [1usize, 2, 4] {
+        let cfg = chaos_cfg(workers, soak_plan());
+        match run_cluster(&cfg) {
+            Ok(rep) => {
+                assert_eq!(
+                    rep.partition.owner, reference,
+                    "{workers}-worker chaos owners diverge from the facade"
+                );
+            }
+            Err(e) => {
+                assert_eq!(e.kind(), ErrorKind::Transport, "{e}");
+            }
+        }
+    }
+}
+
+#[test]
+fn cluster_chaos_replays_bit_identically_from_its_seed() {
+    let cfg = chaos_cfg(3, soak_plan());
+    let a = run_cluster(&cfg);
+    let b = run_cluster(&cfg);
+    match (a, b) {
+        (Ok(a), Ok(b)) => {
+            assert_eq!(
+                a.partition.owner, b.partition.owner,
+                "replayed owners diverge"
+            );
+            // the whole fault sequence replays: same tallies, same
+            // number of recoveries, same recovery traffic
+            assert_eq!(a.faults, b.faults, "fault tallies diverge");
+            assert_eq!(a.recoveries, b.recoveries);
+            assert_eq!(a.measured.recovery, b.measured.recovery);
+            assert!(
+                a.faults.total() > 0,
+                "the soak plan never fired — rates too low to test anything"
+            );
+            assert_eq!(a.partition.owner, facade_owner());
+        }
+        (Err(a), Err(b)) => {
+            assert_eq!(a.kind(), ErrorKind::Transport, "{a}");
+            assert_eq!(b.kind(), ErrorKind::Transport, "{b}");
+        }
+        (a, b) => panic!(
+            "replay diverged: first run ok={}, second run ok={}",
+            a.is_ok(),
+            b.is_ok()
+        ),
+    }
+}
+
+#[test]
+fn corrupt_on_disk_checkpoint_falls_back_to_previous_intact_round() {
+    let reference = facade_owner();
+    let dir = std::env::temp_dir().join("dfep_chaos_ckpt_fallback");
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = ClusterConfig {
+        workers: 3,
+        k: K,
+        seed: SEED,
+        spec: "dfep".into(),
+        dataset: DATASET.into(),
+        graph_seed: GRAPH_SEED,
+        checkpoint_every: 2,
+        checkpoint_dir: Some(dir.clone()),
+        in_process: true,
+        ..ClusterConfig::default()
+    };
+    let rep = run_cluster(&cfg).unwrap();
+    assert_eq!(rep.partition.owner, reference);
+    // enumerate the persisted rounds off the meta files
+    let mut rounds: Vec<u64> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| {
+            let name = e.ok()?.file_name().into_string().ok()?;
+            name.strip_prefix("ckpt_r")?
+                .strip_suffix("_meta.bin")?
+                .parse()
+                .ok()
+        })
+        .collect();
+    rounds.sort_unstable();
+    assert!(
+        rounds.len() >= 2,
+        "need two persisted rounds to test fallback, got {rounds:?}"
+    );
+    let newest = *rounds.last().unwrap();
+    let fallback = rounds[rounds.len() - 2];
+    // bit-rot the newest round: flip one payload byte in a rank blob
+    let victim = dir.join(format!("ckpt_r{newest}_w1.bin"));
+    let mut bytes = std::fs::read(&victim).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&victim, &bytes).unwrap();
+    // resume: the damaged round must be skipped (checksum, not trust),
+    // the previous intact one restored, and the answer unchanged
+    let cfg2 = ClusterConfig { resume: true, ..cfg.clone() };
+    let rep2 = run_cluster(&cfg2).unwrap();
+    assert_eq!(rep2.skipped_checkpoints, 1, "the flipped byte went unnoticed");
+    assert_eq!(rep2.resumed_round, Some(fallback));
+    assert_eq!(rep2.partition.owner, reference);
+    // and an undamaged resume picks the newest round of the rerun
+    let rep3 = run_cluster(&cfg2).unwrap();
+    assert_eq!(rep3.skipped_checkpoints, 0);
+    assert!(rep3.resumed_round.is_some());
+    assert_eq!(rep3.partition.owner, reference);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Read `/stats` through the chaos, retrying past injected faults.
+fn stats_json(c: &mut ServeClient) -> dfep::util::json::Json {
+    for _ in 0..50 {
+        if let Ok((200, body)) = c.get("/stats") {
+            return dfep::util::json::parse(&body).unwrap();
+        }
+    }
+    panic!("/stats unreachable through 50 attempts");
+}
+
+fn stat(j: &dfep::util::json::Json, key: &str) -> f64 {
+    j.get(key)
+        .unwrap_or_else(|| panic!("no '{key}' in /stats"))
+        .as_f64()
+        .unwrap()
+}
+
+#[test]
+fn serve_chaos_sequential_client_retries_to_exact_answers() {
+    // hot rates: roughly half of all request/response operations fault,
+    // so the client's backoff loop is doing real work on every run
+    let plan = FaultPlan::parse(
+        "fault:seed=9,drop=0.15,corrupt=0.1,short_read=0.1,torn_write=0.1",
+    )
+    .unwrap();
+    let server = Server::spawn(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 2,
+        fault: Some(plan),
+        ..Default::default()
+    })
+    .unwrap();
+    let req = PartitionRequest::new("dfep")
+        .unwrap()
+        .dataset("er:n=300,m=900")
+        .k(6)
+        .seed(3);
+    let direct = req.execute().unwrap();
+    let mut c = ServeClient::connect(server.addr())
+        .with_retry(RetryPolicy { attempts: 8, base_ms: 1, max_ms: 4 });
+    let mut ok = 0usize;
+    for _ in 0..30 {
+        match c.partition(&req, true) {
+            Ok(rep) => {
+                ok += 1;
+                assert_eq!(
+                    rep.partition.owner, direct.partition.owner,
+                    "a served chaos answer diverged from direct execution"
+                );
+            }
+            // a request may exhaust its retry budget, but only ever
+            // with the typed retryable kind — never a wrong answer
+            Err(e) => assert_eq!(e.kind(), ErrorKind::Transport, "{e}"),
+        }
+    }
+    assert!(ok > 0, "every chaos request failed");
+    assert!(c.retries() > 0, "chaos never forced a client retry");
+    let j = stats_json(&mut c);
+    assert_eq!(stat(&j, "fault_active"), 1.0);
+    let injected = stat(&j, "fault_drops")
+        + stat(&j, "fault_corruptions")
+        + stat(&j, "fault_short_reads")
+        + stat(&j, "fault_torn_writes");
+    assert!(injected > 0.0, "the server tallied no injections");
+    // every injected request corruption trips the digest check
+    assert_eq!(stat(&j, "transport_corrupt"), stat(&j, "fault_corruptions"));
+}
+
+#[test]
+fn serve_chaos_concurrent_soak_never_serves_a_wrong_answer() {
+    let plan = FaultPlan::parse(
+        "fault:seed=1234,drop=0.08,corrupt=0.05,short_read=0.05,\
+         torn_write=0.05",
+    )
+    .unwrap();
+    let server = Server::spawn(ServeConfig {
+        addr: "127.0.0.1:0".to_string(),
+        workers: 4,
+        fault: Some(plan),
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = server.addr();
+    let req = PartitionRequest::new("dfep")
+        .unwrap()
+        .dataset("er:n=400,m=1200")
+        .k(8)
+        .seed(11);
+    let direct = req.execute().unwrap();
+    let successes: usize = std::thread::scope(|s| {
+        let mut threads = Vec::new();
+        for _ in 0..6usize {
+            let req = &req;
+            let direct = &direct;
+            threads.push(s.spawn(move || {
+                let mut c = ServeClient::connect(addr).with_retry(
+                    RetryPolicy { attempts: 6, base_ms: 1, max_ms: 4 },
+                );
+                let mut ok = 0usize;
+                for _ in 0..8 {
+                    match c.partition(req, true) {
+                        Ok(rep) => {
+                            ok += 1;
+                            assert_eq!(
+                                rep.partition.owner,
+                                direct.partition.owner
+                            );
+                        }
+                        Err(e) => assert_eq!(
+                            e.kind(),
+                            ErrorKind::Transport,
+                            "{e}"
+                        ),
+                    }
+                }
+                ok
+            }));
+        }
+        threads.into_iter().map(|t| t.join().unwrap()).sum()
+    });
+    assert!(successes > 0, "no concurrent chaos request ever succeeded");
+    let mut c = ServeClient::connect(addr);
+    let j = stats_json(&mut c);
+    assert!(
+        stat(&j, "fault_drops")
+            + stat(&j, "fault_corruptions")
+            + stat(&j, "fault_short_reads")
+            + stat(&j, "fault_torn_writes")
+            > 0.0,
+        "the server tallied no injections"
+    );
+    // single-flight held through the chaos: identical requests computed
+    // at most a handful of times (cache misses only on raced starts)
+    assert!(stat(&j, "computations") >= 1.0);
+}

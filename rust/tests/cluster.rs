@@ -191,4 +191,8 @@ fn config_validation_rejects_nonsense() {
         ..base_cfg()
     };
     assert!(run_cluster(&bad_source).is_err());
+    // a zero worker timeout would make every derived deadline nonsense
+    let bad_timeout = ClusterConfig { worker_timeout_ms: 0, ..base_cfg() };
+    let err = run_cluster(&bad_timeout).unwrap_err();
+    assert_eq!(err.kind(), dfep::util::error::ErrorKind::InvalidRequest);
 }
